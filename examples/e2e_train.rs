@@ -1,0 +1,126 @@
+//! End-to-end driver: the full DNNFuser pipeline on a real workload mix,
+//! proving all three layers compose (DESIGN.md "End-to-end validation").
+//!
+//!   teacher search (L3, pure Rust)
+//!     → trajectory decoration + replay buffer (L3)
+//!       → imitation training via the AOT train_step (L2 JAX + L1 Pallas
+//!         lowered to HLO, executed through PJRT from Rust)
+//!         → autoregressive inference, env in the loop (L3 ⇄ PJRT)
+//!           → evaluation against the teacher on unseen conditions.
+//!
+//! Prints the loss curve and the final quality table; the committed run is
+//! recorded in EXPERIMENTS.md §End-to-end. Runtime on one CPU core is
+//! ~10–20 min with the default 150 steps (set E2E_STEPS to change).
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_train`
+
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::{LoadSet, Runtime};
+use dnnfuser::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use dnnfuser::trajectory::ReplayBuffer;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::var("E2E_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let train_mems = [16.0, 32.0, 48.0, 64.0]; // paper §5.3 training grid
+    let eval_mems = [20.0, 28.0, 36.0, 44.0]; // unseen conditions
+    let batch = 64;
+    let runs_per_cond = 4; // paper §4.5.1: "several (4-10) sets"
+
+    let rt = Runtime::load("artifacts", LoadSet::All)?;
+    let mut rng = Rng::seed_from_u64(2026);
+
+    // ---- Stage 1: teacher data collection (paper Fig. 3 step 1).
+    println!("[1/4] collecting G-Sampler demonstrations (vgg16 + resnet18)…");
+    let mut buffer = ReplayBuffer::new(1024);
+    let t0 = std::time::Instant::now();
+    for wname in ["vgg16", "resnet18"] {
+        let w = zoo::by_name(wname).unwrap();
+        for &mem in &train_mems {
+            for _ in 0..runs_per_cond {
+                let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+                let r = GSampler::default().run(&prob, 2000, &mut rng.fork());
+                buffer.push(prob.env.decorate(&r.best));
+            }
+        }
+    }
+    println!(
+        "      {} demonstrations, mean teacher speedup {:.2} ({:.1}s)",
+        buffer.len(),
+        buffer.mean_speedup(),
+        t0.elapsed().as_secs_f64()
+    );
+    std::fs::create_dir_all("runs").ok();
+    buffer.save("runs/e2e_dataset.bin")?;
+
+    // ---- Stage 2: imitation training through PJRT (Fig. 3 step 3).
+    println!("[2/4] training DNNFuser for {steps} Adam steps via df_train.hlo…");
+    let mut model = MapperModel::init(&rt, ModelKind::Df, 7)?;
+    let t1 = std::time::Instant::now();
+    let losses = model.train(&rt, &buffer, steps, &mut rng, |i, loss| {
+        if i % 10 == 0 || i + 1 == steps {
+            println!("      step {i:>4}  loss {loss:.5}  ({:.0}s)", t1.elapsed().as_secs_f64());
+        }
+    })?;
+    let head: f32 = losses[..5.min(losses.len())].iter().sum::<f32>() / 5.0;
+    let tail: f32 =
+        losses[losses.len().saturating_sub(5)..].iter().sum::<f32>() / 5.0_f32.min(losses.len() as f32);
+    println!("      loss {head:.4} → {tail:.4} over {} steps", losses.len());
+    model.save("runs/e2e_df.ckpt")?;
+
+    // ---- Stage 3: inference on UNSEEN conditions (Fig. 3 right, §5.3).
+    println!("[3/4] mapping unseen conditions with one inference pass each…");
+    println!("\n| Workload | Cond (MB) | DNNFuser | teacher (2K search) | DF time | teacher time |");
+    println!("|---|---|---|---|---|---|");
+    let mut df_wins_or_ties = 0;
+    let mut total = 0;
+    let mut speed_ratios = Vec::new();
+    for wname in ["vgg16", "resnet18"] {
+        let w = zoo::by_name(wname).unwrap();
+        for &mem in &eval_mems {
+            let env = FusionEnv::new(w.clone(), batch, HwConfig::paper(), mem);
+            let ti = std::time::Instant::now();
+            let traj = model.infer(&rt, &env)?;
+            let dt_inf = ti.elapsed();
+            let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+            let ts = std::time::Instant::now();
+            let gs = GSampler::default().run(&prob, 2000, &mut rng.fork());
+            let dt_gs = ts.elapsed();
+            let df_cell = if traj.valid {
+                format!("{:.2}", traj.speedup)
+            } else {
+                "N/A".to_string()
+            };
+            println!(
+                "| {wname} | {mem} | {df_cell} | {} | {dt_inf:?} | {dt_gs:?} |",
+                gs.speedup_cell()
+            );
+            total += 1;
+            if traj.valid && traj.speedup >= gs.best_eval.speedup * 0.8 {
+                df_wins_or_ties += 1;
+            }
+            speed_ratios.push(dt_gs.as_secs_f64() / dt_inf.as_secs_f64());
+        }
+    }
+
+    // ---- Stage 4: verdict.
+    println!("\n[4/4] summary");
+    let mean_ratio = speed_ratios.iter().sum::<f64>() / speed_ratios.len() as f64;
+    println!(
+        "      DF within 80% of teacher quality on {df_wins_or_ties}/{total} unseen conditions"
+    );
+    println!(
+        "      env interactions per mapping: 2000 (search) vs ~16-19 (inference) ≈ 105-133x \
+         fewer — the paper's 66-127x wall-clock regime; raw wall-clock ratio here is \
+         {mean_ratio:.2}x because our Rust cost model is ~10^4x faster than the authors' \
+         (EXPERIMENTS.md §Speed)"
+    );
+    println!("      checkpoint: runs/e2e_df.ckpt   dataset: runs/e2e_dataset.bin");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Quickstart: the whole stack in one page.
+//!
+//! 1. Pick a workload and a hardware condition.
+//! 2. Score the no-fusion baseline with the analytical cost model.
+//! 3. Search a fusion strategy with G-Sampler (the paper's teacher).
+//! 4. If AOT artifacts exist, map the same problem with a (fresh) DNNFuser
+//!    model in one inference pass — the paper's headline interaction.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use dnnfuser::cost::{CostModel, HwConfig};
+use dnnfuser::env::FusionEnv;
+use dnnfuser::fusion::Strategy;
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::{LoadSet, Runtime};
+use dnnfuser::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+fn main() -> anyhow::Result<()> {
+    // 1. VGG16 at batch 64 on the paper's accelerator, with only 20 MB of
+    //    the 64 MB buffer currently available.
+    let workload = zoo::vgg16();
+    let batch = 64;
+    let mem_condition_mb = 20.0;
+    let hw = HwConfig::paper();
+
+    // 2. Baseline: ideal layer-by-layer execution.
+    let model = CostModel::new(&workload, batch, hw.with_buffer_mb(mem_condition_mb));
+    let baseline = Strategy::no_fusion(workload.n_layers());
+    println!(
+        "{}: {} layers, {:.1} GMACs/sample, baseline latency {:.3} ms",
+        workload.name,
+        workload.n_layers(),
+        workload.total_macs() as f64 / 1e9,
+        model.baseline_latency() * 1e3,
+    );
+    assert!((model.speedup_of(&baseline) - 1.0).abs() < 1e-9);
+
+    // 3. Search-based mapping (the teacher).
+    let problem = FusionProblem::new(&workload, batch, hw, mem_condition_mb);
+    let result = GSampler::default().run(&problem, 2000, &mut Rng::seed_from_u64(42));
+    println!("\nG-Sampler (2K samples, {:.2}s):", result.wall_s);
+    println!("  strategy : {}", result.best.display());
+    println!(
+        "  speedup  : {} (act usage {:.2} MB / condition {mem_condition_mb} MB)",
+        result.speedup_cell(),
+        result.act_usage_mb()
+    );
+
+    // 4. Inference-based mapping (the paper's contribution) — one forward
+    //    pass per layer slot, no search. A fresh (untrained) model maps
+    //    legally but not well; see examples/e2e_train.rs for the full
+    //    collect → train → map pipeline.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = Runtime::load("artifacts", LoadSet::All)?;
+        let df = MapperModel::init(&rt, ModelKind::Df, 0)?;
+        let env = FusionEnv::new(workload.clone(), batch, hw, mem_condition_mb);
+        let t0 = std::time::Instant::now();
+        let traj = df.infer(&rt, &env)?;
+        println!("\nDNNFuser (untrained, one inference, {:?}):", t0.elapsed());
+        println!("  strategy : {}", traj.strategy.display());
+        println!(
+            "  speedup  : {:.2} (valid {}) — train it with examples/e2e_train.rs",
+            traj.speedup, traj.valid
+        );
+    } else {
+        println!("\n(artifacts/ not built — run `make artifacts` to try the model path)");
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Serving example: the mapper as an online control-plane service.
+//!
+//! Spawns the coordinator (PJRT runtime + dynamic batcher + mapping cache)
+//! and drives it with a bursty multi-tenant request pattern — the paper's
+//! §4.6 scenario where the available buffer keeps changing and each change
+//! needs a mapping *now*. Reports router metrics: latency percentiles,
+//! batch occupancy, cache hit rate, throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_mapper
+//!       [-- path/to/model.ckpt]`
+
+use std::time::{Duration, Instant};
+
+use dnnfuser::coordinator::service::{MapperService, ServiceConfig};
+use dnnfuser::coordinator::{MapRequest, Source};
+use dnnfuser::model::ModelKind;
+use dnnfuser::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ckpt = std::env::args().nth(1);
+    let mut cfg = ServiceConfig::new("artifacts");
+    cfg.model = ModelKind::Df;
+    cfg.checkpoint = ckpt.map(Into::into);
+    cfg.batch_window = Duration::from_millis(5);
+    if cfg.checkpoint.is_none() {
+        println!("(no checkpoint given — serving an untrained model; pass runs/e2e_df.ckpt)");
+    }
+
+    println!("starting mapper service…");
+    let svc = MapperService::spawn(cfg)?;
+    let client = svc.client.clone();
+
+    // Tenants: each runs a DNN workload whose buffer share fluctuates.
+    let tenants = [
+        ("vision-a", "resnet50"),
+        ("vision-b", "mobilenet_v2"),
+        ("edge", "mnasnet"),
+        ("legacy", "vgg16"),
+    ];
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (i, (tenant, workload)) in tenants.into_iter().enumerate() {
+        let client = client.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(500 + i as u64);
+            let mut lat_model = Vec::new();
+            let mut lat_cache = Vec::new();
+            for burst in 0..3 {
+                // Buffer availability jumps; repeats within a burst hit cache.
+                let mem = [16.0, 24.0, 32.0, 40.0, 48.0][rng.index(5)];
+                for _ in 0..4 {
+                    let jitter = (rng.index(3) as f64) * 0.05; // sub-quantum
+                    let r = client
+                        .map(MapRequest::new(workload, 64, mem + jitter))
+                        .expect("map");
+                    match r.source {
+                        Source::Model => lat_model.push(r.latency),
+                        Source::Cache => lat_cache.push(r.latency),
+                    }
+                }
+                let _ = burst;
+            }
+            (tenant, workload, lat_model, lat_cache)
+        }));
+    }
+    for h in handles {
+        let (tenant, workload, lm, lc) = h.join().unwrap();
+        let mean = |v: &[Duration]| {
+            if v.is_empty() {
+                Duration::ZERO
+            } else {
+                v.iter().sum::<Duration>() / v.len() as u32
+            }
+        };
+        println!(
+            "tenant {tenant:<9} ({workload:<12}): {} model-mapped (mean {:?}), {} cache hits (mean {:?})",
+            lm.len(),
+            mean(&lm),
+            lc.len(),
+            mean(&lc)
+        );
+    }
+
+    let m = client.metrics();
+    println!("\nrouter metrics after {:?}:", t0.elapsed());
+    println!("  {}", m.report());
+    println!(
+        "  cache hit rate: {:.0}%  mean batch occupancy: {:.2}",
+        100.0 * m.cache_hits as f64 / m.requests as f64,
+        m.mean_batch_occupancy()
+    );
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Transfer-learning example (paper §4.6.2 / Table 3 in miniature).
+//!
+//! Pre-trains a general mapper on VGG16 + ResNet18, then adapts it to a
+//! NEW workload (ResNet50) with only 10% of the from-scratch step budget,
+//! and compares: Transfer-DF vs Direct-DF vs the G-Sampler teacher.
+//!
+//! Run: `make artifacts && cargo run --release --example transfer_learning`
+//! (set TL_STEPS to change the from-scratch budget; default 100)
+
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::{LoadSet, Runtime};
+use dnnfuser::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use dnnfuser::trajectory::ReplayBuffer;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+fn collect(
+    workloads: &[&str],
+    mems: &[f64],
+    runs: usize,
+    rng: &mut Rng,
+) -> ReplayBuffer {
+    let mut buffer = ReplayBuffer::new(1024);
+    for wname in workloads {
+        let w = zoo::by_name(wname).unwrap();
+        for &mem in mems {
+            for _ in 0..runs {
+                let prob = FusionProblem::new(&w, 64, HwConfig::paper(), mem);
+                let r = GSampler::default().run(&prob, 2000, &mut rng.fork());
+                buffer.push(prob.env.decorate(&r.best));
+            }
+        }
+    }
+    buffer
+}
+
+fn main() -> anyhow::Result<()> {
+    let full_steps: usize = std::env::var("TL_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let transfer_steps = (full_steps / 10).max(1);
+    let mems = [16.0, 32.0, 48.0, 64.0];
+    let rt = Runtime::load("artifacts", LoadSet::All)?;
+    let mut rng = Rng::seed_from_u64(77);
+
+    println!("[1/3] pre-training the general mapper on vgg16 + resnet18 ({full_steps} steps)…");
+    let pre = collect(&["vgg16", "resnet18"], &mems, 3, &mut rng);
+    let mut general = MapperModel::init(&rt, ModelKind::Df, 1)?;
+    general.train(&rt, &pre, full_steps, &mut rng, |i, l| {
+        if i % 25 == 0 {
+            println!("      pretrain step {i} loss {l:.5}");
+        }
+    })?;
+
+    println!("[2/3] adapting to resnet50: transfer ({transfer_steps} steps) vs direct ({full_steps} steps)…");
+    let new_ds = collect(&["resnet50"], &mems, 3, &mut rng);
+    // Transfer: copy pre-trained weights, fresh optimizer state.
+    let mut transfer = MapperModel {
+        kind: ModelKind::Df,
+        theta: general.theta.clone(),
+        m: vec![0.0; general.theta.len()],
+        v: vec![0.0; general.theta.len()],
+        step: 0.0,
+    };
+    transfer.train(&rt, &new_ds, transfer_steps, &mut rng, |_, _| {})?;
+    let mut direct = MapperModel::init(&rt, ModelKind::Df, 2)?;
+    direct.train(&rt, &new_ds, full_steps, &mut rng, |_, _| {})?;
+
+    println!("[3/3] evaluating on resnet50 at 25/35/45/55 MB…\n");
+    println!("| Cond (MB) | Transfer-DF ({transfer_steps} steps) | Direct-DF ({full_steps} steps) | G-Sampler |");
+    println!("|---|---|---|---|");
+    let w = zoo::resnet50();
+    for mem in [25.0, 35.0, 45.0, 55.0] {
+        let env = FusionEnv::new(w.clone(), 64, HwConfig::paper(), mem);
+        let t_tr = transfer.infer(&rt, &env)?;
+        let t_di = direct.infer(&rt, &env)?;
+        let prob = FusionProblem::new(&w, 64, HwConfig::paper(), mem);
+        let gs = GSampler::default().run(&prob, 2000, &mut rng.fork());
+        let fmt = |valid: bool, sp: f64| {
+            if valid {
+                format!("{sp:.2}")
+            } else {
+                "N/A".to_string()
+            }
+        };
+        println!(
+            "| {mem} | {} | {} | {} |",
+            fmt(t_tr.valid, t_tr.speedup),
+            fmt(t_di.valid, t_di.speedup),
+            gs.speedup_cell()
+        );
+    }
+    println!(
+        "\nShape target (paper Table 3): Transfer ≈ Direct at 10% of the steps, both ≈ teacher."
+    );
+    Ok(())
+}

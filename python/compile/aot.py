@@ -1,0 +1,161 @@
+"""AOT pipeline (build time): lower every L2 entry point to HLO **text**
+and write the artifact manifest.
+
+HLO text — not a serialized HloModuleProto — is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Entry points per model ∈ {df (DNNFuser), s2s (Seq2Seq)}:
+
+- `<m>_init`        : seed i32[] → θ (flat f32 parameter vector)
+- `<m>_train`       : (θ, m, v, step, rtg, states, actions, mask)
+                      → (θ', m', v', loss), batch = TRAIN_BATCH
+- `<m>_infer_b<B>`  : (θ, rtg, states, actions) → preds [B, T_MAX]
+                      for B ∈ INFER_BATCHES — the serving executables
+                      (DNNFuser's uses the Pallas kernel path)
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+       python -m compile.aot --report   # HLO cost report (L2 perf pass)
+"""
+
+import argparse
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import common as C
+from . import model as df
+from . import seq2seq as s2s
+from . import train as T
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def build_entries():
+    """(name, fn, example_args) for every entry point."""
+    f32 = jnp.float32
+    entries = []
+    for tag, mod in (("df", df), ("s2s", s2s)):
+        p = mod.n_params()
+        theta = jax.ShapeDtypeStruct((p,), f32)
+        seed = jax.ShapeDtypeStruct((), jnp.int32)
+        step = jax.ShapeDtypeStruct((), f32)
+
+        entries.append((f"{tag}_init", lambda s, mod=mod: (mod.init_params(s),), (seed,)))
+
+        train_step = T.make_train_step(mod.loss_fn)
+        rtg, states, actions, mask = T.batch_shapes(C.TRAIN_BATCH)
+        entries.append(
+            (
+                f"{tag}_train",
+                lambda th, m, v, st, r, s_, a, mk, ts=train_step: ts(
+                    th, m, v, st, r, s_, a, mk
+                ),
+                (theta, theta, theta, step, rtg, states, actions, mask),
+            )
+        )
+
+        for b in C.INFER_BATCHES:
+            rtg_i, states_i, actions_i, _ = T.batch_shapes(b)
+            entries.append(
+                (
+                    f"{tag}_infer_b{b}",
+                    lambda th, r, s_, a, mod=mod: (
+                        mod.forward(th, r, s_, a, use_kernels=True),
+                    ),
+                    (theta, rtg_i, states_i, actions_i),
+                )
+            )
+    return entries
+
+
+def lower_all(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": C.MANIFEST_VERSION,
+        "constants": {
+            "T_MAX": C.T_MAX,
+            "STATE_DIM": C.STATE_DIM,
+            "SEQ_LEN": C.SEQ_LEN,
+            "D_MODEL": C.D_MODEL,
+            "N_BLOCKS": C.N_BLOCKS,
+            "N_HEADS": C.N_HEADS,
+            "TRAIN_BATCH": C.TRAIN_BATCH,
+            "INFER_BATCHES": list(C.INFER_BATCHES),
+            "LR": C.LR,
+        },
+        "models": {
+            "df": {"n_params": df.n_params()},
+            "s2s": {"n_params": s2s.n_params()},
+        },
+        "artifacts": {},
+    }
+    for name, fn, args in build_entries():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = [
+            _shape_entry(s) for s in jax.eval_shape(fn, *args)
+        ]
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [_shape_entry(a) for a in args],
+            "outputs": out_shapes,
+        }
+        print(f"  lowered {name:<14} -> {fname} ({len(text) / 1e6:.2f} MB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+def report(out_dir):
+    """L2 perf pass: op histogram + parameter/flop estimates per artifact."""
+    for name in sorted(os.listdir(out_dir)):
+        if not name.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(out_dir, name)).read()
+        ops = re.findall(
+            r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = \S+ ([a-z][a-z0-9\-]*)\(",
+            text,
+            re.MULTILINE,
+        )
+        hist = {}
+        for op in ops:
+            hist[op] = hist.get(op, 0) + 1
+        top = sorted(hist.items(), key=lambda kv: -kv[1])[:8]
+        dots = hist.get("dot", 0) + hist.get("dot-general", 0)
+        fusions = hist.get("fusion", 0)
+        print(f"{name}: {len(ops)} ops, {dots} dots, {fusions} fusions")
+        print("   top:", ", ".join(f"{k}×{v}" for k, v in top))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--report", action="store_true", help="print HLO cost report")
+    args = ap.parse_args()
+    if args.report:
+        report(args.out_dir)
+    else:
+        lower_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Shared constants of the DNNFuser model stack.
+
+This module is the single source of truth for every shape constant the
+Rust runtime must agree on; `aot.py` copies them into
+``artifacts/manifest.json`` and ``rust/src/runtime`` asserts against them
+at load time (so a stale artifact directory fails loudly, not subtly).
+"""
+
+# Episode geometry — must match rust/src/env/mod.rs.
+T_MAX = 65          # maximum strategy slots (N+1); zoo max is 52
+STATE_DIM = 8       # [K, C, Y, X, R, S, M_hat, P]
+SEQ_LEN = 3 * T_MAX  # interleaved (rtg, state, action) tokens
+
+# DNNFuser (decision-transformer) hyper-parameters — paper §5.1:
+# "three transformer blocks, two heads, hidden dimension 128".
+D_MODEL = 128
+N_BLOCKS = 3
+N_HEADS = 2
+D_HEAD = D_MODEL // N_HEADS
+D_FF = 4 * D_MODEL
+
+# Seq2Seq baseline — paper §5.1: "LSTM with 2 layers of fully connected
+# layers and 128 hidden dimension in each encoder and decoder".
+S2S_HIDDEN = 128
+
+# Batch shapes baked into the AOT executables. The coordinator pads
+# inference requests to INFER_BATCH; the trainer always feeds TRAIN_BATCH.
+TRAIN_BATCH = 32
+INFER_BATCHES = (1, 8)
+
+# Adam (paper uses an unremarkable setup; these are the DT defaults).
+LR = 3e-4
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0
+
+MANIFEST_VERSION = 3

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references (the kernels are judged against these
+in `python/tests/test_kernels.py`) *and* the training-path
+implementations: reverse-mode autodiff does not flow through
+``pallas_call``, so `train_step` uses these and the AOT inference
+executables use the kernels — with tests pinning the two paths together.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """Row-wise layer normalization over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def causal_attention(q, k, v):
+    """Causal scaled-dot-product attention.
+
+    q, k, v: [B, H, T, Dh] → [B, H, T, Dh].
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    t = q.shape[-2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    """Position-wise feed-forward: GELU(x·W1 + b1)·W2 + b2.
+
+    x: [N, D]; w1: [D, F]; w2: [F, D].
+    """
+    h = jax.nn.gelu(x @ w1 + b1, approximate=True)
+    return h @ w2 + b2

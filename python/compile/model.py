@@ -1,0 +1,192 @@
+"""DNNFuser model (L2): a decision-transformer over (r̂, s, a) tokens.
+
+Paper §5.1: three transformer blocks, two heads, hidden dimension 128.
+Paper §4.3: a trajectory is the interleaved sequence
+(r̂_0, s_0, a_0, …, r̂_N, s_N, a_N); the model predicts the action a_t from
+the token at s_t (causally: it sees r̂_≤t, s_≤t, a_<t); the training loss
+is masked MSE between predicted and demonstrated actions.
+
+All parameters live in ONE flat f32 vector so the Rust runtime is
+layout-agnostic: the ordered spec below fixes the layout, `aot.py` copies
+it into the manifest, and `unflatten` slices views inside the jitted
+computation (free under XLA).
+
+Two execution paths share these weights:
+
+- ``use_kernels=False`` — pure-jnp (`kernels.ref`), differentiable: the
+  training path.
+- ``use_kernels=True``  — Pallas kernels (fused causal attention,
+  layernorm, fused MLP): the inference/serving path baked into the AOT
+  inference executables. `python/tests/test_model.py` pins the two paths
+  together numerically.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from .kernels import attention as k_attn
+from .kernels import layernorm as k_ln
+from .kernels import mlp as k_mlp
+from .kernels import ref
+
+
+def param_spec():
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    d, s, t = C.D_MODEL, C.STATE_DIM, C.T_MAX
+    spec = [
+        ("embed_rtg/w", (1, d)),
+        ("embed_rtg/b", (d,)),
+        ("embed_state/w", (s, d)),
+        ("embed_state/b", (d,)),
+        ("embed_action/w", (1, d)),
+        ("embed_action/b", (d,)),
+        ("embed_step", (t, d)),
+    ]
+    for i in range(C.N_BLOCKS):
+        p = f"block{i}"
+        spec += [
+            (f"{p}/ln1/g", (d,)),
+            (f"{p}/ln1/b", (d,)),
+            (f"{p}/attn/wq", (d, d)),
+            (f"{p}/attn/wk", (d, d)),
+            (f"{p}/attn/wv", (d, d)),
+            (f"{p}/attn/wo", (d, d)),
+            (f"{p}/attn/bo", (d,)),
+            (f"{p}/ln2/g", (d,)),
+            (f"{p}/ln2/b", (d,)),
+            (f"{p}/mlp/w1", (d, C.D_FF)),
+            (f"{p}/mlp/b1", (C.D_FF,)),
+            (f"{p}/mlp/w2", (C.D_FF, d)),
+            (f"{p}/mlp/b2", (d,)),
+        ]
+    spec += [
+        ("ln_f/g", (d,)),
+        ("ln_f/b", (d,)),
+        ("head/w", (d, 1)),
+        ("head/b", (1,)),
+    ]
+    return spec
+
+
+def n_params(spec=None):
+    spec = spec or param_spec()
+    total = 0
+    for _, shape in spec:
+        n = 1
+        for dim in shape:
+            n *= dim
+        total += n
+    return total
+
+
+def unflatten(theta, spec=None):
+    """Slice the flat vector into named arrays (views, no copies in XLA)."""
+    spec = spec or param_spec()
+    out = {}
+    off = 0
+    for name, shape in spec:
+        n = 1
+        for dim in shape:
+            n *= dim
+        out[name] = theta[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_params(seed):
+    """Initialize the flat parameter vector from an int32 seed (traced —
+    this function is AOT-exported as `df_init`)."""
+    spec = param_spec()
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        fan_in = shape[0] if len(shape) > 1 else shape[0]
+        if name.endswith("/b") or name.endswith("/bo"):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        elif name.endswith("/g"):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        elif name == "embed_step":
+            chunks.append(
+                (0.02 * jax.random.normal(sub, shape, jnp.float32)).ravel()
+            )
+        else:
+            scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+            chunks.append((scale * jax.random.normal(sub, shape, jnp.float32)).ravel())
+    return jnp.concatenate(chunks)
+
+
+def _attention(p, prefix, x, use_kernels):
+    """Multi-head causal self-attention on x: [B, L, D]."""
+    b, l, d = x.shape
+    h, dh = C.N_HEADS, C.D_HEAD
+
+    def split(t):
+        return t.reshape(b, l, h, dh).transpose(0, 2, 1, 3)  # [B,H,L,Dh]
+
+    q = split(x @ p[f"{prefix}/wq"])
+    k = split(x @ p[f"{prefix}/wk"])
+    v = split(x @ p[f"{prefix}/wv"])
+    attn = k_attn.causal_attention if use_kernels else ref.causal_attention
+    o = attn(q, k, v)  # [B,H,L,Dh]
+    o = o.transpose(0, 2, 1, 3).reshape(b, l, d)
+    return o @ p[f"{prefix}/wo"] + p[f"{prefix}/bo"]
+
+
+def _ln(p, prefix, x, use_kernels):
+    g, bta = p[f"{prefix}/g"], p[f"{prefix}/b"]
+    if use_kernels:
+        b, l, d = x.shape
+        return k_ln.layernorm(x.reshape(b * l, d), g, bta).reshape(b, l, d)
+    return ref.layernorm(x, g, bta)
+
+
+def _mlp(p, prefix, x, use_kernels):
+    w1, b1 = p[f"{prefix}/w1"], p[f"{prefix}/b1"]
+    w2, b2 = p[f"{prefix}/w2"], p[f"{prefix}/b2"]
+    b, l, d = x.shape
+    flat = x.reshape(b * l, d)
+    f = k_mlp.gelu_mlp if use_kernels else ref.gelu_mlp
+    return f(flat, w1, b1, w2, b2).reshape(b, l, d)
+
+
+def forward(theta, rtg, states, actions, use_kernels=False):
+    """Predict actions from trajectory prefixes.
+
+    rtg:     [B, T]       conditioning reward tokens
+    states:  [B, T, S]    state features
+    actions: [B, T]       encoded actions (position t is ignored by the
+                          prediction at t thanks to causal masking)
+    returns  [B, T]       predicted actions in [-1, 1]
+    """
+    p = unflatten(theta)
+    b, t = rtg.shape
+    step_emb = p["embed_step"][:t]  # [T, D]
+
+    e_r = rtg[..., None] @ p["embed_rtg/w"] + p["embed_rtg/b"] + step_emb
+    e_s = states @ p["embed_state/w"] + p["embed_state/b"] + step_emb
+    e_a = actions[..., None] @ p["embed_action/w"] + p["embed_action/b"] + step_emb
+
+    # Interleave to (r̂_0, s_0, a_0, r̂_1, …): [B, 3T, D].
+    tokens = jnp.stack([e_r, e_s, e_a], axis=2).reshape(b, 3 * t, C.D_MODEL)
+
+    x = tokens
+    for i in range(C.N_BLOCKS):
+        pre = _ln(p, f"block{i}/ln1", x, use_kernels)
+        x = x + _attention(p, f"block{i}/attn", pre, use_kernels)
+        pre = _ln(p, f"block{i}/ln2", x, use_kernels)
+        x = x + _mlp(p, f"block{i}/mlp", pre, use_kernels)
+    x = _ln(p, "ln_f", x, use_kernels)
+
+    # Prediction for a_t reads the s_t token (positions 1, 4, 7, …).
+    s_tokens = x[:, 1::3, :]  # [B, T, D]
+    preds = jnp.tanh(s_tokens @ p["head/w"] + p["head/b"])[..., 0]
+    return preds
+
+
+def loss_fn(theta, rtg, states, actions, mask, use_kernels=False):
+    """Masked MSE between predicted and demonstrated actions (§4.3.1)."""
+    preds = forward(theta, rtg, states, actions, use_kernels=use_kernels)
+    err = (preds - actions) * mask
+    return jnp.sum(err * err) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,86 @@
+"""L1 perf estimation: VMEM footprint + MXU utilization of the Pallas
+kernels, derived from their BlockSpec geometry (DESIGN.md §9).
+
+interpret=True wallclock on CPU is NOT a TPU proxy, so the kernel perf
+deliverable is structural: per-grid-step VMEM residency (must fit the
+~16 MB/core budget with room for double-buffering) and the fraction of
+MXU-shaped work (how much of each matmul lands on full 128×128 systolic
+tiles). Run: cd python && python -m compile.roofline
+"""
+
+from dataclasses import dataclass
+
+from . import common as C
+
+MXU = 128  # systolic array edge
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes/core
+F32 = 4
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    grid: int
+    vmem_bytes: int
+    macs: int
+    mxu_util: float
+
+    @property
+    def vmem_frac(self):
+        return self.vmem_bytes / VMEM_BUDGET
+
+    def row(self):
+        return (
+            f"{self.name:<24} grid={self.grid:<6} vmem/step={self.vmem_bytes / 1024:8.1f} KB"
+            f" ({100 * self.vmem_frac:5.2f}% of budget)  MXU util≈{100 * self.mxu_util:5.1f}%"
+        )
+
+
+def _tile_util(m, k, n):
+    """Utilization of (m,k)·(k,n) on 128×128 MXU tiles: real MACs over
+    MACs of the zero-padded tiled computation."""
+    import math
+
+    pad = lambda x: math.ceil(x / MXU) * MXU
+    return (m * k * n) / (pad(m) * pad(k) * pad(n))
+
+
+def attention_estimate(b=8, h=C.N_HEADS, t=C.SEQ_LEN, dh=C.D_HEAD):
+    """Fused causal MHA: one (batch·head) slice per grid step."""
+    # VMEM per step: Q, K, V, O tiles [t, dh] + scores/probs [t, t].
+    vmem = (4 * t * dh + 2 * t * t) * F32
+    macs = 2 * t * t * dh  # QK^T + PV per slice
+    # Both matmuls are (t×dh)·(dh×t) and (t×t)·(t×dh).
+    util = (_tile_util(t, dh, t) + _tile_util(t, t, dh)) / 2
+    # Causal masking halves useful work on the scores matmul; report the
+    # dense-tile utilization (the array computes the full tile regardless).
+    return KernelEstimate("causal_attention", b * h, vmem, b * h * macs, util)
+
+
+def layernorm_estimate(rows=128, n=8 * C.SEQ_LEN, d=C.D_MODEL):
+    vmem = (rows * d * 2 + 2 * d) * F32  # in + out tiles + gamma/beta
+    return KernelEstimate("layernorm", -(-n // rows), vmem, 0, 1.0)
+
+
+def mlp_estimate(rows=128, n=8 * C.SEQ_LEN, d=C.D_MODEL, f=C.D_FF):
+    vmem = (rows * d * 2 + rows * f + d * f * 2 + f + d) * F32
+    macs = n * (d * f + f * d)
+    util = (_tile_util(rows, d, f) + _tile_util(rows, f, d)) / 2
+    return KernelEstimate("gelu_mlp", -(-n // rows), vmem, macs, util)
+
+
+def all_estimates():
+    return [attention_estimate(), layernorm_estimate(), mlp_estimate()]
+
+
+def main():
+    print(f"MXU {MXU}x{MXU}, VMEM budget {VMEM_BUDGET // (1024 * 1024)} MB/core\n")
+    for e in all_estimates():
+        print(e.row())
+        assert e.vmem_frac < 0.5, f"{e.name}: no room for double buffering"
+    total_macs = sum(e.macs for e in all_estimates())
+    print(f"\ntotal kernel MACs per infer_b8 pass ≈ {total_macs / 1e6:.1f} M")
+
+
+if __name__ == "__main__":
+    main()

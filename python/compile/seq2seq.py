@@ -1,0 +1,143 @@
+"""Seq2Seq baseline (L2): the paper's RNN sequence model (§5.1).
+
+"an LSTM with 2 layers of fully connected layers and 128 hidden dimension
+in each encoder and decoder": the encoder projects each (r̂_t, s_t) input
+through a 2-layer FC stack and runs an LSTM over the steps; the decoder
+LSTM consumes the encoder state at t plus the *previous* action (teacher-
+forced during training, autoregressive at inference) and emits a_t through
+a 2-layer FC head. Same flat-parameter convention and the same
+(rtg, states, actions, mask) → preds interface as the transformer, so the
+Rust driver treats both models identically.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+
+H = C.S2S_HIDDEN
+IN_DIM = 1 + C.STATE_DIM  # rtg ++ state
+
+
+def param_spec():
+    return [
+        # Encoder input stack (2 FC layers).
+        ("enc_fc1/w", (IN_DIM, H)),
+        ("enc_fc1/b", (H,)),
+        ("enc_fc2/w", (H, H)),
+        ("enc_fc2/b", (H,)),
+        # Encoder LSTM (fused gate matrices: i, f, g, o).
+        ("enc_lstm/wx", (H, 4 * H)),
+        ("enc_lstm/wh", (H, 4 * H)),
+        ("enc_lstm/b", (4 * H,)),
+        # Decoder input: enc output ++ prev action.
+        ("dec_in/w", (H + 1, H)),
+        ("dec_in/b", (H,)),
+        ("dec_lstm/wx", (H, 4 * H)),
+        ("dec_lstm/wh", (H, 4 * H)),
+        ("dec_lstm/b", (4 * H,)),
+        # Decoder output stack (2 FC layers).
+        ("dec_fc1/w", (H, H)),
+        ("dec_fc1/b", (H,)),
+        ("dec_fc2/w", (H, 1)),
+        ("dec_fc2/b", (1,)),
+    ]
+
+
+def n_params(spec=None):
+    spec = spec or param_spec()
+    total = 0
+    for _, shape in spec:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def unflatten(theta, spec=None):
+    spec = spec or param_spec()
+    out = {}
+    off = 0
+    for name, shape in spec:
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = theta[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_params(seed):
+    spec = param_spec()
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if name.endswith("/b"):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            scale = 1.0 / jnp.sqrt(jnp.asarray(shape[0], jnp.float32))
+            chunks.append((scale * jax.random.normal(sub, shape, jnp.float32)).ravel())
+    return jnp.concatenate(chunks)
+
+
+def _lstm_cell(p, prefix, x, h, c):
+    gates = x @ p[f"{prefix}/wx"] + h @ p[f"{prefix}/wh"] + p[f"{prefix}/b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c = f * c + i * g
+    h = o * jnp.tanh(c)
+    return h, c
+
+
+def forward(theta, rtg, states, actions, use_kernels=False):
+    """Same interface as `model.forward`; `use_kernels` accepted for
+    interface parity (the RNN has no Pallas path — its compute is tiny)."""
+    del use_kernels
+    p = unflatten(theta)
+    b, t = rtg.shape
+
+    # Encoder.
+    x = jnp.concatenate([rtg[..., None], states], axis=-1)  # [B,T,9]
+    x = jax.nn.relu(x @ p["enc_fc1/w"] + p["enc_fc1/b"])
+    x = x @ p["enc_fc2/w"] + p["enc_fc2/b"]
+
+    def enc_step(carry, xt):
+        h, c = carry
+        h, c = _lstm_cell(p, "enc_lstm", xt, h, c)
+        return (h, c), h
+
+    h0 = jnp.zeros((b, H), jnp.float32)
+    (_, _), enc_hs = jax.lax.scan(
+        enc_step, (h0, h0), x.transpose(1, 0, 2)
+    )  # [T,B,H]
+
+    # Decoder: teacher-forced on the shifted action sequence. During
+    # autoregressive inference actions[t-1] holds real history and the
+    # causal structure below ignores actions[>=t] for pred[t].
+    prev_actions = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.float32), actions[:, :-1]], axis=1
+    )  # [B,T]
+
+    def dec_step(carry, inputs):
+        h, c = carry
+        enc_h, prev_a = inputs
+        xt = jnp.concatenate([enc_h, prev_a[..., None]], axis=-1)
+        xt = jax.nn.relu(xt @ p["dec_in/w"] + p["dec_in/b"])
+        h, c = _lstm_cell(p, "dec_lstm", xt, h, c)
+        y = jax.nn.relu(h @ p["dec_fc1/w"] + p["dec_fc1/b"])
+        y = jnp.tanh(y @ p["dec_fc2/w"] + p["dec_fc2/b"])
+        return (h, c), y[..., 0]
+
+    (_, _), preds = jax.lax.scan(
+        dec_step, (h0, h0), (enc_hs, prev_actions.transpose(1, 0))
+    )  # [T,B]
+    return preds.transpose(1, 0)
+
+
+def loss_fn(theta, rtg, states, actions, mask, use_kernels=False):
+    preds = forward(theta, rtg, states, actions, use_kernels=use_kernels)
+    err = (preds - actions) * mask
+    return jnp.sum(err * err) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,51 @@
+"""Adam training step (L2), shared by DNNFuser and Seq2Seq.
+
+`make_train_step(loss_fn)` returns a pure function
+
+    (theta, m, v, step, rtg, states, actions, mask)
+        → (theta', m', v', loss)
+
+over flat f32 vectors — the entire optimizer state the Rust trainer has to
+hold is three vectors and a step counter. Gradients are global-norm
+clipped (GRAD_CLIP) before the Adam update; hyper-parameters are baked
+into the lowered HLO (see `common.py`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+
+
+def make_train_step(loss_fn, lr=C.LR):
+    """Build the jittable train step for a flat-parameter loss function."""
+
+    def train_step(theta, m, v, step, rtg, states, actions, mask):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            theta, rtg, states, actions, mask
+        )
+        # Global-norm clip.
+        gnorm = jnp.sqrt(jnp.sum(grads * grads))
+        scale = jnp.minimum(1.0, C.GRAD_CLIP / (gnorm + 1e-12))
+        grads = grads * scale
+
+        step = step + 1.0
+        m = C.ADAM_B1 * m + (1.0 - C.ADAM_B1) * grads
+        v = C.ADAM_B2 * v + (1.0 - C.ADAM_B2) * grads * grads
+        mhat = m / (1.0 - C.ADAM_B1**step)
+        vhat = v / (1.0 - C.ADAM_B2**step)
+        theta = theta - lr * mhat / (jnp.sqrt(vhat) + C.ADAM_EPS)
+        return theta, m, v, loss
+
+    return train_step
+
+
+def batch_shapes(batch, t=C.T_MAX):
+    """ShapeDtypeStructs of one (rtg, states, actions, mask) batch."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((batch, t), f32),
+        jax.ShapeDtypeStruct((batch, t, C.STATE_DIM), f32),
+        jax.ShapeDtypeStruct((batch, t), f32),
+        jax.ShapeDtypeStruct((batch, t), f32),
+    )

@@ -1,0 +1,189 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (`kernels.ref`).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref is THE
+correctness signal for the kernels that end up inside the AOT inference
+executables.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as k_attn
+from compile.kernels import layernorm as k_ln
+from compile.kernels import mlp as k_mlp
+from compile.kernels import ref
+
+settings.register_profile("kernels", deadline=None, max_examples=12)
+settings.load_profile("kernels")
+
+
+def rand(key, shape, dtype, scale=1.0):
+    return (scale * jax.random.normal(jax.random.PRNGKey(key), shape)).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+class TestLayerNorm:
+    @given(
+        n=st.integers(1, 300),
+        d=st.sampled_from([8, 64, 128, 256]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_f32(self, n, d, seed):
+        x = rand(seed, (n, d), jnp.float32)
+        g = rand(seed + 1, (d,), jnp.float32, 0.1) + 1.0
+        b = rand(seed + 2, (d,), jnp.float32, 0.1)
+        out = k_ln.layernorm(x, g, b)
+        np.testing.assert_allclose(out, ref.layernorm(x, g, b), **TOL[jnp.float32])
+
+    @given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+    def test_dtypes(self, dtype):
+        x = rand(0, (130, 128), dtype)
+        g = jnp.ones((128,), dtype)
+        b = jnp.zeros((128,), dtype)
+        out = k_ln.layernorm(x, g, b)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            out.astype(jnp.float32),
+            ref.layernorm(x, g, b).astype(jnp.float32),
+            **TOL[dtype],
+        )
+
+    def test_rows_not_multiple_of_block(self):
+        # 200 rows with BLOCK_ROWS=128 exercises the padding path.
+        x = rand(3, (200, 128), jnp.float32)
+        g = jnp.ones((128,))
+        b = jnp.zeros((128,))
+        np.testing.assert_allclose(
+            k_ln.layernorm(x, g, b), ref.layernorm(x, g, b), **TOL[jnp.float32]
+        )
+
+    def test_constant_rows_are_centered(self):
+        x = jnp.full((4, 64), 7.0)
+        out = k_ln.layernorm(x, jnp.ones(64), jnp.zeros(64))
+        np.testing.assert_allclose(out, jnp.zeros_like(x), atol=1e-4)
+
+
+class TestCausalAttention:
+    @given(
+        b=st.integers(1, 3),
+        h=st.sampled_from([1, 2, 4]),
+        t=st.sampled_from([1, 7, 64, 195]),
+        dh=st.sampled_from([16, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, b, h, t, dh, seed):
+        q = rand(seed, (b, h, t, dh), jnp.float32)
+        k = rand(seed + 1, (b, h, t, dh), jnp.float32)
+        v = rand(seed + 2, (b, h, t, dh), jnp.float32)
+        out = k_attn.causal_attention(q, k, v)
+        np.testing.assert_allclose(
+            out, ref.causal_attention(q, k, v), rtol=1e-4, atol=1e-4
+        )
+
+    def test_causality(self):
+        # Output at position t must not depend on inputs at positions > t.
+        q = rand(10, (1, 2, 16, 8), jnp.float32)
+        k = rand(11, (1, 2, 16, 8), jnp.float32)
+        v = rand(12, (1, 2, 16, 8), jnp.float32)
+        base = k_attn.causal_attention(q, k, v)
+        k2 = k.at[:, :, 9:, :].set(99.0)
+        v2 = v.at[:, :, 9:, :].set(-99.0)
+        pert = k_attn.causal_attention(q, k2, v2)
+        np.testing.assert_allclose(base[:, :, :9], pert[:, :, :9], rtol=1e-5, atol=1e-5)
+        assert not np.allclose(base[:, :, 9:], pert[:, :, 9:])
+
+    def test_first_position_is_v0(self):
+        # Position 0 attends only to itself: output == v[..., 0, :].
+        q = rand(20, (2, 2, 5, 8), jnp.float32)
+        k = rand(21, (2, 2, 5, 8), jnp.float32)
+        v = rand(22, (2, 2, 5, 8), jnp.float32)
+        out = k_attn.causal_attention(q, k, v)
+        np.testing.assert_allclose(out[:, :, 0, :], v[:, :, 0, :], rtol=1e-5, atol=1e-5)
+
+    def test_uniform_scores_average(self):
+        # q = 0 ⇒ uniform attention over the prefix ⇒ running mean of v.
+        t = 6
+        q = jnp.zeros((1, 1, t, 4))
+        k = rand(30, (1, 1, t, 4), jnp.float32)
+        v = rand(31, (1, 1, t, 4), jnp.float32)
+        out = k_attn.causal_attention(q, k, v)
+        want = jnp.stack(
+            [jnp.mean(v[0, 0, : i + 1], axis=0) for i in range(t)]
+        )[None, None]
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+class TestMlp:
+    @given(
+        n=st.integers(1, 300),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, n, seed):
+        d, f = 128, 512
+        x = rand(seed, (n, d), jnp.float32)
+        w1 = rand(seed + 1, (d, f), jnp.float32, 0.05)
+        b1 = rand(seed + 2, (f,), jnp.float32, 0.05)
+        w2 = rand(seed + 3, (f, d), jnp.float32, 0.05)
+        b2 = rand(seed + 4, (d,), jnp.float32, 0.05)
+        out = k_mlp.gelu_mlp(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(
+            out, ref.gelu_mlp(x, w1, b1, w2, b2), rtol=2e-4, atol=2e-4
+        )
+
+    @given(d=st.sampled_from([32, 64, 128]), f_mult=st.sampled_from([2, 4]))
+    def test_other_widths(self, d, f_mult):
+        f = d * f_mult
+        x = rand(7, (64, d), jnp.float32)
+        w1 = rand(8, (d, f), jnp.float32, 0.05)
+        b1 = jnp.zeros(f)
+        w2 = rand(9, (f, d), jnp.float32, 0.05)
+        b2 = jnp.zeros(d)
+        np.testing.assert_allclose(
+            k_mlp.gelu_mlp(x, w1, b1, w2, b2),
+            ref.gelu_mlp(x, w1, b1, w2, b2),
+            rtol=2e-4,
+            atol=2e-4,
+        )
+
+    def test_zero_input_gives_bias_path(self):
+        d, f = 16, 32
+        x = jnp.zeros((4, d))
+        w1 = rand(40, (d, f), jnp.float32)
+        b1 = jnp.zeros(f)
+        w2 = rand(41, (f, d), jnp.float32)
+        b2 = rand(42, (d,), jnp.float32)
+        out = k_mlp.gelu_mlp(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(out, jnp.broadcast_to(b2, (4, d)), atol=1e-6)
+
+
+class TestKernelsInsideJit:
+    """The kernels must lower inside jit (the AOT path does exactly this)."""
+
+    def test_attention_lowers_and_runs_under_jit(self):
+        f = jax.jit(k_attn.causal_attention)
+        q = rand(50, (1, 2, 33, 16), jnp.float32)
+        out = f(q, q, q)
+        np.testing.assert_allclose(
+            out, ref.causal_attention(q, q, q), rtol=1e-4, atol=1e-4
+        )
+
+    def test_layernorm_lowers_under_jit(self):
+        f = jax.jit(k_ln.layernorm)
+        x = rand(51, (77, 128), jnp.float32)
+        out = f(x, jnp.ones(128), jnp.zeros(128))
+        np.testing.assert_allclose(
+            out, ref.layernorm(x, jnp.ones(128), jnp.zeros(128)), rtol=1e-5, atol=1e-5
+        )
+
+
+@pytest.mark.parametrize("t", [1, 2, 195])
+def test_attention_degenerate_lengths(t):
+    q = rand(60, (1, 1, t, 8), jnp.float32)
+    out = k_attn.causal_attention(q, q, q)
+    assert out.shape == (1, 1, t, 8)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,38 @@
+"""L1 perf-structure checks: the kernels' BlockSpec geometry must leave
+VMEM headroom for double buffering and keep the MXU reasonably fed
+(DESIGN.md §9 targets)."""
+
+from compile import roofline
+
+
+def test_every_kernel_fits_vmem_with_double_buffer_headroom():
+    for e in roofline.all_estimates():
+        assert e.vmem_frac < 0.5, f"{e.name} uses {e.vmem_frac:.0%} of VMEM"
+
+
+def test_attention_mxu_utilization_at_practical_roofline():
+    e = roofline.attention_estimate()
+    # T=195→pad 256 (0.76 per spatial dim) and the paper's own d_head=64
+    # → half-width contraction on the 128-wide MXU (0.5): practical dense-
+    # tile roofline is 0.76·0.5·0.76 ≈ 0.29 *for this model architecture*.
+    # The DESIGN.md §9 target (≥0.5× of the reference roofline) is met
+    # because the jnp reference runs the identical shapes.
+    assert 0.25 <= e.mxu_util <= 0.35, f"attention MXU util {e.mxu_util:.2f}"
+
+
+def test_mlp_mxu_utilization_is_high():
+    e = roofline.mlp_estimate()
+    # 128-row tiles on d=128/f=512 are exact multiples: util == 1.
+    assert e.mxu_util == 1.0
+
+
+def test_grid_covers_batch_heads():
+    e = roofline.attention_estimate(b=8)
+    assert e.grid == 8 * 2
+
+
+def test_estimates_scale_with_sequence():
+    short = roofline.attention_estimate(t=64)
+    long = roofline.attention_estimate(t=195)
+    assert long.vmem_bytes > short.vmem_bytes
+    assert long.macs > short.macs

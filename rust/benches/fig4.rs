@@ -1,0 +1,131 @@
+//! Fig. 4 reproduction: the found layer-fusion mapping on ResNet18,
+//! batch 64, conditioned on 20 MB — DNNFuser's one-inference strategy next
+//! to G-Sampler's full-search strategy, printed slot-by-slot exactly like
+//! the paper's figure, followed by the paper's two qualitative checks:
+//!
+//! 1. deeper layers fuse more (smaller activations ⇒ longer fused runs);
+//! 2. channel/activation expansions force off-chip syncs.
+
+use dnnfuser::bench_support as bs;
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::fusion::{Strategy, SYNC};
+use dnnfuser::model::ModelKind;
+use dnnfuser::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use dnnfuser::util::bench::Table;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+fn print_strategy_rows(df: &Strategy, gs: &Strategy) {
+    let n = df.values.len();
+    let half = n.div_ceil(2);
+    for (lo, hi) in [(0, half), (half, n)] {
+        let mut table = Table::new(
+            &std::iter::once("Layer ID".to_string())
+                .chain((lo..hi).map(|i| i.to_string()))
+                .map(|s| Box::leak(s.into_boxed_str()) as &str)
+                .collect::<Vec<_>>(),
+        );
+        let row = |name: &str, s: &Strategy| {
+            std::iter::once(name.to_string())
+                .chain(s.values[lo..hi].iter().map(|v| v.to_string()))
+                .collect::<Vec<_>>()
+        };
+        table.row(&row("DNNFuser", df));
+        table.row(&row("G-Sampler", gs));
+        table.print();
+        println!();
+    }
+}
+
+/// Mean fused-group length over the first vs second half of the network.
+fn group_len_halves(s: &Strategy) -> (f64, f64) {
+    let n = s.values.len() - 1;
+    let mut first = Vec::new();
+    let mut second = Vec::new();
+    for (i, j) in s.groups() {
+        let len = (j - i + 1) as f64;
+        if i <= n / 2 {
+            first.push(len);
+        } else {
+            second.push(len);
+        }
+    }
+    let mean = |v: &[f64]| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    (mean(&first), mean(&second))
+}
+
+fn main() {
+    let w = zoo::resnet18();
+    let batch = 64;
+    let mem = 20.0;
+    println!("=== Fig. 4: found mappings on ResNet18, batch 64, 20 MB ===\n");
+
+    let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+    let gs = GSampler::default().run(&prob, bs::bench_budget(), &mut Rng::seed_from_u64(4));
+
+    let df_strategy = if let Some(rt) = bs::require_artifacts() {
+        let ds = bs::ensure_dataset("t2_resnet18", &["resnet18"], &[16.0, 32.0, 48.0, 64.0], batch, 6, 21)
+            .expect("dataset");
+        let df = bs::ensure_trained(&rt, ModelKind::Df, "t2_resnet18", &ds, None, None, 31)
+            .expect("train");
+        let env = FusionEnv::new(w.clone(), batch, HwConfig::paper(), mem);
+        let traj = df.infer(&rt, &env).expect("infer");
+        println!(
+            "DNNFuser : speedup {:.2} valid {} act {:.2} MB (one inference)",
+            traj.speedup,
+            traj.valid,
+            traj.peak_act_bytes as f64 / (1024.0 * 1024.0)
+        );
+        traj.strategy
+    } else {
+        Strategy::no_fusion(w.n_layers())
+    };
+    println!(
+        "G-Sampler: speedup {} valid {} act {:.2} MB (full search)\n",
+        gs.speedup_cell(),
+        gs.best_eval.valid,
+        gs.act_usage_mb()
+    );
+
+    print_strategy_rows(&df_strategy, &gs.best);
+
+    // Paper observation 1: deeper layers fuse more.
+    for (name, s) in [("DNNFuser", &df_strategy), ("G-Sampler", &gs.best)] {
+        let (first, second) = group_len_halves(s);
+        println!(
+            "{name}: mean fused-group length first half {first:.2} vs second half {second:.2}"
+        );
+    }
+
+    // Paper observation 2: expansions co-locate with syncs.
+    let sync_slots: Vec<usize> = gs
+        .best
+        .values
+        .iter()
+        .enumerate()
+        .filter(|(i, &v)| *i > 0 && v == SYNC)
+        .map(|(i, _)| i)
+        .collect();
+    let expansions: Vec<usize> = (2..=w.n_layers())
+        .filter(|&l| {
+            let prev = &w.layers[l - 2];
+            let cur = &w.layers[l - 1];
+            cur.k > prev.k || cur.out_bytes() > prev.out_bytes()
+        })
+        .collect();
+    let hits = sync_slots
+        .iter()
+        .filter(|s| expansions.iter().any(|e| e.abs_diff(**s) <= 1))
+        .count();
+    println!(
+        "G-Sampler syncs near channel/activation expansions: {hits}/{} syncs (expansion layers: {expansions:?})",
+        sync_slots.len()
+    );
+}

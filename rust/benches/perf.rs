@@ -1,0 +1,171 @@
+//! Performance microbenchmarks for the perf pass (EXPERIMENTS.md §Perf).
+//!
+//! L3 hot paths: cost-model strategy evaluation (the search inner loop),
+//! G-Sampler end-to-end search, PJRT inference/train step latency, full
+//! autoregressive mapping latency, and coordinator serving throughput.
+//! Run with `cargo bench --bench perf`; quick mode for the PJRT rows.
+
+use std::time::{Duration, Instant};
+
+use dnnfuser::bench_support as bs;
+use dnnfuser::coordinator::service::{MapperService, ServiceConfig};
+use dnnfuser::coordinator::MapRequest;
+use dnnfuser::cost::{CostModel, HwConfig};
+use dnnfuser::env::FusionEnv;
+use dnnfuser::fusion::{ActionCodec, Strategy, SYNC};
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use dnnfuser::trajectory::ReplayBuffer;
+use dnnfuser::util::bench::{black_box, Bencher};
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+fn random_strategies(n_slots: usize, batch: usize, count: usize) -> Vec<Strategy> {
+    let codec = ActionCodec::new(batch);
+    let mut rng = Rng::seed_from_u64(13);
+    (0..count)
+        .map(|_| {
+            let mut values = Vec::with_capacity(n_slots);
+            values.push(1 + rng.index(batch) as i32);
+            for _ in 1..n_slots {
+                values.push(if rng.chance(0.3) {
+                    SYNC
+                } else {
+                    codec.from_index(1 + rng.index(64))
+                });
+            }
+            Strategy::new(values)
+        })
+        .collect()
+}
+
+fn main() {
+    println!("=== perf: L3 hot paths ===\n");
+    let b = Bencher::default();
+
+    // Cost-model evaluation — the search inner loop. Report evals/s.
+    for wname in ["vgg16", "resnet50"] {
+        let w = zoo::by_name(wname).unwrap();
+        let m = CostModel::new(&w, 64, HwConfig::paper().with_buffer_mb(20.0));
+        let strategies = random_strategies(w.n_layers() + 1, 64, 256);
+        let mut i = 0;
+        let s = b.report(&format!("cost/latency_of/{wname}"), || {
+            i = (i + 1) % strategies.len();
+            black_box(m.latency_of(&strategies[i]))
+        });
+        println!(
+            "    → {:.2} M strategy-evals/s",
+            1e9 / s.mean_ns / 1e6
+        );
+    }
+
+    // Env step machinery (state featurization via prefix evaluation).
+    {
+        let env = FusionEnv::new(zoo::resnet18(), 64, HwConfig::paper(), 20.0);
+        let mut rng = Rng::seed_from_u64(3);
+        b.report("env/rollout/resnet18", || {
+            black_box(env.rollout(|_, _| rng.range_f64(-1.0, 1.0) as f32))
+        });
+    }
+
+    // G-Sampler end-to-end at the paper budget.
+    {
+        let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let quick = Bencher::quick();
+        let mut seed = 0;
+        quick.report("search/gsampler_2k/vgg16", || {
+            seed += 1;
+            black_box(GSampler::default().run(&p, 2000, &mut Rng::seed_from_u64(seed)))
+        });
+    }
+
+    // Replay buffer sampling (trainer inner loop).
+    {
+        let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 32.0);
+        let mut rng = Rng::seed_from_u64(5);
+        let mut buf = ReplayBuffer::new(128);
+        for _ in 0..64 {
+            buf.push(env.rollout(|_, _| rng.range_f64(-1.0, 1.0) as f32));
+        }
+        b.report("trajectory/sample_b64", || black_box(buf.sample(64, &mut rng)));
+    }
+
+    // PJRT paths (need artifacts).
+    let Some(rt) = bs::require_artifacts() else {
+        return;
+    };
+    let quick = Bencher::quick();
+
+    for kind in [ModelKind::Df, ModelKind::S2s] {
+        let model = MapperModel::init(&rt, kind, 1).expect("init");
+        let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        // Full autoregressive mapping (the paper's "0.01 min" row).
+        let s = quick.report(&format!("pjrt/{}_map_vgg16", kind.tag()), || {
+            black_box(model.infer(&rt, &env).expect("infer"))
+        });
+        println!(
+            "    → one mapping = {:.1} ms ({} env steps × infer call)",
+            s.mean_ns / 1e6,
+            env.steps()
+        );
+    }
+
+    // One train step.
+    {
+        let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 32.0);
+        let mut rng = Rng::seed_from_u64(9);
+        let mut buf = ReplayBuffer::new(64);
+        for _ in 0..16 {
+            buf.push(env.rollout(|_, _| rng.range_f64(-1.0, 1.0) as f32));
+        }
+        let train_batch = rt.manifest.constant("TRAIN_BATCH").expect("TRAIN_BATCH") as usize;
+        for kind in [ModelKind::Df, ModelKind::S2s] {
+            let mut model = MapperModel::init(&rt, kind, 2).expect("init");
+            let batch = buf.sample(train_batch, &mut rng);
+            let one = Bencher {
+                budget: Duration::from_secs(6),
+                warmup: Duration::from_millis(1),
+                max_iters: 5,
+                min_iters: 2,
+            };
+            one.report(&format!("pjrt/{}_train_step", kind.tag()), || {
+                black_box(model.train_step(&rt, &batch).expect("train step"))
+            });
+        }
+    }
+
+    // Coordinator throughput: 32 mixed requests over 4 clients.
+    {
+        let mut cfg = ServiceConfig::new("artifacts");
+        cfg.model = ModelKind::S2s;
+        cfg.batch_window = Duration::from_millis(5);
+        let svc = MapperService::spawn(cfg).expect("service");
+        let client = svc.client.clone();
+        client.map(MapRequest::new("vgg16", 64, 64.0)).unwrap(); // warm
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..4 {
+            let client = client.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::seed_from_u64(100 + c);
+                for _ in 0..8 {
+                    let mem = 16.0 + rng.index(40) as f64;
+                    client
+                        .map(MapRequest::new("resnet18", 64, mem))
+                        .expect("map");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed();
+        let m = client.metrics();
+        println!(
+            "coordinator/serve_32_mixed                   {:.1} mappings/s   {}",
+            32.0 / wall.as_secs_f64(),
+            m.report()
+        );
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,145 @@
+//! Table 1 reproduction: optimizer comparison on VGG16.
+//!
+//! Paper setup: case-1 = 20 MB condition, batch 64; case-2 = 40 MB, batch
+//! 128. Every search method gets a 2K sampling budget; the sequence models
+//! (Seq2Seq, DNNFuser) are trained on G-Sampler demonstrations and then
+//! mapped with ONE inference pass. Columns mirror the paper: speedup over
+//! the no-fusion baseline ("N/A" when the memory constraint is violated),
+//! peak activation usage, and search/mapping wall time in minutes.
+//!
+//! Expectation (DESIGN.md §7): absolute numbers differ (rebuilt cost model,
+//! different host) but the SHAPE must hold — generic black-box methods
+//! blow the constraint at this budget, G-Sampler satisfies it with real
+//! speedup, the sequence models match teacher quality at orders-of-
+//! magnitude lower mapping time.
+
+use std::time::Instant;
+
+use dnnfuser::bench_support as bs;
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::model::ModelKind;
+use dnnfuser::search::{
+    a2c::A2c, cma::CmaEs, de::De, gsampler::GSampler, pso::Pso, stdga::StdGa, tbpsa::Tbpsa,
+    FusionProblem, Optimizer,
+};
+use dnnfuser::util::bench::Table;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+/// Paper Table 1 reference values (speedup, act MB, minutes) per case.
+fn paper_ref(case: usize, algo: &str) -> Option<(&'static str, &'static str, &'static str)> {
+    let rows: &[(&str, &str, &str, &str)] = if case == 0 {
+        &[
+            ("PSO", "N/A", "102.76", "69.17"),
+            ("CMA", "N/A", "186.25", "77.03"),
+            ("DE", "N/A", "114", "65.17"),
+            ("TBPSA", "N/A", "153.34", "110.50"),
+            ("stdGA", "N/A", "139.69", "61.66"),
+            ("A2C", "0.98", "2.26", "335.63"),
+            ("G-Sampler", "1.19", "16.46", "0.66"),
+            ("Seq2Seq", "1.05", "16.06", "0.01"),
+            ("DNNFuser", "1.20", "19.27", "0.01"),
+        ]
+    } else {
+        &[
+            ("PSO", "N/A", "255.3", "93.28"),
+            ("CMA", "N/A", "411.04", "91.42"),
+            ("DE", "N/A", "149.32", "104.74"),
+            ("TBPSA", "N/A", "245.66", "106.20"),
+            ("stdGA", "N/A", "236.03", "151.74"),
+            ("A2C", "N/A", "372.51", "293.81"),
+            ("G-Sampler", "2.06", "37.73", "1.27"),
+            ("Seq2Seq", "1.51", "35.4", "0.01"),
+            ("DNNFuser", "3.13", "37.73", "0.01"),
+        ]
+    };
+    rows.iter()
+        .find(|(a, _, _, _)| *a == algo)
+        .map(|(_, s, m, t)| (*s, *m, *t))
+}
+
+fn main() {
+    let budget = bs::bench_budget();
+    let cases = [
+        (20.0f64, 64usize, "case-1: 20 MB, batch 64"),
+        (40.0, 128, "case-2: 40 MB, batch 128"),
+    ];
+
+    let rt = bs::require_artifacts();
+
+    for (case_idx, &(mem, batch, label)) in cases.iter().enumerate() {
+        println!("\n=== Table 1 {label} (budget {budget}) ===\n");
+        let w = zoo::vgg16();
+        let mut table = Table::new(&[
+            "Algorithm",
+            "Speedup (paper)",
+            "Act. Usage MB (paper)",
+            "Search Time min (paper)",
+        ]);
+
+        let opts: Vec<Box<dyn Optimizer>> = vec![
+            Box::new(Pso::default()),
+            Box::new(CmaEs::default()),
+            Box::new(De::default()),
+            Box::new(Tbpsa::default()),
+            Box::new(StdGa::default()),
+            Box::new(A2c::default()),
+            Box::new(GSampler::default()),
+        ];
+        for opt in opts {
+            let p = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+            let mut rng = Rng::seed_from_u64(1000 + case_idx as u64);
+            let r = opt.run(&p, budget, &mut rng);
+            let (ps, pm, pt) = paper_ref(case_idx, &r.algo).unwrap_or(("?", "?", "?"));
+            table.row(&[
+                r.algo.clone(),
+                format!("{} ({ps})", r.speedup_cell()),
+                format!("{:.2} ({pm})", r.act_usage_mb()),
+                format!("{:.3} ({pt})", r.wall_s / 60.0),
+            ]);
+        }
+
+        // Sequence models: imitation-train on teacher demos for this case's
+        // batch size, then map with a single inference pass. Case-1 shares
+        // the Table 2 VGG16 cache (identical recipe); case-2 (batch 128)
+        // needs its own.
+        if let Some(rt) = rt.as_ref() {
+            let tag = if case_idx == 0 {
+                "t2_vgg16".to_string()
+            } else {
+                format!("t1c{case_idx}")
+            };
+            let mems = [16.0, 32.0, 48.0, 64.0];
+            let runs = 6;
+            let ds =
+                bs::ensure_dataset(&tag, &["vgg16"], &mems, batch, runs, 21).expect("dataset");
+            for (kind, pname) in [(ModelKind::S2s, "Seq2Seq"), (ModelKind::Df, "DNNFuser")] {
+                let model =
+                    bs::ensure_trained(rt, kind, &tag, &ds, None, None, 11).expect("train");
+                let env = FusionEnv::new(w.clone(), batch, HwConfig::paper(), mem);
+                let t0 = Instant::now();
+                let traj = model.infer(rt, &env).expect("infer");
+                let dt = t0.elapsed();
+                let cell = if traj.valid {
+                    format!("{:.2}", traj.speedup)
+                } else {
+                    "N/A".to_string()
+                };
+                let (ps, pm, pt) = paper_ref(case_idx, pname).unwrap();
+                table.row(&[
+                    pname.to_string(),
+                    format!("{cell} ({ps})"),
+                    format!("{:.2} ({pm})", traj.peak_act_bytes as f64 / (1024.0 * 1024.0)),
+                    format!("{:.4} ({pt})", dt.as_secs_f64() / 60.0),
+                ]);
+            }
+        }
+        table.print();
+    }
+    println!(
+        "\nNote: absolute values come from the rebuilt cost model and this host; \
+         the comparison shape (who meets the constraint, who wins, relative \
+         search time) is the reproduction target — see EXPERIMENTS.md."
+    );
+}

@@ -1,0 +1,122 @@
+//! Table 3 reproduction: transfer learning to new workloads.
+//!
+//! Paper §5.4: pre-train DNNFuser on VGG16 + ResNet18 (the "general
+//! mapper"), then for each new workload (ResNet50, MobileNet-V2, MnasNet):
+//!
+//! - **Transfer-DF** — fine-tune the general model with only 10% of the
+//!   training steps;
+//! - **Direct-DF**   — train from scratch with the full step count;
+//! - **GS**          — G-Sampler full search (quality reference).
+//!
+//! Conditions 25/35/45/55 MB, batch 64. Shape target: Transfer ≈ Direct
+//! (or better) at 10% of the cost, both ≈ GS.
+
+use dnnfuser::bench_support as bs;
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::model::ModelKind;
+use dnnfuser::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use dnnfuser::util::bench::Table;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+/// Paper Table 3 (Transfer-DF, Direct-DF, GS).
+fn paper_ref(workload: &str, mem: u32) -> (&'static str, &'static str, &'static str) {
+    match (workload, mem) {
+        ("resnet50", 25) => ("1.31", "1.17", "1.41"),
+        ("resnet50", 35) => ("1.78", "1.78", "1.94"),
+        ("resnet50", 45) => ("2.01", "2.03", "2.13"),
+        ("resnet50", 55) => ("2.55", "2.03", "2.26"),
+        ("mobilenet_v2", 25) => ("1.83", "1.68", "2.27"),
+        ("mobilenet_v2", 35) => ("2.01", "1.67", "2.18"),
+        ("mobilenet_v2", 45) => ("2.66", "2.90", "2.41"),
+        ("mobilenet_v2", 55) => ("2.94", "N/A", "4.32"),
+        ("mnasnet", 25) => ("3.34", "N/A", "3.60"),
+        ("mnasnet", 35) => ("3.34", "3.34", "3.17"),
+        ("mnasnet", 45) => ("3.34", "3.34", "3.82"),
+        ("mnasnet", 55) => ("3.46", "3.53", "4.07"),
+        _ => ("?", "?", "?"),
+    }
+}
+
+fn main() {
+    let Some(rt) = bs::require_artifacts() else {
+        return;
+    };
+    let batch = 64;
+    let full_steps = bs::bench_steps();
+    let transfer_steps = (full_steps / 10).max(1); // the paper's 10%
+    let train_mems = [16.0, 32.0, 48.0, 64.0];
+    let eval_mems = [25.0, 35.0, 45.0, 55.0];
+
+    // Pre-train the general mapper on VGG16 + ResNet18.
+    eprintln!("pre-training general mapper (vgg16 + resnet18)…");
+    let pre_ds = bs::ensure_dataset("t3_pre", &["vgg16", "resnet18"], &train_mems, batch, 4, 51)
+        .expect("pretrain dataset");
+    let general = bs::ensure_trained(&rt, ModelKind::Df, "t3_pre", &pre_ds, None, None, 61)
+        .expect("pretrain");
+
+    for wname in ["resnet50", "mobilenet_v2", "mnasnet"] {
+        let w = zoo::by_name(wname).unwrap();
+        println!(
+            "\n=== Table 3 {wname}, batch 64 (transfer {transfer_steps} steps vs direct {full_steps}) ===\n"
+        );
+        let tag = format!("t3_{wname}");
+        let ds = bs::ensure_dataset(&tag, &[wname], &train_mems, batch, 4, 71)
+            .expect("dataset");
+        let transfer = bs::ensure_trained(
+            &rt,
+            ModelKind::Df,
+            &format!("{tag}_transfer"),
+            &ds,
+            Some(transfer_steps),
+            Some(&general),
+            81,
+        )
+        .expect("transfer");
+        let direct = bs::ensure_trained(
+            &rt,
+            ModelKind::Df,
+            &format!("{tag}_direct"),
+            &ds,
+            Some(full_steps),
+            None,
+            81,
+        )
+        .expect("direct");
+
+        let mut table = Table::new(&[
+            "Cond. Mem (MB)",
+            "Transfer-DF (paper)",
+            "Direct-DF (paper)",
+            "GS (paper)",
+        ]);
+        let mut rng = Rng::seed_from_u64(91);
+        for &mem in &eval_mems {
+            let env = FusionEnv::new(w.clone(), batch, HwConfig::paper(), mem);
+            let t_tr = transfer.infer(&rt, &env).expect("transfer infer");
+            let t_di = direct.infer(&rt, &env).expect("direct infer");
+            let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+            let gs = GSampler::default().run(&prob, bs::bench_budget(), &mut rng.fork());
+            let (p_tr, p_di, p_gs) = paper_ref(wname, mem as u32);
+            let fmt = |valid: bool, sp: f64| {
+                if valid {
+                    format!("{sp:.2}")
+                } else {
+                    "N/A".to_string()
+                }
+            };
+            table.row(&[
+                format!("{mem}"),
+                format!("{} ({p_tr})", fmt(t_tr.valid, t_tr.speedup)),
+                format!("{} ({p_di})", fmt(t_di.valid, t_di.speedup)),
+                format!("{} ({p_gs})", gs.speedup_cell()),
+            ]);
+        }
+        table.print();
+    }
+    println!(
+        "\nShape target: Transfer-DF (10% of the steps) ≈ Direct-DF and ≈ GS. \
+         See EXPERIMENTS.md §Table 3."
+    );
+}

@@ -1,0 +1,153 @@
+//! Shared harness for the paper-reproduction benches (`rust/benches/`).
+//!
+//! Table 1–3 and Fig. 4 all need teacher datasets and trained checkpoints;
+//! building them from scratch on every `cargo bench` invocation would take
+//! tens of minutes on one core, so this module caches both under
+//! `runs/bench_cache/`, keyed by their generation recipe. Delete the
+//! directory to force regeneration; set `DNNFUSER_BENCH_STEPS` /
+//! `DNNFUSER_BENCH_BUDGET` to override the training/search budgets
+//! (EXPERIMENTS.md records which settings produced the committed numbers).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::cost::HwConfig;
+use crate::model::{MapperModel, ModelKind};
+use crate::runtime::{LoadSet, Runtime};
+use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use crate::trajectory::ReplayBuffer;
+use crate::util::rng::Rng;
+use crate::workload::zoo;
+
+pub fn cache_dir() -> PathBuf {
+    let d = PathBuf::from("runs/bench_cache");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+/// Training steps for bench checkpoints (env-overridable). Imitation on
+/// the teacher datasets (tens of distinct trajectories) plateaus within
+/// ~20 steps — 60 is comfortably past convergence; the paper's 100K-epoch
+/// setting is reachable by overriding (DESIGN.md §8).
+pub fn bench_steps() -> usize {
+    std::env::var("DNNFUSER_BENCH_STEPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200)
+}
+
+/// Teacher sampling budget (paper: 2000).
+pub fn bench_budget() -> usize {
+    std::env::var("DNNFUSER_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000)
+}
+
+/// Artifacts must exist for any model bench.
+pub fn require_artifacts() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP model rows: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load("artifacts", LoadSet::All).expect("runtime load"))
+}
+
+/// Build (or load) a teacher demonstration dataset for `(workloads, mems,
+/// batch)`, `runs_per_cond` G-Sampler searches per condition.
+pub fn ensure_dataset(
+    tag: &str,
+    workloads: &[&str],
+    mems: &[f64],
+    batch: usize,
+    runs_per_cond: usize,
+    seed: u64,
+) -> Result<ReplayBuffer> {
+    let path = cache_dir().join(format!("dataset_{tag}.bin"));
+    if path.exists() {
+        if let Ok(buf) = ReplayBuffer::load(&path) {
+            return Ok(buf);
+        }
+    }
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut buffer = ReplayBuffer::new(4096);
+    for wname in workloads {
+        let w = zoo::by_name(wname).with_context(|| format!("workload {wname}"))?;
+        for &mem in mems {
+            for _ in 0..runs_per_cond {
+                let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+                let r = GSampler::default().run(&prob, bench_budget(), &mut rng.fork());
+                buffer.push(prob.env.decorate(&r.best));
+            }
+        }
+    }
+    buffer.save(&path)?;
+    Ok(buffer)
+}
+
+/// Train (or load) a checkpoint from a dataset. `init_from` warm-starts
+/// (transfer learning); `steps` defaults to [`bench_steps`].
+pub fn ensure_trained(
+    rt: &Runtime,
+    kind: ModelKind,
+    tag: &str,
+    dataset: &ReplayBuffer,
+    steps: Option<usize>,
+    init_from: Option<&MapperModel>,
+    seed: u64,
+) -> Result<MapperModel> {
+    let steps = steps.unwrap_or_else(bench_steps);
+    let path = cache_dir().join(format!("{}_{tag}_{steps}.ckpt", kind.tag()));
+    if path.exists() {
+        if let Ok(m) = MapperModel::load(rt, &path) {
+            return Ok(m);
+        }
+    }
+    let mut model = match init_from {
+        Some(src) => MapperModel {
+            kind: src.kind,
+            theta: src.theta.clone(),
+            // Fresh optimizer state for the fine-tune phase.
+            m: vec![0.0; src.theta.len()],
+            v: vec![0.0; src.theta.len()],
+            step: 0.0,
+        },
+        None => MapperModel::init(rt, kind, seed as i32)?,
+    };
+    let mut rng = Rng::seed_from_u64(seed);
+    let t0 = std::time::Instant::now();
+    model.train(rt, dataset, steps, &mut rng, |i, loss| {
+        if i % 50 == 0 {
+            eprintln!(
+                "  [{} {tag}] step {i}/{steps} loss {loss:.5} ({:.0}s)",
+                kind.tag(),
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    })?;
+    model.save(&path)?;
+    Ok(model)
+}
+
+/// Paper-vs-measured cell: "measured (paper X)".
+pub fn cell_vs_paper(measured: &str, paper: &str) -> String {
+    format!("{measured} (paper {paper})")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_have_sane_defaults() {
+        // (Env overrides are read live; defaults documented here.)
+        assert!(bench_steps() >= 1);
+        assert!(bench_budget() >= 100);
+    }
+
+    #[test]
+    fn cell_format() {
+        assert_eq!(cell_vs_paper("1.20", "1.19"), "1.20 (paper 1.19)");
+    }
+}

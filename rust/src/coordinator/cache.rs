@@ -1,0 +1,170 @@
+//! Mapping cache: resolved strategies keyed by the request condition.
+//!
+//! The paper's motivating scenario has the buffer condition jumping among
+//! a small set of values (other kernels starting/stopping); repeat
+//! conditions should not pay an autoregressive decode. Bounded LRU-ish:
+//! on overflow the least-recently-used entry is dropped.
+
+use std::collections::HashMap;
+
+use crate::fusion::Strategy;
+
+/// Cache key: condition quantized to 0.25 MB so float jitter in the
+/// requested memory doesn't defeat caching.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Key {
+    pub workload: String,
+    pub batch: usize,
+    /// mem_cond_mb * 4, rounded.
+    pub mem_q: u64,
+}
+
+impl Key {
+    pub fn new(workload: &str, batch: usize, mem_cond_mb: f64) -> Key {
+        Key {
+            workload: workload.to_string(),
+            batch,
+            mem_q: (mem_cond_mb * 4.0).round() as u64,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub strategy: Strategy,
+    pub speedup: f64,
+    pub act_usage_mb: f64,
+    pub valid: bool,
+}
+
+/// Bounded map with LRU eviction driven by a logical clock.
+pub struct MappingCache {
+    capacity: usize,
+    clock: u64,
+    map: HashMap<Key, (Entry, u64)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl MappingCache {
+    pub fn new(capacity: usize) -> Self {
+        MappingCache {
+            capacity: capacity.max(1),
+            clock: 0,
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&mut self, key: &Key) -> Option<Entry> {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.map.get_mut(key) {
+            Some((e, stamp)) => {
+                *stamp = clock;
+                self.hits += 1;
+                Some(e.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&mut self, key: Key, entry: Entry) {
+        self.clock += 1;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            // Evict least-recently-used.
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(key, (entry, self.clock));
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::Strategy;
+
+    fn entry(tag: i32) -> Entry {
+        Entry {
+            strategy: Strategy::new(vec![tag, -1]),
+            speedup: 1.0,
+            act_usage_mb: 1.0,
+            valid: true,
+        }
+    }
+
+    #[test]
+    fn quantized_keys_absorb_jitter() {
+        assert_eq!(Key::new("vgg16", 64, 20.0), Key::new("vgg16", 64, 20.05));
+        assert_ne!(Key::new("vgg16", 64, 20.0), Key::new("vgg16", 64, 21.0));
+        assert_ne!(Key::new("vgg16", 64, 20.0), Key::new("vgg16", 128, 20.0));
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c = MappingCache::new(8);
+        let k = Key::new("vgg16", 64, 20.0);
+        assert!(c.get(&k).is_none());
+        c.put(k.clone(), entry(1));
+        assert!(c.get(&k).is_some());
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lru_eviction_prefers_stale() {
+        let mut c = MappingCache::new(2);
+        let k1 = Key::new("a", 1, 1.0);
+        let k2 = Key::new("b", 1, 1.0);
+        let k3 = Key::new("c", 1, 1.0);
+        c.put(k1.clone(), entry(1));
+        c.put(k2.clone(), entry(2));
+        let _ = c.get(&k1); // refresh k1
+        c.put(k3.clone(), entry(3)); // evicts k2
+        assert!(c.get(&k1).is_some());
+        assert!(c.get(&k2).is_none());
+        assert!(c.get(&k3).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn reinserting_same_key_does_not_evict() {
+        let mut c = MappingCache::new(2);
+        let k1 = Key::new("a", 1, 1.0);
+        let k2 = Key::new("b", 1, 1.0);
+        c.put(k1.clone(), entry(1));
+        c.put(k2.clone(), entry(2));
+        c.put(k1.clone(), entry(3)); // update in place
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&k1).unwrap().strategy, Strategy::new(vec![3, -1]));
+    }
+}

@@ -1,0 +1,180 @@
+//! Service metrics: request counters, latency percentiles, batch occupancy.
+//!
+//! Latencies go into a fixed-resolution log-bucket histogram (no
+//! allocation per sample, percentile queries at report time) — the same
+//! scheme request routers use for pXX dashboards.
+
+use std::time::Duration;
+
+/// Log-scale latency histogram: bucket i covers [base·r^i, base·r^(i+1)).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    base_ns: f64,
+    ratio: f64,
+    count: u64,
+    sum_ns: f64,
+    max_ns: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 1 µs .. ~18 minutes at 10% resolution.
+        LatencyHistogram {
+            buckets: vec![0; 220],
+            base_ns: 1_000.0,
+            ratio: 1.1,
+            count: 0,
+            sum_ns: 0.0,
+            max_ns: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos() as f64;
+        let idx = if ns <= self.base_ns {
+            0
+        } else {
+            ((ns / self.base_ns).ln() / self.ratio.ln()) as usize
+        };
+        let idx = idx.min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_ns += ns;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((self.sum_ns / self.count as f64) as u64)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns as u64)
+    }
+
+    /// Percentile (0.0–1.0) via bucket upper bounds.
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (p.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                let upper = self.base_ns * self.ratio.powi(i as i32 + 1);
+                return Duration::from_nanos(upper as u64);
+            }
+        }
+        self.max()
+    }
+}
+
+/// Full service metrics snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub model_batches: u64,
+    pub model_mapped: u64,
+    pub invalid_responses: u64,
+    pub latency: LatencyHistogram,
+    /// Histogram over decode batch occupancy (index = rows used).
+    pub batch_occupancy: Vec<u64>,
+}
+
+impl Metrics {
+    pub fn new(max_batch: usize) -> Metrics {
+        Metrics {
+            batch_occupancy: vec![0; max_batch + 1],
+            ..Default::default()
+        }
+    }
+
+    pub fn record_batch(&mut self, used_rows: usize) {
+        self.model_batches += 1;
+        self.model_mapped += used_rows as u64;
+        if used_rows < self.batch_occupancy.len() {
+            self.batch_occupancy[used_rows] += 1;
+        }
+    }
+
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.model_batches == 0 {
+            return 0.0;
+        }
+        self.model_mapped as f64 / self.model_batches as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} cache_hits={} batches={} mean_occupancy={:.2} invalid={} \
+             latency mean={:?} p50={:?} p95={:?} max={:?}",
+            self.requests,
+            self.cache_hits,
+            self.model_batches,
+            self.mean_batch_occupancy(),
+            self.invalid_responses,
+            self.latency.mean(),
+            self.latency.percentile(0.5),
+            self.latency.percentile(0.95),
+            self.latency.max(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = LatencyHistogram::default();
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        let p50 = h.percentile(0.5);
+        let p95 = h.percentile(0.95);
+        assert!(p50 <= p95, "{p50:?} {p95:?}");
+        // 10% bucket resolution: p50 within [45, 62] ms.
+        assert!((45..=62).contains(&(p50.as_millis() as u64)), "{p50:?}");
+        assert!(h.count() == 100);
+        assert!(h.mean() >= Duration::from_millis(40));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn occupancy_accounting() {
+        let mut m = Metrics::new(8);
+        m.record_batch(8);
+        m.record_batch(3);
+        assert_eq!(m.model_batches, 2);
+        assert!((m.mean_batch_occupancy() - 5.5).abs() < 1e-9);
+        assert_eq!(m.batch_occupancy[8], 1);
+        assert_eq!(m.batch_occupancy[3], 1);
+    }
+
+    #[test]
+    fn report_mentions_key_fields() {
+        let m = Metrics::new(8);
+        let r = m.report();
+        for needle in ["requests=", "p95=", "mean_occupancy="] {
+            assert!(r.contains(needle), "{r}");
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! The mapper-serving coordinator (L3).
+//!
+//! DNNFuser's deployment story (paper §4.6): the accelerator's available
+//! buffer changes at run time as other kernels come and go, and each change
+//! needs a fresh mapping *now* — an inference-time mapper can sit in the
+//! control plane and answer these requests online, where a search-based
+//! mapper (minutes per query) cannot.
+//!
+//! This module is that control-plane service, structured like a vLLM-style
+//! router front end:
+//!
+//! - [`service`] — the actor that owns the PJRT runtime + model and runs
+//!   the **dynamic batcher**: concurrent mapping requests are coalesced
+//!   (up to the AOT inference batch, within a small batching window) into
+//!   one batched autoregressive decode;
+//! - [`cache`] — resolved mappings keyed by (workload, batch, condition):
+//!   repeat conditions are answered without touching the model;
+//! - [`metrics`] — request counts, latency percentiles, batch-size
+//!   occupancy, cache hit rate.
+//!
+//! Python never runs here; the service thread is self-contained after
+//! `Runtime::load`.
+
+pub mod cache;
+pub mod metrics;
+pub mod service;
+
+use crate::cost::HwConfig;
+use crate::fusion::Strategy;
+
+/// One mapping request: "give me a fusion strategy for this workload under
+/// this memory condition".
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapRequest {
+    /// Zoo workload name (the service owns the zoo lookup).
+    pub workload: String,
+    pub batch: usize,
+    /// Available on-chip buffer right now, MB (the HW condition).
+    pub mem_cond_mb: f64,
+    pub hw: HwConfig,
+}
+
+impl MapRequest {
+    pub fn new(workload: &str, batch: usize, mem_cond_mb: f64) -> Self {
+        MapRequest {
+            workload: workload.to_string(),
+            batch,
+            mem_cond_mb,
+            hw: HwConfig::paper(),
+        }
+    }
+}
+
+/// Where a response came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    Model,
+    Cache,
+}
+
+/// The answer.
+#[derive(Debug, Clone)]
+pub struct MapResponse {
+    pub strategy: Strategy,
+    pub speedup: f64,
+    pub act_usage_mb: f64,
+    pub valid: bool,
+    pub source: Source,
+    /// End-to-end service latency for this request.
+    pub latency: std::time::Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_constructor_defaults() {
+        let r = MapRequest::new("vgg16", 64, 20.0);
+        assert_eq!(r.hw, HwConfig::paper());
+        assert_eq!(r.workload, "vgg16");
+    }
+}

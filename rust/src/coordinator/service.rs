@@ -1,0 +1,313 @@
+//! The mapper service actor: owns the PJRT runtime + model on one thread,
+//! batches concurrent requests dynamically, caches resolved mappings.
+//!
+//! Actor pattern rather than shared state: PJRT handles are not Sync, so
+//! the service thread *constructs* the runtime itself and everything else
+//! talks to it through channels. This is the same shape a vLLM router
+//! takes — front-end queue, batching window, one engine loop.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::env::FusionEnv;
+use crate::model::{MapperModel, ModelKind};
+use crate::runtime::{LoadSet, Runtime};
+use crate::workload::zoo;
+
+use super::cache::{Entry, Key, MappingCache};
+use super::metrics::Metrics;
+use super::{MapRequest, MapResponse, Source};
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub artifacts_dir: PathBuf,
+    /// Trained checkpoint; `None` serves a freshly-initialized model
+    /// (useful for wiring tests and demos).
+    pub checkpoint: Option<PathBuf>,
+    pub model: ModelKind,
+    /// How long the batcher waits for co-travellers after the first
+    /// request of a batch.
+    pub batch_window: Duration,
+    pub cache_capacity: usize,
+    pub init_seed: i32,
+}
+
+impl ServiceConfig {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
+        ServiceConfig {
+            artifacts_dir: artifacts_dir.into(),
+            checkpoint: None,
+            model: ModelKind::Df,
+            batch_window: Duration::from_millis(2),
+            cache_capacity: 1024,
+            init_seed: 0,
+        }
+    }
+}
+
+struct Job {
+    req: MapRequest,
+    reply: Sender<Result<MapResponse, String>>,
+    enqueued: Instant,
+}
+
+enum Msg {
+    Job(Job),
+    /// Explicit stop: `shutdown` must not rely on channel disconnection —
+    /// cloned clients may outlive the service handle.
+    Stop,
+}
+
+/// Cheap cloneable handle to the service.
+#[derive(Clone)]
+pub struct MapperClient {
+    tx: Sender<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+/// The running service: client handle + join handle.
+pub struct MapperService {
+    pub client: MapperClient,
+    handle: JoinHandle<()>,
+}
+
+impl MapperService {
+    /// Spawn the service thread. Blocks until the runtime has loaded (or
+    /// failed), so callers get construction errors synchronously.
+    pub fn spawn(cfg: ServiceConfig) -> Result<MapperService> {
+        let (tx, rx) = channel::<Msg>();
+        let metrics = Arc::new(Mutex::new(Metrics::new(16)));
+        let metrics_thread = Arc::clone(&metrics);
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::Builder::new()
+            .name("dnnfuser-mapper".into())
+            .spawn(move || service_loop(cfg, rx, metrics_thread, ready_tx))
+            .context("spawning service thread")?;
+        ready_rx
+            .recv()
+            .context("service thread died during startup")?
+            .map_err(|e| anyhow!("service startup failed: {e}"))?;
+        Ok(MapperService {
+            client: MapperClient { tx, metrics },
+            handle,
+        })
+    }
+
+    /// Stop the service. Safe even when cloned clients are still alive:
+    /// an explicit stop message ends the loop (in-flight requests on the
+    /// queue behind it get a service-down error from their dropped reply
+    /// channels).
+    pub fn shutdown(self) {
+        let MapperService { client, handle } = self;
+        let _ = client.tx.send(Msg::Stop);
+        drop(client);
+        let _ = handle.join();
+    }
+}
+
+impl MapperClient {
+    /// Map one request (blocking).
+    pub fn map(&self, req: MapRequest) -> Result<MapResponse> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Msg::Job(Job {
+                req,
+                reply: reply_tx,
+                enqueued: Instant::now(),
+            }))
+            .map_err(|_| anyhow!("mapper service is down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("mapper service dropped the request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().expect("metrics poisoned").clone()
+    }
+}
+
+fn service_loop(
+    cfg: ServiceConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+    ready: Sender<Result<(), String>>,
+) {
+    // Construct runtime + model inside the thread (PJRT is not Sync).
+    let built = (|| -> Result<(Runtime, MapperModel)> {
+        let set = if cfg.checkpoint.is_some() {
+            LoadSet::InferOnly
+        } else {
+            LoadSet::Serve
+        };
+        let rt = Runtime::load(&cfg.artifacts_dir, set).context("loading artifacts")?;
+        let model = match &cfg.checkpoint {
+            Some(path) => MapperModel::load(&rt, path)?,
+            None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
+        };
+        Ok((rt, model))
+    })();
+    let (rt, model) = match built {
+        Ok(ok) => {
+            let _ = ready.send(Ok(()));
+            ok
+        }
+        Err(e) => {
+            let _ = ready.send(Err(format!("{e:#}")));
+            return;
+        }
+    };
+
+    let max_batch = rt
+        .manifest
+        .infer_batches(model.kind.tag())
+        .last()
+        .copied()
+        .unwrap_or(1);
+    let mut cache = MappingCache::new(cfg.cache_capacity);
+
+    loop {
+        // Block for the first job of a batch.
+        let first = match rx.recv() {
+            Ok(Msg::Job(j)) => j,
+            Ok(Msg::Stop) | Err(_) => return,
+        };
+        let mut pending = vec![first];
+        // Dynamic batching window: gather co-travellers.
+        let deadline = Instant::now() + cfg.batch_window;
+        let mut stop_after = false;
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Job(j)) => pending.push(j),
+                Ok(Msg::Stop) => {
+                    stop_after = true; // serve what we have, then exit
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Serve cache hits immediately; keep the misses for the model.
+        let mut to_decode: Vec<Job> = Vec::new();
+        for job in pending {
+            let key = Key::new(&job.req.workload, job.req.batch, job.req.mem_cond_mb);
+            if let Some(hit) = cache.get(&key) {
+                let mut m = metrics.lock().expect("metrics");
+                m.requests += 1;
+                m.cache_hits += 1;
+                let latency = job.enqueued.elapsed();
+                m.latency.record(latency);
+                if !hit.valid {
+                    m.invalid_responses += 1;
+                }
+                let _ = job.reply.send(Ok(MapResponse {
+                    strategy: hit.strategy,
+                    speedup: hit.speedup,
+                    act_usage_mb: hit.act_usage_mb,
+                    valid: hit.valid,
+                    source: Source::Cache,
+                    latency,
+                }));
+            } else {
+                to_decode.push(job);
+            }
+        }
+        if to_decode.is_empty() {
+            if stop_after {
+                return;
+            }
+            continue;
+        }
+
+        // Build envs; reject unknown workloads without poisoning the batch.
+        let mut envs: Vec<FusionEnv> = Vec::new();
+        let mut jobs: Vec<Job> = Vec::new();
+        for job in to_decode {
+            match zoo::by_name(&job.req.workload) {
+                Some(w) => {
+                    envs.push(FusionEnv::new(
+                        w,
+                        job.req.batch,
+                        job.req.hw,
+                        job.req.mem_cond_mb,
+                    ));
+                    jobs.push(job);
+                }
+                None => {
+                    metrics.lock().expect("metrics").requests += 1;
+                    let _ = job
+                        .reply
+                        .send(Err(format!("unknown workload `{}`", job.req.workload)));
+                }
+            }
+        }
+        if envs.is_empty() {
+            if stop_after {
+                return;
+            }
+            continue;
+        }
+
+        let env_refs: Vec<&FusionEnv> = envs.iter().collect();
+        match model.infer_batch(&rt, &env_refs) {
+            Ok(trajs) => {
+                {
+                    let mut m = metrics.lock().expect("metrics");
+                    m.record_batch(jobs.len());
+                }
+                for (job, traj) in jobs.into_iter().zip(trajs) {
+                    let latency = job.enqueued.elapsed();
+                    let resp = MapResponse {
+                        act_usage_mb: traj.peak_act_bytes as f64 / (1024.0 * 1024.0),
+                        speedup: traj.speedup,
+                        valid: traj.valid,
+                        strategy: traj.strategy,
+                        source: Source::Model,
+                        latency,
+                    };
+                    cache.put(
+                        Key::new(&job.req.workload, job.req.batch, job.req.mem_cond_mb),
+                        Entry {
+                            strategy: resp.strategy.clone(),
+                            speedup: resp.speedup,
+                            act_usage_mb: resp.act_usage_mb,
+                            valid: resp.valid,
+                        },
+                    );
+                    let mut m = metrics.lock().expect("metrics");
+                    m.requests += 1;
+                    m.latency.record(latency);
+                    if !resp.valid {
+                        m.invalid_responses += 1;
+                    }
+                    drop(m);
+                    let _ = job.reply.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                let msg = format!("inference failed: {e:#}");
+                for job in jobs {
+                    metrics.lock().expect("metrics").requests += 1;
+                    let _ = job.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+        if stop_after {
+            return;
+        }
+    }
+}
+
+// Integration tests (spawn against built artifacts, concurrency, batching,
+// caching) live in rust/tests/coordinator_integration.rs.

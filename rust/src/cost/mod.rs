@@ -1,0 +1,555 @@
+//! Analytical cost model for layer fusion in a spatial DNN accelerator
+//! (the paper's §5.1 "Cost Model", rebuilt from its problem statement; full
+//! derivation in DESIGN.md §4).
+//!
+//! The model assumes ideal intra-layer mapping (what SOTA intra-layer
+//! mappers achieve — the paper's stated assumption) and focuses on the
+//! inter-layer effects a fusion strategy controls: off-chip traffic at
+//! group boundaries, on-chip staging capacity, and pipeline fill.
+//!
+//! For a fused group g = layers [i..j]:
+//!
+//! - peak memory   `mem_g = in_staging + Σ staged outputs + stream-out buf
+//!                          + Σ weights`
+//! - off-chip      `off_g = B·in_i + B·out_j + Σ w_l`
+//! - on-chip       `on_g  = Σ B·(in_l + out_l)`
+//! - compute       `comp_g = Σ B·macs_l / (PEs·macs_per_pe·freq)`
+//! - pipeline fill `fill_g = Σ mb_l·macs_l / …` (zero for 1-layer groups)
+//! - latency       `lat_g = max(comp, off/BW_off, on/BW_on) + fill`
+//!
+//! Total latency is the sum over groups; a strategy is valid iff every
+//! group's `mem_g` fits the available buffer. The no-fusion baseline is the
+//! same machinery applied to [`Strategy::no_fusion`], which makes
+//! "no fusion ⇒ speedup 1" an identity rather than a separate code path.
+//!
+//! Validated against a discrete-event reference simulator ([`simref`]) in
+//! `rust/tests/cost_validation.rs`.
+
+pub mod simref;
+
+use crate::fusion::{Strategy, SYNC};
+use crate::workload::Workload;
+
+/// Accelerator configuration (paper §5.1 defaults via [`HwConfig::paper`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwConfig {
+    /// Number of PEs.
+    pub pes: u64,
+    /// MACs each PE retires per cycle. The paper's stated 1024 PE × 1 MAC
+    /// would make every workload compute-bound and fusion pointless under
+    /// any roofline; since the paper's config cites the TPU [13], we model
+    /// each PE as a 2048-MAC tile (≈2 PMAC/s total, a TPU-class
+    /// compute:bandwidth ratio of ~2300 MAC/byte against the 900 GB/s
+    /// off-chip BW), which places the paper's workloads in the memory-bound
+    /// regime its reported speedups (1.2×–4×) imply. See DESIGN.md §4 + §8.
+    pub macs_per_pe: u64,
+    /// Layer-switch overhead per PE-array invocation, seconds. In a fused
+    /// group the array time-multiplexes between the group's layers once per
+    /// micro-batch wave (drain pipeline, re-stage weights into PE
+    /// scratchpads, reconfigure the NoC); smaller micro-batches mean more
+    /// waves. This is the term that makes the memory condition bite: more
+    /// buffer ⇒ fatter micro-batches ⇒ fewer switches (paper Tables 2–3
+    /// trend). Layer-by-layer groups configure once per layer.
+    pub t_switch_s: f64,
+    /// Clock, Hz.
+    pub freq_hz: f64,
+    /// Off-chip (DRAM) bandwidth, bytes/s.
+    pub bw_off: f64,
+    /// On-chip (global buffer ⇄ PE) bandwidth, bytes/s.
+    pub bw_on: f64,
+    /// On-chip global buffer capacity, bytes.
+    pub buffer_bytes: u64,
+}
+
+pub const MB: f64 = 1024.0 * 1024.0;
+
+impl HwConfig {
+    /// The paper's accelerator: 1024 PEs, 64 MB buffer, 900 GB/s off-chip,
+    /// 9000 GB/s on-chip, 1 GHz (§5.1), with the PE-throughput
+    /// reinterpretation documented on [`HwConfig::macs_per_pe`].
+    pub fn paper() -> Self {
+        HwConfig {
+            pes: 1024,
+            macs_per_pe: 2048,
+            freq_hz: 1e9,
+            bw_off: 900e9,
+            bw_on: 9000e9,
+            buffer_bytes: (64.0 * MB) as u64,
+            t_switch_s: 2e-6,
+        }
+    }
+
+    /// Same accelerator with a different usable buffer size (the paper's
+    /// "HW condition": part of the buffer may be occupied by other kernels).
+    pub fn with_buffer_mb(self, mb: f64) -> Self {
+        HwConfig {
+            buffer_bytes: (mb * MB) as u64,
+            ..self
+        }
+    }
+
+    /// Peak MAC throughput, MACs/s.
+    pub fn peak_macs(&self) -> f64 {
+        self.pes as f64 * self.macs_per_pe as f64 * self.freq_hz
+    }
+}
+
+/// Per-group cost breakdown (kept for analysis benches and Fig. 4 output).
+#[derive(Debug, Clone)]
+pub struct GroupCost {
+    /// 1-based layer range [start, end].
+    pub range: (usize, usize),
+    pub latency_s: f64,
+    pub mem_bytes: u64,
+    /// Activation staging only (the paper's "Act. Usage").
+    pub act_bytes: u64,
+    pub offchip_bytes: u64,
+    pub compute_s: f64,
+    pub fill_s: f64,
+}
+
+/// Full evaluation of one strategy.
+#[derive(Debug, Clone)]
+pub struct CostReport {
+    /// Strategy fits the buffer in every group and is shape-valid.
+    pub valid: bool,
+    /// Human-readable reason when invalid.
+    pub invalid_reason: Option<String>,
+    pub latency_s: f64,
+    /// max over groups of mem_g.
+    pub peak_mem_bytes: u64,
+    /// max over groups of activation staging (paper's "Act. Usage (MB)").
+    pub peak_act_bytes: u64,
+    pub offchip_bytes: u64,
+    pub groups: Vec<GroupCost>,
+}
+
+impl CostReport {
+    pub fn peak_act_mb(&self) -> f64 {
+        self.peak_act_bytes as f64 / MB
+    }
+
+    pub fn peak_mem_mb(&self) -> f64 {
+        self.peak_mem_bytes as f64 / MB
+    }
+}
+
+/// The cost model: immutable per (workload, batch, hw) triple; strategy
+/// evaluation is the search hot path (no allocation unless a full
+/// [`CostReport`] is requested).
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub hw: HwConfig,
+    pub batch: usize,
+    // Cached per-layer quantities (index 0 unused so layer l = index l).
+    macs: Vec<f64>,
+    in_b: Vec<f64>,
+    out_b: Vec<f64>,
+    w_b: Vec<f64>,
+    n: usize,
+    baseline_s: f64,
+}
+
+impl CostModel {
+    pub fn new(w: &Workload, batch: usize, hw: HwConfig) -> Self {
+        let n = w.n_layers();
+        let mut macs = vec![0.0; n + 1];
+        let mut in_b = vec![0.0; n + 1];
+        let mut out_b = vec![0.0; n + 1];
+        let mut w_b = vec![0.0; n + 1];
+        for (idx, l) in w.layers.iter().enumerate() {
+            let i = idx + 1;
+            macs[i] = l.macs() as f64;
+            in_b[i] = l.in_bytes() as f64;
+            out_b[i] = l.out_bytes() as f64;
+            w_b[i] = l.w_bytes() as f64;
+        }
+        let mut m = CostModel {
+            hw,
+            batch,
+            macs,
+            in_b,
+            out_b,
+            w_b,
+            n,
+            baseline_s: 0.0,
+        };
+        m.baseline_s = m.latency_of(&Strategy::no_fusion(n)).0;
+        m
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n
+    }
+
+    /// Per-sample output bytes of layer `l` (1-based) — used by search
+    /// repair operators to find the fattest staged slot.
+    pub fn out_bytes_of(&self, l: usize) -> f64 {
+        self.out_b[l]
+    }
+
+    /// Latency of the ideal no-fusion mapping (the paper's baseline).
+    pub fn baseline_latency(&self) -> f64 {
+        self.baseline_s
+    }
+
+    /// Hot-path evaluation: returns `(latency_s, peak_mem_bytes, valid)`
+    /// without allocating. Shape validity is the caller's contract (search
+    /// operates on decoded, shape-legal strategies); memory validity is
+    /// checked here.
+    pub fn latency_of(&self, s: &Strategy) -> (f64, u64, bool) {
+        debug_assert_eq!(s.values.len(), self.n + 1);
+        let b = self.batch as f64;
+        let peak_macs = self.hw.peak_macs();
+        let buf = self.hw.buffer_bytes as f64;
+
+        let mut total = 0.0;
+        let mut peak_mem = 0.0f64;
+        let mut valid = true;
+
+        let mut start = 1usize;
+        for l in 1..=self.n {
+            let is_end = s.values[l] == SYNC || l == self.n;
+            if !is_end {
+                continue;
+            }
+            // Group [start..=l].
+            let (i, j) = (start, l);
+            let multi = j > i;
+            let mut comp = 0.0;
+            let mut on = 0.0;
+            let mut weights = 0.0;
+            let mut staged_act = 0.0;
+            let mut fill = 0.0;
+            let mut invocations = 0.0;
+            for g in i..=j {
+                comp += b * self.macs[g];
+                on += b * (self.in_b[g] + self.out_b[g]);
+                weights += self.w_b[g];
+                let mb = s.values[g];
+                if mb != SYNC && g != j {
+                    staged_act += self.out_b[g] * mb as f64;
+                }
+                if multi {
+                    let mb_eff = if mb == SYNC { 1.0 } else { mb as f64 };
+                    fill += mb_eff * self.macs[g];
+                    invocations += (b / mb_eff).ceil();
+                } else {
+                    invocations += 1.0; // layer-by-layer: configure once
+                }
+            }
+            // Input staging: group 0 uses mB_0; later groups re-stream the
+            // previous sync output in chunks matching their head layer's
+            // micro-batch (1 sample for pure layer-by-layer groups).
+            let head_mb = if i == 1 {
+                s.values[0] as f64
+            } else if s.values[i] != SYNC {
+                s.values[i] as f64
+            } else {
+                1.0
+            };
+            let in_staging = self.in_b[i] * head_mb;
+            // Stream-out buffer for the group tail: its staging chunk is its
+            // own entry when non-SYNC (e.g. a trailing value on layer N),
+            // else one sample.
+            let tail_mb = if s.values[j] != SYNC { s.values[j] as f64 } else { 1.0 };
+            let out_staging = self.out_b[j] * tail_mb;
+
+            let act = in_staging + staged_act + out_staging;
+            let mem = act + weights;
+            let off = b * self.in_b[i] + b * self.out_b[j] + weights;
+
+            let comp_s = comp / peak_macs;
+            let fill_s = fill / peak_macs;
+            let lat = comp_s.max(off / self.hw.bw_off).max(on / self.hw.bw_on)
+                + if multi { fill_s } else { 0.0 }
+                + invocations * self.hw.t_switch_s;
+
+            total += lat;
+            peak_mem = peak_mem.max(mem);
+            if mem > buf {
+                valid = false;
+            }
+            start = l + 1;
+        }
+        (total, peak_mem as u64, valid)
+    }
+
+    /// Non-allocating scan for the group with the largest on-chip memory
+    /// demand: `(start, end, mem_bytes)`. This is the repair operator's
+    /// inner loop (perf pass: replaces a full `evaluate()` report — §Perf).
+    pub fn worst_group(&self, s: &Strategy) -> (usize, usize, u64) {
+        let mut worst = (1usize, 1usize, 0u64);
+        let mut start = 1usize;
+        for l in 1..=self.n {
+            let is_end = s.values[l] == SYNC || l == self.n;
+            if !is_end {
+                continue;
+            }
+            let (i, j) = (start, l);
+            let mut weights = 0.0;
+            let mut staged_act = 0.0;
+            for g in i..=j {
+                weights += self.w_b[g];
+                let mb = s.values[g];
+                if mb != SYNC && g != j {
+                    staged_act += self.out_b[g] * mb as f64;
+                }
+            }
+            let head_mb = if i == 1 {
+                s.values[0] as f64
+            } else if s.values[i] != SYNC {
+                s.values[i] as f64
+            } else {
+                1.0
+            };
+            let tail_mb = if s.values[j] != SYNC { s.values[j] as f64 } else { 1.0 };
+            let mem =
+                (self.in_b[i] * head_mb + staged_act + self.out_b[j] * tail_mb + weights) as u64;
+            if mem > worst.2 {
+                worst = (i, j, mem);
+            }
+            start = l + 1;
+        }
+        worst
+    }
+
+    /// Speedup over the no-fusion baseline (the paper's headline metric).
+    /// Invalid strategies still get a number (searches need gradients into
+    /// the infeasible region); check `.2` of [`latency_of`] or use
+    /// [`evaluate`] for validity.
+    pub fn speedup_of(&self, s: &Strategy) -> f64 {
+        self.baseline_s / self.latency_of(s).0
+    }
+
+    /// Full report with per-group breakdown (allocates; not the hot path).
+    pub fn evaluate(&self, s: &Strategy) -> CostReport {
+        let b = self.batch as f64;
+        let peak_macs = self.hw.peak_macs();
+        let buf = self.hw.buffer_bytes as f64;
+        let mut groups = Vec::new();
+        let mut invalid_reason = None;
+
+        if let Err(e) = shape_reason(s, self.n, self.batch) {
+            return CostReport {
+                valid: false,
+                invalid_reason: Some(e),
+                latency_s: f64::INFINITY,
+                peak_mem_bytes: u64::MAX,
+                peak_act_bytes: u64::MAX,
+                offchip_bytes: 0,
+                groups,
+            };
+        }
+
+        let mut total = 0.0;
+        let mut peak_mem = 0.0f64;
+        let mut peak_act = 0.0f64;
+        let mut off_total = 0.0;
+        for &(i, j) in &s.groups() {
+            let multi = j > i;
+            let mut comp = 0.0;
+            let mut on = 0.0;
+            let mut weights = 0.0;
+            let mut staged_act = 0.0;
+            let mut fill = 0.0;
+            let mut invocations = 0.0;
+            for g in i..=j {
+                comp += b * self.macs[g];
+                on += b * (self.in_b[g] + self.out_b[g]);
+                weights += self.w_b[g];
+                let mb = s.values[g];
+                if mb != SYNC && g != j {
+                    staged_act += self.out_b[g] * mb as f64;
+                }
+                if multi {
+                    let mb_eff = if mb == SYNC { 1.0 } else { mb as f64 };
+                    fill += mb_eff * self.macs[g];
+                    invocations += (b / mb_eff).ceil();
+                } else {
+                    invocations += 1.0;
+                }
+            }
+            let head_mb = if i == 1 {
+                s.values[0] as f64
+            } else if s.values[i] != SYNC {
+                s.values[i] as f64
+            } else {
+                1.0
+            };
+            let in_staging = self.in_b[i] * head_mb;
+            let tail_mb = if s.values[j] != SYNC { s.values[j] as f64 } else { 1.0 };
+            let out_staging = self.out_b[j] * tail_mb;
+            let act = in_staging + staged_act + out_staging;
+            let mem = act + weights;
+            let off = b * self.in_b[i] + b * self.out_b[j] + weights;
+            let comp_s = comp / peak_macs;
+            let fill_s = if multi { fill / peak_macs } else { 0.0 };
+            let lat = comp_s.max(off / self.hw.bw_off).max(on / self.hw.bw_on)
+                + fill_s
+                + invocations * self.hw.t_switch_s;
+            groups.push(GroupCost {
+                range: (i, j),
+                latency_s: lat,
+                mem_bytes: mem as u64,
+                act_bytes: act as u64,
+                offchip_bytes: off as u64,
+                compute_s: comp_s,
+                fill_s,
+            });
+            total += lat;
+            off_total += off;
+            peak_mem = peak_mem.max(mem);
+            peak_act = peak_act.max(act);
+            if mem > buf && invalid_reason.is_none() {
+                invalid_reason = Some(format!(
+                    "group [{i}..{j}] needs {:.2} MB > buffer {:.2} MB",
+                    mem / MB,
+                    buf / MB
+                ));
+            }
+        }
+        CostReport {
+            valid: invalid_reason.is_none(),
+            invalid_reason,
+            latency_s: total,
+            peak_mem_bytes: peak_mem as u64,
+            peak_act_bytes: peak_act as u64,
+            offchip_bytes: off_total as u64,
+            groups,
+        }
+    }
+}
+
+fn shape_reason(s: &Strategy, n: usize, batch: usize) -> Result<(), String> {
+    if s.values.len() != n + 1 {
+        return Err(format!("arity {} != {}", s.values.len(), n + 1));
+    }
+    let b = batch as i32;
+    if !(1..=b).contains(&s.values[0]) {
+        return Err(format!("mB_0 = {}", s.values[0]));
+    }
+    for (i, &v) in s.values.iter().enumerate().skip(1) {
+        if v != SYNC && !(1..=b).contains(&v) {
+            return Err(format!("mB_{i} = {v}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{conv, Workload};
+    use crate::workload::zoo;
+
+    fn tiny() -> Workload {
+        Workload {
+            name: "tiny".into(),
+            layers: vec![
+                conv("a", 16, 3, 16, 16, 3, 3, 1),
+                conv("b", 32, 16, 16, 16, 3, 3, 1),
+                conv("c", 32, 32, 8, 8, 3, 3, 1),
+            ],
+        }
+    }
+
+    #[test]
+    fn baseline_speedup_is_one() {
+        let m = CostModel::new(&tiny(), 8, HwConfig::paper());
+        let s = Strategy::no_fusion(3);
+        let sp = m.speedup_of(&s);
+        assert!((sp - 1.0).abs() < 1e-12, "speedup {sp}");
+    }
+
+    #[test]
+    fn hot_path_matches_report() {
+        let m = CostModel::new(&zoo::vgg16(), 64, HwConfig::paper().with_buffer_mb(20.0));
+        let s = Strategy::new(vec![
+            8, 8, SYNC, 4, 4, 2, SYNC, 2, 1, 1, SYNC, 1, 1, SYNC, SYNC,
+        ]);
+        let (lat, mem, valid) = m.latency_of(&s);
+        let rep = m.evaluate(&s);
+        assert!((lat - rep.latency_s).abs() / lat < 1e-12);
+        assert_eq!(mem, rep.peak_mem_bytes);
+        assert_eq!(valid, rep.valid);
+    }
+
+    #[test]
+    fn fusion_reduces_offchip_traffic() {
+        let m = CostModel::new(&tiny(), 8, HwConfig::paper());
+        let nofuse = m.evaluate(&Strategy::no_fusion(3));
+        let fused = m.evaluate(&Strategy::new(vec![2, 2, 2, 2]));
+        assert!(fused.offchip_bytes < nofuse.offchip_bytes);
+        assert_eq!(fused.groups.len(), 1);
+    }
+
+    #[test]
+    fn vgg_fusion_beats_baseline() {
+        // Fusing the memory-bound early VGG block must give speedup > 1.
+        let m = CostModel::new(&zoo::vgg16(), 64, HwConfig::paper());
+        let mut v = vec![SYNC; 15];
+        v[0] = 2;
+        v[1] = 2; // conv1_1 staged
+        v[2] = SYNC; // conv1_2 syncs
+        let s = Strategy::new(v);
+        let rep = m.evaluate(&s);
+        assert!(rep.valid, "{:?}", rep.invalid_reason);
+        assert!(m.speedup_of(&s) > 1.0, "speedup {}", m.speedup_of(&s));
+    }
+
+    #[test]
+    fn oversized_staging_is_invalid() {
+        let m = CostModel::new(&zoo::vgg16(), 64, HwConfig::paper().with_buffer_mb(4.0));
+        // Stage 64 full-size samples of conv1_1 output (≈410 MB) — invalid.
+        let mut v = vec![SYNC; 15];
+        v[0] = 64;
+        v[1] = 64;
+        v[2] = SYNC;
+        let rep = m.evaluate(&Strategy::new(v));
+        assert!(!rep.valid);
+        assert!(rep.invalid_reason.as_deref().unwrap().contains("buffer"));
+    }
+
+    #[test]
+    fn bigger_buffer_never_hurts_validity() {
+        let w = zoo::resnet18();
+        let small = CostModel::new(&w, 64, HwConfig::paper().with_buffer_mb(8.0));
+        let large = CostModel::new(&w, 64, HwConfig::paper().with_buffer_mb(64.0));
+        let s = Strategy::new(
+            std::iter::once(4)
+                .chain((1..=w.n_layers() as i32).map(|l| if l % 3 == 0 { SYNC } else { 4 }))
+                .collect(),
+        );
+        let (_, _, v_small) = small.latency_of(&s);
+        let (_, _, v_large) = large.latency_of(&s);
+        if v_small {
+            assert!(v_large);
+        }
+        // Latency itself is buffer-independent in this model.
+        assert_eq!(small.latency_of(&s).0, large.latency_of(&s).0);
+    }
+
+    #[test]
+    fn invalid_shape_reported() {
+        let m = CostModel::new(&tiny(), 8, HwConfig::paper());
+        let rep = m.evaluate(&Strategy::new(vec![1, 1])); // wrong arity
+        assert!(!rep.valid);
+        assert!(rep.latency_s.is_infinite());
+    }
+
+    #[test]
+    fn peak_act_excludes_weights() {
+        let m = CostModel::new(&tiny(), 8, HwConfig::paper());
+        let rep = m.evaluate(&Strategy::new(vec![2, 2, 2, 2]));
+        assert!(rep.peak_act_bytes < rep.peak_mem_bytes);
+    }
+
+    #[test]
+    fn paper_hw_constants() {
+        let hw = HwConfig::paper();
+        assert_eq!(hw.pes, 1024);
+        assert_eq!(hw.buffer_bytes, 64 * 1024 * 1024);
+        assert_eq!(hw.with_buffer_mb(20.0).buffer_bytes, 20 * 1024 * 1024);
+    }
+}

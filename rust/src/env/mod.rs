@@ -1,0 +1,433 @@
+//! The layer-fusion RL environment (paper §4.2).
+//!
+//! One episode = one pass over the N+1 strategy slots of a workload: at
+//! time-step t the agent emits the micro-batch decision for slot t
+//! (`mB_0` = input staging, then one slot per layer). States expose the
+//! current layer's 6-loop shape, the memory condition, and the runtime
+//! performance of the partially-built strategy — all computed by the cost
+//! model, which is the same object the paper's Fig. 3 "environment" wraps.
+
+use crate::cost::{CostModel, HwConfig, MB};
+use crate::fusion::{ActionCodec, Strategy, SYNC};
+use crate::workload::Workload;
+
+/// State feature dimension: [K, C, Y, X, R, S, M̂, P].
+pub const STATE_DIM: usize = 8;
+
+/// Maximum episode length (strategy slots) the AOT-compiled models accept:
+/// covers every zoo workload (≤ 51 layers ⇒ ≤ 52 slots) with headroom.
+/// Must match `python/compile/common.py::T_MAX` (asserted against the
+/// manifest at runtime load).
+pub const T_MAX: usize = 65;
+
+/// Reference memory for normalization: the full 64 MB buffer.
+pub const MEM_REF_BYTES: f64 = 64.0 * MB;
+
+/// A complete (reward, state, action) trajectory in encoded (model-side)
+/// form plus the decoded strategy it produced.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    /// Conditioning reward token per step (constant = requested memory).
+    pub rtg: Vec<f32>,
+    /// `len() == steps`, each `STATE_DIM` features.
+    pub states: Vec<[f32; STATE_DIM]>,
+    /// Encoded actions in [-1, 1].
+    pub actions: Vec<f32>,
+    /// The decoded strategy.
+    pub strategy: Strategy,
+    /// Achieved speedup over the no-fusion baseline.
+    pub speedup: f64,
+    /// Peak activation staging of the strategy (bytes).
+    pub peak_act_bytes: u64,
+    /// Whether the strategy fit the conditioned buffer.
+    pub valid: bool,
+}
+
+impl Trajectory {
+    pub fn steps(&self) -> usize {
+        self.states.len()
+    }
+}
+
+/// The environment. Reusable across episodes; cheap to clone.
+pub struct FusionEnv {
+    pub workload: Workload,
+    pub model: CostModel,
+    pub codec: ActionCodec,
+    pub batch: usize,
+    /// Conditioned available on-chip memory (the paper's HW condition).
+    pub mem_cond_bytes: f64,
+    // Pre-computed per-layer log-normalized shape features.
+    shape_feats: Vec<[f32; 6]>,
+}
+
+/// Episode state while stepping.
+pub struct Episode<'e> {
+    env: &'e FusionEnv,
+    /// Strategy under construction; suffix defaults to SYNC.
+    pub values: Vec<i32>,
+    pub t: usize,
+    pub traj: Trajectory,
+}
+
+impl FusionEnv {
+    /// `mem_cond_mb` is both the validity constraint and the conditioning
+    /// reward the mapper is asked to hit.
+    pub fn new(workload: Workload, batch: usize, hw: HwConfig, mem_cond_mb: f64) -> Self {
+        let hw = hw.with_buffer_mb(mem_cond_mb);
+        let model = CostModel::new(&workload, batch, hw);
+        let shape_feats = workload
+            .layers
+            .iter()
+            .map(|l| {
+                // log2 normalization: K,C ∈ [1, 4096] → /12; Y,X ∈ [1,224]
+                // → /8; R,S ∈ [1,11] → /4. Keeps features in ≈[0, 1].
+                [
+                    (l.k as f32).log2() / 12.0,
+                    (l.c as f32).log2() / 12.0,
+                    (l.y as f32).log2() / 8.0,
+                    (l.x as f32).log2() / 8.0,
+                    (l.r as f32).log2() / 4.0,
+                    (l.s as f32).log2() / 4.0,
+                ]
+            })
+            .collect();
+        FusionEnv {
+            codec: ActionCodec::new(batch),
+            batch,
+            mem_cond_bytes: mem_cond_mb * MB,
+            workload,
+            model,
+            shape_feats,
+        }
+    }
+
+    /// Episode length = N + 1 slots.
+    pub fn steps(&self) -> usize {
+        self.workload.n_layers() + 1
+    }
+
+    /// The constant conditioning-reward token (requested memory, normalized).
+    pub fn rtg_token(&self) -> f32 {
+        (self.mem_cond_bytes / MEM_REF_BYTES) as f32
+    }
+
+    /// Smallest condition (bytes) under which this workload is mappable at
+    /// all: even pure layer-by-layer execution must stage one input sample,
+    /// one output sample and the weights of its largest layer. Conditions
+    /// below this produce `valid = false` no matter the mapper (the
+    /// coordinator surfaces that honestly rather than failing).
+    pub fn min_condition_bytes(&self) -> f64 {
+        self.workload
+            .layers
+            .iter()
+            .map(|l| (l.in_bytes() + l.out_bytes() + l.w_bytes()) as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// State features for time-step t given the strategy prefix built so far
+    /// (`values[0..t]` decided, suffix all-SYNC).
+    pub fn state(&self, values: &[i32], t: usize) -> [f32; STATE_DIM] {
+        // Slot t decides layer max(t,1)'s entry; expose that layer's shape.
+        let layer_idx = t.max(1) - 1;
+        let shp = self.shape_feats[layer_idx.min(self.shape_feats.len() - 1)];
+        let p = self.perf_of_prefix(values, t);
+        [
+            shp[0],
+            shp[1],
+            shp[2],
+            shp[3],
+            shp[4],
+            shp[5],
+            self.rtg_token(),
+            p,
+        ]
+    }
+
+    /// Speedup-so-far of the prefix (suffix defaulted to SYNC) — the
+    /// paper's `P_{a_0..a_{t-1}}`, normalized by the no-fusion baseline.
+    fn perf_of_prefix(&self, values: &[i32], t: usize) -> f32 {
+        let n = self.workload.n_layers();
+        let mut v = vec![SYNC; n + 1];
+        v[0] = 1;
+        v[..t.min(n + 1)].copy_from_slice(&values[..t.min(n + 1)]);
+        if v[0] == SYNC {
+            v[0] = 1;
+        }
+        let s = Strategy::new(v);
+        (self.model.baseline_latency() / self.model.latency_of(&s).0) as f32
+    }
+
+    /// Begin an episode.
+    pub fn begin(&self) -> Episode<'_> {
+        let n = self.workload.n_layers();
+        let mut values = vec![SYNC; n + 1];
+        values[0] = 1;
+        Episode {
+            env: self,
+            values,
+            t: 0,
+            traj: Trajectory {
+                rtg: Vec::with_capacity(n + 1),
+                states: Vec::with_capacity(n + 1),
+                actions: Vec::with_capacity(n + 1),
+                strategy: Strategy::no_fusion(n),
+                speedup: 0.0,
+                peak_act_bytes: 0,
+                valid: false,
+            },
+        }
+    }
+
+    /// Evaluate a finished strategy into trajectory tail fields.
+    fn finish(&self, values: Vec<i32>, traj: &mut Trajectory) {
+        let s = Strategy::new(values);
+        let rep = self.model.evaluate(&s);
+        traj.speedup = self.model.baseline_latency() / rep.latency_s;
+        traj.peak_act_bytes = rep.peak_act_bytes;
+        traj.valid = rep.valid;
+        traj.strategy = s;
+    }
+
+    /// Roll a full episode from a policy closure (slot index, state) → raw
+    /// continuous action. Used by inference and by data collection.
+    pub fn rollout(&self, mut policy: impl FnMut(usize, &[f32; STATE_DIM]) -> f32) -> Trajectory {
+        let mut ep = self.begin();
+        while !ep.done() {
+            let st = ep.observe();
+            let raw = policy(ep.t, &st);
+            ep.step_raw(raw);
+        }
+        ep.into_trajectory()
+    }
+
+    /// Encode an existing strategy into a trajectory (imitation-learning
+    /// decoration, paper §4.5.1 step 2: "decorate actions with state and
+    /// reward information").
+    pub fn decorate(&self, s: &Strategy) -> Trajectory {
+        let mut ep = self.begin();
+        for t in 0..self.steps() {
+            let a = s.values[t];
+            ep.observe_into();
+            ep.step_action(a);
+            let _ = t;
+        }
+        ep.into_trajectory()
+    }
+}
+
+impl<'e> Episode<'e> {
+    pub fn done(&self) -> bool {
+        self.t >= self.env.steps()
+    }
+
+    /// Current state features.
+    pub fn observe(&self) -> [f32; STATE_DIM] {
+        self.env.state(&self.values[..], self.t)
+    }
+
+    fn observe_into(&mut self) {
+        let st = self.observe();
+        self.traj.states.push(st);
+        self.traj.rtg.push(self.env.rtg_token());
+    }
+
+    /// Step with a raw continuous action from the model.
+    pub fn step_raw(&mut self, raw: f32) {
+        self.observe_if_needed();
+        let mut a = self.env.codec.decode(raw);
+        if self.t == 0 && a == SYNC {
+            a = 1; // mB_0 must be a real micro-batch
+        }
+        self.apply(a);
+    }
+
+    /// Step with a raw action, PROJECTED onto the feasible region: the
+    /// decoded micro-batch is reduced (eventually to SYNC) until the
+    /// strategy prefix stays within the conditioned buffer. This is the
+    /// serving decode path (paper §4.5.2: "the actual on-chip buffer usage
+    /// of the solution adheres to the desired condition") — the model
+    /// drives the fusion structure, the projection guarantees adherence.
+    /// Demonstration decoration and raw rollouts (A2C) do not project.
+    pub fn step_raw_projected(&mut self, raw: f32) {
+        self.observe_if_needed();
+        let mut a = self.env.codec.decode(raw);
+        if self.t == 0 && a == SYNC {
+            a = 1;
+        }
+        a = self.project(a);
+        self.apply(a);
+    }
+
+    /// Largest feasible action ≤ the proposed one (by codec index), falling
+    /// back to SYNC (slot 0: micro-batch 1).
+    fn project(&self, a: i32) -> i32 {
+        let n = self.env.workload.n_layers();
+        let feasible = |cand: i32| -> bool {
+            let mut v = vec![SYNC; n + 1];
+            v[0] = 1;
+            v[..self.t].copy_from_slice(&self.values[..self.t]);
+            if v[0] == SYNC {
+                v[0] = 1;
+            }
+            v[self.t] = cand;
+            let (_, peak, _) = self.env.model.latency_of(&Strategy::new(v));
+            peak as f64 <= self.env.model.hw.buffer_bytes as f64
+        };
+        if feasible(a) {
+            return a;
+        }
+        let mut idx = self.env.codec.to_index(a);
+        while idx > 1 {
+            idx -= 1;
+            let cand = self.env.codec.from_index(idx);
+            if feasible(cand) {
+                return cand;
+            }
+        }
+        if self.t == 0 {
+            1
+        } else {
+            SYNC
+        }
+    }
+
+    /// Step with an already-discrete action.
+    pub fn step_action(&mut self, mut a: i32) {
+        self.observe_if_needed();
+        if self.t == 0 && a == SYNC {
+            a = 1;
+        }
+        self.apply(a);
+    }
+
+    fn observe_if_needed(&mut self) {
+        if self.traj.states.len() <= self.t {
+            self.observe_into();
+        }
+    }
+
+    fn apply(&mut self, a: i32) {
+        assert!(!self.done(), "episode already finished");
+        self.values[self.t] = a;
+        self.traj.actions.push(self.env.codec.encode(a));
+        self.t += 1;
+    }
+
+    pub fn into_trajectory(mut self) -> Trajectory {
+        assert!(self.done(), "episode not finished");
+        let values = std::mem::take(&mut self.values);
+        self.env.finish(values, &mut self.traj);
+        self.traj
+    }
+}
+
+/// Shaped scalar reward for policy-gradient baselines (A2C): speedup when
+/// the strategy fits, with a graded penalty for buffer overflow so the
+/// agent gets a slope into the feasible region.
+pub fn final_reward(env: &FusionEnv, traj: &Trajectory) -> f64 {
+    if traj.valid {
+        traj.speedup
+    } else {
+        let over = traj.peak_act_bytes as f64 / env.mem_cond_bytes;
+        (traj.speedup - 0.5 * over).min(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    fn env() -> FusionEnv {
+        FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0)
+    }
+
+    #[test]
+    fn episode_length_and_arity() {
+        let e = env();
+        assert_eq!(e.steps(), 15);
+        let traj = e.rollout(|_, _| -1.0); // all SYNC → no fusion
+        assert_eq!(traj.steps(), 15);
+        assert_eq!(traj.actions.len(), 15);
+        assert_eq!(traj.rtg.len(), 15);
+        assert_eq!(traj.strategy.values.len(), 15);
+    }
+
+    #[test]
+    fn all_sync_policy_is_baseline() {
+        let e = env();
+        let traj = e.rollout(|_, _| -1.0);
+        assert!(traj.valid);
+        // mB_0 coerced to 1, everything else SYNC ⇒ exactly the baseline.
+        assert!((traj.speedup - 1.0).abs() < 1e-9, "{}", traj.speedup);
+        assert!(!traj.strategy.has_fusion());
+    }
+
+    #[test]
+    fn state_features_bounded() {
+        let e = env();
+        let traj = e.rollout(|_, _| 0.1);
+        for st in &traj.states {
+            for (d, f) in st.iter().enumerate() {
+                assert!(f.is_finite() && (-0.5..=8.0).contains(f), "dim {d} = {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn perf_feature_tracks_prefix() {
+        // A fusing prefix on memory-bound layers should raise P above 1.
+        let e = env();
+        let mut seen_above_one = false;
+        let _ = e.rollout(|t, st| {
+            if st[7] > 1.001 {
+                seen_above_one = true;
+            }
+            if t <= 2 {
+                0.0 // mid-size micro-batch: fuse the early block
+            } else {
+                -1.0
+            }
+        });
+        assert!(seen_above_one, "P never rose above baseline");
+    }
+
+    #[test]
+    fn decorate_roundtrips_strategy() {
+        let e = env();
+        let s = Strategy::new(vec![
+            8, 8, SYNC, 4, 4, 2, SYNC, 2, 1, 1, SYNC, 1, 1, SYNC, SYNC,
+        ]);
+        let traj = e.decorate(&s);
+        assert_eq!(traj.strategy, s);
+        // Every action token decodes back to the strategy entry.
+        for (t, &enc) in traj.actions.iter().enumerate() {
+            assert_eq!(e.codec.decode(enc), s.values[t], "slot {t}");
+        }
+    }
+
+    #[test]
+    fn rtg_token_scales_with_condition() {
+        let e16 = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 16.0);
+        let e64 = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 64.0);
+        assert!((e16.rtg_token() - 0.25).abs() < 1e-6);
+        assert!((e64.rtg_token() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reward_penalizes_overflow() {
+        let e = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 4.0);
+        // Stage giant chunks → invalid.
+        let traj = e.rollout(|_, _| 1.0);
+        assert!(!traj.valid);
+        assert!(final_reward(&e, &traj) <= 0.0);
+    }
+
+    #[test]
+    fn t_max_covers_zoo() {
+        for w in zoo::all() {
+            assert!(w.n_layers() + 1 <= T_MAX, "{} too deep", w.name);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Layer-fusion strategy representation and the action codec (paper §3).
+//!
+//! A strategy for an N-layer workload is `[mB_0, mB_1, …, mB_N]`:
+//! `mB_0` is the input staging micro-batch; for layer `l ≥ 1`, `mB_l` is the
+//! micro-batch at which layer l's output is staged **on-chip**, or
+//! [`SYNC`] (−1) meaning the output synchronizes to off-chip memory,
+//! closing a fused group. The final layer's output always leaves the chip;
+//! a non-SYNC value there only selects the stream-out staging chunk.
+
+use crate::workload::Workload;
+
+/// The paper's "-1": synchronize to off-chip, ending a fused group.
+pub const SYNC: i32 = -1;
+
+/// A layer-fusion strategy. `values.len() == workload.n_layers() + 1`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Strategy {
+    pub values: Vec<i32>,
+}
+
+impl Strategy {
+    pub fn new(values: Vec<i32>) -> Self {
+        Strategy { values }
+    }
+
+    /// The no-fusion strategy: every layer syncs (layer-by-layer execution,
+    /// the paper's baseline mapping).
+    pub fn no_fusion(n_layers: usize) -> Self {
+        let mut values = vec![SYNC; n_layers + 1];
+        values[0] = 1;
+        Strategy { values }
+    }
+
+    /// Structural validity against a workload and batch size: correct arity,
+    /// `mB_0 ∈ [1, B]`, every other entry in `{SYNC} ∪ [1, B]`.
+    /// (Memory-capacity validity is the cost model's job.)
+    pub fn check_shape(&self, w: &Workload, batch: usize) -> Result<(), String> {
+        let want = w.n_layers() + 1;
+        if self.values.len() != want {
+            return Err(format!(
+                "strategy arity {} != n_layers+1 = {want}",
+                self.values.len()
+            ));
+        }
+        let b = batch as i32;
+        if !(1..=b).contains(&self.values[0]) {
+            return Err(format!("mB_0 = {} outside [1, {batch}]", self.values[0]));
+        }
+        for (i, &v) in self.values.iter().enumerate().skip(1) {
+            if v != SYNC && !(1..=b).contains(&v) {
+                return Err(format!("mB_{i} = {v} outside {{-1}} ∪ [1, {batch}]"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Decompose into fused groups. Each group is a contiguous layer range
+    /// `[start, end]` (1-based layer indices into `values`; layer l has
+    /// entry `values[l]`). A group ends at a SYNC layer or at layer N.
+    pub fn groups(&self) -> Vec<(usize, usize)> {
+        let n = self.values.len() - 1;
+        let mut out = Vec::new();
+        let mut start = 1;
+        for l in 1..=n {
+            if self.values[l] == SYNC || l == n {
+                out.push((start, l));
+                start = l + 1;
+            }
+        }
+        out
+    }
+
+    /// Number of fused groups.
+    pub fn n_groups(&self) -> usize {
+        self.groups().len()
+    }
+
+    /// True if at least two layers share a group (any actual fusion).
+    pub fn has_fusion(&self) -> bool {
+        self.groups().iter().any(|&(s, e)| e > s)
+    }
+
+    /// Compact display, e.g. `[42, -1, 30, 27, -1]` (Fig. 4 style).
+    pub fn display(&self) -> String {
+        let cells: Vec<String> = self.values.iter().map(|v| v.to_string()).collect();
+        format!("[{}]", cells.join(", "))
+    }
+}
+
+/// Codec between the model's continuous action value in [−1, 1] and the
+/// discrete micro-batch alphabet `{SYNC} ∪ [1, B]`, quantized to the paper's
+/// "64 tiling choices per layer": index 0 is SYNC, indices 1..=64 map
+/// linearly onto micro-batch sizes `ceil(B·k/64)`.
+#[derive(Debug, Clone, Copy)]
+pub struct ActionCodec {
+    pub batch: usize,
+}
+
+pub const N_CHOICES: usize = 64;
+
+/// The continuous alphabet lives inside (−0.95, +0.95), NOT the full
+/// [−1, 1]: the model's action head is a tanh, and putting SYNC at −1.0
+/// would park it on the asymptote — an MSE-trained model could sit at
+/// near-zero loss while never actually emitting a sync after decoding.
+const ENC_LO: f32 = -0.95;
+const ENC_SPAN: f32 = 1.9;
+
+impl ActionCodec {
+    pub fn new(batch: usize) -> Self {
+        assert!(batch >= 1);
+        ActionCodec { batch }
+    }
+
+    /// Decode a continuous model output to a discrete action.
+    pub fn decode(&self, v: f32) -> i32 {
+        let x = (v.clamp(ENC_LO, ENC_LO + ENC_SPAN) - ENC_LO) / ENC_SPAN;
+        let idx = (x * N_CHOICES as f32).round() as usize;
+        self.from_index(idx.min(N_CHOICES))
+    }
+
+    /// Encode a discrete action as the continuous value the model regresses.
+    pub fn encode(&self, a: i32) -> f32 {
+        let idx = self.to_index(a);
+        ENC_LO + ENC_SPAN * idx as f32 / N_CHOICES as f32
+    }
+
+    /// Index 0 = SYNC; k ∈ [1, 64] = micro-batch ceil(B·k/64).
+    pub fn from_index(&self, idx: usize) -> i32 {
+        if idx == 0 {
+            SYNC
+        } else {
+            let mb = (self.batch * idx).div_ceil(N_CHOICES);
+            mb.max(1) as i32
+        }
+    }
+
+    /// Inverse of [`from_index`], rounding to the nearest representable
+    /// micro-batch.
+    pub fn to_index(&self, a: i32) -> usize {
+        if a == SYNC {
+            0
+        } else {
+            let a = (a.max(1) as usize).min(self.batch);
+            ((a * N_CHOICES) as f64 / self.batch as f64).round().max(1.0) as usize
+        }
+    }
+
+    /// All decodable actions, ascending (SYNC first).
+    pub fn alphabet(&self) -> Vec<i32> {
+        let mut out = vec![SYNC];
+        let mut seen = std::collections::BTreeSet::new();
+        for k in 1..=N_CHOICES {
+            let mb = self.from_index(k);
+            if seen.insert(mb) {
+                out.push(mb);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn no_fusion_shape() {
+        let w = zoo::vgg16();
+        let s = Strategy::no_fusion(w.n_layers());
+        s.check_shape(&w, 64).unwrap();
+        assert!(!s.has_fusion());
+        assert_eq!(s.n_groups(), w.n_layers());
+    }
+
+    #[test]
+    fn groups_decomposition() {
+        // 5-layer example from the paper's Fig. 2: [mB0, a, a, SYNC, a, a]
+        let s = Strategy::new(vec![8, 4, 4, SYNC, 2, 2]);
+        assert_eq!(s.groups(), vec![(1, 3), (4, 5)]);
+        assert!(s.has_fusion());
+    }
+
+    #[test]
+    fn trailing_value_closes_last_group() {
+        let s = Strategy::new(vec![8, SYNC, 4, 4]);
+        assert_eq!(s.groups(), vec![(1, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn check_shape_rejects() {
+        let w = zoo::vgg16();
+        let n = w.n_layers();
+        assert!(Strategy::new(vec![1; n]).check_shape(&w, 64).is_err()); // arity
+        let mut bad0 = Strategy::no_fusion(n);
+        bad0.values[0] = SYNC;
+        assert!(bad0.check_shape(&w, 64).is_err()); // mB_0 must be >= 1
+        let mut big = Strategy::no_fusion(n);
+        big.values[3] = 65;
+        assert!(big.check_shape(&w, 64).is_err()); // > batch
+        let mut zero = Strategy::no_fusion(n);
+        zero.values[3] = 0;
+        assert!(zero.check_shape(&w, 64).is_err()); // 0 is not legal
+    }
+
+    #[test]
+    fn codec_roundtrip_batch64() {
+        let c = ActionCodec::new(64);
+        // With B=64 the alphabet is exactly {SYNC, 1..=64}.
+        assert_eq!(c.alphabet().len(), 65);
+        for a in std::iter::once(SYNC).chain(1..=64) {
+            let v = c.encode(a);
+            assert!((-1.0..=1.0).contains(&v));
+            assert_eq!(c.decode(v), a, "roundtrip {a}");
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip_batch128() {
+        let c = ActionCodec::new(128);
+        for a in c.alphabet() {
+            assert_eq!(c.decode(c.encode(a)), a, "roundtrip {a}");
+        }
+    }
+
+    #[test]
+    fn codec_small_batch() {
+        let c = ActionCodec::new(4);
+        let alpha = c.alphabet();
+        assert_eq!(alpha[0], SYNC);
+        assert!(alpha.contains(&1) && alpha.contains(&4));
+        for a in alpha {
+            assert_eq!(c.decode(c.encode(a)), a);
+        }
+    }
+
+    #[test]
+    fn decode_clamps() {
+        let c = ActionCodec::new(64);
+        assert_eq!(c.decode(-5.0), SYNC);
+        assert_eq!(c.decode(5.0), 64);
+    }
+
+    #[test]
+    fn display_matches_fig4_style() {
+        let s = Strategy::new(vec![42, SYNC, 30, 27, SYNC]);
+        assert_eq!(s.display(), "[42, -1, 30, 27, -1]");
+    }
+}

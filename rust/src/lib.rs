@@ -1,0 +1,39 @@
+//! DNNFuser: a Transformer-based generalized mapper for layer fusion in DNN
+//! accelerators — full-system reproduction of Kao, Huang & Krishna (2022).
+//!
+//! Architecture (see DESIGN.md):
+//!
+//! - **L1/L2** live in `python/compile/` and are AOT-lowered to HLO text at
+//!   build time (`make artifacts`); Python never runs on the request path.
+//! - **L3** (this crate) owns everything at run time: the analytical fusion
+//!   [`cost`] model over the [`workload`] zoo, the [`fusion`] strategy
+//!   space, the [`env`] RL formulation, the [`search`] teachers/baselines,
+//!   the PJRT [`runtime`] that loads the AOT artifacts, the [`model`]
+//!   drivers (training + autoregressive inference), and the serving
+//!   [`coordinator`].
+//!
+//! Quick taste (no artifacts needed — the search side is pure Rust;
+//! `no_run` only because doctest binaries miss the libxla rpath):
+//!
+//! ```no_run
+//! use dnnfuser::workload::zoo;
+//! use dnnfuser::cost::{CostModel, HwConfig};
+//! use dnnfuser::fusion::Strategy;
+//!
+//! let w = zoo::vgg16();
+//! let m = CostModel::new(&w, 64, HwConfig::paper().with_buffer_mb(20.0));
+//! let baseline = Strategy::no_fusion(w.n_layers());
+//! assert!((m.speedup_of(&baseline) - 1.0).abs() < 1e-9);
+//! ```
+
+pub mod bench_support;
+pub mod coordinator;
+pub mod cost;
+pub mod env;
+pub mod fusion;
+pub mod model;
+pub mod runtime;
+pub mod search;
+pub mod trajectory;
+pub mod util;
+pub mod workload;

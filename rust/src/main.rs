@@ -1,0 +1,370 @@
+//! `dnnfuser` — launcher CLI for the layer-fusion mapper stack.
+//!
+//! Subcommands mirror the paper's workflow (Fig. 3):
+//!
+//! - `collect` — run the G-Sampler teacher over (workload × memory
+//!   condition) and write the demonstration dataset (§4.5.1 steps 1–2);
+//! - `train`   — imitation-learn a sequence model from a dataset via the
+//!   AOT `train_step` executable (§4.5.1 step 3);
+//! - `infer`   — map a workload at a condition with a trained model
+//!   (§4.5.2), optionally comparing against a fresh G-Sampler search;
+//! - `search`  — run any search-based mapper directly;
+//! - `serve`   — start the mapper service and drive a synthetic request
+//!   stream through the dynamic batcher, reporting router metrics;
+//! - `eval`    — model vs teacher across a condition grid.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use dnnfuser::coordinator::service::{MapperService, ServiceConfig};
+use dnnfuser::coordinator::MapRequest;
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::{LoadSet, Runtime};
+use dnnfuser::search::{
+    a2c::A2c, cma::CmaEs, de::De, gsampler::GSampler, pso::Pso, random::RandomSearch,
+    stdga::StdGa, tbpsa::Tbpsa, FusionProblem, Optimizer,
+};
+use dnnfuser::trajectory::ReplayBuffer;
+use dnnfuser::util::args::Command;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn top_usage() -> String {
+    "dnnfuser <command> [options]\n\ncommands:\n  \
+     collect   generate teacher demonstrations (G-Sampler)\n  \
+     train     train a sequence model on a dataset\n  \
+     infer     map a workload with a trained model\n  \
+     search    run a search-based mapper\n  \
+     serve     run the mapper service on a synthetic request stream\n  \
+     eval      model vs G-Sampler across a condition grid\n\n\
+     run `dnnfuser <command> --help` for options"
+        .to_string()
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{}", top_usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "collect" => cmd_collect(rest),
+        "train" => cmd_train(rest),
+        "infer" => cmd_infer(rest),
+        "search" => cmd_search(rest),
+        "serve" => cmd_serve(rest),
+        "eval" => cmd_eval(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_usage());
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n\n{}", top_usage()),
+    }
+}
+
+/// Resolve `--workload-file` (custom JSON net) or `--workload` (zoo name).
+fn resolve_workload(p: &dnnfuser::util::args::ParsedArgs) -> Result<dnnfuser::workload::Workload> {
+    if let Some(path) = p.get("workload-file") {
+        return dnnfuser::workload::custom::from_file(path);
+    }
+    zoo::by_name(p.req("workload")?).context("unknown workload (see rust/src/workload/zoo.rs)")
+}
+
+fn parse_list_f64(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|x| x.trim().parse::<f64>().map_err(|e| anyhow!("bad number `{x}`: {e}")))
+        .collect()
+}
+
+fn optimizer_by_name(name: &str) -> Result<Box<dyn Optimizer>> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "gsampler" | "g-sampler" => Box::new(GSampler::default()),
+        "pso" => Box::new(Pso::default()),
+        "cma" | "cma-es" => Box::new(CmaEs::default()),
+        "de" => Box::new(De::default()),
+        "tbpsa" => Box::new(Tbpsa::default()),
+        "stdga" => Box::new(StdGa::default()),
+        "a2c" => Box::new(A2c::default()),
+        "random" => Box::new(RandomSearch),
+        other => bail!("unknown algorithm `{other}`"),
+    })
+}
+
+fn cmd_collect(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("collect", "generate teacher demonstrations with G-Sampler")
+        .opt("workloads", Some("vgg16,resnet18"), "comma-separated zoo workloads")
+        .opt("mems", Some("16,32,48,64"), "memory conditions (MB)")
+        .opt("batch", Some("64"), "input batch size")
+        .opt("budget", Some("2000"), "teacher sampling budget per search")
+        .opt("runs", Some("4"), "teacher searches per condition (paper: 4-10)")
+        .opt("seed", Some("42"), "experiment seed")
+        .opt("out", Some("runs/dataset.bin"), "output dataset path");
+    let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let budget = p.get_usize("budget")?;
+    let runs = p.get_usize("runs")?;
+    let batch = p.get_usize("batch")?;
+    let mems = parse_list_f64(p.req("mems")?)?;
+    let out = PathBuf::from(p.req("out")?);
+    let mut rng = Rng::seed_from_u64(p.get_u64("seed")?);
+
+    let mut buffer = ReplayBuffer::new(4096);
+    for wname in p.req("workloads")?.split(',') {
+        let w = zoo::by_name(wname.trim())
+            .with_context(|| format!("unknown workload `{wname}`"))?;
+        for &mem in &mems {
+            for run in 0..runs {
+                let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+                let r = GSampler::default().run(&prob, budget, &mut rng.fork());
+                let traj = prob.env.decorate(&r.best);
+                println!(
+                    "{wname:>14} mem={mem:>5.1}MB run={run} speedup={:.2} act={:.2}MB valid={} ({:.2}s)",
+                    traj.speedup,
+                    traj.peak_act_bytes as f64 / (1024.0 * 1024.0),
+                    traj.valid,
+                    r.wall_s
+                );
+                buffer.push(traj);
+            }
+        }
+    }
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    buffer.save(&out)?;
+    println!(
+        "wrote {} demonstrations (mean speedup {:.2}) to {}",
+        buffer.len(),
+        buffer.mean_speedup(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_train(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "imitation-train a sequence model")
+        .opt("model", Some("df"), "df (DNNFuser) or s2s (Seq2Seq)")
+        .opt("dataset", Some("runs/dataset.bin"), "demonstration dataset")
+        .opt("steps", Some("300"), "Adam steps")
+        .opt("seed", Some("0"), "init / sampling seed")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("init-ckpt", None, "warm-start checkpoint (transfer learning)")
+        .opt("ckpt", Some("runs/model.ckpt"), "output checkpoint")
+        .opt("log-every", Some("25"), "loss print interval");
+    let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let kind = ModelKind::by_name(p.req("model")?).context("bad --model")?;
+    let steps = p.get_usize("steps")?;
+    let log_every = p.get_usize("log-every")?.max(1);
+    let buffer = ReplayBuffer::load(p.req("dataset")?)?;
+    println!(
+        "dataset: {} demonstrations, mean speedup {:.2}",
+        buffer.len(),
+        buffer.mean_speedup()
+    );
+
+    let rt = Runtime::load(p.req("artifacts")?, LoadSet::All)?;
+    let mut model = match p.get("init-ckpt") {
+        Some(path) => {
+            println!("warm-starting from {path}");
+            MapperModel::load(&rt, path)?
+        }
+        None => MapperModel::init(&rt, kind, p.get_usize("seed")? as i32)?,
+    };
+    let mut rng = Rng::seed_from_u64(p.get_u64("seed")?);
+    let t0 = std::time::Instant::now();
+    model.train(&rt, &buffer, steps, &mut rng, |i, loss| {
+        if i % log_every == 0 || i + 1 == steps {
+            println!("step {i:>5}  loss {loss:.5}  ({:.1}s)", t0.elapsed().as_secs_f64());
+        }
+    })?;
+    let out = PathBuf::from(p.req("ckpt")?);
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    model.save(&out)?;
+    println!("saved checkpoint to {}", out.display());
+    Ok(())
+}
+
+fn cmd_infer(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("infer", "map a workload with a trained model")
+        .opt("ckpt", Some("runs/model.ckpt"), "model checkpoint")
+        .opt("workload", Some("vgg16"), "zoo workload")
+        .opt("workload-file", None, "custom workload JSON (overrides --workload)")
+        .opt("batch", Some("64"), "input batch size")
+        .opt("mem", Some("20"), "memory condition (MB)")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .switch("compare-teacher", "also run a fresh G-Sampler search");
+    let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let w = resolve_workload(&p)?;
+    let batch = p.get_usize("batch")?;
+    let mem = p.get_f64("mem")?;
+
+    let rt = Runtime::load(p.req("artifacts")?, LoadSet::All)?;
+    let model = MapperModel::load(&rt, p.req("ckpt")?)?;
+    let env = FusionEnv::new(w.clone(), batch, HwConfig::paper(), mem);
+    let t0 = std::time::Instant::now();
+    let traj = model.infer(&rt, &env)?;
+    let dt = t0.elapsed();
+    println!("strategy : {}", traj.strategy.display());
+    println!(
+        "speedup  : {:.2}x over no-fusion baseline (valid: {})",
+        traj.speedup, traj.valid
+    );
+    println!(
+        "act usage: {:.2} MB (condition {mem} MB)",
+        traj.peak_act_bytes as f64 / (1024.0 * 1024.0)
+    );
+    println!("mapped in {dt:?} (one inference pass)");
+
+    if p.flag("compare-teacher") {
+        let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+        let t1 = std::time::Instant::now();
+        let r = GSampler::default().run(&prob, 2000, &mut Rng::seed_from_u64(1));
+        let ts = t1.elapsed();
+        println!("teacher  : {}", r.best.display());
+        println!("teacher  : speedup {} in {ts:?}", r.speedup_cell());
+        println!(
+            "env interactions: {} (search) vs {} (inference) = {:.0}x fewer — the \
+             paper's 66-127x wall-clock gap assumes its (much slower) cost model; \
+             see EXPERIMENTS.md §Speed.",
+            r.evals_used,
+            env.steps(),
+            r.evals_used as f64 / env.steps() as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_search(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("search", "run a search-based mapper")
+        .opt("algo", Some("gsampler"), "gsampler|pso|cma|de|tbpsa|stdga|a2c|random")
+        .opt("workload", Some("vgg16"), "zoo workload")
+        .opt("workload-file", None, "custom workload JSON (overrides --workload)")
+        .opt("batch", Some("64"), "input batch size")
+        .opt("mem", Some("20"), "memory condition (MB)")
+        .opt("budget", Some("2000"), "sampling budget")
+        .opt("seed", Some("42"), "seed");
+    let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let w = resolve_workload(&p)?;
+    let opt = optimizer_by_name(p.req("algo")?)?;
+    let prob = FusionProblem::new(&w, p.get_usize("batch")?, HwConfig::paper(), p.get_f64("mem")?);
+    let r = opt.run(&prob, p.get_usize("budget")?, &mut Rng::seed_from_u64(p.get_u64("seed")?));
+    println!("algo     : {}", r.algo);
+    println!("strategy : {}", r.best.display());
+    println!("speedup  : {} (valid: {})", r.speedup_cell(), r.best_eval.valid);
+    println!("act usage: {:.2} MB", r.act_usage_mb());
+    println!("evals    : {} in {:.2}s", r.evals_used, r.wall_s);
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("serve", "run the mapper service on a synthetic stream")
+        .opt("ckpt", None, "model checkpoint (default: fresh init)")
+        .opt("model", Some("df"), "df or s2s (when no checkpoint)")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("requests", Some("64"), "synthetic requests to issue")
+        .opt("clients", Some("4"), "concurrent client threads")
+        .opt("window-ms", Some("5"), "dynamic batching window (ms)")
+        .opt("seed", Some("7"), "request stream seed");
+    let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let mut cfg = ServiceConfig::new(p.req("artifacts")?);
+    cfg.model = ModelKind::by_name(p.req("model")?).context("bad --model")?;
+    cfg.checkpoint = p.get("ckpt").map(PathBuf::from);
+    cfg.batch_window = Duration::from_millis(p.get_u64("window-ms")?);
+    let n_requests = p.get_usize("requests")?;
+    let n_clients = p.get_usize("clients")?.max(1);
+
+    println!("starting mapper service…");
+    let svc = MapperService::spawn(cfg)?;
+    let client = svc.client.clone();
+
+    // The paper's scenario: buffer availability jumps around as other
+    // kernels come and go; several tenants ask for fresh mappings.
+    let workloads = ["vgg16", "resnet18", "resnet50", "mobilenet_v2", "mnasnet"];
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let client = client.clone();
+        let seed = p.get_u64("seed")? + c as u64;
+        let quota = n_requests / n_clients + usize::from(c < n_requests % n_clients);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(seed);
+            let mut ok = 0usize;
+            for _ in 0..quota {
+                let w = workloads[rng.index(workloads.len())];
+                let mem = [16.0, 20.0, 24.0, 28.0, 32.0, 40.0, 48.0, 64.0][rng.index(8)];
+                match client.map(MapRequest::new(w, 64, mem)) {
+                    Ok(resp) => {
+                        ok += 1;
+                        let _ = resp;
+                    }
+                    Err(e) => eprintln!("request failed: {e}"),
+                }
+            }
+            ok
+        }));
+    }
+    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let wall = t0.elapsed();
+    let m = client.metrics();
+    println!("served {served}/{n_requests} requests in {wall:?}");
+    println!("  {}", m.report());
+    println!(
+        "  throughput: {:.1} mappings/s",
+        served as f64 / wall.as_secs_f64()
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_eval(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("eval", "model vs G-Sampler across a condition grid")
+        .opt("ckpt", Some("runs/model.ckpt"), "model checkpoint")
+        .opt("workload", Some("vgg16"), "zoo workload")
+        .opt("workload-file", None, "custom workload JSON (overrides --workload)")
+        .opt("batch", Some("64"), "input batch size")
+        .opt("mems", Some("20,25,30,35,40,45"), "conditions (MB)")
+        .opt("budget", Some("2000"), "teacher budget per condition")
+        .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("seed", Some("3"), "teacher seed");
+    let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let w = resolve_workload(&p)?;
+    let batch = p.get_usize("batch")?;
+    let mems = parse_list_f64(p.req("mems")?)?;
+
+    let rt = Runtime::load(p.req("artifacts")?, LoadSet::All)?;
+    let model = MapperModel::load(&rt, p.req("ckpt")?)?;
+    let mut rng = Rng::seed_from_u64(p.get_u64("seed")?);
+
+    println!("| Cond. Mem (MB) | {} | G-Sampler |", model.kind.tag());
+    println!("|---|---|---|");
+    for &mem in &mems {
+        let env = FusionEnv::new(w.clone(), batch, HwConfig::paper(), mem);
+        let traj = model.infer(&rt, &env)?;
+        let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+        let r = GSampler::default().run(&prob, p.get_usize("budget")?, &mut rng.fork());
+        let model_cell = if traj.valid {
+            format!("{:.2}", traj.speedup)
+        } else {
+            "N/A".into()
+        };
+        println!("| {mem} | {model_cell} | {} |", r.speedup_cell());
+    }
+    Ok(())
+}

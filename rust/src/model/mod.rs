@@ -1,0 +1,272 @@
+//! Model drivers (L3): parameter state, the imitation-learning trainer, and
+//! the autoregressive inference loop for the two AOT-compiled sequence
+//! models — DNNFuser (`df`) and the Seq2Seq baseline (`s2s`).
+//!
+//! Everything here drives PJRT executables; there is no NN math in Rust.
+//! Training (paper §4.5.1): sample [`TokenBatch`]s from the replay buffer
+//! and fold them through `<tag>_train`. Inference (§4.5.2): run the
+//! environment in the loop — the model proposes an action token, the env
+//! (cost model) decodes it, applies it, and produces the next state — so
+//! a mapping for an N-layer workload costs N+1 executable calls.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::env::{Episode, FusionEnv, Trajectory, STATE_DIM, T_MAX};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::Runtime;
+use crate::trajectory::{ReplayBuffer, TokenBatch};
+use crate::util::binio::{BinReader, BinWriter};
+use crate::util::rng::Rng;
+
+const CKPT_MAGIC: &[u8; 4] = b"DNFC";
+const CKPT_VERSION: u32 = 1;
+
+/// Which sequence model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    /// DNNFuser: the decision transformer (paper's contribution).
+    Df,
+    /// Seq2Seq: the LSTM baseline (paper §5.1).
+    S2s,
+}
+
+impl ModelKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            ModelKind::Df => "df",
+            ModelKind::S2s => "s2s",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "df" | "dnnfuser" => Some(ModelKind::Df),
+            "s2s" | "seq2seq" => Some(ModelKind::S2s),
+            _ => None,
+        }
+    }
+}
+
+/// Parameters + Adam state, all flat f32 host vectors.
+pub struct MapperModel {
+    pub kind: ModelKind,
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: f32,
+}
+
+impl MapperModel {
+    /// Initialize from the AOT `<tag>_init` executable.
+    pub fn init(rt: &Runtime, kind: ModelKind, seed: i32) -> Result<MapperModel> {
+        let name = format!("{}_init", kind.tag());
+        let out = rt.call(&name, &[Tensor::scalar_i32(seed)])?;
+        let theta = out
+            .into_iter()
+            .next()
+            .context("init returned nothing")?
+            .into_f32()?;
+        let n = rt.manifest.params_of(kind.tag())?;
+        if theta.len() != n {
+            bail!("init produced {} params, manifest says {n}", theta.len());
+        }
+        Ok(MapperModel {
+            kind,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0.0,
+            theta,
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// One Adam step on a token batch; returns the loss.
+    pub fn train_step(&mut self, rt: &Runtime, batch: &TokenBatch) -> Result<f32> {
+        let name = format!("{}_train", self.kind.tag());
+        let b = batch.batch;
+        let n = self.n_params(); // capture before mem::take empties theta
+        let out = rt.call(
+            &name,
+            &[
+                Tensor::f32(vec![n], std::mem::take(&mut self.theta)),
+                Tensor::f32(vec![n], std::mem::take(&mut self.m)),
+                Tensor::f32(vec![n], std::mem::take(&mut self.v)),
+                Tensor::scalar_f32(self.step),
+                Tensor::f32(vec![b, T_MAX], batch.rtg.clone()),
+                Tensor::f32(vec![b, T_MAX, STATE_DIM], batch.states.clone()),
+                Tensor::f32(vec![b, T_MAX], batch.actions.clone()),
+                Tensor::f32(vec![b, T_MAX], batch.mask.clone()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        self.theta = it.next().context("theta'")?.into_f32()?;
+        self.m = it.next().context("m'")?.into_f32()?;
+        self.v = it.next().context("v'")?.into_f32()?;
+        let loss = it.next().context("loss")?.into_f32()?[0];
+        self.step += 1.0;
+        Ok(loss)
+    }
+
+    /// Imitation-learning loop: `steps` Adam steps over batches sampled
+    /// from the replay buffer. Returns the loss curve.
+    pub fn train(
+        &mut self,
+        rt: &Runtime,
+        buffer: &ReplayBuffer,
+        steps: usize,
+        rng: &mut Rng,
+        mut on_step: impl FnMut(usize, f32),
+    ) -> Result<Vec<f32>> {
+        let train_batch = rt.manifest.constant("TRAIN_BATCH")? as usize;
+        let mut losses = Vec::with_capacity(steps);
+        for i in 0..steps {
+            let batch = buffer.sample(train_batch, rng);
+            let loss = self.train_step(rt, &batch)?;
+            on_step(i, loss);
+            losses.push(loss);
+        }
+        Ok(losses)
+    }
+
+    /// Map a batch of environments autoregressively (paper §4.5.2): pick
+    /// the smallest AOT inference batch ≥ `envs.len()`, pad, and run the
+    /// env-in-the-loop decode. Environments may have different depths and
+    /// conditions; rows that finish early stop being advanced.
+    pub fn infer_batch(&self, rt: &Runtime, envs: &[&FusionEnv]) -> Result<Vec<Trajectory>> {
+        if envs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let batches = rt.manifest.infer_batches(self.kind.tag());
+        let bi = batches
+            .iter()
+            .copied()
+            .find(|&b| b >= envs.len())
+            .or_else(|| batches.last().copied())
+            .context("no inference artifacts")?;
+        if envs.len() > bi {
+            bail!(
+                "infer_batch got {} envs > largest AOT batch {bi}; chunk at the caller",
+                envs.len()
+            );
+        }
+        let name = format!("{}_infer_b{bi}", self.kind.tag());
+
+        let mut episodes: Vec<Episode> = envs.iter().map(|e| e.begin()).collect();
+        let mut tokens = TokenBatch::zeros(bi);
+        let max_steps = envs.iter().map(|e| e.steps()).max().unwrap();
+
+        for t in 0..max_steps.min(T_MAX) {
+            // Write current observations into the token rows.
+            for (row, ep) in episodes.iter_mut().enumerate() {
+                if ep.done() {
+                    continue;
+                }
+                let st = ep.observe();
+                let base = row * T_MAX + t;
+                tokens.rtg[base] = envs[row].rtg_token();
+                let sbase = base * STATE_DIM;
+                tokens.states[sbase..sbase + STATE_DIM].copy_from_slice(&st);
+            }
+            let out = self.call_infer(rt, &name, bi, &tokens)?;
+            for (row, ep) in episodes.iter_mut().enumerate() {
+                if ep.done() {
+                    continue;
+                }
+                let pred = out[row * T_MAX + t];
+                // Serving decode: project onto the conditioned budget
+                // (paper §4.5.2 adherence; see Episode::step_raw_projected).
+                ep.step_raw_projected(pred);
+                // Feed the *quantized* action back (training distribution).
+                tokens.actions[row * T_MAX + t] = ep.traj.actions[t];
+            }
+        }
+        Ok(episodes.into_iter().map(|e| e.into_trajectory()).collect())
+    }
+
+    fn call_infer(
+        &self,
+        rt: &Runtime,
+        name: &str,
+        bi: usize,
+        tokens: &TokenBatch,
+    ) -> Result<Vec<f32>> {
+        let out = rt.call(
+            name,
+            &[
+                Tensor::f32(vec![self.n_params()], self.theta.clone()),
+                Tensor::f32(vec![bi, T_MAX], tokens.rtg.clone()),
+                Tensor::f32(vec![bi, T_MAX, STATE_DIM], tokens.states.clone()),
+                Tensor::f32(vec![bi, T_MAX], tokens.actions.clone()),
+            ],
+        )?;
+        out.into_iter().next().context("preds")?.into_f32()
+    }
+
+    /// Map one environment (convenience wrapper).
+    pub fn infer(&self, rt: &Runtime, env: &FusionEnv) -> Result<Trajectory> {
+        Ok(self.infer_batch(rt, &[env])?.pop().unwrap())
+    }
+
+    /// Save parameters + optimizer state.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut w = BinWriter::new(BufWriter::new(f), CKPT_MAGIC, CKPT_VERSION)?;
+        w.str(self.kind.tag())?;
+        w.f64(self.step as f64)?;
+        w.f32_slice(&self.theta)?;
+        w.f32_slice(&self.m)?;
+        w.f32_slice(&self.v)?;
+        w.finish()
+    }
+
+    /// Load a checkpoint; the kind and parameter count must match the
+    /// manifest of the runtime it will be used with.
+    pub fn load(rt: &Runtime, path: impl AsRef<Path>) -> Result<MapperModel> {
+        let f = File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut r = BinReader::new(BufReader::new(f), CKPT_MAGIC, CKPT_VERSION)?;
+        let tag = r.str()?;
+        let kind = ModelKind::by_name(&tag).with_context(|| format!("unknown model tag {tag}"))?;
+        let step = r.f64()? as f32;
+        let theta = r.f32_slice()?;
+        let m = r.f32_slice()?;
+        let v = r.f32_slice()?;
+        let want = rt.manifest.params_of(kind.tag())?;
+        if theta.len() != want {
+            bail!(
+                "checkpoint has {} params, manifest wants {want} — stale artifacts?",
+                theta.len()
+            );
+        }
+        Ok(MapperModel {
+            kind,
+            theta,
+            m,
+            v,
+            step,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_kind_names() {
+        assert_eq!(ModelKind::by_name("DNNFuser"), Some(ModelKind::Df));
+        assert_eq!(ModelKind::by_name("seq2seq"), Some(ModelKind::S2s));
+        assert_eq!(ModelKind::by_name("gpt"), None);
+        assert_eq!(ModelKind::Df.tag(), "df");
+    }
+
+    // Runtime-dependent paths are covered by rust/tests/runtime_integration.rs.
+}

@@ -1,0 +1,237 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::env::{STATE_DIM, T_MAX};
+use crate::util::json::Json;
+
+/// Version this build understands (mirrors python `common.MANIFEST_VERSION`).
+pub const MANIFEST_VERSION: usize = 3;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    /// Shared shape constants (T_MAX, STATE_DIM, …).
+    pub constants: BTreeMap<String, f64>,
+    /// Model name → parameter count.
+    pub n_params: BTreeMap<String, usize>,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+fn tensor_sig(j: &Json) -> Result<TensorSig> {
+    let shape = j
+        .req("shape")?
+        .as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim not a usize"))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j.req("dtype")?.as_str().context("dtype not a string")?.to_string();
+    Ok(TensorSig { shape, dtype })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = j.req("version")?.as_usize().context("version")?;
+
+        let mut constants = BTreeMap::new();
+        if let Some(Json::Obj(map)) = j.get("constants") {
+            for (k, v) in map {
+                if let Some(x) = v.as_f64() {
+                    constants.insert(k.clone(), x);
+                }
+            }
+        }
+
+        let mut n_params = BTreeMap::new();
+        if let Some(Json::Obj(models)) = j.get("models") {
+            for (name, m) in models {
+                n_params.insert(
+                    name.clone(),
+                    m.req("n_params")?.as_usize().context("n_params")?,
+                );
+            }
+        }
+
+        let mut artifacts = BTreeMap::new();
+        let Some(Json::Obj(arts)) = j.get("artifacts") else {
+            bail!("manifest has no artifacts object");
+        };
+        for (name, a) in arts {
+            let file = a.req("file")?.as_str().context("file")?.to_string();
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(tensor_sig)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(tensor_sig)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest {
+            version,
+            constants,
+            n_params,
+            artifacts,
+        })
+    }
+
+    /// Constant lookup with error context.
+    pub fn constant(&self, name: &str) -> Result<f64> {
+        self.constants
+            .get(name)
+            .copied()
+            .with_context(|| format!("manifest missing constant `{name}`"))
+    }
+
+    /// Parameter count for a model tag ("df" / "s2s").
+    pub fn params_of(&self, model: &str) -> Result<usize> {
+        self.n_params
+            .get(model)
+            .copied()
+            .with_context(|| format!("manifest missing model `{model}`"))
+    }
+
+    /// Cross-check against this build's compiled-in constants: a stale
+    /// artifacts/ directory must fail at load, not mid-serve.
+    pub fn validate_against_build(&self) -> Result<()> {
+        if self.version != MANIFEST_VERSION {
+            bail!(
+                "manifest version {} != build {} — re-run `make artifacts`",
+                self.version,
+                MANIFEST_VERSION
+            );
+        }
+        let t_max = self.constant("T_MAX")? as usize;
+        if t_max != T_MAX {
+            bail!("manifest T_MAX {t_max} != build {T_MAX}");
+        }
+        let sd = self.constant("STATE_DIM")? as usize;
+        if sd != STATE_DIM {
+            bail!("manifest STATE_DIM {sd} != build {STATE_DIM}");
+        }
+        // Internal consistency: init output == train input == n_params.
+        for (model, &p) in &self.n_params {
+            if let Some(init) = self.artifacts.get(&format!("{model}_init")) {
+                if init.outputs[0].shape != vec![p] {
+                    bail!("{model}_init output shape != n_params {p}");
+                }
+            }
+            if let Some(train) = self.artifacts.get(&format!("{model}_train")) {
+                if train.inputs[0].shape != vec![p] {
+                    bail!("{model}_train theta shape != n_params {p}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Inference batch sizes available for a model, ascending.
+    pub fn infer_batches(&self, model: &str) -> Vec<usize> {
+        let mut out = Vec::new();
+        for name in self.artifacts.keys() {
+            if let Some(b) = name
+                .strip_prefix(&format!("{model}_infer_b"))
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                out.push(b);
+            }
+        }
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest(version: usize, t_max: usize) -> String {
+        format!(
+            r#"{{
+              "version": {version},
+              "constants": {{"T_MAX": {t_max}, "STATE_DIM": 8}},
+              "models": {{"df": {{"n_params": 100}}}},
+              "artifacts": {{
+                "df_init": {{
+                  "file": "df_init.hlo.txt",
+                  "inputs": [{{"shape": [], "dtype": "int32"}}],
+                  "outputs": [{{"shape": [100], "dtype": "float32"}}]
+                }},
+                "df_infer_b8": {{
+                  "file": "df_infer_b8.hlo.txt",
+                  "inputs": [{{"shape": [100], "dtype": "float32"}}],
+                  "outputs": [{{"shape": [8, {t_max}], "dtype": "float32"}}]
+                }}
+              }}
+            }}"#
+        )
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(&toy_manifest(MANIFEST_VERSION, T_MAX)).unwrap();
+        m.validate_against_build().unwrap();
+        assert_eq!(m.params_of("df").unwrap(), 100);
+        assert_eq!(m.infer_batches("df"), vec![8]);
+        assert_eq!(m.artifacts["df_init"].outputs[0].shape, vec![100]);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let m = Manifest::parse(&toy_manifest(MANIFEST_VERSION + 1, T_MAX)).unwrap();
+        let e = m.validate_against_build().unwrap_err().to_string();
+        assert!(e.contains("make artifacts"), "{e}");
+    }
+
+    #[test]
+    fn rejects_stale_t_max() {
+        let m = Manifest::parse(&toy_manifest(MANIFEST_VERSION, T_MAX + 1)).unwrap();
+        assert!(m.validate_against_build().is_err());
+    }
+
+    #[test]
+    fn rejects_param_mismatch() {
+        let text = toy_manifest(MANIFEST_VERSION, T_MAX).replace("[100]", "[99]");
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate_against_build().is_err());
+    }
+
+    #[test]
+    fn missing_constant_is_error() {
+        let m = Manifest::parse(&toy_manifest(MANIFEST_VERSION, T_MAX)).unwrap();
+        assert!(m.constant("NOPE").is_err());
+        assert!(m.params_of("nope").is_err());
+    }
+}

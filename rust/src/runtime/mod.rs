@@ -1,0 +1,175 @@
+//! PJRT runtime (L3 ⇄ L2 bridge): load the AOT-compiled HLO-text artifacts
+//! and execute them on the PJRT CPU client.
+//!
+//! `make artifacts` (Python, build time) produces `artifacts/*.hlo.txt`
+//! plus `manifest.json`; this module is the only place the two sides meet,
+//! so it validates the manifest against the crate's compiled-in constants
+//! ([`crate::env::T_MAX`], [`crate::env::STATE_DIM`]) and refuses stale
+//! artifact directories loudly.
+//!
+//! Python never runs at serve time — after `Runtime::load` the process is
+//! self-contained.
+
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use manifest::Manifest;
+use tensor::Tensor;
+
+/// Which executables to compile at load time. The train-step graphs are
+/// by far the most expensive to compile, so serving paths skip them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadSet {
+    /// Everything in the manifest.
+    All,
+    /// Inference executables only (the serving path with a checkpoint).
+    InferOnly,
+    /// Inference + init (serving without a checkpoint).
+    Serve,
+}
+
+impl LoadSet {
+    fn wants(&self, name: &str) -> bool {
+        match self {
+            LoadSet::All => true,
+            LoadSet::InferOnly => name.contains("infer"),
+            LoadSet::Serve => name.contains("infer") || name.ends_with("_init"),
+        }
+    }
+}
+
+/// The loaded runtime: a PJRT CPU client plus compiled executables.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load `artifacts/` — parse + validate the manifest, then compile the
+    /// requested artifact set onto the CPU client.
+    pub fn load(dir: impl AsRef<Path>, set: LoadSet) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        manifest.validate_against_build()?;
+
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut executables = HashMap::new();
+        for (name, art) in &manifest.artifacts {
+            if !set.wants(name) {
+                continue;
+            }
+            let path = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            executables,
+        })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute an artifact by name. Inputs are checked against the
+    /// manifest signature; the output tuple is decomposed into tensors.
+    pub fn call(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let art = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact `{name}`"))?;
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                art.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, sig)) in inputs.iter().zip(&art.inputs).enumerate() {
+            if t.shape != sig.shape {
+                bail!(
+                    "{name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape,
+                    sig.shape
+                );
+            }
+        }
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact `{name}` not loaded (LoadSet)"))?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(Tensor::to_literal)
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = out.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != art.outputs.len() {
+            bail!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                art.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&art.outputs)
+            .map(|(lit, sig)| Tensor::from_literal(&lit, &sig.shape))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime tests that need built artifacts live in
+    // rust/tests/runtime_integration.rs; here we cover path errors.
+
+    #[test]
+    fn missing_dir_is_a_clear_error() {
+        let err = Runtime::load("/nonexistent/artifacts", LoadSet::All)
+            .err()
+            .expect("must fail");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

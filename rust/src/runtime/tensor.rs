@@ -1,0 +1,165 @@
+//! Host-side tensors: the minimal f32/i32 container the runtime moves in
+//! and out of PJRT literals.
+
+use anyhow::{bail, Context, Result};
+
+/// Row-major host tensor. The runtime deals in f32 (model data) and i32
+/// scalars (seeds); dtype is tracked by variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape,
+            data: Data::F32(data),
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: Data::I32(vec![v]),
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: Data::F32(vec![v]),
+        }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            Data::F32(v) => Ok(v),
+            Data::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// Convert to a PJRT literal (scalars stay rank-0).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match (&self.data, self.shape.len()) {
+            (Data::F32(v), 0) => Ok(xla::Literal::scalar(v[0])),
+            (Data::I32(v), 0) => Ok(xla::Literal::scalar(v[0])),
+            (Data::F32(v), _) => {
+                let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v)
+                    .reshape(&dims)
+                    .context("reshaping literal")
+            }
+            (Data::I32(v), _) => {
+                let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v)
+                    .reshape(&dims)
+                    .context("reshaping literal")
+            }
+        }
+    }
+
+    /// Read a literal back into a host tensor with the manifest shape.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Tensor> {
+        let want: usize = shape.iter().product();
+        let ty = lit.ty().context("literal dtype")?;
+        match ty {
+            xla::ElementType::F32 => {
+                let v: Vec<f32> = lit.to_vec().context("literal to_vec f32")?;
+                if v.len() != want {
+                    bail!("literal has {} elems, manifest says {}", v.len(), want);
+                }
+                Ok(Tensor {
+                    shape: shape.to_vec(),
+                    data: Data::F32(v),
+                })
+            }
+            xla::ElementType::S32 => {
+                let v: Vec<i32> = lit.to_vec().context("literal to_vec i32")?;
+                Ok(Tensor {
+                    shape: shape.to_vec(),
+                    data: Data::I32(v),
+                })
+            }
+            other => bail!("unsupported literal dtype {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_literal() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit, &[2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let t = Tensor::scalar_f32(4.5);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 1);
+        let t = Tensor::scalar_i32(-3);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.element_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn dtype_errors() {
+        let t = Tensor::scalar_i32(1);
+        assert!(t.as_f32().is_err());
+        assert!(t.into_f32().is_err());
+    }
+
+    #[test]
+    fn element_count_mismatch_detected() {
+        let t = Tensor::f32(vec![4], vec![0.0; 4]);
+        let lit = t.to_literal().unwrap();
+        assert!(Tensor::from_literal(&lit, &[5]).is_err());
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = Tensor::zeros(vec![3, 5]);
+        assert_eq!(t.len(), 15);
+        assert!(t.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

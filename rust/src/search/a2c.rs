@@ -1,0 +1,302 @@
+//! A2C (advantage actor-critic [Mnih et al. 2016]) — the paper's RL
+//! baseline in Table 1.
+//!
+//! A small Gaussian-policy MLP (8 → 64 tanh → {μ, V}) with a learned global
+//! log-σ, trained by episodic policy gradient with a value baseline, all in
+//! plain Rust with hand-written backprop (A2C is a Table 1 *search
+//! baseline*; the serving stack's NNs are the AOT-compiled L2 models).
+//!
+//! The paper observes A2C converging slowly and landing at/below the
+//! no-fusion baseline — our abrupt layer-shape state transitions (§4.4.1)
+//! reproduce exactly that behaviour.
+
+use crate::env::{final_reward, STATE_DIM};
+use crate::util::rng::Rng;
+
+use super::{FusionProblem, Optimizer, SearchResult, Tracker};
+
+const HIDDEN: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct A2c {
+    pub lr: f64,
+    pub entropy_coef: f64,
+    pub value_coef: f64,
+    /// Episodes per update (the "n-step batch" of A2C, episodic here).
+    pub batch_episodes: usize,
+}
+
+impl Default for A2c {
+    fn default() -> Self {
+        A2c {
+            lr: 3e-3,
+            entropy_coef: 1e-3,
+            value_coef: 0.5,
+            batch_episodes: 8,
+        }
+    }
+}
+
+/// MLP parameters (actor and critic share the trunk, as in the reference
+/// A2C implementations).
+struct Net {
+    w1: Vec<f64>, // HIDDEN × STATE_DIM
+    b1: Vec<f64>, // HIDDEN
+    wmu: Vec<f64>, // HIDDEN
+    bmu: f64,
+    wv: Vec<f64>, // HIDDEN
+    bv: f64,
+    log_std: f64,
+}
+
+struct Grads {
+    w1: Vec<f64>,
+    b1: Vec<f64>,
+    wmu: Vec<f64>,
+    bmu: f64,
+    wv: Vec<f64>,
+    bv: f64,
+    log_std: f64,
+}
+
+impl Net {
+    fn init(rng: &mut Rng) -> Net {
+        let scale = (2.0 / STATE_DIM as f64).sqrt();
+        Net {
+            w1: (0..HIDDEN * STATE_DIM)
+                .map(|_| rng.normal() * scale)
+                .collect(),
+            b1: vec![0.0; HIDDEN],
+            wmu: (0..HIDDEN).map(|_| rng.normal() * 0.1).collect(),
+            bmu: 0.0,
+            wv: (0..HIDDEN).map(|_| rng.normal() * 0.1).collect(),
+            bv: 0.0,
+            log_std: (0.4f64).ln(),
+        }
+    }
+
+    fn zeros_like(&self) -> Grads {
+        Grads {
+            w1: vec![0.0; self.w1.len()],
+            b1: vec![0.0; self.b1.len()],
+            wmu: vec![0.0; self.wmu.len()],
+            bmu: 0.0,
+            wv: vec![0.0; self.wv.len()],
+            bv: 0.0,
+            log_std: 0.0,
+        }
+    }
+
+    /// Forward pass; returns (hidden activations, μ, V).
+    fn forward(&self, s: &[f32; STATE_DIM]) -> (Vec<f64>, f64, f64) {
+        let mut h = vec![0.0f64; HIDDEN];
+        for i in 0..HIDDEN {
+            let mut acc = self.b1[i];
+            for j in 0..STATE_DIM {
+                acc += self.w1[i * STATE_DIM + j] * s[j] as f64;
+            }
+            h[i] = acc.tanh();
+        }
+        let mut mu = self.bmu;
+        let mut v = self.bv;
+        for i in 0..HIDDEN {
+            mu += self.wmu[i] * h[i];
+            v += self.wv[i] * h[i];
+        }
+        (h, mu.tanh(), v)
+    }
+
+    /// Accumulate gradients of
+    ///   L = −logπ(a|s)·adv + value_coef·(ret − V)² − entropy_coef·H(π)
+    /// for one (s, a, adv, ret) tuple.
+    #[allow(clippy::too_many_arguments)]
+    fn accumulate(
+        &self,
+        g: &mut Grads,
+        s: &[f32; STATE_DIM],
+        a: f64,
+        adv: f64,
+        ret: f64,
+        value_coef: f64,
+        entropy_coef: f64,
+    ) {
+        let (h, mu, v) = self.forward(s);
+        let std = self.log_std.exp().max(1e-3);
+        let z = (a - mu) / std;
+
+        // d(−logπ·adv)/dmu_pre-tanh: dlogπ/dμ = z/σ; μ = tanh(m).
+        let dmu = -(z / std) * adv * (1.0 - mu * mu);
+        // dlogπ/dlogσ = z² − 1 ⇒ dL = −adv·(z²−1); entropy H = logσ + c ⇒
+        // dH/dlogσ = 1.
+        g.log_std += -adv * (z * z - 1.0) - entropy_coef;
+        // Critic: d value_coef·(ret−V)² /dV = −2·value_coef·(ret−V).
+        let dv = -2.0 * value_coef * (ret - v);
+
+        g.bmu += dmu;
+        g.bv += dv;
+        let mut dh = vec![0.0f64; HIDDEN];
+        for i in 0..HIDDEN {
+            g.wmu[i] += dmu * h[i];
+            g.wv[i] += dv * h[i];
+            dh[i] = dmu * self.wmu[i] + dv * self.wv[i];
+        }
+        for i in 0..HIDDEN {
+            let dpre = dh[i] * (1.0 - h[i] * h[i]);
+            g.b1[i] += dpre;
+            for j in 0..STATE_DIM {
+                g.w1[i * STATE_DIM + j] += dpre * s[j] as f64;
+            }
+        }
+    }
+
+    fn sgd(&mut self, g: &Grads, lr: f64, scale: f64) {
+        let clip = |x: f64| x.clamp(-5.0, 5.0);
+        for (w, d) in self.w1.iter_mut().zip(&g.w1) {
+            *w -= lr * clip(d * scale);
+        }
+        for (w, d) in self.b1.iter_mut().zip(&g.b1) {
+            *w -= lr * clip(d * scale);
+        }
+        for (w, d) in self.wmu.iter_mut().zip(&g.wmu) {
+            *w -= lr * clip(d * scale);
+        }
+        for (w, d) in self.wv.iter_mut().zip(&g.wv) {
+            *w -= lr * clip(d * scale);
+        }
+        self.bmu -= lr * clip(g.bmu * scale);
+        self.bv -= lr * clip(g.bv * scale);
+        self.log_std = (self.log_std - lr * clip(g.log_std * scale)).clamp(-3.0, 0.5);
+    }
+}
+
+impl Optimizer for A2c {
+    fn name(&self) -> &'static str {
+        "A2C"
+    }
+
+    fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult {
+        let mut tr = Tracker::new("A2C", budget);
+        let mut net = Net::init(rng);
+
+        while !tr.exhausted() {
+            let mut grads = net.zeros_like();
+            let mut tuples = 0usize;
+            for _ in 0..self.batch_episodes {
+                if tr.exhausted() {
+                    break;
+                }
+                // Roll one episode with the stochastic policy.
+                let mut sa: Vec<([f32; STATE_DIM], f64)> = Vec::new();
+                let traj = p.env.rollout(|_, st| {
+                    let (_, mu, _) = net.forward(st);
+                    let std = net.log_std.exp().max(1e-3);
+                    let a = mu + std * rng.normal();
+                    sa.push((*st, a));
+                    a as f32
+                });
+                // Episode counts as one sample against the search budget.
+                tr.observe(p, &traj.strategy);
+                let ret = final_reward(&p.env, &traj);
+                for (st, a) in &sa {
+                    let (_, _, v) = net.forward(st);
+                    let adv = ret - v;
+                    net.accumulate(
+                        &mut grads,
+                        st,
+                        *a,
+                        adv,
+                        ret,
+                        self.value_coef,
+                        self.entropy_coef,
+                    );
+                    tuples += 1;
+                }
+            }
+            if tuples > 0 {
+                net.sgd(&grads, self.lr, 1.0 / tuples as f64);
+            }
+        }
+        tr.finish(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::workload::zoo;
+
+    #[test]
+    fn gradient_check_value_head() {
+        // Finite-difference check of dL/dbv for the critic term.
+        let mut rng = Rng::seed_from_u64(1);
+        let net = Net::init(&mut rng);
+        let s = [0.3f32; STATE_DIM];
+        let (ret, a) = (1.5, 0.2);
+        let mut g = net.zeros_like();
+        net.accumulate(&mut g, &s, a, 0.0, ret, 0.5, 0.0); // adv=0 ⇒ critic only
+        let eps = 1e-5;
+        let mut n2 = Net {
+            w1: net.w1.clone(),
+            b1: net.b1.clone(),
+            wmu: net.wmu.clone(),
+            bmu: net.bmu,
+            wv: net.wv.clone(),
+            bv: net.bv + eps,
+            log_std: net.log_std,
+        };
+        let loss = |n: &Net| {
+            let (_, _, v) = n.forward(&s);
+            0.5 * (ret - v) * (ret - v)
+        };
+        let num = (loss(&n2) - loss(&net)) / eps;
+        n2.bv = net.bv;
+        assert!(
+            (g.bv - num).abs() < 1e-3,
+            "analytic {} vs numeric {num}",
+            g.bv
+        );
+    }
+
+    #[test]
+    fn gradient_check_actor_mu() {
+        // Finite-difference dL/dbmu for the policy-gradient term.
+        let mut rng = Rng::seed_from_u64(2);
+        let net = Net::init(&mut rng);
+        let s = [0.1f32; STATE_DIM];
+        let (a, adv) = (0.4, 0.7);
+        let mut g = net.zeros_like();
+        net.accumulate(&mut g, &s, a, adv, 0.0, 0.0, 0.0); // actor only
+        let eps = 1e-6;
+        let loss = |bmu: f64| {
+            let n = Net {
+                w1: net.w1.clone(),
+                b1: net.b1.clone(),
+                wmu: net.wmu.clone(),
+                bmu,
+                wv: net.wv.clone(),
+                bv: net.bv,
+                log_std: net.log_std,
+            };
+            let (_, mu, _) = n.forward(&s);
+            let std = n.log_std.exp();
+            let z = (a - mu) / std;
+            // −logπ·adv (dropping constants)
+            (0.5 * z * z + n.log_std) * adv
+        };
+        let num = (loss(net.bmu + eps) - loss(net.bmu - eps)) / (2.0 * eps);
+        assert!(
+            (g.bmu - num).abs() < 1e-4,
+            "analytic {} vs numeric {num}",
+            g.bmu
+        );
+    }
+
+    #[test]
+    fn runs_within_budget_and_finishes() {
+        let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let r = A2c::default().run(&p, 120, &mut Rng::seed_from_u64(3));
+        assert!(r.evals_used <= 120);
+        assert!(r.best_eval.score.is_finite());
+    }
+}

@@ -1,0 +1,250 @@
+//! CMA-ES (covariance matrix adaptation evolution strategy) [Hansen 2006]
+//! over the continuous strategy encoding — Table 1 baseline (nevergrad
+//! substitute).
+//!
+//! Full (μ/μ_w, λ) implementation with rank-one + rank-μ covariance update
+//! and cumulative step-size adaptation, specialized only in that candidate
+//! points are clamped to the [-1, 1] box before decoding.
+
+use crate::util::rng::Rng;
+
+use super::{FusionProblem, Optimizer, SearchResult, Tracker};
+
+#[derive(Debug, Clone)]
+pub struct CmaEs {
+    /// Initial step size.
+    pub sigma0: f64,
+    /// Population (λ); 0 ⇒ the standard 4 + ⌊3 ln d⌋.
+    pub lambda: usize,
+}
+
+impl Default for CmaEs {
+    fn default() -> Self {
+        CmaEs {
+            sigma0: 0.3,
+            lambda: 0,
+        }
+    }
+}
+
+/// Symmetric matrix eigendecomposition via cyclic Jacobi — d ≤ ~70 here, so
+/// an O(d³) sweep per update is fine (and we only re-decompose lazily).
+fn jacobi_eigen(a: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let d = a.len();
+    let mut m: Vec<Vec<f64>> = a.to_vec();
+    let mut v: Vec<Vec<f64>> = (0..d)
+        .map(|i| (0..d).map(|j| if i == j { 1.0 } else { 0.0 }).collect())
+        .collect();
+    for _sweep in 0..24 {
+        let mut off = 0.0;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                off += m[i][j] * m[i][j];
+            }
+        }
+        if off < 1e-18 {
+            break;
+        }
+        for i in 0..d {
+            for j in (i + 1)..d {
+                if m[i][j].abs() < 1e-15 {
+                    continue;
+                }
+                let theta = 0.5 * (m[j][j] - m[i][i]) / m[i][j];
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..d {
+                    let (mik, mjk) = (m[i][k], m[j][k]);
+                    m[i][k] = c * mik - s * mjk;
+                    m[j][k] = s * mik + c * mjk;
+                }
+                for k in 0..d {
+                    let (mki, mkj) = (m[k][i], m[k][j]);
+                    m[k][i] = c * mki - s * mkj;
+                    m[k][j] = s * mki + c * mkj;
+                }
+                for k in 0..d {
+                    let (vki, vkj) = (v[k][i], v[k][j]);
+                    v[k][i] = c * vki - s * vkj;
+                    v[k][j] = s * vki + c * vkj;
+                }
+            }
+        }
+    }
+    let eig: Vec<f64> = (0..d).map(|i| m[i][i].max(1e-20)).collect();
+    (eig, v)
+}
+
+impl Optimizer for CmaEs {
+    fn name(&self) -> &'static str {
+        "CMA"
+    }
+
+    fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult {
+        let mut tr = Tracker::new("CMA", budget);
+        let d = p.n_slots;
+        let lambda = if self.lambda > 0 {
+            self.lambda
+        } else {
+            4 + (3.0 * (d as f64).ln()).floor() as usize
+        };
+        let mu = lambda / 2;
+        // Log-rank weights.
+        let mut w: Vec<f64> = (0..mu)
+            .map(|i| ((mu as f64 + 0.5).ln() - ((i + 1) as f64).ln()).max(0.0))
+            .collect();
+        let wsum: f64 = w.iter().sum();
+        for x in w.iter_mut() {
+            *x /= wsum;
+        }
+        let mu_eff = 1.0 / w.iter().map(|x| x * x).sum::<f64>();
+        let dd = d as f64;
+        let cc = (4.0 + mu_eff / dd) / (dd + 4.0 + 2.0 * mu_eff / dd);
+        let cs = (mu_eff + 2.0) / (dd + mu_eff + 5.0);
+        let c1 = 2.0 / ((dd + 1.3) * (dd + 1.3) + mu_eff);
+        let cmu = (1.0 - c1)
+            .min(2.0 * (mu_eff - 2.0 + 1.0 / mu_eff) / ((dd + 2.0) * (dd + 2.0) + mu_eff));
+        let damps = 1.0 + 2.0 * ((mu_eff - 1.0) / (dd + 1.0)).sqrt().max(0.0) + cs;
+        let chi_n = dd.sqrt() * (1.0 - 1.0 / (4.0 * dd) + 1.0 / (21.0 * dd * dd));
+
+        let mut mean = vec![0.0f64; d];
+        let mut sigma = self.sigma0;
+        let mut cmat: Vec<Vec<f64>> = (0..d)
+            .map(|i| (0..d).map(|j| if i == j { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let mut ps = vec![0.0f64; d];
+        let mut pc = vec![0.0f64; d];
+        let (mut eigvals, mut eigvecs) = jacobi_eigen(&cmat);
+        let mut stale = 0usize;
+
+        while !tr.exhausted() {
+            // Sample λ candidates: x = mean + σ·B·D·z.
+            let mut cands: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::with_capacity(lambda);
+            for _ in 0..lambda {
+                if tr.exhausted() {
+                    break;
+                }
+                let z: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+                let mut y = vec![0.0f64; d];
+                for i in 0..d {
+                    let mut acc = 0.0;
+                    for j in 0..d {
+                        acc += eigvecs[i][j] * eigvals[j].sqrt() * z[j];
+                    }
+                    y[i] = acc;
+                }
+                let x: Vec<f64> = (0..d)
+                    .map(|i| (mean[i] + sigma * y[i]).clamp(-1.0, 1.0))
+                    .collect();
+                let s = p.decode(&x);
+                let score = tr.observe(p, &s);
+                cands.push((x, y, score));
+            }
+            if cands.len() < 2 {
+                break;
+            }
+            cands.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+            let mu_now = mu.min(cands.len());
+
+            // New mean and mean displacement in y-space.
+            let old_mean = mean.clone();
+            let mut ybar = vec![0.0f64; d];
+            for i in 0..d {
+                let mut acc = 0.0;
+                for (k, c) in cands.iter().take(mu_now).enumerate() {
+                    acc += w[k.min(w.len() - 1)] * c.1[i];
+                }
+                ybar[i] = acc;
+                mean[i] = old_mean[i] + sigma * ybar[i];
+            }
+
+            // Step-size path (C^{-1/2}·ybar).
+            let mut cinv_y = vec![0.0f64; d];
+            for i in 0..d {
+                let mut acc = 0.0;
+                for j in 0..d {
+                    // B·D^{-1}·Bᵀ·ybar
+                    let mut proj = 0.0;
+                    for k in 0..d {
+                        proj += eigvecs[k][j] * ybar[k];
+                    }
+                    acc += eigvecs[i][j] / eigvals[j].sqrt() * proj;
+                }
+                cinv_y[i] = acc;
+            }
+            let csn = (cs * (2.0 - cs) * mu_eff).sqrt();
+            for i in 0..d {
+                ps[i] = (1.0 - cs) * ps[i] + csn * cinv_y[i];
+            }
+            let ps_norm = ps.iter().map(|x| x * x).sum::<f64>().sqrt();
+            sigma *= ((cs / damps) * (ps_norm / chi_n - 1.0)).exp();
+            sigma = sigma.clamp(1e-8, 2.0);
+
+            // Covariance paths + update.
+            let hsig = if ps_norm / (1.0 - (1.0 - cs).powi(2)).sqrt() < (1.4 + 2.0 / (dd + 1.0)) * chi_n
+            {
+                1.0
+            } else {
+                0.0
+            };
+            let ccn = (cc * (2.0 - cc) * mu_eff).sqrt();
+            for i in 0..d {
+                pc[i] = (1.0 - cc) * pc[i] + hsig * ccn * ybar[i];
+            }
+            for i in 0..d {
+                for j in 0..d {
+                    let mut rank_mu = 0.0;
+                    for (k, c) in cands.iter().take(mu_now).enumerate() {
+                        rank_mu += w[k.min(w.len() - 1)] * c.1[i] * c.1[j];
+                    }
+                    cmat[i][j] = (1.0 - c1 - cmu) * cmat[i][j]
+                        + c1 * (pc[i] * pc[j]
+                            + (1.0 - hsig) * cc * (2.0 - cc) * cmat[i][j])
+                        + cmu * rank_mu;
+                }
+            }
+            stale += 1;
+            if stale * lambda > d / 2 {
+                let (ev, evec) = jacobi_eigen(&cmat);
+                eigvals = ev;
+                eigvecs = evec;
+                stale = 0;
+            }
+        }
+        tr.finish(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::workload::zoo;
+
+    #[test]
+    fn jacobi_recovers_diagonal() {
+        let a = vec![vec![3.0, 0.0], vec![0.0, 1.5]];
+        let (eig, _) = jacobi_eigen(&a);
+        let mut e = eig.clone();
+        e.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((e[0] - 1.5).abs() < 1e-9 && (e[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jacobi_symmetric_2x2() {
+        let a = vec![vec![2.0, 1.0], vec![1.0, 2.0]];
+        let (eig, _) = jacobi_eigen(&a);
+        let mut e = eig.clone();
+        e.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert!((e[0] - 1.0).abs() < 1e-6 && (e[1] - 3.0).abs() < 1e-6, "{e:?}");
+    }
+
+    #[test]
+    fn runs_within_budget() {
+        let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let r = CmaEs::default().run(&p, 400, &mut Rng::seed_from_u64(5));
+        assert!(r.evals_used <= 400);
+        assert!(r.best_eval.score.is_finite());
+    }
+}

@@ -1,0 +1,314 @@
+//! G-Sampler: the paper's teacher model (§4.4.2) — GAMMA [Kao et al. 2020]
+//! extended from the intra-layer to the layer-fusion map-space.
+//!
+//! Like GAMMA, it is a domain-specialized genetic algorithm: the genome is
+//! the discrete strategy itself (not a continuous relaxation), and the
+//! genetic operators encode map-space structure:
+//!
+//! - **repair** — an infeasible individual is repaired by shrinking the
+//!   fattest staged micro-batch or inserting a SYNC at the most
+//!   over-committed group, so the population spends its budget inside the
+//!   feasible region (this is what lets G-Sampler meet the constraint at a
+//!   2K budget where the generic baselines of Table 1 do not);
+//! - **grow/shrink mutation** — nudge a micro-batch, flip a slot to SYNC,
+//!   or un-sync a boundary to lengthen a fused run;
+//! - **group crossover** — single-point crossover at group boundaries, so
+//!   offspring inherit whole fused groups.
+//!
+//! Defaults match the paper: population 40, 50 generations ⇒ 2K samples.
+
+use crate::fusion::{Strategy, SYNC};
+use crate::util::rng::Rng;
+
+use super::{FusionProblem, Optimizer, SearchResult, Tracker};
+
+#[derive(Debug, Clone)]
+pub struct GSampler {
+    pub population: usize,
+    pub elites: usize,
+    pub mutation_rate: f64,
+    pub crossover_rate: f64,
+    /// Tournament size for parent selection.
+    pub tournament: usize,
+    /// Domain repair operator (ablation knob — `cargo bench --bench
+    /// ablation` shows this is what separates G-Sampler from stdGA).
+    pub use_repair: bool,
+    /// Group-boundary crossover (false ⇒ generic single-point).
+    pub group_crossover: bool,
+}
+
+impl Default for GSampler {
+    fn default() -> Self {
+        GSampler {
+            population: 40,
+            elites: 4,
+            mutation_rate: 0.15,
+            crossover_rate: 0.7,
+            tournament: 3,
+            use_repair: true,
+            group_crossover: true,
+        }
+    }
+}
+
+impl GSampler {
+    /// Random initial individual, biased feasible: small micro-batches and
+    /// a sprinkle of syncs.
+    fn seed_individual(&self, p: &FusionProblem, rng: &mut Rng) -> Strategy {
+        let b = p.codec.batch as i64;
+        let mut values = Vec::with_capacity(p.n_slots);
+        // mB_0: small stage-in chunk.
+        values.push(rng.range_i64(1, (b / 8).max(1)) as i32);
+        for _ in 1..p.n_slots {
+            if rng.chance(0.4) {
+                values.push(SYNC);
+            } else {
+                values.push(rng.range_i64(1, (b / 4).max(1)) as i32);
+            }
+        }
+        let mut s = Strategy::new(values);
+        self.repair(p, &mut s, rng);
+        s
+    }
+
+    /// Domain repair: while the strategy overflows the buffer, shrink the
+    /// micro-batch that stages the most bytes, or insert a SYNC into the
+    /// over-committed group when the micro-batch is already 1.
+    pub fn repair(&self, p: &FusionProblem, s: &mut Strategy, rng: &mut Rng) {
+        if !self.use_repair {
+            return;
+        }
+        for _ in 0..8 * p.n_slots {
+            // Hot path: validity + worst group without building a report
+            // (perf pass — see EXPERIMENTS.md §Perf L3 iteration 1).
+            let (_, _, valid) = p.model.latency_of(s);
+            if valid {
+                return;
+            }
+            let (i, j, _) = p.model.worst_group(s);
+            // Fattest staged slot within the group (by staged bytes).
+            let fattest = (i..=j)
+                .filter(|&l| s.values[l] != SYNC && s.values[l] > 1)
+                .max_by(|&a, &b| {
+                    let wa = p.model_staged_bytes(s, a);
+                    let wb = p.model_staged_bytes(s, b);
+                    wa.partial_cmp(&wb).unwrap()
+                });
+            match fattest {
+                Some(l) => {
+                    // Halve it (floor at 1).
+                    s.values[l] = (s.values[l] / 2).max(1);
+                }
+                None => {
+                    if j > i {
+                        // Everything is already mb=1: split the group.
+                        let cut = i + rng.index(j - i);
+                        s.values[cut.max(1)] = SYNC;
+                    } else if s.values[0] > 1 {
+                        s.values[0] = (s.values[0] / 2).max(1);
+                    } else {
+                        // Single layer at mb=1 still overflowing: weights +
+                        // one sample exceed the condition. Nothing a fusion
+                        // mapper can do; leave as-is (scored as invalid).
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    fn mutate(&self, p: &FusionProblem, s: &mut Strategy, rng: &mut Rng) {
+        let b = p.codec.batch as i32;
+        for t in 0..p.n_slots {
+            if !rng.chance(self.mutation_rate) {
+                continue;
+            }
+            let v = s.values[t];
+            let choice = rng.index(4);
+            s.values[t] = match (choice, v) {
+                // Nudge: geometric step up/down.
+                (0, v) if v != SYNC => {
+                    let f = if rng.chance(0.5) { 2 } else { 1 };
+                    if rng.chance(0.5) {
+                        (v * (1 + f)).min(b)
+                    } else {
+                        (v / (1 + f)).max(1)
+                    }
+                }
+                // Flip to SYNC (not slot 0).
+                (1, _) if t > 0 => SYNC,
+                // Un-sync / resample.
+                (2, _) => rng.range_i64(1, (b as i64 / 2).max(1)) as i32,
+                // Copy the neighbour's decision (fused runs like agreeing
+                // micro-batches).
+                (3, _) if t > 0 => s.values[t - 1].max(1),
+                _ => v.max(1),
+            };
+            if t == 0 && s.values[0] == SYNC {
+                s.values[0] = 1;
+            }
+        }
+    }
+
+    /// Crossover at a group boundary of parent a (or generic single-point
+    /// when `group_crossover` is off — the ablation baseline).
+    fn crossover(&self, a: &Strategy, bpar: &Strategy, rng: &mut Rng) -> Strategy {
+        let cut = if self.group_crossover {
+            let groups = a.groups();
+            if groups.len() <= 1 {
+                return a.clone();
+            }
+            groups[rng.index(groups.len() - 1)].1 + 1 // after a group end
+        } else {
+            1 + rng.index(a.values.len() - 1)
+        };
+        let mut values = a.values[..cut.min(a.values.len())].to_vec();
+        values.extend_from_slice(&bpar.values[values.len()..]);
+        Strategy::new(values)
+    }
+
+    fn tournament_pick<'a>(
+        &self,
+        scored: &'a [(Strategy, f64)],
+        rng: &mut Rng,
+    ) -> &'a Strategy {
+        let mut best: Option<&(Strategy, f64)> = None;
+        for _ in 0..self.tournament {
+            let c = &scored[rng.index(scored.len())];
+            if best.map(|b| c.1 > b.1).unwrap_or(true) {
+                best = Some(c);
+            }
+        }
+        &best.unwrap().0
+    }
+}
+
+impl FusionProblem {
+    /// Bytes slot `l` stages on-chip under `s` (helper for repair).
+    fn model_staged_bytes(&self, s: &Strategy, l: usize) -> f64 {
+        let mb = if s.values[l] == SYNC { 1 } else { s.values[l] };
+        self.model_out_bytes(l) * mb as f64
+    }
+
+    fn model_out_bytes(&self, l: usize) -> f64 {
+        // Exposed via CostModel's cached vectors through evaluate();
+        // recompute from the report-free path: we keep a tiny accessor.
+        self.model.out_bytes_of(l)
+    }
+}
+
+impl Optimizer for GSampler {
+    fn name(&self) -> &'static str {
+        "G-Sampler"
+    }
+
+    fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult {
+        let mut tr = Tracker::new("G-Sampler", budget);
+        // Init population (seed evaluations count against the budget).
+        let mut pop: Vec<(Strategy, f64)> = Vec::with_capacity(self.population);
+        // Always include the no-fusion individual: a feasible anchor.
+        let anchor = Strategy::no_fusion(p.n_slots - 1);
+        let sc = tr.observe(p, &anchor);
+        pop.push((anchor, sc));
+        while pop.len() < self.population && !tr.exhausted() {
+            let s = self.seed_individual(p, rng);
+            let sc = tr.observe(p, &s);
+            pop.push((s, sc));
+        }
+
+        while !tr.exhausted() {
+            // Sort descending by score; keep elites.
+            pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mut next: Vec<(Strategy, f64)> =
+                pop.iter().take(self.elites).cloned().collect();
+            while next.len() < self.population && !tr.exhausted() {
+                let pa = self.tournament_pick(&pop, rng);
+                let child0 = if rng.chance(self.crossover_rate) {
+                    let pb = self.tournament_pick(&pop, rng);
+                    self.crossover(pa, pb, rng)
+                } else {
+                    pa.clone()
+                };
+                let mut child = child0;
+                self.mutate(p, &mut child, rng);
+                self.repair(p, &mut child, rng);
+                let sc = tr.observe(p, &child);
+                next.push((child, sc));
+            }
+            pop = next;
+        }
+        tr.finish(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::workload::zoo;
+
+    fn problem(mem_mb: f64) -> FusionProblem {
+        FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), mem_mb)
+    }
+
+    #[test]
+    fn finds_valid_fusion_with_speedup() {
+        let p = problem(20.0);
+        let mut rng = Rng::seed_from_u64(42);
+        let r = GSampler::default().run(&p, 2000, &mut rng);
+        assert!(r.best_eval.valid, "teacher must satisfy the constraint");
+        assert!(
+            r.best_eval.speedup > 1.05,
+            "teacher speedup only {}",
+            r.best_eval.speedup
+        );
+        assert!(r.best.has_fusion());
+        assert!(r.evals_used <= 2000);
+        assert!(
+            r.act_usage_mb() <= 20.0,
+            "act usage {} over condition",
+            r.act_usage_mb()
+        );
+    }
+
+    #[test]
+    fn more_memory_never_worse() {
+        let mut rng = Rng::seed_from_u64(7);
+        let tight = GSampler::default().run(&problem(16.0), 1200, &mut rng.fork());
+        let loose = GSampler::default().run(&problem(64.0), 1200, &mut rng.fork());
+        assert!(
+            loose.best_eval.speedup >= tight.best_eval.speedup * 0.95,
+            "loose {} vs tight {}",
+            loose.best_eval.speedup,
+            tight.best_eval.speedup
+        );
+    }
+
+    #[test]
+    fn repair_produces_feasible() {
+        let p = problem(20.0);
+        let g = GSampler::default();
+        let mut rng = Rng::seed_from_u64(3);
+        // Grossly infeasible: stage everything at full batch.
+        let mut s = Strategy::new(vec![64; p.n_slots]);
+        g.repair(&p, &mut s, &mut rng);
+        assert!(p.model.evaluate(&s).valid, "{}", s.display());
+    }
+
+    #[test]
+    fn respects_budget() {
+        let p = problem(20.0);
+        let mut rng = Rng::seed_from_u64(9);
+        let r = GSampler::default().run(&p, 150, &mut rng);
+        assert!(r.evals_used <= 150);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = problem(20.0);
+        let a = GSampler::default().run(&p, 400, &mut Rng::seed_from_u64(5));
+        let b = GSampler::default().run(&p, 400, &mut Rng::seed_from_u64(5));
+        assert_eq!(a.best.values, b.best.values);
+        assert_eq!(a.best_eval.speedup, b.best_eval.speedup);
+    }
+}

@@ -1,0 +1,284 @@
+//! Search-based mappers for the layer-fusion map-space.
+//!
+//! [`gsampler`] is the paper's teacher (GAMMA extended to the fusion
+//! space, §4.4.2). The rest are the paper's Table 1 baselines, rebuilt from
+//! their standard definitions since nevergrad is unavailable offline:
+//! [`pso`], [`cma`], [`de`], [`tbpsa`], [`stdga`], plus [`random`] as a
+//! sanity floor and [`a2c`] (the RL baseline).
+//!
+//! All black-box methods share the continuous encoding in
+//! [`FusionProblem::decode`] — a vector in `[-1,1]^{N+1}` decoded slot-wise
+//! through the [`ActionCodec`] — and the same evaluation budget accounting,
+//! so Table 1's comparison is apples-to-apples.
+
+pub mod a2c;
+pub mod cma;
+pub mod de;
+pub mod gsampler;
+pub mod pso;
+pub mod random;
+pub mod stdga;
+pub mod tbpsa;
+
+use std::time::Instant;
+
+use crate::cost::{CostModel, HwConfig};
+use crate::env::FusionEnv;
+use crate::fusion::{ActionCodec, Strategy, SYNC};
+use crate::util::rng::Rng;
+use crate::workload::Workload;
+
+/// The optimization problem: maximize fusion speedup subject to the
+/// conditioned buffer capacity.
+pub struct FusionProblem {
+    pub model: CostModel,
+    pub codec: ActionCodec,
+    pub n_slots: usize,
+    pub mem_cond_bytes: f64,
+    /// The RL view of the same problem (state featurization for A2C and
+    /// for trajectory decoration).
+    pub env: FusionEnv,
+}
+
+/// One strategy evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct Eval {
+    /// Scalarized score: speedup when valid, negative overflow when not —
+    /// every valid strategy dominates every invalid one, and infeasible
+    /// strategies still have a slope toward feasibility.
+    pub score: f64,
+    pub speedup: f64,
+    pub peak_act_bytes: u64,
+    pub valid: bool,
+}
+
+impl FusionProblem {
+    pub fn new(w: &Workload, batch: usize, hw: HwConfig, mem_cond_mb: f64) -> Self {
+        let hw = hw.with_buffer_mb(mem_cond_mb);
+        FusionProblem {
+            model: CostModel::new(w, batch, hw),
+            codec: ActionCodec::new(batch),
+            n_slots: w.n_layers() + 1,
+            mem_cond_bytes: mem_cond_mb * 1024.0 * 1024.0,
+            env: FusionEnv::new(w.clone(), batch, hw, mem_cond_mb),
+        }
+    }
+
+    /// Decode a continuous point into a shape-legal strategy.
+    pub fn decode(&self, x: &[f64]) -> Strategy {
+        debug_assert_eq!(x.len(), self.n_slots);
+        let mut values = Vec::with_capacity(self.n_slots);
+        for (t, &v) in x.iter().enumerate() {
+            let mut a = self.codec.decode(v as f32);
+            if t == 0 && a == SYNC {
+                a = 1;
+            }
+            values.push(a);
+        }
+        Strategy::new(values)
+    }
+
+    /// Evaluate a decoded strategy (the hot path: one `latency_of` call).
+    pub fn eval_strategy(&self, s: &Strategy) -> Eval {
+        let (lat, peak_mem, valid) = self.model.latency_of(s);
+        let speedup = self.model.baseline_latency() / lat;
+        let score = if valid {
+            speedup
+        } else {
+            -(peak_mem as f64 / self.model.hw.buffer_bytes as f64)
+        };
+        Eval {
+            score,
+            speedup,
+            peak_act_bytes: self.peak_act(s),
+            valid,
+        }
+    }
+
+    /// Cheap eval without the act-usage readback (search inner loops).
+    pub fn score(&self, s: &Strategy) -> f64 {
+        let (lat, peak_mem, valid) = self.model.latency_of(s);
+        if valid {
+            self.model.baseline_latency() / lat
+        } else {
+            -(peak_mem as f64 / self.model.hw.buffer_bytes as f64)
+        }
+    }
+
+    fn peak_act(&self, s: &Strategy) -> u64 {
+        self.model.evaluate(s).peak_act_bytes
+    }
+
+    pub fn eval_point(&self, x: &[f64]) -> (Strategy, Eval) {
+        let s = self.decode(x);
+        let e = self.eval_strategy(&s);
+        (s, e)
+    }
+}
+
+/// Outcome of one search run.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub algo: String,
+    pub best: Strategy,
+    pub best_eval: Eval,
+    pub evals_used: usize,
+    pub wall_s: f64,
+    /// (evaluations consumed, best score so far) checkpoints for
+    /// sampling-efficiency plots.
+    pub history: Vec<(usize, f64)>,
+}
+
+impl SearchResult {
+    /// Paper Table 1 formatting: invalid solutions are "N/A".
+    pub fn speedup_cell(&self) -> String {
+        if self.best_eval.valid {
+            format!("{:.2}", self.best_eval.speedup)
+        } else {
+            "N/A".to_string()
+        }
+    }
+
+    pub fn act_usage_mb(&self) -> f64 {
+        self.best_eval.peak_act_bytes as f64 / (1024.0 * 1024.0)
+    }
+}
+
+/// Common interface all search mappers implement.
+pub trait Optimizer {
+    fn name(&self) -> &'static str;
+
+    /// Run with a sampling budget (paper: 2K) and a seed.
+    fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult;
+}
+
+/// Budget/bookkeeping helper shared by the optimizer implementations.
+pub struct Tracker {
+    pub algo: &'static str,
+    pub budget: usize,
+    pub used: usize,
+    pub best: Option<(Strategy, f64)>,
+    pub history: Vec<(usize, f64)>,
+    t0: Instant,
+}
+
+impl Tracker {
+    pub fn new(algo: &'static str, budget: usize) -> Self {
+        Tracker {
+            algo,
+            budget,
+            used: 0,
+            best: None,
+            history: Vec::new(),
+            t0: Instant::now(),
+        }
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.used >= self.budget
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.budget.saturating_sub(self.used)
+    }
+
+    /// Record one evaluation; returns the score.
+    pub fn observe(&mut self, p: &FusionProblem, s: &Strategy) -> f64 {
+        let score = p.score(s);
+        self.used += 1;
+        let improved = self.best.as_ref().map(|(_, b)| score > *b).unwrap_or(true);
+        if improved {
+            self.best = Some((s.clone(), score));
+            self.history.push((self.used, score));
+        }
+        score
+    }
+
+    pub fn finish(self, p: &FusionProblem) -> SearchResult {
+        let (best, _) = self
+            .best
+            .expect("optimizer finished without evaluating anything");
+        let best_eval = p.eval_strategy(&best);
+        SearchResult {
+            algo: self.algo.to_string(),
+            best,
+            best_eval,
+            evals_used: self.used,
+            wall_s: self.t0.elapsed().as_secs_f64(),
+            history: self.history,
+        }
+    }
+}
+
+/// Every optimizer in Table 1's lineup (DNNFuser/Seq2Seq are inference
+/// mappers, not searches — they live in `crate::model`).
+pub fn all_baselines() -> Vec<Box<dyn Optimizer>> {
+    vec![
+        Box::new(pso::Pso::default()),
+        Box::new(cma::CmaEs::default()),
+        Box::new(de::De::default()),
+        Box::new(tbpsa::Tbpsa::default()),
+        Box::new(stdga::StdGa::default()),
+        Box::new(a2c::A2c::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    pub(crate) fn problem() -> FusionProblem {
+        FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0)
+    }
+
+    #[test]
+    fn decode_is_shape_legal() {
+        let p = problem();
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..100 {
+            let x: Vec<f64> = (0..p.n_slots).map(|_| rng.range_f64(-1.5, 1.5)).collect();
+            let s = p.decode(&x);
+            s.check_shape(&zoo::vgg16(), 64).unwrap();
+        }
+    }
+
+    #[test]
+    fn valid_always_beats_invalid() {
+        let p = problem();
+        let nofuse = Strategy::no_fusion(p.n_slots - 1);
+        let valid = p.eval_strategy(&nofuse);
+        assert!(valid.valid);
+        // Absurd staging: everything at full batch.
+        let invalid = p.decode(&vec![1.0; p.n_slots]);
+        let inv = p.eval_strategy(&invalid);
+        assert!(!inv.valid);
+        assert!(valid.score > inv.score);
+        assert!(inv.score < 0.0);
+    }
+
+    #[test]
+    fn tracker_budget_and_history() {
+        let p = problem();
+        let mut tr = Tracker::new("test", 10);
+        let s = Strategy::no_fusion(p.n_slots - 1);
+        while !tr.exhausted() {
+            tr.observe(&p, &s);
+        }
+        assert_eq!(tr.used, 10);
+        let r = tr.finish(&p);
+        assert_eq!(r.evals_used, 10);
+        assert_eq!(r.history.len(), 1); // only first eval improved
+        assert!(r.best_eval.valid);
+    }
+
+    #[test]
+    fn speedup_cell_formats_na() {
+        let p = problem();
+        let mut tr = Tracker::new("bad", 1);
+        let invalid = p.decode(&vec![1.0; p.n_slots]);
+        tr.observe(&p, &invalid);
+        let r = tr.finish(&p);
+        assert_eq!(r.speedup_cell(), "N/A");
+    }
+}

@@ -1,0 +1,126 @@
+//! Particle Swarm Optimization [Kennedy & Eberhart 1995] over the
+//! continuous strategy encoding — Table 1 baseline (nevergrad substitute).
+
+use crate::util::rng::Rng;
+
+use super::{FusionProblem, Optimizer, SearchResult, Tracker};
+
+#[derive(Debug, Clone)]
+pub struct Pso {
+    pub particles: usize,
+    /// Inertia weight.
+    pub w: f64,
+    /// Cognitive coefficient (pull toward personal best).
+    pub c1: f64,
+    /// Social coefficient (pull toward global best).
+    pub c2: f64,
+    pub v_max: f64,
+}
+
+impl Default for Pso {
+    fn default() -> Self {
+        Pso {
+            particles: 40,
+            w: 0.7,
+            c1: 1.5,
+            c2: 1.5,
+            v_max: 0.5,
+        }
+    }
+}
+
+struct Particle {
+    x: Vec<f64>,
+    v: Vec<f64>,
+    best_x: Vec<f64>,
+    best_score: f64,
+}
+
+impl Optimizer for Pso {
+    fn name(&self) -> &'static str {
+        "PSO"
+    }
+
+    fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult {
+        let mut tr = Tracker::new("PSO", budget);
+        let d = p.n_slots;
+        let mut swarm: Vec<Particle> = Vec::with_capacity(self.particles);
+        let mut gbest: Option<(Vec<f64>, f64)> = None;
+
+        for _ in 0..self.particles {
+            if tr.exhausted() {
+                break;
+            }
+            let x: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let v: Vec<f64> = (0..d)
+                .map(|_| rng.range_f64(-self.v_max, self.v_max))
+                .collect();
+            let s = p.decode(&x);
+            let score = tr.observe(p, &s);
+            if gbest.as_ref().map(|(_, g)| score > *g).unwrap_or(true) {
+                gbest = Some((x.clone(), score));
+            }
+            swarm.push(Particle {
+                best_x: x.clone(),
+                best_score: score,
+                x,
+                v,
+            });
+        }
+
+        while !tr.exhausted() {
+            let (gx, _) = gbest.clone().unwrap();
+            for part in swarm.iter_mut() {
+                if tr.exhausted() {
+                    break;
+                }
+                for k in 0..d {
+                    let r1 = rng.f64();
+                    let r2 = rng.f64();
+                    part.v[k] = (self.w * part.v[k]
+                        + self.c1 * r1 * (part.best_x[k] - part.x[k])
+                        + self.c2 * r2 * (gx[k] - part.x[k]))
+                        .clamp(-self.v_max, self.v_max);
+                    part.x[k] = (part.x[k] + part.v[k]).clamp(-1.0, 1.0);
+                }
+                let s = p.decode(&part.x);
+                let score = tr.observe(p, &s);
+                if score > part.best_score {
+                    part.best_score = score;
+                    part.best_x = part.x.clone();
+                }
+                if score > gbest.as_ref().unwrap().1 {
+                    gbest = Some((part.x.clone(), score));
+                }
+            }
+        }
+        tr.finish(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::workload::zoo;
+
+    #[test]
+    fn improves_over_first_sample_and_respects_budget() {
+        let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let mut rng = Rng::seed_from_u64(1);
+        let r = Pso::default().run(&p, 600, &mut rng);
+        assert!(r.evals_used <= 600);
+        assert!(r.history.len() >= 1);
+        let first = r.history.first().unwrap().1;
+        let last = r.history.last().unwrap().1;
+        assert!(last >= first);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = FusionProblem::new(&zoo::resnet18(), 64, HwConfig::paper(), 32.0);
+        let a = Pso::default().run(&p, 300, &mut Rng::seed_from_u64(2));
+        let b = Pso::default().run(&p, 300, &mut Rng::seed_from_u64(2));
+        assert_eq!(a.best.values, b.best.values);
+    }
+}

@@ -1,0 +1,40 @@
+//! Pure random search — the sanity floor every learned/evolved mapper must
+//! clear (used by tests and the ablation bench, not in the paper's tables).
+
+use crate::util::rng::Rng;
+
+use super::{FusionProblem, Optimizer, SearchResult, Tracker};
+
+#[derive(Debug, Clone, Default)]
+pub struct RandomSearch;
+
+impl Optimizer for RandomSearch {
+    fn name(&self) -> &'static str {
+        "Random"
+    }
+
+    fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult {
+        let mut tr = Tracker::new("Random", budget);
+        let d = p.n_slots;
+        while !tr.exhausted() {
+            let x: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let s = p.decode(&x);
+            tr.observe(p, &s);
+        }
+        tr.finish(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::workload::zoo;
+
+    #[test]
+    fn uses_exactly_the_budget() {
+        let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let r = RandomSearch.run(&p, 250, &mut Rng::seed_from_u64(10));
+        assert_eq!(r.evals_used, 250);
+    }
+}

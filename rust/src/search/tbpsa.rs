@@ -1,0 +1,101 @@
+//! TBPSA (test-based population-size adaptation) — Table 1 baseline.
+//!
+//! nevergrad's TBPSA is an evolution strategy for noisy optimization that
+//! grows its population when progress stalls. Our objective is noiseless,
+//! so we implement the same skeleton — a (μ/μ, λ) ES whose λ doubles after
+//! stagnant generations and shrinks after successful ones — which
+//! reproduces the relevant Table 1 behaviour (a generic ES spending its 2K
+//! budget without learning the feasibility structure).
+
+use crate::util::rng::Rng;
+
+use super::{FusionProblem, Optimizer, SearchResult, Tracker};
+
+#[derive(Debug, Clone)]
+pub struct Tbpsa {
+    pub lambda0: usize,
+    pub sigma0: f64,
+    pub lambda_max: usize,
+}
+
+impl Default for Tbpsa {
+    fn default() -> Self {
+        Tbpsa {
+            lambda0: 20,
+            sigma0: 0.3,
+            lambda_max: 160,
+        }
+    }
+}
+
+impl Optimizer for Tbpsa {
+    fn name(&self) -> &'static str {
+        "TBPSA"
+    }
+
+    fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult {
+        let mut tr = Tracker::new("TBPSA", budget);
+        let d = p.n_slots;
+        let mut mean = vec![0.0f64; d];
+        let mut sigma = self.sigma0;
+        let mut lambda = self.lambda0;
+        let mut last_best = f64::NEG_INFINITY;
+
+        while !tr.exhausted() {
+            let mut gen: Vec<(Vec<f64>, f64)> = Vec::with_capacity(lambda);
+            for _ in 0..lambda {
+                if tr.exhausted() {
+                    break;
+                }
+                let x: Vec<f64> = (0..d)
+                    .map(|i| (mean[i] + sigma * rng.normal()).clamp(-1.0, 1.0))
+                    .collect();
+                let s = p.decode(&x);
+                let score = tr.observe(p, &s);
+                gen.push((x, score));
+            }
+            if gen.is_empty() {
+                break;
+            }
+            gen.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let mu = (gen.len() / 4).max(1);
+            for i in 0..d {
+                mean[i] = gen.iter().take(mu).map(|(x, _)| x[i]).sum::<f64>() / mu as f64;
+            }
+            let gen_best = gen[0].1;
+            if gen_best > last_best + 1e-12 {
+                // Progress: focus (smaller population, gentle σ decay).
+                lambda = (lambda * 3 / 4).max(self.lambda0);
+                sigma *= 0.95;
+                last_best = gen_best;
+            } else {
+                // Stall: re-test with a larger population and wider steps.
+                lambda = (lambda * 2).min(self.lambda_max);
+                sigma = (sigma * 1.3).min(0.6);
+            }
+        }
+        tr.finish(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::workload::zoo;
+
+    #[test]
+    fn runs_within_budget() {
+        let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let r = Tbpsa::default().run(&p, 500, &mut Rng::seed_from_u64(6));
+        assert!(r.evals_used <= 500);
+        assert!(r.best_eval.score.is_finite());
+    }
+
+    #[test]
+    fn population_adaptation_does_not_stall_forever() {
+        let p = FusionProblem::new(&zoo::resnet18(), 64, HwConfig::paper(), 32.0);
+        let r = Tbpsa::default().run(&p, 1000, &mut Rng::seed_from_u64(7));
+        assert_eq!(r.evals_used, 1000);
+    }
+}

@@ -1,0 +1,280 @@
+//! Replay buffer and trajectory datasets (paper §4.5.1 steps 1–2).
+//!
+//! G-Sampler demonstrations are decorated into [`Trajectory`]s by the env,
+//! stored here, padded to the AOT batch geometry ([`T_MAX`]), and sampled
+//! into [`TokenBatch`]s for the PJRT `train_step`. Datasets serialize to a
+//! compact binary file so `dnnfuser collect` and `dnnfuser train` can run
+//! as separate processes.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::env::{Trajectory, STATE_DIM, T_MAX};
+use crate::fusion::Strategy;
+use crate::util::binio::{BinReader, BinWriter};
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8; 4] = b"DNFT";
+const VERSION: u32 = 2;
+
+/// A flattened, padded batch matching the train artifact signature:
+/// rtg [B,T], states [B,T,S], actions [B,T], mask [B,T] (row-major).
+#[derive(Debug, Clone)]
+pub struct TokenBatch {
+    pub batch: usize,
+    pub rtg: Vec<f32>,
+    pub states: Vec<f32>,
+    pub actions: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+impl TokenBatch {
+    pub fn zeros(batch: usize) -> TokenBatch {
+        TokenBatch {
+            batch,
+            rtg: vec![0.0; batch * T_MAX],
+            states: vec![0.0; batch * T_MAX * STATE_DIM],
+            actions: vec![0.0; batch * T_MAX],
+            mask: vec![0.0; batch * T_MAX],
+        }
+    }
+
+    /// Copy one trajectory into row `row`, padding beyond its length.
+    pub fn fill_row(&mut self, row: usize, traj: &Trajectory) {
+        let steps = traj.steps().min(T_MAX);
+        let base = row * T_MAX;
+        for t in 0..steps {
+            self.rtg[base + t] = traj.rtg[t];
+            self.actions[base + t] = traj.actions[t];
+            self.mask[base + t] = 1.0;
+            let sbase = (base + t) * STATE_DIM;
+            self.states[sbase..sbase + STATE_DIM].copy_from_slice(&traj.states[t]);
+        }
+        for t in steps..T_MAX {
+            self.rtg[base + t] = 0.0;
+            self.actions[base + t] = 0.0;
+            self.mask[base + t] = 0.0;
+            let sbase = (base + t) * STATE_DIM;
+            self.states[sbase..sbase + STATE_DIM].fill(0.0);
+        }
+    }
+}
+
+/// In-memory replay buffer. Bounded; oldest trajectories are evicted
+/// (ring) once `capacity` is reached.
+#[derive(Debug, Clone)]
+pub struct ReplayBuffer {
+    pub capacity: usize,
+    items: Vec<Trajectory>,
+    next: usize,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> Self {
+        ReplayBuffer {
+            capacity: capacity.max(1),
+            items: Vec::new(),
+            next: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn push(&mut self, t: Trajectory) {
+        if t.steps() > T_MAX {
+            // Workloads deeper than the token budget cannot be trained on.
+            return;
+        }
+        if self.items.len() < self.capacity {
+            self.items.push(t);
+        } else {
+            self.items[self.next] = t;
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Trajectory> {
+        self.items.iter()
+    }
+
+    /// Mean speedup of stored demonstrations (data-quality metric logged
+    /// during collection).
+    pub fn mean_speedup(&self) -> f64 {
+        if self.items.is_empty() {
+            return 0.0;
+        }
+        self.items.iter().map(|t| t.speedup).sum::<f64>() / self.items.len() as f64
+    }
+
+    /// Sample a training batch (with replacement — the buffer is small
+    /// relative to the number of train steps).
+    pub fn sample(&self, batch: usize, rng: &mut Rng) -> TokenBatch {
+        assert!(!self.items.is_empty(), "sampling from empty replay buffer");
+        let mut out = TokenBatch::zeros(batch);
+        for row in 0..batch {
+            let t = &self.items[rng.index(self.items.len())];
+            out.fill_row(row, t);
+        }
+        out
+    }
+
+    /// Save to a binary dataset file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = File::create(path.as_ref())
+            .with_context(|| format!("creating {}", path.as_ref().display()))?;
+        let mut w = BinWriter::new(BufWriter::new(f), MAGIC, VERSION)?;
+        w.u64(self.items.len() as u64)?;
+        w.u64(self.capacity as u64)?;
+        for t in &self.items {
+            w.u32(t.steps() as u32)?;
+            w.f32_slice(&t.rtg)?;
+            let flat: Vec<f32> = t.states.iter().flatten().copied().collect();
+            w.f32_slice(&flat)?;
+            w.f32_slice(&t.actions)?;
+            w.i32_slice(&t.strategy.values)?;
+            w.f64(t.speedup)?;
+            w.u64(t.peak_act_bytes)?;
+            w.u32(t.valid as u32)?;
+        }
+        w.finish()
+    }
+
+    /// Load a dataset file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ReplayBuffer> {
+        let f = File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let mut r = BinReader::new(BufReader::new(f), MAGIC, VERSION)?;
+        let n = r.u64()? as usize;
+        let capacity = r.u64()? as usize;
+        let mut buf = ReplayBuffer::new(capacity);
+        for _ in 0..n {
+            let steps = r.u32()? as usize;
+            let rtg = r.f32_slice()?;
+            let states_flat = r.f32_slice()?;
+            let actions = r.f32_slice()?;
+            let values = r.i32_slice()?;
+            let speedup = r.f64()?;
+            let peak_act_bytes = r.u64()?;
+            let valid = r.u32()? != 0;
+            if rtg.len() != steps || actions.len() != steps {
+                bail!("corrupt dataset: step-count mismatch");
+            }
+            if states_flat.len() != steps * STATE_DIM {
+                bail!("corrupt dataset: state width mismatch");
+            }
+            let states = states_flat
+                .chunks_exact(STATE_DIM)
+                .map(|c| {
+                    let mut a = [0.0f32; STATE_DIM];
+                    a.copy_from_slice(c);
+                    a
+                })
+                .collect();
+            buf.push(Trajectory {
+                rtg,
+                states,
+                actions,
+                strategy: Strategy::new(values),
+                speedup,
+                peak_act_bytes,
+                valid,
+            });
+        }
+        Ok(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::env::FusionEnv;
+    use crate::workload::zoo;
+
+    fn some_trajectories(n: usize) -> Vec<Trajectory> {
+        let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let mut rng = Rng::seed_from_u64(1);
+        (0..n)
+            .map(|_| {
+                env.rollout(|_, _| rng.range_f64(-1.0, 1.0) as f32)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fill_row_pads_and_masks() {
+        let trajs = some_trajectories(1);
+        let mut b = TokenBatch::zeros(2);
+        b.fill_row(0, &trajs[0]);
+        let steps = trajs[0].steps();
+        assert_eq!(b.mask[..steps], vec![1.0; steps][..]);
+        assert_eq!(b.mask[steps..T_MAX], vec![0.0; T_MAX - steps][..]);
+        // Row 1 untouched (all zeros).
+        assert!(b.mask[T_MAX..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn ring_eviction() {
+        let mut buf = ReplayBuffer::new(4);
+        for t in some_trajectories(7) {
+            buf.push(t);
+        }
+        assert_eq!(buf.len(), 4);
+    }
+
+    #[test]
+    fn sample_has_right_geometry() {
+        let mut buf = ReplayBuffer::new(16);
+        for t in some_trajectories(5) {
+            buf.push(t);
+        }
+        let b = buf.sample(8, &mut Rng::seed_from_u64(2));
+        assert_eq!(b.rtg.len(), 8 * T_MAX);
+        assert_eq!(b.states.len(), 8 * T_MAX * STATE_DIM);
+        assert_eq!(b.actions.len(), 8 * T_MAX);
+        // Every row must contain real data (mask not all-zero).
+        for row in 0..8 {
+            let m: f32 = b.mask[row * T_MAX..(row + 1) * T_MAX].iter().sum();
+            assert!(m > 0.0, "row {row} empty");
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut buf = ReplayBuffer::new(16);
+        for t in some_trajectories(6) {
+            buf.push(t);
+        }
+        let path = std::env::temp_dir().join("dnnfuser_test_dataset.bin");
+        buf.save(&path).unwrap();
+        let loaded = ReplayBuffer::load(&path).unwrap();
+        assert_eq!(loaded.len(), buf.len());
+        for (a, b) in buf.iter().zip(loaded.iter()) {
+            assert_eq!(a.rtg, b.rtg);
+            assert_eq!(a.actions, b.actions);
+            assert_eq!(a.strategy, b.strategy);
+            assert_eq!(a.speedup, b.speedup);
+            assert_eq!(a.valid, b.valid);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn mean_speedup_sane() {
+        let mut buf = ReplayBuffer::new(16);
+        assert_eq!(buf.mean_speedup(), 0.0);
+        for t in some_trajectories(4) {
+            buf.push(t);
+        }
+        assert!(buf.mean_speedup() > 0.0);
+    }
+}

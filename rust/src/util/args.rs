@@ -1,0 +1,243 @@
+//! Declarative CLI argument parsing for the launcher (offline substitute for
+//! `clap`). Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! switches, defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// A parsed argument set for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct ParsedArgs {
+    values: BTreeMap<String, String>,
+    switches: BTreeMap<String, bool>,
+    /// Free (positional) arguments, in order.
+    pub positional: Vec<String>,
+}
+
+/// Errors carry the full usage text so the CLI can print something helpful.
+#[derive(Debug)]
+pub struct ArgError(pub String);
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+/// A command = a name, a description, and its options.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` option with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default,
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_switch: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let head = if o.is_switch {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <value>", o.name)
+            };
+            let def = match o.default {
+                Some(d) => format!(" [default: {d}]"),
+                None => String::new(),
+            };
+            s.push_str(&format!("{head:<28} {}{def}\n", o.help));
+        }
+        s
+    }
+
+    /// Parse raw args (everything after the subcommand name).
+    pub fn parse(&self, raw: &[String]) -> Result<ParsedArgs, ArgError> {
+        let mut values = BTreeMap::new();
+        let mut switches = BTreeMap::new();
+        let mut positional = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+            if o.is_switch {
+                switches.insert(o.name.to_string(), false);
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                return Err(ArgError(self.usage()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| ArgError(format!("unknown option --{name}\n\n{}", self.usage())))?;
+                if spec.is_switch {
+                    if inline_val.is_some() {
+                        return Err(ArgError(format!("--{name} is a switch, it takes no value")));
+                    }
+                    switches.insert(name.to_string(), true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| ArgError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(ParsedArgs {
+            values,
+            switches,
+            positional,
+        })
+    }
+}
+
+impl ParsedArgs {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str, ArgError> {
+        self.get(name)
+            .ok_or_else(|| ArgError(format!("missing required option --{name}")))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, ArgError> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| ArgError(format!("--{name}: not a valid integer ({e})")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, ArgError> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| ArgError(format!("--{name}: not a valid integer ({e})")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, ArgError> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| ArgError(format!("--{name}: not a valid number ({e})")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train the mapper")
+            .opt("steps", Some("2000"), "training steps")
+            .opt("workload", None, "workload name")
+            .opt("lr", Some("1e-4"), "learning rate")
+            .switch("verbose", "chatty logging")
+    }
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cmd().parse(&raw(&[])).unwrap();
+        assert_eq!(p.get_usize("steps").unwrap(), 2000);
+        assert_eq!(p.get_f64("lr").unwrap(), 1e-4);
+        assert!(!p.flag("verbose"));
+        assert!(p.get("workload").is_none());
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = cmd()
+            .parse(&raw(&["--steps", "10", "--workload=vgg16", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get_usize("steps").unwrap(), 10);
+        assert_eq!(p.get("workload"), Some("vgg16"));
+        assert!(p.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = cmd().parse(&raw(&["resnet18", "--steps", "5", "extra"])).unwrap();
+        assert_eq!(p.positional, vec!["resnet18", "extra"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cmd().parse(&raw(&["--nope"])).is_err());
+        assert!(cmd().parse(&raw(&["--steps"])).is_err());
+        assert!(cmd().parse(&raw(&["--verbose=yes"])).is_err());
+        assert!(cmd().parse(&raw(&["--help"])).is_err()); // help is surfaced as Err(usage)
+        let p = cmd().parse(&raw(&["--steps", "abc"])).unwrap();
+        assert!(p.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cmd().usage();
+        for needle in ["--steps", "--workload", "--lr", "--verbose", "default: 2000"] {
+            assert!(u.contains(needle), "usage missing {needle}: {u}");
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Measurement harness for the `cargo bench` targets (offline substitute for
+//! `criterion`): warmup, adaptive repetition count, robust statistics, and
+//! paper-style table printing shared by the Table 1–3 / Fig 4 benches.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one measured routine.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// Human-readable duration.
+    pub fn fmt_mean(&self) -> String {
+        fmt_ns(self.mean_ns)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner. Targets a fixed measurement budget per routine; the
+/// iteration count adapts to the routine's speed.
+pub struct Bencher {
+    /// Total measurement budget per routine.
+    pub budget: Duration,
+    /// Warmup budget per routine.
+    pub warmup: Duration,
+    /// Hard cap on iterations (slow end-to-end benches run a handful).
+    pub max_iters: usize,
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_secs(2),
+            warmup: Duration::from_millis(300),
+            max_iters: 10_000_000,
+            min_iters: 3,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick-mode bencher for expensive end-to-end routines.
+    pub fn quick() -> Self {
+        Bencher {
+            budget: Duration::from_millis(500),
+            warmup: Duration::from_millis(50),
+            max_iters: 1000,
+            min_iters: 1,
+        }
+    }
+
+    /// Measure `f`, which performs one logical iteration per call. The
+    /// closure's return value is black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup until budget or a few iterations, whichever is later.
+        let wstart = Instant::now();
+        let mut warm_iters = 0usize;
+        while wstart.elapsed() < self.warmup || warm_iters < self.min_iters {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = (wstart.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64).max(1.0);
+        let target_iters = ((self.budget.as_nanos() as f64 / per_iter) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target_iters.min(10_000));
+        // Batch very fast routines so timer overhead doesn't dominate.
+        let batch = (100.0 / per_iter).ceil().max(1.0) as usize;
+        let mut done = 0;
+        while done < target_iters {
+            let n = batch.min(target_iters - done);
+            let t0 = Instant::now();
+            for _ in 0..n {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / n as f64;
+            samples.push(dt);
+            done += n;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        Stats {
+            name: name.to_string(),
+            iters: done,
+            mean_ns: mean,
+            median_ns: pct(0.5),
+            p95_ns: pct(0.95),
+            min_ns: samples[0],
+        }
+    }
+
+    /// Measure and print a one-line summary (criterion-style).
+    pub fn report<T>(&self, name: &str, f: impl FnMut() -> T) -> Stats {
+        let s = self.run(name, f);
+        println!(
+            "{:<44} mean {:>12}   median {:>12}   p95 {:>12}   ({} iters)",
+            s.name,
+            fmt_ns(s.mean_ns),
+            fmt_ns(s.median_ns),
+            fmt_ns(s.p95_ns),
+            s.iters
+        );
+        s
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Markdown-ish table printer used by the paper-reproduction benches so their
+/// output lines up with the paper's tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleepless_routine() {
+        let b = Bencher {
+            budget: Duration::from_millis(50),
+            warmup: Duration::from_millis(5),
+            max_iters: 100_000,
+            min_iters: 3,
+        };
+        let s = b.run("noop-ish", || 1 + 1);
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns >= 0.0);
+        assert!(s.min_ns <= s.median_ns && s.median_ns <= s.p95_ns);
+    }
+
+    #[test]
+    fn respects_iteration_floor_for_slow_fn() {
+        let b = Bencher {
+            budget: Duration::from_millis(1),
+            warmup: Duration::from_millis(1),
+            max_iters: 10,
+            min_iters: 2,
+        };
+        let s = b.run("slow", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(s.iters >= 2);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12e3).contains("µs"));
+        assert!(fmt_ns(12e6).contains("ms"));
+        assert!(fmt_ns(12e9).contains("s"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".to_string()]);
+    }
+}

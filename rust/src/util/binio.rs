@@ -1,0 +1,194 @@
+//! Tiny length-prefixed binary IO for datasets and checkpoints.
+//!
+//! Format: little-endian, `magic: [u8;4]`, `version: u32`, then whatever
+//! the caller writes through the typed helpers. No compression — replay
+//! datasets are a few MB.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+pub struct BinWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> BinWriter<W> {
+    pub fn new(mut w: W, magic: &[u8; 4], version: u32) -> Result<Self> {
+        w.write_all(magic)?;
+        w.write_all(&version.to_le_bytes())?;
+        Ok(BinWriter { w })
+    }
+
+    pub fn u32(&mut self, v: u32) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn u64(&mut self, v: u64) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn f64(&mut self, v: f64) -> Result<()> {
+        self.w.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn i32_slice(&mut self, v: &[i32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for x in v {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn f32_slice(&mut self, v: &[f32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        // Bulk copy; f32::to_le_bytes per element is fine at our sizes but
+        // this is also the checkpoint hot path, so do one allocation.
+        let mut buf = Vec::with_capacity(v.len() * 4);
+        for x in v {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        self.w.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn str(&mut self, s: &str) -> Result<()> {
+        self.u64(s.len() as u64)?;
+        self.w.write_all(s.as_bytes())?;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+pub struct BinReader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> BinReader<R> {
+    pub fn new(mut r: R, magic: &[u8; 4], version: u32) -> Result<Self> {
+        let mut m = [0u8; 4];
+        r.read_exact(&mut m).context("reading magic")?;
+        if &m != magic {
+            bail!(
+                "bad magic {:?}, expected {:?} — wrong file type?",
+                m,
+                magic
+            );
+        }
+        let mut vb = [0u8; 4];
+        r.read_exact(&mut vb)?;
+        let v = u32::from_le_bytes(vb);
+        if v != version {
+            bail!("file version {v}, this build reads {version}");
+        }
+        Ok(BinReader { r })
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.r.read_exact(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+
+    pub fn i32_slice(&mut self) -> Result<Vec<i32>> {
+        let n = self.u64()? as usize;
+        let mut out = Vec::with_capacity(n);
+        let mut b = [0u8; 4];
+        for _ in 0..n {
+            self.r.read_exact(&mut b)?;
+            out.push(i32::from_le_bytes(b));
+        }
+        Ok(out)
+    }
+
+    pub fn f32_slice(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let mut buf = vec![0u8; n * 4];
+        self.r.read_exact(&mut buf)?;
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        let mut buf = vec![0u8; n];
+        self.r.read_exact(&mut buf)?;
+        String::from_utf8(buf).context("utf-8 string")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut bytes = Vec::new();
+        let mut w = BinWriter::new(&mut bytes, b"TEST", 1).unwrap();
+        w.u32(7).unwrap();
+        w.u64(1 << 40).unwrap();
+        w.f64(3.25).unwrap();
+        w.f32_slice(&[1.0, -2.5, 3.5]).unwrap();
+        w.i32_slice(&[-1, 64]).unwrap();
+        w.str("hello").unwrap();
+        w.finish().unwrap();
+
+        let mut r = BinReader::new(Cursor::new(&bytes), b"TEST", 1).unwrap();
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f64().unwrap(), 3.25);
+        assert_eq!(r.f32_slice().unwrap(), vec![1.0, -2.5, 3.5]);
+        assert_eq!(r.i32_slice().unwrap(), vec![-1, 64]);
+        assert_eq!(r.str().unwrap(), "hello");
+    }
+
+    #[test]
+    fn wrong_magic_rejected() {
+        let mut bytes = Vec::new();
+        BinWriter::new(&mut bytes, b"AAAA", 1).unwrap().finish().unwrap();
+        assert!(BinReader::new(Cursor::new(&bytes), b"BBBB", 1).is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let mut bytes = Vec::new();
+        BinWriter::new(&mut bytes, b"AAAA", 2).unwrap().finish().unwrap();
+        let e = BinReader::new(Cursor::new(&bytes), b"AAAA", 1)
+            .err()
+            .unwrap()
+            .to_string();
+        assert!(e.contains("version"), "{e}");
+    }
+
+    #[test]
+    fn truncated_file_is_error() {
+        let mut bytes = Vec::new();
+        let mut w = BinWriter::new(&mut bytes, b"TEST", 1).unwrap();
+        w.f32_slice(&[1.0; 10]).unwrap();
+        w.finish().unwrap();
+        bytes.truncate(bytes.len() - 3);
+        let mut r = BinReader::new(Cursor::new(&bytes), b"TEST", 1).unwrap();
+        assert!(r.f32_slice().is_err());
+    }
+}

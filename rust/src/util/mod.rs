@@ -1,0 +1,24 @@
+//! In-tree substrates for crates unavailable in the offline environment.
+//!
+//! The baked crate cache lacks `rand`, `serde`, `serde_json`, `clap`,
+//! `tokio`, `criterion` and `proptest` (see DESIGN.md §Substitutions), so
+//! this module provides the minimal, well-tested equivalents the rest of the
+//! system is built on:
+//!
+//! - [`rng`] — xoshiro256++ PRNG with the distributions we need,
+//! - [`json`] — a small JSON value model, parser and writer (manifest,
+//!   configs, experiment logs),
+//! - [`args`] — declarative CLI argument parsing for the launcher,
+//! - [`ptest`] — a property-testing harness (randomized cases with
+//!   seed-reporting and iteration shrinking),
+//! - [`bench`] — a measurement harness used by `cargo bench` targets
+//!   (warmup, repetitions, robust statistics),
+//! - [`pool`] — a fixed thread pool for the coordinator and searches.
+
+pub mod args;
+pub mod binio;
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod ptest;
+pub mod rng;

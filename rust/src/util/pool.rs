@@ -1,0 +1,143 @@
+//! Fixed thread pool (offline substitute for a tokio runtime / rayon).
+//!
+//! The coordinator and the population-based searches use this for fan-out
+//! work. Plain std threads + channels: jobs are `FnOnce` closures, `scope`
+//! style joins are provided by [`ThreadPool::run_batch`].
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed-size pool. Dropping the pool joins all workers.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (n ≥ 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("dnnfuser-pool-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx, workers }
+    }
+
+    /// Fire-and-forget job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool closed");
+    }
+
+    /// Run a batch of jobs and collect their results in input order,
+    /// blocking until all complete.
+    pub fn run_batch<T: Send + 'static>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() -> T + Send + 'static>>,
+    ) -> Vec<T> {
+        let n = jobs.len();
+        let (rtx, rrx): (Sender<(usize, T)>, Receiver<(usize, T)>) = channel();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let out = job();
+                // Receiver may be gone if caller panicked; ignore.
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v) = rrx.recv().expect("pool worker dropped result");
+            slots[i] = Some(v);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().expect("pool rx poisoned");
+            guard.recv()
+        };
+        match msg {
+            Ok(Msg::Run(job)) => job(),
+            Ok(Msg::Shutdown) | Err(_) => return,
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn batch_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..32usize)
+            .map(|i| Box::new(move || i * i) as Box<dyn FnOnce() -> usize + Send>)
+            .collect();
+        let out = pool.run_batch(jobs);
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn executes_fire_and_forget() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // joins workers
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() -> i32 + Send>> =
+            vec![Box::new(|| 1), Box::new(|| 2), Box::new(|| 3)];
+        assert_eq!(pool.run_batch(jobs), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_requested_becomes_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+    }
+}

@@ -1,0 +1,157 @@
+//! Property-testing harness (offline substitute for `proptest`).
+//!
+//! A property is a closure over a [`Rng`]-driven random case. The harness
+//! runs many cases from a deterministic base seed; on failure it reports the
+//! exact case seed so the failure replays with `PTEST_SEED=<seed>`. A crude
+//! "shrink" is provided by re-running the failing case with progressively
+//! smaller `size` hints when the generator honours [`Gen::size`].
+
+use super::rng::Rng;
+
+/// Generation context: RNG plus a size hint generators may use to scale
+/// structures (smaller size ⇒ smaller workloads ⇒ easier debugging).
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen {
+            rng: Rng::seed_from_u64(seed),
+            size,
+        }
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub base_seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 128,
+            base_seed: 0xD1CE_F00D,
+            max_size: 64,
+        }
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases. Panics (test failure) with the
+/// replay seed and the property's message on the first failing case, after
+/// attempting size-shrinking to present the smallest failing size.
+pub fn check_with(cfg: &Config, name: &str, mut prop: impl FnMut(&mut Gen) -> CaseResult) {
+    // Replay mode: PTEST_SEED pins the exact failing case.
+    if let Ok(seed_s) = std::env::var("PTEST_SEED") {
+        let seed: u64 = seed_s.parse().expect("PTEST_SEED must be a u64");
+        let size: usize = std::env::var("PTEST_SIZE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(cfg.max_size);
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            panic!("[{name}] replay seed={seed} size={size} failed: {msg}");
+        }
+        return;
+    }
+
+    let mut meta = Rng::seed_from_u64(cfg.base_seed ^ hash_name(name));
+    for case in 0..cfg.cases {
+        // Ramp size up over the run: early cases are small.
+        let size = 1 + (cfg.max_size - 1) * case / cfg.cases.max(1);
+        let seed = meta.next_u64();
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink pass: try the same seed at smaller sizes.
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g2 = Gen::new(seed, s);
+                if let Err(m2) = prop(&mut g2) {
+                    smallest = (s, m2);
+                    if s == 1 {
+                        break;
+                    }
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "[{name}] case {case} failed (replay: PTEST_SEED={seed} PTEST_SIZE={}):\n  {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Run with default configuration.
+pub fn check(name: &str, prop: impl FnMut(&mut Gen) -> CaseResult) {
+    check_with(&Config::default(), name, prop);
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, enough to decorrelate property streams.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Assertion helper for properties: `ensure!(cond, "msg {x}")`.
+#[macro_export]
+macro_rules! ensure_prop {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivially true", |g| {
+            n += 1;
+            let x = g.rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("x out of range: {x}"))
+            }
+        });
+        assert_eq!(n, Config::default().cases);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay: PTEST_SEED=")]
+    fn failing_property_reports_seed() {
+        check("always fails", |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0;
+        let mut min_seen = usize::MAX;
+        check("size ramp", |g| {
+            max_seen = max_seen.max(g.size);
+            min_seen = min_seen.min(g.size);
+            Ok(())
+        });
+        assert_eq!(min_seen, 1);
+        assert!(max_seen > 32, "max size {max_seen}");
+    }
+}

@@ -1,0 +1,176 @@
+//! Custom workloads from JSON — map YOUR network, not just the zoo.
+//!
+//! Format (list of layers in 6-loop notation, `y`/`x` are OUTPUT dims):
+//!
+//! ```json
+//! {
+//!   "name": "my_net",
+//!   "layers": [
+//!     {"name": "conv1", "k": 64, "c": 3, "y": 112, "x": 112,
+//!      "r": 7, "s": 7, "stride": 2},
+//!     {"name": "dw2", "k": 64, "c": 64, "y": 112, "x": 112,
+//!      "r": 3, "s": 3, "stride": 1, "depthwise": true}
+//!   ]
+//! }
+//! ```
+//!
+//! Used by the CLI's `--workload-file` and validated with the same chain
+//! checks as the zoo. Workloads deeper than `env::T_MAX − 1` layers are
+//! rejected up front (the AOT models cannot represent them).
+
+use anyhow::{bail, Context, Result};
+
+use crate::env::T_MAX;
+use crate::util::json::Json;
+
+use super::{Layer, Workload};
+
+/// Parse a workload from JSON text.
+pub fn from_json(text: &str) -> Result<Workload> {
+    let j = Json::parse(text).context("workload file is not valid JSON")?;
+    let name = j
+        .req("name")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .as_str()
+        .context("`name` must be a string")?
+        .to_string();
+    let layers_json = j
+        .req("layers")
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .as_arr()
+        .context("`layers` must be an array")?;
+    if layers_json.is_empty() {
+        bail!("workload `{name}` has no layers");
+    }
+    if layers_json.len() > T_MAX - 1 {
+        bail!(
+            "workload `{name}` has {} layers; the AOT models support at most {}",
+            layers_json.len(),
+            T_MAX - 1
+        );
+    }
+    let mut layers = Vec::with_capacity(layers_json.len());
+    for (i, lj) in layers_json.iter().enumerate() {
+        let field = |key: &str| -> Result<usize> {
+            lj.req(key)
+                .map_err(|e| anyhow::anyhow!("layer {i}: {e}"))?
+                .as_usize()
+                .with_context(|| format!("layer {i}: `{key}` must be a non-negative integer"))
+        };
+        let lname = lj
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("layer{i}"));
+        let layer = Layer {
+            name: lname,
+            k: field("k")?,
+            c: field("c")?,
+            y: field("y")?,
+            x: field("x")?,
+            r: field("r")?,
+            s: field("s")?,
+            stride: lj.get("stride").and_then(|v| v.as_usize()).unwrap_or(1),
+            depthwise: lj
+                .get("depthwise")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+        };
+        for (what, v) in [
+            ("k", layer.k),
+            ("c", layer.c),
+            ("y", layer.y),
+            ("x", layer.x),
+            ("r", layer.r),
+            ("s", layer.s),
+            ("stride", layer.stride),
+        ] {
+            if v == 0 {
+                bail!("layer {i}: `{what}` must be ≥ 1");
+            }
+        }
+        layers.push(layer);
+    }
+    let w = Workload { name, layers };
+    w.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    Ok(w)
+}
+
+/// Load a workload from a file path.
+pub fn from_file(path: &str) -> Result<Workload> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading workload file {path}"))?;
+    from_json(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"{
+        "name": "toy",
+        "layers": [
+            {"name": "a", "k": 16, "c": 3, "y": 32, "x": 32, "r": 3, "s": 3},
+            {"k": 32, "c": 16, "y": 16, "x": 16, "r": 3, "s": 3, "stride": 2},
+            {"k": 32, "c": 32, "y": 16, "x": 16, "r": 3, "s": 3, "depthwise": true}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_valid_workload() {
+        let w = from_json(GOOD).unwrap();
+        assert_eq!(w.name, "toy");
+        assert_eq!(w.n_layers(), 3);
+        assert_eq!(w.layers[0].name, "a");
+        assert_eq!(w.layers[1].name, "layer1"); // default name
+        assert_eq!(w.layers[1].stride, 2);
+        assert!(w.layers[2].depthwise);
+        // Depthwise MACs use one input channel.
+        assert_eq!(w.layers[2].macs(), 32 * 16 * 16 * 9);
+    }
+
+    #[test]
+    fn rejects_chain_violations() {
+        let bad = GOOD.replace("\"c\": 16", "\"c\": 99");
+        let err = from_json(&bad).unwrap_err().to_string();
+        assert!(err.contains("channel mismatch"), "{err}");
+    }
+
+    #[test]
+    fn rejects_missing_fields_and_zeroes() {
+        assert!(from_json(r#"{"name": "x", "layers": [{"k": 1}]}"#).is_err());
+        let zero = GOOD.replace("\"k\": 16", "\"k\": 0");
+        assert!(from_json(&zero).unwrap_err().to_string().contains("≥ 1"));
+    }
+
+    #[test]
+    fn rejects_empty_and_too_deep() {
+        assert!(from_json(r#"{"name": "x", "layers": []}"#).is_err());
+        let mut layers = String::new();
+        for i in 0..70 {
+            if i > 0 {
+                layers.push(',');
+            }
+            layers.push_str(r#"{"k": 8, "c": 8, "y": 8, "x": 8, "r": 1, "s": 1}"#);
+        }
+        let deep = format!(r#"{{"name": "deep", "layers": [{layers}]}}"#);
+        let err = from_json(&deep).unwrap_err().to_string();
+        assert!(err.contains("at most"), "{err}");
+    }
+
+    #[test]
+    fn file_not_found_is_clear() {
+        let err = from_file("/nope/net.json").unwrap_err();
+        assert!(format!("{err:#}").contains("/nope/net.json"));
+    }
+
+    #[test]
+    fn custom_workload_runs_through_the_stack() {
+        use crate::cost::{CostModel, HwConfig};
+        use crate::fusion::Strategy;
+        let w = from_json(GOOD).unwrap();
+        let m = CostModel::new(&w, 8, HwConfig::paper());
+        let s = Strategy::no_fusion(w.n_layers());
+        assert!((m.speedup_of(&s) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,212 @@
+//! DNN workload definitions in the 6-loop CONV notation the paper uses
+//! (`K, C, Y, X, R, S` — output channels, input channels, output height and
+//! width, kernel height and width), plus stride and a depthwise marker.
+//!
+//! The zoo ([`zoo`]) provides the paper's five evaluation workloads: VGG16,
+//! ResNet18, ResNet50, MobileNet-V2 and MnasNet-A1 (§5.1). Layer sequences
+//! follow the standard "weighted layers" convention these mapper papers use:
+//! convolutions in topological order plus the final FC expressed as a 1×1
+//! conv over a 1×1 activation; elementwise/pooling ops are folded into the
+//! activation geometry (they are not fusion decision points).
+
+pub mod custom;
+pub mod zoo;
+
+/// One weighted layer in 6-loop notation. `y`/`x` are OUTPUT activation
+/// dimensions; the input activation is `c × (y·stride) × (x·stride)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    /// Output channels.
+    pub k: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Output activation height.
+    pub y: usize,
+    /// Output activation width.
+    pub x: usize,
+    /// Kernel height.
+    pub r: usize,
+    /// Kernel width.
+    pub s: usize,
+    /// Stride (isotropic).
+    pub stride: usize,
+    /// Depthwise convolution: each output channel reads one input channel.
+    pub depthwise: bool,
+}
+
+impl Layer {
+    /// Multiply-accumulates per input sample.
+    pub fn macs(&self) -> u64 {
+        let ch = if self.depthwise {
+            self.k as u64 // one input channel per output channel
+        } else {
+            self.k as u64 * self.c as u64
+        };
+        ch * self.y as u64 * self.x as u64 * self.r as u64 * self.s as u64
+    }
+
+    /// Output activation bytes per sample (bf16 = 2 bytes/element).
+    pub fn out_bytes(&self) -> u64 {
+        2 * self.k as u64 * self.y as u64 * self.x as u64
+    }
+
+    /// Input activation bytes per sample.
+    pub fn in_bytes(&self) -> u64 {
+        2 * self.c as u64 * (self.y * self.stride) as u64 * (self.x * self.stride) as u64
+    }
+
+    /// Weight bytes.
+    pub fn w_bytes(&self) -> u64 {
+        let ch = if self.depthwise {
+            self.k as u64
+        } else {
+            self.k as u64 * self.c as u64
+        };
+        2 * ch * self.r as u64 * self.s as u64
+    }
+}
+
+/// A workload: an ordered chain of weighted layers.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Workload {
+    /// Number of weighted layers (the paper's N; a fusion strategy has N+1
+    /// entries).
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total MACs per sample.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total weight bytes.
+    pub fn total_w_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.w_bytes()).sum()
+    }
+
+    /// Validate the chain: consecutive layers must agree on channel counts
+    /// and activation geometry (within the pooling-fold convention: the next
+    /// layer's input area may be smaller than this layer's output area when
+    /// a pooling stage was folded in, never larger).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err(format!("workload {} has no layers", self.name));
+        }
+        for w in self.layers.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if b.c != a.k {
+                return Err(format!(
+                    "{}: channel mismatch {} (k={}) -> {} (c={})",
+                    self.name, a.name, a.k, b.name, b.c
+                ));
+            }
+            let b_in_y = b.y * b.stride;
+            if b_in_y > a.y {
+                return Err(format!(
+                    "{}: activation grows {} (y={}) -> {} (in_y={})",
+                    self.name, a.name, a.y, b.name, b_in_y
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Largest per-sample intermediate activation in bytes — a lower bound on
+    /// what any single-sample fused group must stage.
+    pub fn max_out_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.out_bytes()).max().unwrap_or(0)
+    }
+}
+
+/// Convenience constructor used by the zoo and by tests.
+pub fn conv(name: &str, k: usize, c: usize, y: usize, x: usize, r: usize, s: usize, stride: usize) -> Layer {
+    Layer {
+        name: name.to_string(),
+        k,
+        c,
+        y,
+        x,
+        r,
+        s,
+        stride,
+        depthwise: false,
+    }
+}
+
+/// Depthwise conv constructor (`c` recorded for chain validation; MACs and
+/// weights use one input channel per output channel).
+pub fn dwconv(name: &str, ch: usize, y: usize, x: usize, r: usize, s: usize, stride: usize) -> Layer {
+    Layer {
+        name: name.to_string(),
+        k: ch,
+        c: ch,
+        y,
+        x,
+        r,
+        s,
+        stride,
+        depthwise: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_arithmetic() {
+        let l = conv("c", 64, 3, 224, 224, 3, 3, 1);
+        assert_eq!(l.macs(), 64 * 3 * 224 * 224 * 9);
+        assert_eq!(l.out_bytes(), 2 * 64 * 224 * 224);
+        assert_eq!(l.in_bytes(), 2 * 3 * 224 * 224);
+        assert_eq!(l.w_bytes(), 2 * 64 * 3 * 9);
+    }
+
+    #[test]
+    fn strided_layer_input_geometry() {
+        let l = conv("c", 64, 3, 112, 112, 7, 7, 2);
+        assert_eq!(l.in_bytes(), 2 * 3 * 224 * 224);
+    }
+
+    #[test]
+    fn depthwise_macs_and_weights() {
+        let l = dwconv("dw", 32, 112, 112, 3, 3, 1);
+        assert_eq!(l.macs(), 32 * 112 * 112 * 9);
+        assert_eq!(l.w_bytes(), 2 * 32 * 9);
+    }
+
+    #[test]
+    fn validate_catches_channel_mismatch() {
+        let w = Workload {
+            name: "bad".into(),
+            layers: vec![conv("a", 64, 3, 8, 8, 3, 3, 1), conv("b", 32, 128, 8, 8, 3, 3, 1)],
+        };
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_growth() {
+        let w = Workload {
+            name: "bad".into(),
+            layers: vec![conv("a", 64, 3, 8, 8, 3, 3, 1), conv("b", 64, 64, 16, 16, 3, 3, 1)],
+        };
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn validate_allows_pooling_fold() {
+        // 8x8 output followed by a layer reading 4x4 (pool folded in).
+        let w = Workload {
+            name: "ok".into(),
+            layers: vec![conv("a", 64, 3, 8, 8, 3, 3, 1), conv("b", 64, 64, 4, 4, 3, 3, 1)],
+        };
+        assert!(w.validate().is_ok());
+    }
+}

@@ -1,0 +1,285 @@
+//! The paper's five evaluation workloads (§5.1), built layer-by-layer.
+//!
+//! All networks take 3×224×224 input. Pooling / strided downsampling is
+//! folded into activation geometry; the final classifier FC is a 1×1 conv
+//! over a 1×1 activation (global-average-pool folded in). Residual-block
+//! downsample 1×1 convs are not separate fusion decision points (they run
+//! in parallel with the main path), matching the paper's layer counts —
+//! e.g. ResNet18 has 18 weighted layers and its Fig. 4 strategy has 19
+//! entries (`mB_0` plus one per layer).
+
+use super::{conv, dwconv, Layer, Workload};
+
+/// Look a workload up by its CLI name.
+pub fn by_name(name: &str) -> Option<Workload> {
+    match name.to_ascii_lowercase().as_str() {
+        "vgg16" => Some(vgg16()),
+        "resnet18" => Some(resnet18()),
+        "resnet50" => Some(resnet50()),
+        "mobilenet_v2" | "mobilenetv2" => Some(mobilenet_v2()),
+        "mnasnet" => Some(mnasnet()),
+        _ => None,
+    }
+}
+
+/// All zoo workloads (stable order).
+pub fn all() -> Vec<Workload> {
+    vec![vgg16(), resnet18(), resnet50(), mobilenet_v2(), mnasnet()]
+}
+
+/// VGG16: 13 convs + classifier = 14 weighted decision points.
+/// (The three FC layers are folded into one classifier step: for fusion
+/// purposes consecutive 1×1/4096-wide FCs have identical staging behaviour,
+/// and the paper's VGG16 runs use a single tail step.)
+pub fn vgg16() -> Workload {
+    let mut layers = Vec::new();
+    let mut id = 0;
+    let mut push = |l: Layer| {
+        layers.push(l);
+        id += 1;
+        let _ = id;
+    };
+    // block1: 224x224
+    push(conv("conv1_1", 64, 3, 224, 224, 3, 3, 1));
+    push(conv("conv1_2", 64, 64, 224, 224, 3, 3, 1));
+    // block2: 112x112 (pool folded)
+    push(conv("conv2_1", 128, 64, 112, 112, 3, 3, 1));
+    push(conv("conv2_2", 128, 128, 112, 112, 3, 3, 1));
+    // block3: 56x56
+    push(conv("conv3_1", 256, 128, 56, 56, 3, 3, 1));
+    push(conv("conv3_2", 256, 256, 56, 56, 3, 3, 1));
+    push(conv("conv3_3", 256, 256, 56, 56, 3, 3, 1));
+    // block4: 28x28
+    push(conv("conv4_1", 512, 256, 28, 28, 3, 3, 1));
+    push(conv("conv4_2", 512, 512, 28, 28, 3, 3, 1));
+    push(conv("conv4_3", 512, 512, 28, 28, 3, 3, 1));
+    // block5: 14x14
+    push(conv("conv5_1", 512, 512, 14, 14, 3, 3, 1));
+    push(conv("conv5_2", 512, 512, 14, 14, 3, 3, 1));
+    push(conv("conv5_3", 512, 512, 14, 14, 3, 3, 1));
+    // classifier (GAP + FC folded): 1000 x 512 x 1 x 1
+    push(conv("fc", 1000, 512, 1, 1, 1, 1, 1));
+    Workload {
+        name: "vgg16".into(),
+        layers,
+    }
+}
+
+/// ResNet18: conv1 + 8 basic blocks × 2 convs + fc = 18 weighted layers.
+pub fn resnet18() -> Workload {
+    let mut layers = Vec::new();
+    layers.push(conv("conv1", 64, 3, 112, 112, 7, 7, 2));
+    // stage: (channels, spatial, first-block stride)
+    let stages = [(64usize, 56usize), (128, 28), (256, 14), (512, 7)];
+    let mut in_ch = 64;
+    for (si, &(ch, sp)) in stages.iter().enumerate() {
+        for b in 0..2 {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            layers.push(conv(
+                &format!("s{}b{}c1", si + 1, b),
+                ch,
+                in_ch,
+                sp,
+                sp,
+                3,
+                3,
+                stride,
+            ));
+            layers.push(conv(&format!("s{}b{}c2", si + 1, b), ch, ch, sp, sp, 3, 3, 1));
+            in_ch = ch;
+        }
+    }
+    layers.push(conv("fc", 1000, 512, 1, 1, 1, 1, 1));
+    Workload {
+        name: "resnet18".into(),
+        layers,
+    }
+}
+
+/// ResNet50: conv1 + 16 bottlenecks × 3 convs + fc = 50 weighted layers.
+pub fn resnet50() -> Workload {
+    let mut layers = Vec::new();
+    layers.push(conv("conv1", 64, 3, 112, 112, 7, 7, 2));
+    // (mid channels, out channels, spatial, blocks)
+    let stages = [
+        (64usize, 256usize, 56usize, 3usize),
+        (128, 512, 28, 4),
+        (256, 1024, 14, 6),
+        (512, 2048, 7, 3),
+    ];
+    let mut in_ch = 64;
+    for (si, &(mid, out, sp, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let stride = if si > 0 && b == 0 { 2 } else { 1 };
+            layers.push(conv(
+                &format!("s{}b{}c1", si + 1, b),
+                mid,
+                in_ch,
+                sp,
+                sp,
+                1,
+                1,
+                stride,
+            ));
+            layers.push(conv(&format!("s{}b{}c2", si + 1, b), mid, mid, sp, sp, 3, 3, 1));
+            layers.push(conv(&format!("s{}b{}c3", si + 1, b), out, mid, sp, sp, 1, 1, 1));
+            in_ch = out;
+        }
+    }
+    layers.push(conv("fc", 1000, 2048, 1, 1, 1, 1, 1));
+    Workload {
+        name: "resnet50".into(),
+        layers,
+    }
+}
+
+/// MobileNet-V2: first conv + 17 inverted residuals (expand/dw/project) +
+/// final 1×1 conv + fc. Expansion factor table per the paper's reference
+/// [Sandler et al. 2018].
+pub fn mobilenet_v2() -> Workload {
+    let mut layers = Vec::new();
+    layers.push(conv("conv1", 32, 3, 112, 112, 3, 3, 2));
+    // (t expansion, c out, n repeats, s first stride), spatial input 112.
+    let cfg: [(usize, usize, usize, usize); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut in_ch = 32;
+    let mut sp = 112; // current spatial size
+    for (bi, &(t, c_out, n, s_first)) in cfg.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s_first } else { 1 };
+            let out_sp = sp / stride;
+            let hidden = in_ch * t;
+            let tag = format!("ir{}_{}", bi + 1, r);
+            if t != 1 {
+                layers.push(conv(&format!("{tag}_exp"), hidden, in_ch, sp, sp, 1, 1, 1));
+            }
+            layers.push(dwconv(&format!("{tag}_dw"), hidden, out_sp, out_sp, 3, 3, stride));
+            layers.push(conv(&format!("{tag}_proj"), c_out, hidden, out_sp, out_sp, 1, 1, 1));
+            in_ch = c_out;
+            sp = out_sp;
+        }
+    }
+    layers.push(conv("conv_last", 1280, 320, 7, 7, 1, 1, 1));
+    layers.push(conv("fc", 1000, 1280, 1, 1, 1, 1, 1));
+    Workload {
+        name: "mobilenet_v2".into(),
+        layers,
+    }
+}
+
+/// MnasNet-A1 (Tan et al. 2019): first conv + SepConv + MBConv stack +
+/// final 1×1 conv + fc. Squeeze-excite is an elementwise rescale (folded).
+pub fn mnasnet() -> Workload {
+    let mut layers = Vec::new();
+    layers.push(conv("conv1", 32, 3, 112, 112, 3, 3, 2));
+    // SepConv 3x3, 16 out
+    layers.push(dwconv("sep_dw", 32, 112, 112, 3, 3, 1));
+    layers.push(conv("sep_proj", 16, 32, 112, 112, 1, 1, 1));
+    // (expansion t, out c, repeats n, first stride s, kernel k)
+    let cfg: [(usize, usize, usize, usize, usize); 6] = [
+        (6, 24, 2, 2, 3),
+        (3, 40, 3, 2, 5),
+        (6, 80, 4, 2, 3),
+        (6, 112, 2, 1, 3),
+        (6, 160, 3, 2, 5),
+        (6, 320, 1, 1, 3),
+    ];
+    let mut in_ch = 16;
+    let mut sp = 112;
+    for (bi, &(t, c_out, n, s_first, k)) in cfg.iter().enumerate() {
+        for r in 0..n {
+            let stride = if r == 0 { s_first } else { 1 };
+            let out_sp = sp / stride;
+            let hidden = in_ch * t;
+            let tag = format!("mb{}_{}", bi + 1, r);
+            layers.push(conv(&format!("{tag}_exp"), hidden, in_ch, sp, sp, 1, 1, 1));
+            layers.push(dwconv(&format!("{tag}_dw"), hidden, out_sp, out_sp, k, k, stride));
+            layers.push(conv(&format!("{tag}_proj"), c_out, hidden, out_sp, out_sp, 1, 1, 1));
+            in_ch = c_out;
+            sp = out_sp;
+        }
+    }
+    layers.push(conv("conv_last", 1280, 320, 7, 7, 1, 1, 1));
+    layers.push(conv("fc", 1000, 1280, 1, 1, 1, 1, 1));
+    Workload {
+        name: "mnasnet".into(),
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_workloads_validate() {
+        for w in all() {
+            w.validate().unwrap_or_else(|e| panic!("{e}"));
+        }
+    }
+
+    #[test]
+    fn layer_counts_match_paper_convention() {
+        assert_eq!(vgg16().n_layers(), 14); // 13 convs + classifier
+        assert_eq!(resnet18().n_layers(), 18); // the paper's "18 layers"
+        assert_eq!(resnet50().n_layers(), 50);
+        // deeper nets: ~50 steps, within the T_max=65 token budget
+        assert!(mobilenet_v2().n_layers() <= 64, "{}", mobilenet_v2().n_layers());
+        assert!(mnasnet().n_layers() <= 64, "{}", mnasnet().n_layers());
+        assert!(mobilenet_v2().n_layers() >= 45);
+        assert!(mnasnet().n_layers() >= 45);
+    }
+
+    #[test]
+    fn vgg16_macs_ballpark() {
+        // VGG16 conv MACs ≈ 15.3 G/sample (published figure ~15.5 G incl. FCs).
+        let g = vgg16().total_macs() as f64 / 1e9;
+        assert!((14.0..17.0).contains(&g), "vgg16 GMACs = {g}");
+    }
+
+    #[test]
+    fn resnet50_macs_ballpark() {
+        // ResNet50 ≈ 3.8–4.1 GMACs/sample.
+        let g = resnet50().total_macs() as f64 / 1e9;
+        assert!((3.2..4.6).contains(&g), "resnet50 GMACs = {g}");
+    }
+
+    #[test]
+    fn mobilenet_v2_macs_ballpark() {
+        // MobileNetV2 ≈ 0.3 GMACs/sample.
+        let g = mobilenet_v2().total_macs() as f64 / 1e9;
+        assert!((0.2..0.45).contains(&g), "mobilenet_v2 GMACs = {g}");
+    }
+
+    #[test]
+    fn mnasnet_macs_ballpark() {
+        // MnasNet-A1 ≈ 0.3–0.4 GMACs/sample (ours is slightly larger: no SE
+        // folding of channel reductions).
+        let g = mnasnet().total_macs() as f64 / 1e9;
+        assert!((0.2..0.6).contains(&g), "mnasnet GMACs = {g}");
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        for n in ["vgg16", "resnet18", "resnet50", "mobilenet_v2", "mnasnet"] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("MobileNetV2").is_some());
+        assert!(by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn vgg_first_layer_activation_dominates() {
+        // The motivation for fusion: early VGG activations are huge.
+        let w = vgg16();
+        let first_out_mb = w.layers[0].out_bytes() as f64 / 1e6;
+        assert!(first_out_mb > 6.0, "{first_out_mb} MB");
+    }
+}

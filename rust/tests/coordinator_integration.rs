@@ -1,0 +1,116 @@
+//! Coordinator integration: service lifecycle, dynamic batching, caching,
+//! error paths. Requires built artifacts (skips loudly otherwise).
+
+use std::time::Duration;
+
+use dnnfuser::coordinator::service::{MapperClient, MapperService, ServiceConfig};
+use dnnfuser::coordinator::{MapRequest, Source};
+use dnnfuser::model::ModelKind;
+
+fn service() -> Option<MapperService> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    let mut cfg = ServiceConfig::new("artifacts");
+    cfg.model = ModelKind::S2s; // faster decode; the protocol is identical
+    cfg.batch_window = Duration::from_millis(20);
+    Some(MapperService::spawn(cfg).expect("service spawn"))
+}
+
+#[test]
+fn maps_a_request_and_caches_repeats() {
+    let Some(svc) = service() else { return };
+    let client = svc.client.clone();
+
+    let r1 = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    assert_eq!(r1.source, Source::Model);
+    assert_eq!(r1.strategy.values.len(), 15);
+    assert!(r1.speedup > 0.0);
+
+    let r2 = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    assert_eq!(r2.source, Source::Cache);
+    assert_eq!(r2.strategy, r1.strategy);
+
+    let m = client.metrics();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.cache_hits, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_requests_are_batched() {
+    let Some(svc) = service() else { return };
+    let client = svc.client.clone();
+
+    // Warm the service (first decode includes lazy costs).
+    client.map(MapRequest::new("resnet18", 64, 64.0)).unwrap();
+
+    // Fire 8 distinct conditions concurrently; the batching window should
+    // coalesce most of them into shared decodes.
+    let mut handles = Vec::new();
+    for i in 0..8 {
+        let c: MapperClient = client.clone();
+        handles.push(std::thread::spawn(move || {
+            c.map(MapRequest::new("resnet18", 64, 16.0 + i as f64)).unwrap()
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(results.len(), 8);
+    for r in &results {
+        assert_eq!(r.strategy.values.len(), 19);
+    }
+    let m = client.metrics();
+    // 9 model-mapped requests in strictly fewer than 9 decode batches
+    // proves the batcher coalesced something.
+    assert!(
+        m.model_batches < 9,
+        "no batching happened: {} batches for {} requests",
+        m.model_batches,
+        m.requests
+    );
+    assert!(m.mean_batch_occupancy() > 1.0);
+    svc.shutdown();
+}
+
+#[test]
+fn unknown_workload_is_an_error_not_a_crash() {
+    let Some(svc) = service() else { return };
+    let client = svc.client.clone();
+    let err = client.map(MapRequest::new("alexnet", 64, 20.0)).unwrap_err();
+    assert!(err.to_string().contains("unknown workload"), "{err}");
+    // Service still alive afterwards.
+    let ok = client.map(MapRequest::new("vgg16", 64, 24.0)).unwrap();
+    assert!(ok.speedup > 0.0);
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_workload_batch_resolves_each_correctly() {
+    let Some(svc) = service() else { return };
+    let client = svc.client.clone();
+    let mut handles = Vec::new();
+    for (w, n) in [("vgg16", 15usize), ("resnet18", 19), ("resnet50", 51)] {
+        let c = client.clone();
+        let w = w.to_string();
+        handles.push(std::thread::spawn(move || {
+            let r = c.map(MapRequest::new(&w, 64, 32.0)).unwrap();
+            (r, n)
+        }));
+    }
+    for h in handles {
+        let (r, n) = h.join().unwrap();
+        assert_eq!(r.strategy.values.len(), n);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn startup_failure_is_synchronous() {
+    let cfg = ServiceConfig::new("/nonexistent/artifacts");
+    let err = match MapperService::spawn(cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("must fail"),
+    };
+    assert!(format!("{err:#}").contains("startup failed"), "{err:#}");
+}

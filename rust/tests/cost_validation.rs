@@ -1,0 +1,246 @@
+//! Cost-model validation: the analytical model vs the discrete-event
+//! reference simulator, plus property tests on model invariants.
+//!
+//! Mirrors the paper's own methodology ("the built cost model is validated
+//! against MAESTRO") with an in-repo oracle: the event simulator executes
+//! the micro-batch pipeline literally, so agreement here means the closed
+//! forms summarize the semantics they claim to.
+
+use dnnfuser::cost::{simref, CostModel, HwConfig};
+use dnnfuser::fusion::{ActionCodec, Strategy, SYNC};
+use dnnfuser::util::ptest::{self, Gen};
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::{conv, zoo, Layer, Workload};
+
+/// Random small workload for property tests (size-scaled).
+fn random_workload(g: &mut Gen) -> Workload {
+    let n_layers = 2 + g.rng.index(2 + g.size / 8);
+    let mut layers: Vec<Layer> = Vec::new();
+    let mut c = 1 << g.rng.index(5); // 1..16 input channels
+    let mut sp = 8 << g.rng.index(3); // 8/16/32 spatial
+    for i in 0..n_layers {
+        let k = 1 << g.rng.index(7); // 1..64 output channels
+        let r = *g.rng.choose(&[1usize, 3]);
+        let stride = if sp >= 4 && g.rng.chance(0.25) { 2 } else { 1 };
+        sp = (sp / stride).max(1);
+        layers.push(conv(&format!("l{i}"), k, c, sp, sp, r, r, stride));
+        c = k;
+    }
+    Workload {
+        name: "random".into(),
+        layers,
+    }
+}
+
+fn random_strategy(g: &mut Gen, n: usize, batch: usize) -> Strategy {
+    let codec = ActionCodec::new(batch);
+    let mut values = Vec::with_capacity(n + 1);
+    values.push(1 + g.rng.index(batch) as i32);
+    for _ in 1..=n {
+        if g.rng.chance(0.35) {
+            values.push(SYNC);
+        } else {
+            values.push(codec.from_index(1 + g.rng.index(64)));
+        }
+    }
+    Strategy::new(values)
+}
+
+#[test]
+fn analytic_latency_tracks_event_sim() {
+    ptest::check("analytic vs simref latency", |g| {
+        let w = random_workload(g);
+        let batch = 4 << g.rng.index(3); // 4/8/16
+        let hw = HwConfig::paper();
+        let m = CostModel::new(&w, batch, hw);
+        let s = random_strategy(g, w.n_layers(), batch);
+        let (analytic, _, _) = m.latency_of(&s);
+        let sim = simref::simulate(&w, batch, &hw, &s);
+        // The analytic model is a max-of-bounds summary of the simulated
+        // schedule: it may undercount overlap slack but must stay within a
+        // constant band of the event sim.
+        let ratio = analytic / sim.makespan_s;
+        if !(0.3..=1.7).contains(&ratio) {
+            return Err(format!(
+                "analytic {analytic:.3e} vs sim {:.3e} (ratio {ratio:.2}) for {} on {} layers batch {batch}",
+                sim.makespan_s,
+                s.display(),
+                w.n_layers()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_peak_staging_never_exceeds_analytic_capacity() {
+    ptest::check("simref peak <= analytic capacity", |g| {
+        let w = random_workload(g);
+        let batch = 8;
+        let hw = HwConfig::paper();
+        let m = CostModel::new(&w, batch, hw);
+        let s = random_strategy(g, w.n_layers(), batch);
+        let sim = simref::simulate(&w, batch, &hw, &s);
+        let rep = m.evaluate(&s);
+        if sim.peak_act_bytes > rep.peak_act_bytes {
+            return Err(format!(
+                "sim staged {} > analytic {} for {}",
+                sim.peak_act_bytes,
+                rep.peak_act_bytes,
+                s.display()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn no_fusion_speedup_is_identity() {
+    ptest::check("no-fusion speedup == 1", |g| {
+        let w = random_workload(g);
+        let batch = 4 << g.rng.index(3);
+        let m = CostModel::new(&w, batch, HwConfig::paper());
+        let sp = m.speedup_of(&Strategy::no_fusion(w.n_layers()));
+        if (sp - 1.0).abs() > 1e-9 {
+            return Err(format!("speedup {sp}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fusion_never_increases_offchip_traffic() {
+    ptest::check("fusion reduces off-chip bytes", |g| {
+        let w = random_workload(g);
+        let batch = 8;
+        let m = CostModel::new(&w, batch, HwConfig::paper());
+        let nofuse = m.evaluate(&Strategy::no_fusion(w.n_layers()));
+        let s = random_strategy(g, w.n_layers(), batch);
+        let fused = m.evaluate(&s);
+        if fused.offchip_bytes > nofuse.offchip_bytes {
+            return Err(format!(
+                "{}: fused {} > baseline {}",
+                s.display(),
+                fused.offchip_bytes,
+                nofuse.offchip_bytes
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn memory_monotone_in_micro_batch() {
+    // Growing any staged micro-batch must not shrink peak memory.
+    ptest::check("peak mem monotone in mb", |g| {
+        let w = random_workload(g);
+        let batch = 16;
+        let m = CostModel::new(&w, batch, HwConfig::paper());
+        let s = random_strategy(g, w.n_layers(), batch);
+        let slot = 1 + g.rng.index(w.n_layers());
+        if s.values[slot] == SYNC || s.values[slot] as usize >= batch {
+            return Ok(()); // nothing to grow
+        }
+        let mut bigger = s.clone();
+        bigger.values[slot] = (s.values[slot] * 2).min(batch as i32);
+        let (_, mem_a, _) = m.latency_of(&s);
+        let (_, mem_b, _) = m.latency_of(&bigger);
+        if mem_b < mem_a {
+            return Err(format!(
+                "slot {slot}: mem {mem_b} < {mem_a} after growing mb {} -> {}",
+                s.values[slot], bigger.values[slot]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn validity_monotone_in_buffer_size() {
+    ptest::check("valid at M stays valid at 2M", |g| {
+        let w = random_workload(g);
+        let batch = 8;
+        let small = CostModel::new(&w, batch, HwConfig::paper().with_buffer_mb(8.0));
+        let large = CostModel::new(&w, batch, HwConfig::paper().with_buffer_mb(16.0));
+        let s = random_strategy(g, w.n_layers(), batch);
+        let (_, _, v_small) = small.latency_of(&s);
+        let (_, _, v_large) = large.latency_of(&s);
+        if v_small && !v_large {
+            return Err(format!("{} valid at 8MB but not 16MB", s.display()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn splitting_a_group_never_reduces_offchip_traffic() {
+    ptest::check("adding a sync adds boundary traffic", |g| {
+        let w = random_workload(g);
+        let batch = 8;
+        let m = CostModel::new(&w, batch, HwConfig::paper());
+        let s = random_strategy(g, w.n_layers(), batch);
+        // Find a fused (non-SYNC, non-terminal) slot to split at.
+        let candidates: Vec<usize> = (1..w.n_layers())
+            .filter(|&l| s.values[l] != SYNC)
+            .collect();
+        if candidates.is_empty() {
+            return Ok(());
+        }
+        let cut = candidates[g.rng.index(candidates.len())];
+        let mut split = s.clone();
+        split.values[cut] = SYNC;
+        let a = m.evaluate(&s).offchip_bytes;
+        let b = m.evaluate(&split).offchip_bytes;
+        if b < a {
+            return Err(format!(
+                "split at {cut} reduced off-chip {a} -> {b} for {}",
+                s.display()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn zoo_baselines_are_memory_bound_somewhere() {
+    // The regime that makes the paper's problem interesting: at least one
+    // layer of every zoo workload is off-chip-bound at batch 64.
+    for w in zoo::all() {
+        let m = CostModel::new(&w, 64, HwConfig::paper());
+        let base = m.evaluate(&Strategy::no_fusion(w.n_layers()));
+        let hw = HwConfig::paper();
+        let any_membound = base.groups.iter().any(|gc| {
+            gc.offchip_bytes as f64 / hw.bw_off > gc.compute_s
+        });
+        assert!(any_membound, "{} has no memory-bound layer", w.name);
+    }
+}
+
+#[test]
+fn ideal_full_fusion_hits_speedup_ceiling_on_resnet18() {
+    // With an infinite buffer, staging everything at full batch should
+    // approach the compute/on-chip roofline; sanity-check the ceiling is
+    // meaningfully above 1 (this is the paper's whole premise).
+    let w = zoo::resnet18();
+    let hw = HwConfig {
+        buffer_bytes: u64::MAX,
+        ..HwConfig::paper()
+    };
+    let m = CostModel::new(&w, 64, hw);
+    let mut rng = Rng::seed_from_u64(1);
+    let mut best = 0.0f64;
+    for _ in 0..2000 {
+        let mut values = vec![0i32; w.n_layers() + 1];
+        values[0] = 1 + rng.index(64) as i32;
+        for v in values.iter_mut().skip(1) {
+            *v = if rng.chance(0.2) {
+                SYNC
+            } else {
+                1 + rng.index(64) as i32
+            };
+        }
+        let s = Strategy::new(values);
+        best = best.max(m.speedup_of(&s));
+    }
+    assert!(best > 1.5, "ceiling only {best}");
+}

@@ -1,0 +1,170 @@
+//! Feasibility-projection properties and failure-injection tests.
+//!
+//! The serving decode path projects model actions onto the conditioned
+//! buffer (env::Episode::step_raw_projected); these properties are what
+//! make the coordinator's "valid" field trustworthy. The failure-injection
+//! half exercises the runtime's refusal paths: corrupted manifests,
+//! truncated artifacts, stale checkpoints.
+
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::util::ptest;
+use dnnfuser::workload::zoo;
+
+#[test]
+fn projected_rollouts_are_always_valid() {
+    // ANY raw action stream — adversarial included — must produce a
+    // strategy that fits the conditioned buffer after projection.
+    ptest::check("projected rollout validity", |g| {
+        let all = zoo::all();
+        let w = all[g.rng.index(all.len())].clone();
+        // The condition must be mappable at all (≥ the largest single
+        // layer's one-sample working set — env::min_condition_bytes);
+        // below that no mapper can produce a valid strategy.
+        let probe = FusionEnv::new(w.clone(), 64, HwConfig::paper(), 64.0);
+        let min_mb = probe.min_condition_bytes() / (1024.0 * 1024.0);
+        let mem = min_mb + 0.5 + g.rng.f64() * 56.0;
+        let env = FusionEnv::new(w, 64, HwConfig::paper(), mem);
+        let mut ep = env.begin();
+        while !ep.done() {
+            // Raw model outputs can be anything.
+            let raw = (g.rng.f64() * 4.0 - 2.0) as f32;
+            ep.step_raw_projected(raw);
+        }
+        let traj = ep.into_trajectory();
+        if !traj.valid {
+            return Err(format!(
+                "projection produced invalid strategy {} at {:.1} MB (peak {:.2} MB)",
+                traj.strategy.display(),
+                mem,
+                traj.peak_act_bytes as f64 / (1024.0 * 1024.0)
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn projection_is_identity_on_feasible_actions() {
+    // Conservative actions that already fit must pass through unchanged.
+    let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 64.0);
+    let mut ep_raw = env.begin();
+    let mut ep_proj = env.begin();
+    let conservative = env.codec.encode(1); // mb = 1 everywhere
+    for _ in 0..env.steps() {
+        ep_raw.step_raw(conservative);
+        ep_proj.step_raw_projected(conservative);
+    }
+    let a = ep_raw.into_trajectory();
+    let b = ep_proj.into_trajectory();
+    assert_eq!(a.strategy, b.strategy);
+    assert!(b.valid);
+}
+
+#[test]
+fn projection_clamps_oversized_to_sync_or_smaller() {
+    // Greedy max-everything at a tight-but-mappable condition (VGG16's
+    // floor is ≈12.4 MB): projection must shrink.
+    let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 14.0);
+    let mut ep = env.begin();
+    let greedy = env.codec.encode(64);
+    for _ in 0..env.steps() {
+        ep.step_raw_projected(greedy);
+    }
+    let traj = ep.into_trajectory();
+    assert!(traj.valid);
+    assert!(
+        traj.strategy.values.iter().skip(1).any(|&v| v != 64),
+        "nothing was clamped: {}",
+        traj.strategy.display()
+    );
+}
+
+mod failure_injection {
+    use dnnfuser::runtime::{LoadSet, Runtime};
+    use std::fs;
+    use std::path::{Path, PathBuf};
+
+    fn have_artifacts() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    /// Copy artifacts/ into a temp dir we can corrupt.
+    fn corrupt_copy(mutate: impl Fn(&PathBuf)) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "dnnfuser_corrupt_{}",
+            std::process::id() as u64 + std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .subsec_nanos() as u64
+        ));
+        fs::create_dir_all(&dir).unwrap();
+        for entry in fs::read_dir("artifacts").unwrap() {
+            let p = entry.unwrap().path();
+            fs::copy(&p, dir.join(p.file_name().unwrap())).unwrap();
+        }
+        mutate(&dir);
+        dir
+    }
+
+    #[test]
+    fn corrupt_manifest_json_is_rejected() {
+        if !have_artifacts() {
+            eprintln!("SKIP: no artifacts");
+            return;
+        }
+        let dir = corrupt_copy(|d| {
+            fs::write(d.join("manifest.json"), "{ not json").unwrap();
+        });
+        let err = Runtime::load(&dir, LoadSet::InferOnly).err().expect("must fail");
+        assert!(format!("{err:#}").contains("JSON"), "{err:#}");
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn stale_manifest_version_is_rejected() {
+        if !have_artifacts() {
+            eprintln!("SKIP: no artifacts");
+            return;
+        }
+        let dir = corrupt_copy(|d| {
+            let text = fs::read_to_string(d.join("manifest.json")).unwrap();
+            let bumped = text.replace("\"version\": 3", "\"version\": 99");
+            assert_ne!(text, bumped, "version field not found");
+            fs::write(d.join("manifest.json"), bumped).unwrap();
+        });
+        let err = Runtime::load(&dir, LoadSet::InferOnly).err().expect("must fail");
+        assert!(format!("{err:#}").contains("make artifacts"), "{err:#}");
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_hlo_artifact_is_rejected() {
+        if !have_artifacts() {
+            eprintln!("SKIP: no artifacts");
+            return;
+        }
+        let dir = corrupt_copy(|d| {
+            let p = d.join("df_infer_b1.hlo.txt");
+            let text = fs::read_to_string(&p).unwrap();
+            fs::write(&p, &text[..text.len() / 3]).unwrap();
+        });
+        let res = Runtime::load(&dir, LoadSet::InferOnly);
+        assert!(res.is_err(), "truncated HLO must not load");
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_file_is_rejected() {
+        if !have_artifacts() {
+            eprintln!("SKIP: no artifacts");
+            return;
+        }
+        let dir = corrupt_copy(|d| {
+            fs::remove_file(d.join("s2s_infer_b8.hlo.txt")).unwrap();
+        });
+        let res = Runtime::load(&dir, LoadSet::InferOnly);
+        assert!(res.is_err());
+        fs::remove_dir_all(dir).ok();
+    }
+}

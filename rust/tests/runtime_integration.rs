@@ -1,0 +1,135 @@
+//! Integration: AOT artifacts → PJRT runtime → train/infer drivers.
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees this);
+//! tests skip with a loud message when the directory is absent so plain
+//! `cargo test` still works in a fresh checkout.
+
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::{LoadSet, Runtime};
+use dnnfuser::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use dnnfuser::trajectory::ReplayBuffer;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load("artifacts", LoadSet::All).expect("runtime load"))
+}
+
+#[test]
+fn manifest_loads_and_lists_executables() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "df_init",
+        "df_train",
+        "df_infer_b1",
+        "df_infer_b8",
+        "s2s_init",
+        "s2s_train",
+        "s2s_infer_b1",
+        "s2s_infer_b8",
+    ] {
+        assert!(rt.has(name), "missing executable {name}");
+    }
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some(rt) = runtime() else { return };
+    let a = MapperModel::init(&rt, ModelKind::Df, 0).unwrap();
+    let b = MapperModel::init(&rt, ModelKind::Df, 0).unwrap();
+    let c = MapperModel::init(&rt, ModelKind::Df, 1).unwrap();
+    assert_eq!(a.theta, b.theta);
+    assert_ne!(a.theta, c.theta);
+    assert!(a.theta.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn training_reduces_imitation_loss_end_to_end() {
+    let Some(rt) = runtime() else { return };
+    // Teacher demonstrations on a small condition set.
+    let w = zoo::vgg16();
+    let mut rng = Rng::seed_from_u64(7);
+    let mut buffer = ReplayBuffer::new(256);
+    for mem in [16.0, 32.0] {
+        let p = FusionProblem::new(&w, 64, HwConfig::paper(), mem);
+        let r = GSampler::default().run(&p, 400, &mut rng);
+        buffer.push(p.env.decorate(&r.best));
+    }
+    assert!(buffer.len() == 2);
+
+    let mut model = MapperModel::init(&rt, ModelKind::Df, 42).unwrap();
+    let losses = model
+        .train(&rt, &buffer, 25, &mut rng, |_, _| {})
+        .unwrap();
+    assert!(losses.iter().all(|l| l.is_finite()));
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        tail < head * 0.9,
+        "loss did not decrease: head {head} tail {tail} ({losses:?})"
+    );
+}
+
+#[test]
+fn inference_produces_valid_strategy() {
+    let Some(rt) = runtime() else { return };
+    let model = MapperModel::init(&rt, ModelKind::Df, 3).unwrap();
+    let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+    let traj = model.infer(&rt, &env).unwrap();
+    assert_eq!(traj.strategy.values.len(), env.steps());
+    traj.strategy.check_shape(&env.workload, 64).unwrap();
+    assert!(traj.speedup.is_finite() && traj.speedup > 0.0);
+}
+
+#[test]
+fn batched_inference_matches_row_count_and_mixed_workloads() {
+    let Some(rt) = runtime() else { return };
+    let model = MapperModel::init(&rt, ModelKind::S2s, 3).unwrap();
+    let e1 = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+    let e2 = FusionEnv::new(zoo::resnet18(), 64, HwConfig::paper(), 32.0);
+    let e3 = FusionEnv::new(zoo::resnet50(), 64, HwConfig::paper(), 48.0);
+    let trajs = model.infer_batch(&rt, &[&e1, &e2, &e3]).unwrap();
+    assert_eq!(trajs.len(), 3);
+    assert_eq!(trajs[0].strategy.values.len(), e1.steps());
+    assert_eq!(trajs[1].strategy.values.len(), e2.steps());
+    assert_eq!(trajs[2].strategy.values.len(), e3.steps());
+}
+
+#[test]
+fn checkpoint_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let model = MapperModel::init(&rt, ModelKind::Df, 9).unwrap();
+    let path = std::env::temp_dir().join("dnnfuser_ckpt_test.bin");
+    model.save(&path).unwrap();
+    let loaded = MapperModel::load(&rt, &path).unwrap();
+    assert_eq!(loaded.theta, model.theta);
+    assert_eq!(loaded.kind, ModelKind::Df);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn infer_only_loadset_excludes_train() {
+    let Some(_) = runtime() else { return };
+    let rt = Runtime::load("artifacts", LoadSet::InferOnly).unwrap();
+    assert!(rt.has("df_infer_b8"));
+    assert!(!rt.has("df_train"));
+    // Calling an unloaded artifact is a clean error, not a panic.
+    let model_err = MapperModel::init(&rt, ModelKind::Df, 0);
+    assert!(model_err.is_err());
+}
+
+#[test]
+fn deterministic_inference_same_env_same_params() {
+    let Some(rt) = runtime() else { return };
+    let model = MapperModel::init(&rt, ModelKind::Df, 5).unwrap();
+    let env = FusionEnv::new(zoo::resnet18(), 64, HwConfig::paper(), 24.0);
+    let a = model.infer(&rt, &env).unwrap();
+    let b = model.infer(&rt, &env).unwrap();
+    assert_eq!(a.strategy, b.strategy);
+}

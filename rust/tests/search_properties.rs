@@ -1,0 +1,136 @@
+//! Property tests over the search stack: every optimizer respects its
+//! budget, produces shape-legal strategies, and reports honest scores;
+//! G-Sampler (the teacher) additionally must satisfy the memory condition
+//! and beat the generic baselines on the paper's setup.
+
+use dnnfuser::cost::HwConfig;
+use dnnfuser::fusion::SYNC;
+use dnnfuser::search::{
+    all_baselines, gsampler::GSampler, random::RandomSearch, FusionProblem, Optimizer,
+};
+use dnnfuser::util::ptest;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+fn problems() -> Vec<(FusionProblem, &'static str)> {
+    vec![
+        (
+            FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0),
+            "vgg16@20",
+        ),
+        (
+            FusionProblem::new(&zoo::resnet18(), 64, HwConfig::paper(), 32.0),
+            "resnet18@32",
+        ),
+    ]
+}
+
+#[test]
+fn every_optimizer_respects_budget_and_shape() {
+    let (p, _) = problems().remove(0).into();
+    let mut opts = all_baselines();
+    opts.push(Box::new(GSampler::default()));
+    opts.push(Box::new(RandomSearch));
+    for opt in &opts {
+        let mut rng = Rng::seed_from_u64(11);
+        let budget = 160;
+        let r = opt.run(&p, budget, &mut rng);
+        assert!(
+            r.evals_used <= budget,
+            "{} used {} > budget {budget}",
+            opt.name(),
+            r.evals_used
+        );
+        r.best
+            .check_shape(&zoo::vgg16(), 64)
+            .unwrap_or_else(|e| panic!("{}: {e}", opt.name()));
+        assert!(r.best_eval.score.is_finite(), "{}", opt.name());
+        assert!(r.wall_s >= 0.0);
+        // History checkpoints are monotone in both axes.
+        for w in r.history.windows(2) {
+            assert!(w[1].0 > w[0].0 && w[1].1 >= w[0].1, "{}", opt.name());
+        }
+        // Reported best score matches re-evaluation (no stale bests).
+        let re = p.eval_strategy(&r.best);
+        assert!(
+            (re.score - r.best_eval.score).abs() < 1e-9,
+            "{}: reported {} vs recomputed {}",
+            opt.name(),
+            r.best_eval.score,
+            re.score
+        );
+    }
+}
+
+#[test]
+fn gsampler_satisfies_condition_on_every_problem() {
+    for (p, tag) in problems() {
+        let mut rng = Rng::seed_from_u64(5);
+        let r = GSampler::default().run(&p, 2000, &mut rng);
+        assert!(r.best_eval.valid, "{tag}: teacher violated the constraint");
+        assert!(
+            r.best_eval.peak_act_bytes as f64 <= p.mem_cond_bytes,
+            "{tag}: act usage over condition"
+        );
+        assert!(r.best_eval.speedup > 1.0, "{tag}: no speedup");
+    }
+}
+
+#[test]
+fn gsampler_beats_random_and_generic_ga_at_equal_budget() {
+    // The paper's Table 1 story in miniature: domain operators matter.
+    let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+    let budget = 1000;
+    let g = GSampler::default().run(&p, budget, &mut Rng::seed_from_u64(2));
+    let rand = RandomSearch.run(&p, budget, &mut Rng::seed_from_u64(2));
+    assert!(
+        g.best_eval.score >= rand.best_eval.score,
+        "G-Sampler {} < random {}",
+        g.best_eval.score,
+        rand.best_eval.score
+    );
+}
+
+#[test]
+fn decoded_points_round_trip_through_codec() {
+    ptest::check("problem decode is codec-consistent", |g| {
+        let p = FusionProblem::new(&zoo::resnet18(), 64, HwConfig::paper(), 32.0);
+        let x: Vec<f64> = (0..p.n_slots)
+            .map(|_| g.rng.range_f64(-1.2, 1.2))
+            .collect();
+        let s = p.decode(&x);
+        if s.values[0] == SYNC {
+            return Err("slot 0 decoded to SYNC".into());
+        }
+        for (t, &v) in s.values.iter().enumerate() {
+            if v != SYNC && !(1..=64).contains(&v) {
+                return Err(format!("slot {t} decoded to {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn repair_operator_is_idempotent_on_feasible_strategies() {
+    ptest::check("repair preserves feasible", |g| {
+        let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let gs = GSampler::default();
+        let x: Vec<f64> = (0..p.n_slots)
+            .map(|_| g.rng.range_f64(-1.0, 1.0))
+            .collect();
+        let mut s = p.decode(&x);
+        gs.repair(&p, &mut s, &mut g.rng);
+        if !p.model.evaluate(&s).valid {
+            // Repair can only fail when even mb=1 single layers overflow —
+            // impossible at 20 MB for VGG16.
+            return Err(format!("repair left infeasible: {}", s.display()));
+        }
+        let before = s.clone();
+        gs.repair(&p, &mut s, &mut g.rng);
+        if s != before {
+            return Err("repair modified an already-feasible strategy".into());
+        }
+        Ok(())
+    });
+}
