@@ -54,7 +54,9 @@ fn main() -> anyhow::Result<()> {
                         .map(MapRequest::new(workload, 64, mem + jitter))
                         .expect("map");
                     match r.source {
-                        Source::Model => lat_model.push(r.latency),
+                        // Search-fallback responses are "fresh mappings"
+                        // for reporting purposes, same as model decodes.
+                        Source::Model | Source::Search => lat_model.push(r.latency),
                         Source::Cache => lat_cache.push(r.latency),
                     }
                 }

@@ -1,24 +1,37 @@
 //! Performance microbenchmarks for the perf pass (EXPERIMENTS.md §Perf).
 //!
-//! L3 hot paths: cost-model strategy evaluation (the search inner loop),
-//! G-Sampler end-to-end search, PJRT inference/train step latency, full
-//! autoregressive mapping latency, and coordinator serving throughput.
-//! Run with `cargo bench --bench perf`; quick mode for the PJRT rows.
+//! L3 hot paths: cost-engine strategy evaluation (full-walk baseline vs
+//! fused vs incremental vs batch-parallel — the search inner loop),
+//! G-Sampler end-to-end search on both repair paths, PJRT inference/train
+//! step latency, full autoregressive mapping latency, and coordinator
+//! serving throughput. Run with `cargo bench --bench perf`; quick mode for
+//! the PJRT rows.
+//!
+//! The engine section records its evaluations/sec numbers in
+//! `BENCH_eval_throughput.json` at the repo root so the perf trajectory is
+//! tracked across PRs (EXPERIMENTS.md §Perf).
 
 use std::time::{Duration, Instant};
 
 use dnnfuser::bench_support as bs;
 use dnnfuser::coordinator::service::{MapperService, ServiceConfig};
 use dnnfuser::coordinator::MapRequest;
+use dnnfuser::cost::engine::{reference, BatchEval};
 use dnnfuser::cost::{CostModel, HwConfig};
 use dnnfuser::env::FusionEnv;
 use dnnfuser::fusion::{ActionCodec, Strategy, SYNC};
 use dnnfuser::model::{MapperModel, ModelKind};
 use dnnfuser::search::{gsampler::GSampler, FusionProblem, Optimizer};
 use dnnfuser::trajectory::ReplayBuffer;
-use dnnfuser::util::bench::{black_box, Bencher};
+use dnnfuser::util::bench::{black_box, Bencher, Stats};
+use dnnfuser::util::json::Json;
+use dnnfuser::util::pool::ThreadPool;
 use dnnfuser::util::rng::Rng;
 use dnnfuser::workload::zoo;
+
+fn evals_per_sec(s: &Stats, evals_per_iter: f64) -> f64 {
+    evals_per_iter * 1e9 / s.mean_ns
+}
 
 fn random_strategies(n_slots: usize, batch: usize, count: usize) -> Vec<Strategy> {
     let codec = ActionCodec::new(batch);
@@ -68,7 +81,170 @@ fn main() {
         });
     }
 
-    // G-Sampler end-to-end at the paper budget.
+    // === Cost engine: evaluation throughput, full-walk vs engine ===
+    //
+    // `full_walk` is the pre-refactor evaluation the teacher search paid
+    // per candidate (one latency chain walk + one allocating report walk
+    // for act usage). `fused` is the engine's single group walk.
+    // `incremental` is a single-slot mutation re-cost — the inner move of
+    // G-Sampler repair and of the env's episode step. `batch` fans a
+    // population over the shared pool.
+    println!("\n=== cost engine: strategy evaluations/sec ===\n");
+    let quick = Bencher::quick();
+    let mut wl_rows: Vec<(String, Json)> = Vec::new();
+    let mut teacher_kernel_speedup = 0.0f64;
+    for wname in ["vgg16", "resnet50"] {
+        let w = zoo::by_name(wname).unwrap();
+        let m = CostModel::new(&w, 64, HwConfig::paper().with_buffer_mb(20.0));
+        let n_slots = w.n_layers() + 1;
+        let strategies = random_strategies(n_slots, 64, 256);
+
+        let mut i = 0;
+        let s_full = b.report(&format!("engine/full_walk_eval/{wname}"), || {
+            i = (i + 1) % strategies.len();
+            black_box(reference::eval_strategy(&m, &strategies[i]))
+        });
+        let mut k = 0;
+        let s_fused = b.report(&format!("engine/fused_eval/{wname}"), || {
+            k = (k + 1) % strategies.len();
+            black_box(m.cost_of(&strategies[k]))
+        });
+        // Incremental: round-robin the slots, alternating values so every
+        // call really mutates (value↔value, split and merge all occur).
+        let mut inc = m.engine().incremental(&strategies[0].values);
+        let mut step = 0usize;
+        let s_inc = b.report(&format!("engine/incremental_eval/{wname}"), || {
+            let slot = step % n_slots;
+            let phase = (step / n_slots) % 2;
+            let v = if slot == 0 {
+                if phase == 0 {
+                    2
+                } else {
+                    5
+                }
+            } else if phase == 0 {
+                4
+            } else if slot % 2 == 0 {
+                SYNC
+            } else {
+                9
+            };
+            step += 1;
+            black_box(inc.set(slot, v))
+        });
+        let big = random_strategies(n_slots, 64, 8192);
+        let batch = BatchEval::default();
+        let s_batch = quick.report(&format!("engine/batch_eval_8192/{wname}"), || {
+            black_box(batch.eval(&m, &big))
+        });
+
+        // Teacher search end-to-end, both repair paths (same decisions,
+        // different re-costing work).
+        let p = FusionProblem::new(&w, 64, HwConfig::paper(), 20.0);
+        let legacy = GSampler {
+            use_incremental: false,
+            ..GSampler::default()
+        };
+        let mut seed_a = 0u64;
+        let s_leg = quick.report(&format!("engine/gsampler_2k_full_walk/{wname}"), || {
+            seed_a += 1;
+            black_box(legacy.run(&p, 2000, &mut Rng::seed_from_u64(seed_a)))
+        });
+        let engine_gs = GSampler::default();
+        let mut seed_b = 0u64;
+        let s_eng = quick.report(&format!("engine/gsampler_2k_engine/{wname}"), || {
+            seed_b += 1;
+            black_box(engine_gs.run(&p, 2000, &mut Rng::seed_from_u64(seed_b)))
+        });
+
+        let full_eps = evals_per_sec(&s_full, 1.0);
+        let fused_eps = evals_per_sec(&s_fused, 1.0);
+        let inc_eps = evals_per_sec(&s_inc, 1.0);
+        let batch_eps = evals_per_sec(&s_batch, 8192.0);
+        let gs_full_eps = evals_per_sec(&s_leg, 2000.0);
+        let gs_eng_eps = evals_per_sec(&s_eng, 2000.0);
+        let kernel_speedup = inc_eps / full_eps;
+        teacher_kernel_speedup = teacher_kernel_speedup.max(kernel_speedup);
+        println!(
+            "    → {wname}: full {:.2} M/s | fused {:.2} M/s | incremental {:.2} M/s \
+             ({kernel_speedup:.1}x) | batch {:.2} M/s | gsampler {:.0}→{:.0} k evals/s",
+            full_eps / 1e6,
+            fused_eps / 1e6,
+            inc_eps / 1e6,
+            batch_eps / 1e6,
+            gs_full_eps / 1e3,
+            gs_eng_eps / 1e3,
+        );
+        wl_rows.push((
+            wname.to_string(),
+            Json::obj(vec![
+                ("full_walk_evals_per_sec", Json::num(full_eps)),
+                ("fused_evals_per_sec", Json::num(fused_eps)),
+                ("incremental_evals_per_sec", Json::num(inc_eps)),
+                ("batch_parallel_evals_per_sec", Json::num(batch_eps)),
+                ("speedup_fused_vs_full_walk", Json::num(fused_eps / full_eps)),
+                ("speedup_incremental_vs_full_walk", Json::num(kernel_speedup)),
+                (
+                    "gsampler_2k_search",
+                    Json::obj(vec![
+                        ("full_walk_evals_per_sec", Json::num(gs_full_eps)),
+                        ("engine_evals_per_sec", Json::num(gs_eng_eps)),
+                        ("speedup", Json::num(gs_eng_eps / gs_full_eps)),
+                    ]),
+                ),
+            ]),
+        ));
+    }
+    {
+        let rows: Vec<(&str, Json)> = wl_rows
+            .iter()
+            .map(|(name, j)| (name.as_str(), j.clone()))
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::str("eval_throughput")),
+            ("threads", Json::num(ThreadPool::shared().size() as f64)),
+            (
+                "definitions",
+                Json::obj(vec![
+                    (
+                        "full_walk",
+                        Json::str(
+                            "pre-refactor eval: latency chain walk + allocating \
+                             act-usage report walk per strategy (the seed's \
+                             eval_strategy, i.e. the teacher-search evaluation path)",
+                        ),
+                    ),
+                    (
+                        "fused",
+                        Json::str("engine single group-walk (latency+mem+act+valid)"),
+                    ),
+                    (
+                        "incremental",
+                        Json::str(
+                            "single-slot mutation re-cost via IncrementalEval — the \
+                             inner move of gsampler/stdga/de/pso repair",
+                        ),
+                    ),
+                    (
+                        "batch_parallel",
+                        Json::str("BatchEval over the shared thread pool, 8192 strategies"),
+                    ),
+                ]),
+            ),
+            ("workloads", Json::obj(rows)),
+            (
+                "gsampler_teacher_kernel_speedup_vs_full_walk",
+                Json::num(teacher_kernel_speedup),
+            ),
+        ]);
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_eval_throughput.json");
+        match std::fs::write(path, doc.to_pretty()) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+
+    // G-Sampler end-to-end at the paper budget (engine path).
     {
         let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
         let quick = Bencher::quick();

@@ -13,12 +13,14 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 
 use crate::cost::HwConfig;
+use crate::env::Trajectory;
 use crate::model::{MapperModel, ModelKind};
 use crate::runtime::{LoadSet, Runtime};
 use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
 use crate::trajectory::ReplayBuffer;
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
-use crate::workload::zoo;
+use crate::workload::{zoo, Workload};
 
 pub fn cache_dir() -> PathBuf {
     let d = PathBuf::from("runs/bench_cache");
@@ -54,8 +56,33 @@ pub fn require_artifacts() -> Option<Runtime> {
     Some(Runtime::load("artifacts", LoadSet::All).expect("runtime load"))
 }
 
+/// Run independent G-Sampler teacher searches — one job per entry of
+/// `(workload, condition, pre-forked rng)` — fanned out over the shared
+/// thread pool. Results come back in input order, so callers that fork
+/// their seeds in enumeration order get output identical to the serial
+/// loop. This is the one copy of the determinism-critical orchestration;
+/// `ensure_dataset` and `dnnfuser collect` both ride on it.
+pub fn teacher_runs(
+    jobs: Vec<(Workload, f64, Rng)>,
+    batch: usize,
+    budget: usize,
+) -> Vec<(Trajectory, f64)> {
+    let boxed: Vec<Box<dyn FnOnce() -> (Trajectory, f64) + Send + 'static>> = jobs
+        .into_iter()
+        .map(|(w, mem, mut job_rng)| {
+            Box::new(move || {
+                let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+                let r = GSampler::default().run(&prob, budget, &mut job_rng);
+                (prob.env.decorate(&r.best), r.wall_s)
+            }) as Box<dyn FnOnce() -> (Trajectory, f64) + Send + 'static>
+        })
+        .collect();
+    ThreadPool::shared().run_batch(boxed)
+}
+
 /// Build (or load) a teacher demonstration dataset for `(workloads, mems,
-/// batch)`, `runs_per_cond` G-Sampler searches per condition.
+/// batch)`, `runs_per_cond` G-Sampler searches per condition — parallel
+/// via [`teacher_runs`], deterministic per seed.
 pub fn ensure_dataset(
     tag: &str,
     workloads: &[&str],
@@ -71,16 +98,18 @@ pub fn ensure_dataset(
         }
     }
     let mut rng = Rng::seed_from_u64(seed);
-    let mut buffer = ReplayBuffer::new(4096);
+    let mut jobs: Vec<(Workload, f64, Rng)> = Vec::new();
     for wname in workloads {
         let w = zoo::by_name(wname).with_context(|| format!("workload {wname}"))?;
         for &mem in mems {
             for _ in 0..runs_per_cond {
-                let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
-                let r = GSampler::default().run(&prob, bench_budget(), &mut rng.fork());
-                buffer.push(prob.env.decorate(&r.best));
+                jobs.push((w.clone(), mem, rng.fork()));
             }
         }
+    }
+    let mut buffer = ReplayBuffer::new(4096);
+    for (traj, _wall_s) in teacher_runs(jobs, batch, bench_budget()) {
+        buffer.push(traj);
     }
     buffer.save(&path)?;
     Ok(buffer)

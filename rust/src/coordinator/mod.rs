@@ -56,6 +56,10 @@ impl MapRequest {
 pub enum Source {
     Model,
     Cache,
+    /// Search fallback: no model backend was available, so the service
+    /// answered with a (pool-parallel, engine-accelerated) G-Sampler
+    /// search. Slower than inference but keeps the control plane up.
+    Search,
 }
 
 /// The answer.

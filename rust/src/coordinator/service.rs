@@ -1,10 +1,23 @@
-//! The mapper service actor: owns the PJRT runtime + model on one thread,
-//! batches concurrent requests dynamically, caches resolved mappings.
+//! The mapper service actor: owns the backend on one thread, batches
+//! concurrent requests dynamically, caches resolved mappings.
 //!
 //! Actor pattern rather than shared state: PJRT handles are not Sync, so
 //! the service thread *constructs* the runtime itself and everything else
 //! talks to it through channels. This is the same shape a vLLM router
 //! takes — front-end queue, batching window, one engine loop.
+//!
+//! Two backends:
+//!
+//! - **Model** — the PJRT runtime + sequence model (the paper's serving
+//!   story): a batch of requests becomes one batched autoregressive
+//!   decode;
+//! - **Search fallback** (opt-in via [`ServiceConfig::search_fallback`]) —
+//!   when the model backend cannot load (no artifacts, no PJRT), requests
+//!   are answered by G-Sampler searches instead: each batch fans out over
+//!   the shared thread pool, and every search runs on the incremental
+//!   cost engine. Slower than inference, but the control plane stays up
+//!   in pure-Rust environments, and repeat conditions still hit the
+//!   mapping cache.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -14,10 +27,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::cost::MB;
 use crate::env::FusionEnv;
 use crate::model::{MapperModel, ModelKind};
 use crate::runtime::{LoadSet, Runtime};
-use crate::workload::zoo;
+use crate::fusion::Strategy;
+use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
+use crate::workload::{zoo, Workload};
 
 use super::cache::{Entry, Key, MappingCache};
 use super::metrics::Metrics;
@@ -36,6 +54,16 @@ pub struct ServiceConfig {
     pub batch_window: Duration,
     pub cache_capacity: usize,
     pub init_seed: i32,
+    /// Serve via G-Sampler search when the model backend cannot load
+    /// (missing artifacts / PJRT). Off by default so misconfigured model
+    /// deployments still fail loudly at spawn.
+    pub search_fallback: bool,
+    /// Sampling budget per fallback search (paper teacher budget: 2000).
+    pub fallback_budget: usize,
+    /// Base seed for fallback searches; the per-request seed is derived
+    /// from (workload, batch, condition) so identical requests get
+    /// identical strategies (cache-coherent).
+    pub fallback_seed: u64,
 }
 
 impl ServiceConfig {
@@ -47,6 +75,9 @@ impl ServiceConfig {
             batch_window: Duration::from_millis(2),
             cache_capacity: 1024,
             init_seed: 0,
+            search_fallback: false,
+            fallback_budget: 2000,
+            fallback_seed: 0x5EED,
         }
     }
 }
@@ -64,6 +95,12 @@ enum Msg {
     Stop,
 }
 
+/// What answers the requests.
+enum Backend {
+    Model { rt: Runtime, model: MapperModel },
+    Search { budget: usize, seed: u64 },
+}
+
 /// Cheap cloneable handle to the service.
 #[derive(Clone)]
 pub struct MapperClient {
@@ -78,7 +115,7 @@ pub struct MapperService {
 }
 
 impl MapperService {
-    /// Spawn the service thread. Blocks until the runtime has loaded (or
+    /// Spawn the service thread. Blocks until the backend has loaded (or
     /// failed), so callers get construction errors synchronously.
     pub fn spawn(cfg: ServiceConfig) -> Result<MapperService> {
         let (tx, rx) = channel::<Msg>();
@@ -133,30 +170,61 @@ impl MapperClient {
     }
 }
 
+/// Deterministic per-request search seed: identical (workload, batch,
+/// condition) requests resolve to identical strategies, which keeps the
+/// cache and repeat requests coherent.
+fn request_seed(base: u64, workload: &str, batch: usize, mem_cond_mb: f64) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ base.wrapping_mul(FNV_PRIME);
+    for b in workload.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h ^= batch as u64;
+    h = h.wrapping_mul(FNV_PRIME);
+    // Quantized like the cache key so jittered conditions share a seed.
+    h ^= (mem_cond_mb * 4.0).round() as u64;
+    h.wrapping_mul(FNV_PRIME)
+}
+
 fn service_loop(
     cfg: ServiceConfig,
     rx: Receiver<Msg>,
     metrics: Arc<Mutex<Metrics>>,
     ready: Sender<Result<(), String>>,
 ) {
-    // Construct runtime + model inside the thread (PJRT is not Sync).
-    let built = (|| -> Result<(Runtime, MapperModel)> {
+    // Construct the backend inside the thread (PJRT is not Sync).
+    let built = (|| -> Result<Backend> {
         let set = if cfg.checkpoint.is_some() {
             LoadSet::InferOnly
         } else {
             LoadSet::Serve
         };
-        let rt = Runtime::load(&cfg.artifacts_dir, set).context("loading artifacts")?;
-        let model = match &cfg.checkpoint {
-            Some(path) => MapperModel::load(&rt, path)?,
-            None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
-        };
-        Ok((rt, model))
+        match Runtime::load(&cfg.artifacts_dir, set) {
+            Ok(rt) => {
+                let model = match &cfg.checkpoint {
+                    Some(path) => MapperModel::load(&rt, path)?,
+                    None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
+                };
+                Ok(Backend::Model { rt, model })
+            }
+            Err(e) if cfg.search_fallback => {
+                eprintln!(
+                    "mapper service: model backend unavailable ({e:#}); \
+                     serving via G-Sampler search fallback"
+                );
+                Ok(Backend::Search {
+                    budget: cfg.fallback_budget.max(1),
+                    seed: cfg.fallback_seed,
+                })
+            }
+            Err(e) => Err(e).context("loading artifacts"),
+        }
     })();
-    let (rt, model) = match built {
-        Ok(ok) => {
+    let backend = match built {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            ok
+            b
         }
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
@@ -164,12 +232,16 @@ fn service_loop(
         }
     };
 
-    let max_batch = rt
-        .manifest
-        .infer_batches(model.kind.tag())
-        .last()
-        .copied()
-        .unwrap_or(1);
+    let max_batch = match &backend {
+        Backend::Model { rt, model } => rt
+            .manifest
+            .infer_batches(model.kind.tag())
+            .last()
+            .copied()
+            .unwrap_or(1),
+        // Search fallback: one pool worker per in-flight search.
+        Backend::Search { .. } => ThreadPool::shared().size().max(1),
+    };
     let mut cache = MappingCache::new(cfg.cache_capacity);
 
     loop {
@@ -198,8 +270,8 @@ fn service_loop(
             }
         }
 
-        // Serve cache hits immediately; keep the misses for the model.
-        let mut to_decode: Vec<Job> = Vec::new();
+        // Serve cache hits immediately; keep the misses for the backend.
+        let mut to_resolve: Vec<Job> = Vec::new();
         for job in pending {
             let key = Key::new(&job.req.workload, job.req.batch, job.req.mem_cond_mb);
             if let Some(hit) = cache.get(&key) {
@@ -220,28 +292,24 @@ fn service_loop(
                     latency,
                 }));
             } else {
-                to_decode.push(job);
+                to_resolve.push(job);
             }
         }
-        if to_decode.is_empty() {
+        if to_resolve.is_empty() {
             if stop_after {
                 return;
             }
             continue;
         }
 
-        // Build envs; reject unknown workloads without poisoning the batch.
-        let mut envs: Vec<FusionEnv> = Vec::new();
+        // Resolve workloads; reject unknown ones without poisoning the
+        // batch (shared by both backends).
+        let mut workloads: Vec<Workload> = Vec::new();
         let mut jobs: Vec<Job> = Vec::new();
-        for job in to_decode {
+        for job in to_resolve {
             match zoo::by_name(&job.req.workload) {
                 Some(w) => {
-                    envs.push(FusionEnv::new(
-                        w,
-                        job.req.batch,
-                        job.req.hw,
-                        job.req.mem_cond_mb,
-                    ));
+                    workloads.push(w);
                     jobs.push(job);
                 }
                 None => {
@@ -252,54 +320,103 @@ fn service_loop(
                 }
             }
         }
-        if envs.is_empty() {
+        if jobs.is_empty() {
             if stop_after {
                 return;
             }
             continue;
         }
 
-        let env_refs: Vec<&FusionEnv> = envs.iter().collect();
-        match model.infer_batch(&rt, &env_refs) {
-            Ok(trajs) => {
-                {
-                    let mut m = metrics.lock().expect("metrics");
-                    m.record_batch(jobs.len());
-                }
-                for (job, traj) in jobs.into_iter().zip(trajs) {
-                    let latency = job.enqueued.elapsed();
-                    let resp = MapResponse {
-                        act_usage_mb: traj.peak_act_bytes as f64 / (1024.0 * 1024.0),
-                        speedup: traj.speedup,
-                        valid: traj.valid,
-                        strategy: traj.strategy,
-                        source: Source::Model,
-                        latency,
-                    };
-                    cache.put(
-                        Key::new(&job.req.workload, job.req.batch, job.req.mem_cond_mb),
-                        Entry {
-                            strategy: resp.strategy.clone(),
-                            speedup: resp.speedup,
-                            act_usage_mb: resp.act_usage_mb,
-                            valid: resp.valid,
-                        },
-                    );
-                    let mut m = metrics.lock().expect("metrics");
-                    m.requests += 1;
-                    m.latency.record(latency);
-                    if !resp.valid {
-                        m.invalid_responses += 1;
+        match &backend {
+            Backend::Model { rt, model } => {
+                let envs: Vec<FusionEnv> = workloads
+                    .iter()
+                    .zip(&jobs)
+                    .map(|(w, job)| {
+                        FusionEnv::new(
+                            w.clone(),
+                            job.req.batch,
+                            job.req.hw,
+                            job.req.mem_cond_mb,
+                        )
+                    })
+                    .collect();
+                let env_refs: Vec<&FusionEnv> = envs.iter().collect();
+                match model.infer_batch(rt, &env_refs) {
+                    Ok(trajs) => {
+                        metrics.lock().expect("metrics").record_batch(jobs.len());
+                        for (job, traj) in jobs.into_iter().zip(trajs) {
+                            respond(
+                                &metrics,
+                                &mut cache,
+                                job,
+                                traj.strategy,
+                                traj.speedup,
+                                traj.peak_act_bytes as f64 / MB,
+                                traj.valid,
+                                Source::Model,
+                            );
+                        }
                     }
-                    drop(m);
-                    let _ = job.reply.send(Ok(resp));
+                    Err(e) => {
+                        let msg = format!("inference failed: {e:#}");
+                        for job in jobs {
+                            metrics.lock().expect("metrics").requests += 1;
+                            let _ = job.reply.send(Err(msg.clone()));
+                        }
+                    }
                 }
             }
-            Err(e) => {
-                let msg = format!("inference failed: {e:#}");
-                for job in jobs {
-                    metrics.lock().expect("metrics").requests += 1;
-                    let _ = job.reply.send(Err(msg.clone()));
+            Backend::Search { budget, seed } => {
+                // One teacher search per request, fanned out over the
+                // shared pool (the searches themselves run on the
+                // incremental cost engine; nested batch evaluation inside
+                // a pool worker stays serial by design).
+                let (budget, base_seed) = (*budget, *seed);
+                let tasks: Vec<Box<dyn FnOnce() -> (Strategy, f64, f64, bool) + Send>> =
+                    workloads
+                        .iter()
+                        .zip(&jobs)
+                        .map(|(w, job)| {
+                            let w = w.clone();
+                            let req = job.req.clone();
+                            Box::new(move || {
+                                let prob = FusionProblem::new(
+                                    &w,
+                                    req.batch,
+                                    req.hw,
+                                    req.mem_cond_mb,
+                                );
+                                let sd = request_seed(
+                                    base_seed,
+                                    &req.workload,
+                                    req.batch,
+                                    req.mem_cond_mb,
+                                );
+                                let r = GSampler::default().run(
+                                    &prob,
+                                    budget,
+                                    &mut Rng::seed_from_u64(sd),
+                                );
+                                (
+                                    r.best,
+                                    r.best_eval.speedup,
+                                    r.act_usage_mb(),
+                                    r.best_eval.valid,
+                                )
+                            })
+                                as Box<dyn FnOnce() -> (Strategy, f64, f64, bool) + Send>
+                        })
+                        .collect();
+                let results = ThreadPool::shared().run_batch(tasks);
+                metrics.lock().expect("metrics").record_batch(jobs.len());
+                for (job, (strategy, speedup, act_mb, valid)) in
+                    jobs.into_iter().zip(results)
+                {
+                    respond(
+                        &metrics, &mut cache, job, strategy, speedup, act_mb, valid,
+                        Source::Search,
+                    );
                 }
             }
         }
@@ -309,5 +426,45 @@ fn service_loop(
     }
 }
 
+/// Cache, meter and answer one resolved request.
+#[allow(clippy::too_many_arguments)]
+fn respond(
+    metrics: &Arc<Mutex<Metrics>>,
+    cache: &mut MappingCache,
+    job: Job,
+    strategy: Strategy,
+    speedup: f64,
+    act_usage_mb: f64,
+    valid: bool,
+    source: Source,
+) {
+    let latency = job.enqueued.elapsed();
+    let resp = MapResponse {
+        strategy: strategy.clone(),
+        speedup,
+        act_usage_mb,
+        valid,
+        source,
+        latency,
+    };
+    cache.put(
+        Key::new(&job.req.workload, job.req.batch, job.req.mem_cond_mb),
+        Entry {
+            strategy,
+            speedup,
+            act_usage_mb,
+            valid,
+        },
+    );
+    let mut m = metrics.lock().expect("metrics");
+    m.requests += 1;
+    m.latency.record(latency);
+    if !valid {
+        m.invalid_responses += 1;
+    }
+    drop(m);
+    let _ = job.reply.send(Ok(resp));
+}
+
 // Integration tests (spawn against built artifacts, concurrency, batching,
-// caching) live in rust/tests/coordinator_integration.rs.
+// caching, search fallback) live in rust/tests/coordinator_integration.rs.

@@ -1,0 +1,776 @@
+//! The cost engine: one shared group walk, O(1) prefix-sum group terms,
+//! incremental single-slot re-costing, and deterministic batch-parallel
+//! evaluation (DESIGN.md §Cost engine).
+//!
+//! Strategy evaluation is the hottest path in the repo — every search
+//! mapper, the RL environment, teacher-dataset generation and the serving
+//! fallback all funnel through it. Before this module the group-boundary /
+//! micro-batch walk existed in four divergent copies (`latency_of`,
+//! `worst_group`, `evaluate`, `simref`) and every evaluation re-walked the
+//! whole layer chain. The engine unifies them:
+//!
+//! - [`Groups`] — the single group-decomposition iterator everything
+//!   consumes (including [`super::simref`] and [`crate::fusion::Strategy`]);
+//! - [`CostEngine::group_cost`] — the one per-group coster. Compute,
+//!   on-chip-traffic and weight terms come from prefix sums in O(1); only
+//!   the micro-batch-dependent staging/fill terms touch the group's slots;
+//! - [`IncrementalEval`] — given a single-slot mutation (the inner move of
+//!   stdGA/DE/PSO repair and of G-Sampler's domain repair, and the
+//!   env's episode step), re-costs only the affected group(s) — splitting
+//!   or merging at a SYNC boundary — and maintains exact totals. In debug
+//!   builds every mutation is checked against a full re-evaluation;
+//! - [`BatchEval`] — fans a population over the shared
+//!   [`ThreadPool`](crate::util::pool::ThreadPool) with results in input
+//!   order, bit-identical to serial evaluation;
+//! - [`reference`] — the pre-refactor full-walk implementation, kept as
+//!   the property-test oracle and the perf-bench baseline.
+
+use std::sync::Arc;
+
+use crate::fusion::{Strategy, SYNC};
+use crate::util::pool::ThreadPool;
+
+use super::CostModel;
+
+/// Iterator over the fused groups of a strategy value vector: yields
+/// 1-based inclusive layer ranges `(start, end)`. A group ends at a SYNC
+/// slot or at layer N. This is the single group-walk every consumer
+/// (engine, report builder, simulator, `Strategy::groups`) shares.
+pub struct Groups<'a> {
+    values: &'a [i32],
+    n: usize,
+    start: usize,
+}
+
+impl<'a> Groups<'a> {
+    pub fn new(values: &'a [i32]) -> Groups<'a> {
+        Groups {
+            values,
+            n: values.len().saturating_sub(1),
+            start: 1,
+        }
+    }
+}
+
+impl Iterator for Groups<'_> {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        if self.start > self.n {
+            return None;
+        }
+        let i = self.start;
+        let mut l = i;
+        while l < self.n && self.values[l] != SYNC {
+            l += 1;
+        }
+        self.start = l + 1;
+        Some((i, l))
+    }
+}
+
+/// Cost terms of one fused group (the engine's cached unit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupCostTerms {
+    /// 1-based inclusive layer range.
+    pub start: usize,
+    pub end: usize,
+    pub latency_s: f64,
+    pub compute_s: f64,
+    pub fill_s: f64,
+    pub mem_bytes: f64,
+    pub act_bytes: f64,
+    pub offchip_bytes: f64,
+}
+
+/// Full-strategy evaluation in one pass — everything the search stack
+/// needs (latency, validity, peak memory AND peak activation staging), so
+/// no caller ever pays a second walk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StrategyCost {
+    pub latency_s: f64,
+    pub peak_mem_bytes: u64,
+    pub peak_act_bytes: u64,
+    pub offchip_bytes: u64,
+    pub valid: bool,
+}
+
+/// Borrowing facade over a [`CostModel`]: the one place group costs are
+/// computed.
+pub struct CostEngine<'m> {
+    m: &'m CostModel,
+}
+
+impl<'m> CostEngine<'m> {
+    pub fn new(m: &'m CostModel) -> CostEngine<'m> {
+        CostEngine { m }
+    }
+
+    /// Cost one group `[i..=j]` of `values`. The compute / on-chip /
+    /// weight sums are O(1) prefix-sum lookups; only the micro-batch
+    /// dependent staging and pipeline-fill terms visit the group's slots.
+    pub fn group_cost(&self, values: &[i32], i: usize, j: usize) -> GroupCostTerms {
+        let m = self.m;
+        let b = m.batch as f64;
+        let peak_macs = m.hw.peak_macs();
+        let multi = j > i;
+
+        // O(1) range sums over the per-layer caches.
+        let comp = b * (m.p_macs[j] - m.p_macs[i - 1]);
+        let on = b * (m.p_io[j] - m.p_io[i - 1]);
+        let weights = m.p_w[j] - m.p_w[i - 1];
+
+        // Staged outputs: every non-tail, non-SYNC slot holds mb samples.
+        let mut staged_act = 0.0;
+        for g in i..j {
+            let mb = values[g];
+            if mb != SYNC {
+                staged_act += m.out_b[g] * mb as f64;
+            }
+        }
+        // Pipeline fill + PE-array invocations (micro-batch waves) only
+        // exist in multi-layer groups; single-layer groups configure once.
+        let (fill, invocations) = if multi {
+            let mut fill = 0.0;
+            let mut inv = 0.0;
+            for g in i..=j {
+                let mb = values[g];
+                let mb_eff = if mb == SYNC { 1.0 } else { mb as f64 };
+                fill += mb_eff * m.macs[g];
+                inv += (b / mb_eff).ceil();
+            }
+            (fill, inv)
+        } else {
+            (0.0, 1.0)
+        };
+
+        // Input staging: group 0 streams at mB_0; later groups re-stream
+        // the previous sync output at their head layer's micro-batch.
+        let head_mb = if i == 1 {
+            values[0] as f64
+        } else if values[i] != SYNC {
+            values[i] as f64
+        } else {
+            1.0
+        };
+        let tail_mb = if values[j] != SYNC { values[j] as f64 } else { 1.0 };
+
+        let act = m.in_b[i] * head_mb + staged_act + m.out_b[j] * tail_mb;
+        let mem = act + weights;
+        let off = b * m.in_b[i] + b * m.out_b[j] + weights;
+        let compute_s = comp / peak_macs;
+        let fill_s = fill / peak_macs;
+        let latency_s = compute_s.max(off / m.hw.bw_off).max(on / m.hw.bw_on)
+            + fill_s
+            + invocations * m.hw.t_switch_s;
+
+        GroupCostTerms {
+            start: i,
+            end: j,
+            latency_s,
+            compute_s,
+            fill_s,
+            mem_bytes: mem,
+            act_bytes: act,
+            offchip_bytes: off,
+        }
+    }
+
+    /// Evaluate a whole strategy in one group walk.
+    pub fn cost_of(&self, values: &[i32]) -> StrategyCost {
+        let buf = self.m.hw.buffer_bytes as f64;
+        let mut lat = 0.0;
+        let mut peak_mem = 0.0f64;
+        let mut peak_act = 0.0f64;
+        let mut off = 0.0;
+        let mut valid = true;
+        for (i, j) in Groups::new(values) {
+            let g = self.group_cost(values, i, j);
+            lat += g.latency_s;
+            peak_mem = peak_mem.max(g.mem_bytes);
+            peak_act = peak_act.max(g.act_bytes);
+            off += g.offchip_bytes;
+            if g.mem_bytes > buf {
+                valid = false;
+            }
+        }
+        StrategyCost {
+            latency_s: lat,
+            peak_mem_bytes: peak_mem as u64,
+            peak_act_bytes: peak_act as u64,
+            offchip_bytes: off as u64,
+            valid,
+        }
+    }
+
+    /// The group with the largest on-chip memory demand (repair target).
+    pub fn worst_group(&self, values: &[i32]) -> (usize, usize, u64) {
+        let mut worst = (1usize, 1usize, 0u64);
+        for (i, j) in Groups::new(values) {
+            let mem = self.group_cost(values, i, j).mem_bytes as u64;
+            if mem > worst.2 {
+                worst = (i, j, mem);
+            }
+        }
+        worst
+    }
+
+    /// Start an incremental evaluation session seeded with `values`.
+    pub fn incremental(&self, values: &[i32]) -> IncrementalEval<'m> {
+        IncrementalEval::new(self.m, values)
+    }
+}
+
+/// Incrementally maintained evaluation of one strategy under single-slot
+/// mutations. A mutation re-costs only the group containing the slot —
+/// splitting it when a SYNC boundary appears, merging with the successor
+/// when one disappears — then refreshes the totals in O(#groups).
+///
+/// In debug builds every [`set`](IncrementalEval::set) is asserted
+/// against a full re-evaluation, so any divergence fails fast in
+/// `cargo test` and the property suite.
+pub struct IncrementalEval<'m> {
+    m: &'m CostModel,
+    values: Vec<i32>,
+    groups: Vec<GroupCostTerms>,
+    latency_s: f64,
+    peak_mem: f64,
+    peak_act: f64,
+    offchip: f64,
+    valid: bool,
+}
+
+impl<'m> IncrementalEval<'m> {
+    pub fn new(m: &'m CostModel, values: &[i32]) -> IncrementalEval<'m> {
+        let engine = CostEngine::new(m);
+        let groups: Vec<GroupCostTerms> = Groups::new(values)
+            .map(|(i, j)| engine.group_cost(values, i, j))
+            .collect();
+        let mut inc = IncrementalEval {
+            m,
+            values: values.to_vec(),
+            groups,
+            latency_s: 0.0,
+            peak_mem: 0.0,
+            peak_act: 0.0,
+            offchip: 0.0,
+            valid: true,
+        };
+        inc.refresh_totals();
+        inc
+    }
+
+    pub fn values(&self) -> &[i32] {
+        &self.values
+    }
+
+    pub fn into_values(self) -> Vec<i32> {
+        self.values
+    }
+
+    pub fn latency_s(&self) -> f64 {
+        self.latency_s
+    }
+
+    pub fn peak_mem_bytes(&self) -> u64 {
+        self.peak_mem as u64
+    }
+
+    pub fn peak_act_bytes(&self) -> u64 {
+        self.peak_act as u64
+    }
+
+    pub fn valid(&self) -> bool {
+        self.valid
+    }
+
+    /// Snapshot matching [`CostEngine::cost_of`] exactly.
+    pub fn cost(&self) -> StrategyCost {
+        StrategyCost {
+            latency_s: self.latency_s,
+            peak_mem_bytes: self.peak_mem as u64,
+            peak_act_bytes: self.peak_act as u64,
+            offchip_bytes: self.offchip as u64,
+            valid: self.valid,
+        }
+    }
+
+    /// Worst-memory group from the cached per-group terms (no re-walk).
+    /// Tie-breaking matches the full-walk scan: first strictly-greater
+    /// group wins.
+    pub fn worst_group(&self) -> (usize, usize, u64) {
+        let mut worst = (1usize, 1usize, 0u64);
+        for g in &self.groups {
+            let mem = g.mem_bytes as u64;
+            if mem > worst.2 {
+                worst = (g.start, g.end, mem);
+            }
+        }
+        worst
+    }
+
+    fn group_index(&self, slot: usize) -> usize {
+        debug_assert!(slot >= 1);
+        self.groups
+            .iter()
+            .position(|g| g.start <= slot && slot <= g.end)
+            .expect("slot outside every group")
+    }
+
+    /// Mutate one slot and re-cost only the affected group(s). Returns the
+    /// latency delta (new − old).
+    pub fn set(&mut self, slot: usize, v: i32) -> f64 {
+        let n = self.values.len() - 1;
+        assert!(slot <= n, "slot {slot} out of range (n = {n})");
+        let old = self.values[slot];
+        if old == v {
+            return 0.0;
+        }
+        assert!(slot > 0 || v != SYNC, "slot 0 (mB_0) cannot be SYNC");
+        let before = self.latency_s;
+        self.values[slot] = v;
+        let engine = CostEngine::new(self.m);
+        if self.groups.is_empty() {
+            // Zero-layer strategy: nothing to cost.
+            return 0.0;
+        }
+        if slot == 0 {
+            // mB_0 only changes the first group's input staging.
+            let (i, j) = (self.groups[0].start, self.groups[0].end);
+            self.groups[0] = engine.group_cost(&self.values, i, j);
+        } else if slot == n || (old != SYNC && v != SYNC) {
+            // Boundary structure unchanged (layer N always ends a group;
+            // value→value keeps interior slots interior).
+            let gi = self.group_index(slot);
+            let (i, j) = (self.groups[gi].start, self.groups[gi].end);
+            self.groups[gi] = engine.group_cost(&self.values, i, j);
+        } else if v == SYNC {
+            // A new boundary: split the group at `slot`.
+            let gi = self.group_index(slot);
+            let (i, j) = (self.groups[gi].start, self.groups[gi].end);
+            debug_assert!(slot < j);
+            self.groups[gi] = engine.group_cost(&self.values, i, slot);
+            let right = engine.group_cost(&self.values, slot + 1, j);
+            self.groups.insert(gi + 1, right);
+        } else {
+            // A boundary disappeared: merge with the successor group.
+            let gi = self.group_index(slot);
+            debug_assert_eq!(self.groups[gi].end, slot);
+            let i = self.groups[gi].start;
+            let j = self.groups[gi + 1].end;
+            self.groups[gi] = engine.group_cost(&self.values, i, j);
+            self.groups.remove(gi + 1);
+        }
+        self.refresh_totals();
+        #[cfg(debug_assertions)]
+        self.assert_matches_full();
+        self.latency_s - before
+    }
+
+    /// Re-derive the scalar totals from the cached group terms. Runs in
+    /// O(#groups) and accumulates in group order, which makes the totals
+    /// bit-identical to a fresh [`CostEngine::cost_of`] walk.
+    fn refresh_totals(&mut self) {
+        let buf = self.m.hw.buffer_bytes as f64;
+        let mut lat = 0.0;
+        let mut pm = 0.0f64;
+        let mut pa = 0.0f64;
+        let mut off = 0.0;
+        let mut valid = true;
+        for g in &self.groups {
+            lat += g.latency_s;
+            pm = pm.max(g.mem_bytes);
+            pa = pa.max(g.act_bytes);
+            off += g.offchip_bytes;
+            if g.mem_bytes > buf {
+                valid = false;
+            }
+        }
+        self.latency_s = lat;
+        self.peak_mem = pm;
+        self.peak_act = pa;
+        self.offchip = off;
+        self.valid = valid;
+    }
+
+    #[cfg(debug_assertions)]
+    fn assert_matches_full(&self) {
+        let full = CostEngine::new(self.m).cost_of(&self.values);
+        let rel = (self.latency_s - full.latency_s).abs() / full.latency_s.max(1e-300);
+        debug_assert!(
+            rel < 1e-9,
+            "incremental latency {} vs full {} (rel {rel})",
+            self.latency_s,
+            full.latency_s
+        );
+        debug_assert_eq!(self.peak_mem_bytes(), full.peak_mem_bytes);
+        debug_assert_eq!(self.peak_act_bytes(), full.peak_act_bytes);
+        debug_assert_eq!(self.valid, full.valid);
+    }
+}
+
+/// Deterministic batch-parallel strategy evaluation over the shared
+/// process pool. Results are returned in input order and are bit-identical
+/// to serial evaluation (same [`CostEngine::cost_of`] per strategy).
+///
+/// Small batches stay serial: per-strategy evaluation is tens of
+/// nanoseconds, so fan-out only pays for itself once the batch carries
+/// real work. Calls made from inside a pool worker also stay serial to
+/// rule out pool-starvation deadlocks when coarse-grained jobs (teacher
+/// searches, serving fallback) are themselves running on the pool.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchEval {
+    /// Minimum total work (strategies × slots) before fanning out.
+    pub min_parallel_work: usize,
+}
+
+impl Default for BatchEval {
+    fn default() -> Self {
+        BatchEval {
+            min_parallel_work: 16_384,
+        }
+    }
+}
+
+impl BatchEval {
+    /// A batch evaluator that always takes the parallel path when the pool
+    /// has more than one worker (property tests exercise this).
+    pub fn force_parallel() -> Self {
+        BatchEval {
+            min_parallel_work: 0,
+        }
+    }
+
+    /// Evaluate `pop` against `model`; `out[k]` corresponds to `pop[k]`.
+    pub fn eval(&self, model: &CostModel, pop: &[Strategy]) -> Vec<StrategyCost> {
+        let pool = ThreadPool::shared();
+        let work = pop.len() * (model.n_layers() + 1);
+        if pop.len() < 2
+            || work < self.min_parallel_work
+            || pool.size() < 2
+            || ThreadPool::on_pool_worker()
+        {
+            let engine = model.engine();
+            return pop.iter().map(|s| engine.cost_of(&s.values)).collect();
+        }
+        let model = Arc::new(model.clone());
+        let pop: Arc<Vec<Strategy>> = Arc::new(pop.to_vec());
+        let chunk = pop.len().div_ceil(pool.size() * 4).max(16);
+        let mut jobs: Vec<Box<dyn FnOnce() -> Vec<StrategyCost> + Send + 'static>> = Vec::new();
+        let mut start = 0;
+        while start < pop.len() {
+            let end = (start + chunk).min(pop.len());
+            let m = Arc::clone(&model);
+            let p = Arc::clone(&pop);
+            jobs.push(Box::new(move || {
+                let engine = m.engine();
+                p[start..end].iter().map(|s| engine.cost_of(&s.values)).collect()
+            }));
+            start = end;
+        }
+        pool.run_batch(jobs).into_iter().flatten().collect()
+    }
+}
+
+/// The pre-refactor full-walk evaluation, preserved verbatim in behavior.
+///
+/// Two jobs: (1) the oracle the engine property tests compare against
+/// (`rust/tests/search_properties.rs`), and (2) the baseline
+/// `benches/perf.rs` measures eval throughput against — the seed's
+/// `eval_strategy` walked the whole chain once for latency and a second
+/// time (allocating a per-group report) for activation usage.
+pub mod reference {
+    use crate::fusion::{Strategy, SYNC};
+
+    use super::super::{CostModel, GroupCost};
+
+    /// Seed `CostModel::latency_of`: one full chain walk.
+    pub fn latency_of(m: &CostModel, s: &Strategy) -> (f64, u64, bool) {
+        let b = m.batch as f64;
+        let peak_macs = m.hw.peak_macs();
+        let buf = m.hw.buffer_bytes as f64;
+
+        let mut total = 0.0;
+        let mut peak_mem = 0.0f64;
+        let mut valid = true;
+
+        let n = m.n_layers();
+        let mut start = 1usize;
+        for l in 1..=n {
+            let is_end = s.values[l] == SYNC || l == n;
+            if !is_end {
+                continue;
+            }
+            let (i, j) = (start, l);
+            let multi = j > i;
+            let mut comp = 0.0;
+            let mut on = 0.0;
+            let mut weights = 0.0;
+            let mut staged_act = 0.0;
+            let mut fill = 0.0;
+            let mut invocations = 0.0;
+            for g in i..=j {
+                comp += b * m.macs[g];
+                on += b * (m.in_b[g] + m.out_b[g]);
+                weights += m.w_b[g];
+                let mb = s.values[g];
+                if mb != SYNC && g != j {
+                    staged_act += m.out_b[g] * mb as f64;
+                }
+                if multi {
+                    let mb_eff = if mb == SYNC { 1.0 } else { mb as f64 };
+                    fill += mb_eff * m.macs[g];
+                    invocations += (b / mb_eff).ceil();
+                } else {
+                    invocations += 1.0;
+                }
+            }
+            let head_mb = if i == 1 {
+                s.values[0] as f64
+            } else if s.values[i] != SYNC {
+                s.values[i] as f64
+            } else {
+                1.0
+            };
+            let in_staging = m.in_b[i] * head_mb;
+            let tail_mb = if s.values[j] != SYNC {
+                s.values[j] as f64
+            } else {
+                1.0
+            };
+            let out_staging = m.out_b[j] * tail_mb;
+
+            let act = in_staging + staged_act + out_staging;
+            let mem = act + weights;
+            let off = b * m.in_b[i] + b * m.out_b[j] + weights;
+
+            let comp_s = comp / peak_macs;
+            let fill_s = fill / peak_macs;
+            let lat = comp_s.max(off / m.hw.bw_off).max(on / m.hw.bw_on)
+                + if multi { fill_s } else { 0.0 }
+                + invocations * m.hw.t_switch_s;
+
+            total += lat;
+            peak_mem = peak_mem.max(mem);
+            if mem > buf {
+                valid = false;
+            }
+            start = l + 1;
+        }
+        (total, peak_mem as u64, valid)
+    }
+
+    /// Seed act-usage readback: the second, allocating report walk the
+    /// pre-refactor `eval_strategy` paid per evaluation.
+    pub fn peak_act_of(m: &CostModel, s: &Strategy) -> u64 {
+        let b = m.batch as f64;
+        let peak_macs = m.hw.peak_macs();
+        let mut groups: Vec<GroupCost> = Vec::new();
+        let mut peak_act = 0.0f64;
+        for &(i, j) in &s.groups() {
+            let multi = j > i;
+            let mut comp = 0.0;
+            let mut weights = 0.0;
+            let mut staged_act = 0.0;
+            let mut fill = 0.0;
+            for g in i..=j {
+                comp += b * m.macs[g];
+                weights += m.w_b[g];
+                let mb = s.values[g];
+                if mb != SYNC && g != j {
+                    staged_act += m.out_b[g] * mb as f64;
+                }
+                if multi {
+                    let mb_eff = if mb == SYNC { 1.0 } else { mb as f64 };
+                    fill += mb_eff * m.macs[g];
+                }
+            }
+            let head_mb = if i == 1 {
+                s.values[0] as f64
+            } else if s.values[i] != SYNC {
+                s.values[i] as f64
+            } else {
+                1.0
+            };
+            let tail_mb = if s.values[j] != SYNC {
+                s.values[j] as f64
+            } else {
+                1.0
+            };
+            let act = m.in_b[i] * head_mb + staged_act + m.out_b[j] * tail_mb;
+            peak_act = peak_act.max(act);
+            groups.push(GroupCost {
+                range: (i, j),
+                latency_s: 0.0,
+                mem_bytes: (act + weights) as u64,
+                act_bytes: act as u64,
+                offchip_bytes: (b * m.in_b[i] + b * m.out_b[j] + weights) as u64,
+                compute_s: comp / peak_macs,
+                fill_s: if multi { fill / peak_macs } else { 0.0 },
+            });
+        }
+        std::hint::black_box(&groups);
+        peak_act as u64
+    }
+
+    /// The seed `FusionProblem::eval_strategy` evaluation pattern:
+    /// `(latency, peak_mem, peak_act, valid)` via two full walks.
+    pub fn eval_strategy(m: &CostModel, s: &Strategy) -> (f64, u64, u64, bool) {
+        let (lat, mem, valid) = latency_of(m, s);
+        let act = peak_act_of(m, s);
+        (lat, mem, act, valid)
+    }
+
+    /// Seed `CostModel::worst_group`: a second full chain walk.
+    pub fn worst_group(m: &CostModel, s: &Strategy) -> (usize, usize, u64) {
+        let mut worst = (1usize, 1usize, 0u64);
+        let n = m.n_layers();
+        let mut start = 1usize;
+        for l in 1..=n {
+            let is_end = s.values[l] == SYNC || l == n;
+            if !is_end {
+                continue;
+            }
+            let (i, j) = (start, l);
+            let mut weights = 0.0;
+            let mut staged_act = 0.0;
+            for g in i..=j {
+                weights += m.w_b[g];
+                let mb = s.values[g];
+                if mb != SYNC && g != j {
+                    staged_act += m.out_b[g] * mb as f64;
+                }
+            }
+            let head_mb = if i == 1 {
+                s.values[0] as f64
+            } else if s.values[i] != SYNC {
+                s.values[i] as f64
+            } else {
+                1.0
+            };
+            let tail_mb = if s.values[j] != SYNC {
+                s.values[j] as f64
+            } else {
+                1.0
+            };
+            let mem =
+                (m.in_b[i] * head_mb + staged_act + m.out_b[j] * tail_mb + weights) as u64;
+            if mem > worst.2 {
+                worst = (i, j, mem);
+            }
+            start = l + 1;
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::util::rng::Rng;
+    use crate::workload::zoo;
+
+    fn model() -> CostModel {
+        CostModel::new(&zoo::vgg16(), 64, HwConfig::paper().with_buffer_mb(20.0))
+    }
+
+    fn random_strategy(rng: &mut Rng, n_slots: usize, batch: usize) -> Strategy {
+        let mut values = Vec::with_capacity(n_slots);
+        values.push(1 + rng.index(batch) as i32);
+        for _ in 1..n_slots {
+            values.push(if rng.chance(0.35) {
+                SYNC
+            } else {
+                1 + rng.index(batch) as i32
+            });
+        }
+        Strategy::new(values)
+    }
+
+    #[test]
+    fn groups_iterator_matches_strategy_groups() {
+        let s = Strategy::new(vec![8, 4, 4, SYNC, 2, 2]);
+        let it: Vec<(usize, usize)> = Groups::new(&s.values).collect();
+        assert_eq!(it, vec![(1, 3), (4, 5)]);
+        let nf = Strategy::no_fusion(4);
+        let it: Vec<(usize, usize)> = Groups::new(&nf.values).collect();
+        assert_eq!(it, vec![(1, 1), (2, 2), (3, 3), (4, 4)]);
+    }
+
+    #[test]
+    fn engine_matches_reference_full_walk() {
+        let m = model();
+        let mut rng = Rng::seed_from_u64(21);
+        for _ in 0..300 {
+            let s = random_strategy(&mut rng, m.n_layers() + 1, 64);
+            let fast = m.engine().cost_of(&s.values);
+            let (lat, mem, valid) = reference::latency_of(&m, &s);
+            let act = reference::peak_act_of(&m, &s);
+            let rel = (fast.latency_s - lat).abs() / lat.max(1e-300);
+            assert!(rel < 1e-9, "latency {} vs {}", fast.latency_s, lat);
+            assert_eq!(fast.peak_mem_bytes, mem, "{}", s.display());
+            assert_eq!(fast.peak_act_bytes, act, "{}", s.display());
+            assert_eq!(fast.valid, valid, "{}", s.display());
+        }
+    }
+
+    #[test]
+    fn incremental_tracks_mutations() {
+        let m = model();
+        let mut rng = Rng::seed_from_u64(7);
+        let s = random_strategy(&mut rng, m.n_layers() + 1, 64);
+        let mut inc = m.engine().incremental(&s.values);
+        for _ in 0..200 {
+            let slot = rng.index(m.n_layers() + 1);
+            let v = if slot > 0 && rng.chance(0.3) {
+                SYNC
+            } else {
+                1 + rng.index(64) as i32
+            };
+            inc.set(slot, v);
+            // The internal debug assertion already compares against a full
+            // re-evaluation; re-check the public accessors here too.
+            let full = m.engine().cost_of(inc.values());
+            assert_eq!(inc.cost(), full);
+        }
+    }
+
+    #[test]
+    fn incremental_worst_group_matches_reference() {
+        let m = model();
+        let mut rng = Rng::seed_from_u64(9);
+        for _ in 0..200 {
+            let s = random_strategy(&mut rng, m.n_layers() + 1, 64);
+            let inc = m.engine().incremental(&s.values);
+            assert_eq!(inc.worst_group(), reference::worst_group(&m, &s));
+            assert_eq!(m.engine().worst_group(&s.values), reference::worst_group(&m, &s));
+        }
+    }
+
+    #[test]
+    fn batch_eval_matches_serial_in_order() {
+        let m = model();
+        let mut rng = Rng::seed_from_u64(3);
+        let pop: Vec<Strategy> = (0..500)
+            .map(|_| random_strategy(&mut rng, m.n_layers() + 1, 64))
+            .collect();
+        let serial: Vec<StrategyCost> =
+            pop.iter().map(|s| m.engine().cost_of(&s.values)).collect();
+        let par = BatchEval::force_parallel().eval(&m, &pop);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn incremental_latency_delta_is_consistent() {
+        let m = model();
+        let s = Strategy::no_fusion(m.n_layers());
+        let mut inc = m.engine().incremental(&s.values);
+        let before = inc.latency_s();
+        let delta = inc.set(2, 4); // un-sync slot 2: merges two groups
+        assert!((inc.latency_s() - (before + delta)).abs() <= 1e-12 * inc.latency_s());
+        let back = inc.set(2, SYNC); // split again
+        assert!((inc.latency_s() - before).abs() <= 1e-9 * before.max(1e-300));
+        assert!((delta + back).abs() <= 1e-9 * before.max(1e-300));
+    }
+}

@@ -24,11 +24,20 @@
 //!
 //! Validated against a discrete-event reference simulator ([`simref`]) in
 //! `rust/tests/cost_validation.rs`.
+//!
+//! Evaluation itself lives in the [`engine`]: one shared group walk
+//! ([`engine::Groups`]), O(1) prefix-sum group terms, incremental
+//! single-slot re-costing ([`engine::IncrementalEval`]) and deterministic
+//! batch-parallel evaluation ([`engine::BatchEval`]). The methods on
+//! [`CostModel`] are thin facades over it.
 
+pub mod engine;
 pub mod simref;
 
 use crate::fusion::{Strategy, SYNC};
 use crate::workload::Workload;
+
+use engine::{CostEngine, Groups, StrategyCost};
 
 /// Accelerator configuration (paper §5.1 defaults via [`HwConfig::paper`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -146,6 +155,11 @@ pub struct CostModel {
     in_b: Vec<f64>,
     out_b: Vec<f64>,
     w_b: Vec<f64>,
+    // Prefix sums (p[k] = Σ_{1..=k}) so any group's compute / on-chip /
+    // weight terms are O(1) range lookups in the engine.
+    p_macs: Vec<f64>,
+    p_io: Vec<f64>,
+    p_w: Vec<f64>,
     n: usize,
     baseline_s: f64,
 }
@@ -164,6 +178,14 @@ impl CostModel {
             out_b[i] = l.out_bytes() as f64;
             w_b[i] = l.w_bytes() as f64;
         }
+        let mut p_macs = vec![0.0; n + 1];
+        let mut p_io = vec![0.0; n + 1];
+        let mut p_w = vec![0.0; n + 1];
+        for i in 1..=n {
+            p_macs[i] = p_macs[i - 1] + macs[i];
+            p_io[i] = p_io[i - 1] + (in_b[i] + out_b[i]);
+            p_w[i] = p_w[i - 1] + w_b[i];
+        }
         let mut m = CostModel {
             hw,
             batch,
@@ -171,11 +193,26 @@ impl CostModel {
             in_b,
             out_b,
             w_b,
+            p_macs,
+            p_io,
+            p_w,
             n,
             baseline_s: 0.0,
         };
         m.baseline_s = m.latency_of(&Strategy::no_fusion(n)).0;
         m
+    }
+
+    /// The evaluation engine over this model.
+    pub fn engine(&self) -> CostEngine<'_> {
+        CostEngine::new(self)
+    }
+
+    /// One-pass full evaluation: latency, peak memory, peak activation
+    /// staging and validity from a single group walk.
+    pub fn cost_of(&self, s: &Strategy) -> StrategyCost {
+        debug_assert_eq!(s.values.len(), self.n + 1);
+        self.engine().cost_of(&s.values)
     }
 
     pub fn n_layers(&self) -> usize {
@@ -196,122 +233,19 @@ impl CostModel {
     /// Hot-path evaluation: returns `(latency_s, peak_mem_bytes, valid)`
     /// without allocating. Shape validity is the caller's contract (search
     /// operates on decoded, shape-legal strategies); memory validity is
-    /// checked here.
+    /// checked here. One engine group-walk; prefer [`CostModel::cost_of`]
+    /// when the activation peak is also needed.
     pub fn latency_of(&self, s: &Strategy) -> (f64, u64, bool) {
-        debug_assert_eq!(s.values.len(), self.n + 1);
-        let b = self.batch as f64;
-        let peak_macs = self.hw.peak_macs();
-        let buf = self.hw.buffer_bytes as f64;
-
-        let mut total = 0.0;
-        let mut peak_mem = 0.0f64;
-        let mut valid = true;
-
-        let mut start = 1usize;
-        for l in 1..=self.n {
-            let is_end = s.values[l] == SYNC || l == self.n;
-            if !is_end {
-                continue;
-            }
-            // Group [start..=l].
-            let (i, j) = (start, l);
-            let multi = j > i;
-            let mut comp = 0.0;
-            let mut on = 0.0;
-            let mut weights = 0.0;
-            let mut staged_act = 0.0;
-            let mut fill = 0.0;
-            let mut invocations = 0.0;
-            for g in i..=j {
-                comp += b * self.macs[g];
-                on += b * (self.in_b[g] + self.out_b[g]);
-                weights += self.w_b[g];
-                let mb = s.values[g];
-                if mb != SYNC && g != j {
-                    staged_act += self.out_b[g] * mb as f64;
-                }
-                if multi {
-                    let mb_eff = if mb == SYNC { 1.0 } else { mb as f64 };
-                    fill += mb_eff * self.macs[g];
-                    invocations += (b / mb_eff).ceil();
-                } else {
-                    invocations += 1.0; // layer-by-layer: configure once
-                }
-            }
-            // Input staging: group 0 uses mB_0; later groups re-stream the
-            // previous sync output in chunks matching their head layer's
-            // micro-batch (1 sample for pure layer-by-layer groups).
-            let head_mb = if i == 1 {
-                s.values[0] as f64
-            } else if s.values[i] != SYNC {
-                s.values[i] as f64
-            } else {
-                1.0
-            };
-            let in_staging = self.in_b[i] * head_mb;
-            // Stream-out buffer for the group tail: its staging chunk is its
-            // own entry when non-SYNC (e.g. a trailing value on layer N),
-            // else one sample.
-            let tail_mb = if s.values[j] != SYNC { s.values[j] as f64 } else { 1.0 };
-            let out_staging = self.out_b[j] * tail_mb;
-
-            let act = in_staging + staged_act + out_staging;
-            let mem = act + weights;
-            let off = b * self.in_b[i] + b * self.out_b[j] + weights;
-
-            let comp_s = comp / peak_macs;
-            let fill_s = fill / peak_macs;
-            let lat = comp_s.max(off / self.hw.bw_off).max(on / self.hw.bw_on)
-                + if multi { fill_s } else { 0.0 }
-                + invocations * self.hw.t_switch_s;
-
-            total += lat;
-            peak_mem = peak_mem.max(mem);
-            if mem > buf {
-                valid = false;
-            }
-            start = l + 1;
-        }
-        (total, peak_mem as u64, valid)
+        let c = self.cost_of(s);
+        (c.latency_s, c.peak_mem_bytes, c.valid)
     }
 
     /// Non-allocating scan for the group with the largest on-chip memory
-    /// demand: `(start, end, mem_bytes)`. This is the repair operator's
-    /// inner loop (perf pass: replaces a full `evaluate()` report — §Perf).
+    /// demand: `(start, end, mem_bytes)`. Repair operators that mutate
+    /// repeatedly should use [`engine::IncrementalEval::worst_group`]
+    /// instead, which reads the cached per-group terms.
     pub fn worst_group(&self, s: &Strategy) -> (usize, usize, u64) {
-        let mut worst = (1usize, 1usize, 0u64);
-        let mut start = 1usize;
-        for l in 1..=self.n {
-            let is_end = s.values[l] == SYNC || l == self.n;
-            if !is_end {
-                continue;
-            }
-            let (i, j) = (start, l);
-            let mut weights = 0.0;
-            let mut staged_act = 0.0;
-            for g in i..=j {
-                weights += self.w_b[g];
-                let mb = s.values[g];
-                if mb != SYNC && g != j {
-                    staged_act += self.out_b[g] * mb as f64;
-                }
-            }
-            let head_mb = if i == 1 {
-                s.values[0] as f64
-            } else if s.values[i] != SYNC {
-                s.values[i] as f64
-            } else {
-                1.0
-            };
-            let tail_mb = if s.values[j] != SYNC { s.values[j] as f64 } else { 1.0 };
-            let mem =
-                (self.in_b[i] * head_mb + staged_act + self.out_b[j] * tail_mb + weights) as u64;
-            if mem > worst.2 {
-                worst = (i, j, mem);
-            }
-            start = l + 1;
-        }
-        worst
+        self.engine().worst_group(&s.values)
     }
 
     /// Speedup over the no-fusion baseline (the paper's headline metric).
@@ -324,8 +258,6 @@ impl CostModel {
 
     /// Full report with per-group breakdown (allocates; not the hot path).
     pub fn evaluate(&self, s: &Strategy) -> CostReport {
-        let b = self.batch as f64;
-        let peak_macs = self.hw.peak_macs();
         let buf = self.hw.buffer_bytes as f64;
         let mut groups = Vec::new();
         let mut invalid_reason = None;
@@ -342,69 +274,30 @@ impl CostModel {
             };
         }
 
+        let engine = self.engine();
         let mut total = 0.0;
         let mut peak_mem = 0.0f64;
         let mut peak_act = 0.0f64;
         let mut off_total = 0.0;
-        for &(i, j) in &s.groups() {
-            let multi = j > i;
-            let mut comp = 0.0;
-            let mut on = 0.0;
-            let mut weights = 0.0;
-            let mut staged_act = 0.0;
-            let mut fill = 0.0;
-            let mut invocations = 0.0;
-            for g in i..=j {
-                comp += b * self.macs[g];
-                on += b * (self.in_b[g] + self.out_b[g]);
-                weights += self.w_b[g];
-                let mb = s.values[g];
-                if mb != SYNC && g != j {
-                    staged_act += self.out_b[g] * mb as f64;
-                }
-                if multi {
-                    let mb_eff = if mb == SYNC { 1.0 } else { mb as f64 };
-                    fill += mb_eff * self.macs[g];
-                    invocations += (b / mb_eff).ceil();
-                } else {
-                    invocations += 1.0;
-                }
-            }
-            let head_mb = if i == 1 {
-                s.values[0] as f64
-            } else if s.values[i] != SYNC {
-                s.values[i] as f64
-            } else {
-                1.0
-            };
-            let in_staging = self.in_b[i] * head_mb;
-            let tail_mb = if s.values[j] != SYNC { s.values[j] as f64 } else { 1.0 };
-            let out_staging = self.out_b[j] * tail_mb;
-            let act = in_staging + staged_act + out_staging;
-            let mem = act + weights;
-            let off = b * self.in_b[i] + b * self.out_b[j] + weights;
-            let comp_s = comp / peak_macs;
-            let fill_s = if multi { fill / peak_macs } else { 0.0 };
-            let lat = comp_s.max(off / self.hw.bw_off).max(on / self.hw.bw_on)
-                + fill_s
-                + invocations * self.hw.t_switch_s;
+        for (i, j) in Groups::new(&s.values) {
+            let g = engine.group_cost(&s.values, i, j);
             groups.push(GroupCost {
                 range: (i, j),
-                latency_s: lat,
-                mem_bytes: mem as u64,
-                act_bytes: act as u64,
-                offchip_bytes: off as u64,
-                compute_s: comp_s,
-                fill_s,
+                latency_s: g.latency_s,
+                mem_bytes: g.mem_bytes as u64,
+                act_bytes: g.act_bytes as u64,
+                offchip_bytes: g.offchip_bytes as u64,
+                compute_s: g.compute_s,
+                fill_s: g.fill_s,
             });
-            total += lat;
-            off_total += off;
-            peak_mem = peak_mem.max(mem);
-            peak_act = peak_act.max(act);
-            if mem > buf && invalid_reason.is_none() {
+            total += g.latency_s;
+            off_total += g.offchip_bytes;
+            peak_mem = peak_mem.max(g.mem_bytes);
+            peak_act = peak_act.max(g.act_bytes);
+            if g.mem_bytes > buf && invalid_reason.is_none() {
                 invalid_reason = Some(format!(
                     "group [{i}..{j}] needs {:.2} MB > buffer {:.2} MB",
-                    mem / MB,
+                    g.mem_bytes / MB,
                     buf / MB
                 ));
             }

@@ -15,6 +15,7 @@
 use crate::fusion::{Strategy, SYNC};
 use crate::workload::Workload;
 
+use super::engine::Groups;
 use super::HwConfig;
 
 /// Result of simulating one strategy.
@@ -33,7 +34,7 @@ pub fn simulate(w: &Workload, batch: usize, hw: &HwConfig, s: &Strategy) -> SimR
     let mut total = 0.0;
     let mut peak_mem = 0u64;
     let mut peak_act = 0u64;
-    for &(i, j) in &s.groups() {
+    for (i, j) in Groups::new(&s.values) {
         let g = simulate_group(w, batch, hw, s, i, j);
         total += g.makespan_s;
         peak_mem = peak_mem.max(g.peak_mem_bytes);

@@ -7,6 +7,7 @@
 //! performance of the partially-built strategy — all computed by the cost
 //! model, which is the same object the paper's Fig. 3 "environment" wraps.
 
+use crate::cost::engine::IncrementalEval;
 use crate::cost::{CostModel, HwConfig, MB};
 use crate::fusion::{ActionCodec, Strategy, SYNC};
 use crate::workload::Workload;
@@ -62,12 +63,21 @@ pub struct FusionEnv {
 }
 
 /// Episode state while stepping.
+///
+/// The partially-built strategy is tracked by an
+/// [`IncrementalEval`] session: each step re-costs only the group the
+/// decided slot lives in, so the per-step performance feature and the
+/// serving-path feasibility projection never re-walk the whole chain
+/// (the seed paid O(N) per step and O(N) per projection probe).
 pub struct Episode<'e> {
     env: &'e FusionEnv,
-    /// Strategy under construction; suffix defaults to SYNC.
+    /// Strategy under construction; suffix defaults to SYNC. Kept in
+    /// lock-step with `inc` by [`Episode::apply`] — mutate through the
+    /// step methods, not directly.
     pub values: Vec<i32>,
     pub t: usize,
     pub traj: Trajectory,
+    inc: IncrementalEval<'e>,
 }
 
 impl FusionEnv {
@@ -128,10 +138,16 @@ impl FusionEnv {
     /// State features for time-step t given the strategy prefix built so far
     /// (`values[0..t]` decided, suffix all-SYNC).
     pub fn state(&self, values: &[i32], t: usize) -> [f32; STATE_DIM] {
+        self.state_from_perf(t, self.perf_of_prefix(values, t))
+    }
+
+    /// Assemble the state vector from a pre-computed performance feature
+    /// (the episode fast path reads P from its incremental evaluation
+    /// instead of re-walking the prefix).
+    fn state_from_perf(&self, t: usize, perf: f32) -> [f32; STATE_DIM] {
         // Slot t decides layer max(t,1)'s entry; expose that layer's shape.
         let layer_idx = t.max(1) - 1;
         let shp = self.shape_feats[layer_idx.min(self.shape_feats.len() - 1)];
-        let p = self.perf_of_prefix(values, t);
         [
             shp[0],
             shp[1],
@@ -140,7 +156,7 @@ impl FusionEnv {
             shp[4],
             shp[5],
             self.rtg_token(),
-            p,
+            perf,
         ]
     }
 
@@ -163,6 +179,7 @@ impl FusionEnv {
         let n = self.workload.n_layers();
         let mut values = vec![SYNC; n + 1];
         values[0] = 1;
+        let inc = self.model.engine().incremental(&values);
         Episode {
             env: self,
             values,
@@ -176,16 +193,18 @@ impl FusionEnv {
                 peak_act_bytes: 0,
                 valid: false,
             },
+            inc,
         }
     }
 
-    /// Evaluate a finished strategy into trajectory tail fields.
+    /// Evaluate a finished strategy into trajectory tail fields (one
+    /// engine group-walk — latency, act usage and validity together).
     fn finish(&self, values: Vec<i32>, traj: &mut Trajectory) {
         let s = Strategy::new(values);
-        let rep = self.model.evaluate(&s);
-        traj.speedup = self.model.baseline_latency() / rep.latency_s;
-        traj.peak_act_bytes = rep.peak_act_bytes;
-        traj.valid = rep.valid;
+        let c = self.model.cost_of(&s);
+        traj.speedup = self.model.baseline_latency() / c.latency_s;
+        traj.peak_act_bytes = c.peak_act_bytes;
+        traj.valid = c.valid;
         traj.strategy = s;
     }
 
@@ -221,9 +240,12 @@ impl<'e> Episode<'e> {
         self.t >= self.env.steps()
     }
 
-    /// Current state features.
+    /// Current state features. The performance feature P comes straight
+    /// from the incremental evaluation of the prefix (no chain re-walk).
     pub fn observe(&self) -> [f32; STATE_DIM] {
-        self.env.state(&self.values[..], self.t)
+        let perf =
+            (self.env.model.baseline_latency() / self.inc.latency_s()) as f32;
+        self.env.state_from_perf(self.t, perf)
     }
 
     fn observe_into(&mut self) {
@@ -259,29 +281,31 @@ impl<'e> Episode<'e> {
         self.apply(a);
     }
 
+    /// Try one candidate action at the current slot against the
+    /// conditioned buffer: commit to the incremental evaluation (re-costs
+    /// only the affected group), read the peak, roll back.
+    fn candidate_fits(&mut self, cand: i32) -> bool {
+        let t = self.t;
+        let old = self.values[t];
+        self.inc.set(t, cand);
+        let ok = self.inc.peak_mem_bytes() as f64 <= self.env.model.hw.buffer_bytes as f64;
+        self.inc.set(t, old);
+        ok
+    }
+
     /// Largest feasible action ≤ the proposed one (by codec index), falling
-    /// back to SYNC (slot 0: micro-batch 1).
-    fn project(&self, a: i32) -> i32 {
-        let n = self.env.workload.n_layers();
-        let feasible = |cand: i32| -> bool {
-            let mut v = vec![SYNC; n + 1];
-            v[0] = 1;
-            v[..self.t].copy_from_slice(&self.values[..self.t]);
-            if v[0] == SYNC {
-                v[0] = 1;
-            }
-            v[self.t] = cand;
-            let (_, peak, _) = self.env.model.latency_of(&Strategy::new(v));
-            peak as f64 <= self.env.model.hw.buffer_bytes as f64
-        };
-        if feasible(a) {
+    /// back to SYNC (slot 0: micro-batch 1). Each probe is one incremental
+    /// group re-cost (the seed rebuilt and re-walked the whole prefix per
+    /// candidate).
+    fn project(&mut self, a: i32) -> i32 {
+        if self.candidate_fits(a) {
             return a;
         }
         let mut idx = self.env.codec.to_index(a);
         while idx > 1 {
             idx -= 1;
             let cand = self.env.codec.from_index(idx);
-            if feasible(cand) {
+            if self.candidate_fits(cand) {
                 return cand;
             }
         }
@@ -310,6 +334,7 @@ impl<'e> Episode<'e> {
     fn apply(&mut self, a: i32) {
         assert!(!self.done(), "episode already finished");
         self.values[self.t] = a;
+        self.inc.set(self.t, a);
         self.traj.actions.push(self.env.codec.encode(a));
         self.t += 1;
     }

@@ -54,30 +54,29 @@ impl Strategy {
         Ok(())
     }
 
-    /// Decompose into fused groups. Each group is a contiguous layer range
-    /// `[start, end]` (1-based layer indices into `values`; layer l has
-    /// entry `values[l]`). A group ends at a SYNC layer or at layer N.
+    /// Iterate the fused groups without allocating. Each group is a
+    /// contiguous layer range `(start, end)` (1-based layer indices into
+    /// `values`; layer l has entry `values[l]`). A group ends at a SYNC
+    /// layer or at layer N. This is the one group-walk shared with the
+    /// cost engine ([`crate::cost::engine::Groups`]).
+    pub fn group_iter(&self) -> crate::cost::engine::Groups<'_> {
+        crate::cost::engine::Groups::new(&self.values)
+    }
+
+    /// Decompose into fused groups (allocating convenience over
+    /// [`Strategy::group_iter`]).
     pub fn groups(&self) -> Vec<(usize, usize)> {
-        let n = self.values.len() - 1;
-        let mut out = Vec::new();
-        let mut start = 1;
-        for l in 1..=n {
-            if self.values[l] == SYNC || l == n {
-                out.push((start, l));
-                start = l + 1;
-            }
-        }
-        out
+        self.group_iter().collect()
     }
 
     /// Number of fused groups.
     pub fn n_groups(&self) -> usize {
-        self.groups().len()
+        self.group_iter().count()
     }
 
     /// True if at least two layers share a group (any actual fusion).
     pub fn has_fusion(&self) -> bool {
-        self.groups().iter().any(|&(s, e)| e > s)
+        self.group_iter().any(|(s, e)| e > s)
     }
 
     /// Compact display, e.g. `[42, -1, 30, 27, -1]` (Fig. 4 style).

@@ -123,25 +123,35 @@ fn cmd_collect(raw: &[String]) -> Result<()> {
     let out = PathBuf::from(p.req("out")?);
     let mut rng = Rng::seed_from_u64(p.get_u64("seed")?);
 
-    let mut buffer = ReplayBuffer::new(4096);
+    // Teacher searches are independent: fan them out over the shared
+    // thread pool via bench_support::teacher_runs (one job per (workload,
+    // condition, run); seeds forked in enumeration order, results in
+    // input order, so the dataset matches the serial loop exactly).
+    let mut jobs: Vec<(dnnfuser::workload::Workload, f64, Rng)> = Vec::new();
+    let mut labels: Vec<(String, f64, usize)> = Vec::new();
     for wname in p.req("workloads")?.split(',') {
         let w = zoo::by_name(wname.trim())
             .with_context(|| format!("unknown workload `{wname}`"))?;
         for &mem in &mems {
             for run in 0..runs {
-                let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
-                let r = GSampler::default().run(&prob, budget, &mut rng.fork());
-                let traj = prob.env.decorate(&r.best);
-                println!(
-                    "{wname:>14} mem={mem:>5.1}MB run={run} speedup={:.2} act={:.2}MB valid={} ({:.2}s)",
-                    traj.speedup,
-                    traj.peak_act_bytes as f64 / (1024.0 * 1024.0),
-                    traj.valid,
-                    r.wall_s
-                );
-                buffer.push(traj);
+                jobs.push((w.clone(), mem, rng.fork()));
+                labels.push((wname.trim().to_string(), mem, run));
             }
         }
+    }
+    let mut buffer = ReplayBuffer::new(4096);
+    for ((wname, mem, run), (traj, wall_s)) in labels
+        .into_iter()
+        .zip(dnnfuser::bench_support::teacher_runs(jobs, batch, budget))
+    {
+        println!(
+            "{wname:>14} mem={mem:>5.1}MB run={run} speedup={:.2} act={:.2}MB valid={} ({:.2}s)",
+            traj.speedup,
+            traj.peak_act_bytes as f64 / (1024.0 * 1024.0),
+            traj.valid,
+            wall_s
+        );
+        buffer.push(traj);
     }
     if let Some(dir) = out.parent() {
         std::fs::create_dir_all(dir).ok();
@@ -281,12 +291,17 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         .opt("requests", Some("64"), "synthetic requests to issue")
         .opt("clients", Some("4"), "concurrent client threads")
         .opt("window-ms", Some("5"), "dynamic batching window (ms)")
-        .opt("seed", Some("7"), "request stream seed");
+        .opt("seed", Some("7"), "request stream seed")
+        .switch(
+            "search-fallback",
+            "serve via G-Sampler search when artifacts/PJRT are unavailable",
+        );
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let mut cfg = ServiceConfig::new(p.req("artifacts")?);
     cfg.model = ModelKind::by_name(p.req("model")?).context("bad --model")?;
     cfg.checkpoint = p.get("ckpt").map(PathBuf::from);
     cfg.batch_window = Duration::from_millis(p.get_u64("window-ms")?);
+    cfg.search_fallback = p.flag("search-fallback");
     let n_requests = p.get_usize("requests")?;
     let n_clients = p.get_usize("clients")?.max(1);
 

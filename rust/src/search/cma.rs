@@ -119,12 +119,12 @@ impl Optimizer for CmaEs {
         let mut stale = 0usize;
 
         while !tr.exhausted() {
-            // Sample λ candidates: x = mean + σ·B·D·z.
-            let mut cands: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::with_capacity(lambda);
-            for _ in 0..lambda {
-                if tr.exhausted() {
-                    break;
-                }
+            // Sample λ candidates x = mean + σ·B·D·z, then score the whole
+            // generation as one engine batch (input-ordered, identical to
+            // serial scoring).
+            let n_gen = lambda.min(tr.remaining());
+            let mut gen: Vec<(Vec<f64>, Vec<f64>)> = Vec::with_capacity(n_gen);
+            for _ in 0..n_gen {
                 let z: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
                 let mut y = vec![0.0f64; d];
                 for i in 0..d {
@@ -137,8 +137,13 @@ impl Optimizer for CmaEs {
                 let x: Vec<f64> = (0..d)
                     .map(|i| (mean[i] + sigma * y[i]).clamp(-1.0, 1.0))
                     .collect();
-                let s = p.decode(&x);
-                let score = tr.observe(p, &s);
+                gen.push((x, y));
+            }
+            let strategies: Vec<_> = gen.iter().map(|(x, _)| p.decode(x)).collect();
+            let scores = p.eval_population(&strategies);
+            let mut cands: Vec<(Vec<f64>, Vec<f64>, f64)> = Vec::with_capacity(n_gen);
+            for (((x, y), s), score) in gen.into_iter().zip(&strategies).zip(scores) {
+                tr.observe_scored(s, score);
                 cands.push((x, y, score));
             }
             if cands.len() < 2 {

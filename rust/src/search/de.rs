@@ -34,20 +34,28 @@ impl Optimizer for De {
         let d = p.n_slots;
         let np = self.population.max(4);
 
+        // Init generation: generate, then score as one engine batch.
+        let n_init = np.min(tr.remaining());
+        let xs: Vec<Vec<f64>> = (0..n_init)
+            .map(|_| (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
         let mut pop: Vec<(Vec<f64>, f64)> = Vec::with_capacity(np);
-        for _ in 0..np {
-            if tr.exhausted() {
-                break;
+        {
+            let strategies: Vec<_> = xs.iter().map(|x| p.decode(x)).collect();
+            let scores = p.eval_population(&strategies);
+            for ((x, s), sc) in xs.into_iter().zip(&strategies).zip(scores) {
+                tr.observe_scored(s, sc);
+                pop.push((x, sc));
             }
-            let x: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
-            let s = p.decode(&x);
-            let score = tr.observe(p, &s);
-            pop.push((x, score));
         }
 
+        // Synchronous rand/1/bin: every trial of a generation is built from
+        // the generation-start population, scored as one batch, then
+        // greedy selection replaces losers.
         while !tr.exhausted() {
+            let mut trials: Vec<(usize, Vec<f64>)> = Vec::new();
             for i in 0..pop.len() {
-                if tr.exhausted() {
+                if trials.len() >= tr.remaining() {
                     break;
                 }
                 // Pick a, b, c distinct from i.
@@ -66,10 +74,17 @@ impl Optimizer for De {
                             .clamp(-1.0, 1.0);
                     }
                 }
-                let s = p.decode(&trial);
-                let score = tr.observe(p, &s);
-                if score > pop[i].1 {
-                    pop[i] = (trial, score);
+                trials.push((i, trial));
+            }
+            if trials.is_empty() {
+                break;
+            }
+            let strategies: Vec<_> = trials.iter().map(|(_, x)| p.decode(x)).collect();
+            let scores = p.eval_population(&strategies);
+            for (((i, trial), s), sc) in trials.into_iter().zip(&strategies).zip(scores) {
+                tr.observe_scored(s, sc);
+                if sc > pop[i].1 {
+                    pop[i] = (trial, sc);
                 }
             }
         }

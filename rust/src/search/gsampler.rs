@@ -17,6 +17,7 @@
 //!
 //! Defaults match the paper: population 40, 50 generations ⇒ 2K samples.
 
+use crate::cost::engine::IncrementalEval;
 use crate::fusion::{Strategy, SYNC};
 use crate::util::rng::Rng;
 
@@ -35,6 +36,12 @@ pub struct GSampler {
     pub use_repair: bool,
     /// Group-boundary crossover (false ⇒ generic single-point).
     pub group_crossover: bool,
+    /// Drive repair through the cost engine's [`IncrementalEval`]
+    /// (re-cost only the mutated group) instead of the pre-refactor
+    /// full-chain walks. Decisions are identical either way — the flag
+    /// exists so `cargo bench --bench perf` can measure the engine
+    /// against the full-walk path on the same search.
+    pub use_incremental: bool,
 }
 
 impl Default for GSampler {
@@ -47,6 +54,7 @@ impl Default for GSampler {
             tournament: 3,
             use_repair: true,
             group_crossover: true,
+            use_incremental: true,
         }
     }
 }
@@ -74,42 +82,97 @@ impl GSampler {
     /// Domain repair: while the strategy overflows the buffer, shrink the
     /// micro-batch that stages the most bytes, or insert a SYNC into the
     /// over-committed group when the micro-batch is already 1.
+    ///
+    /// The repair decisions (and the rng stream) are identical between the
+    /// incremental and full-walk implementations; only the re-costing work
+    /// per move differs.
     pub fn repair(&self, p: &FusionProblem, s: &mut Strategy, rng: &mut Rng) {
         if !self.use_repair {
             return;
         }
+        if self.use_incremental {
+            self.repair_incremental(p, s, rng);
+        } else {
+            self.repair_full_walk(p, s, rng);
+        }
+    }
+
+    /// Engine path: one initial group walk, then each move re-costs only
+    /// the mutated group and reads validity / the worst group from the
+    /// cached per-group terms.
+    fn repair_incremental(&self, p: &FusionProblem, s: &mut Strategy, rng: &mut Rng) {
+        // Fast accept: most offspring of feasible parents are feasible.
+        let (_, _, valid) = p.model.latency_of(s);
+        if valid {
+            return;
+        }
+        let mut inc: IncrementalEval<'_> = p.model.engine().incremental(&s.values);
         for _ in 0..8 * p.n_slots {
-            // Hot path: validity + worst group without building a report
-            // (perf pass — see EXPERIMENTS.md §Perf L3 iteration 1).
-            let (_, _, valid) = p.model.latency_of(s);
-            if valid {
-                return;
+            if inc.valid() {
+                break;
             }
-            let (i, j, _) = p.model.worst_group(s);
+            let (i, j, _) = inc.worst_group();
             // Fattest staged slot within the group (by staged bytes).
             let fattest = (i..=j)
-                .filter(|&l| s.values[l] != SYNC && s.values[l] > 1)
+                .filter(|&l| inc.values()[l] != SYNC && inc.values()[l] > 1)
                 .max_by(|&a, &b| {
-                    let wa = p.model_staged_bytes(s, a);
-                    let wb = p.model_staged_bytes(s, b);
+                    let wa = staged_bytes(p, inc.values(), a);
+                    let wb = staged_bytes(p, inc.values(), b);
                     wa.partial_cmp(&wb).unwrap()
                 });
             match fattest {
                 Some(l) => {
                     // Halve it (floor at 1).
-                    s.values[l] = (s.values[l] / 2).max(1);
+                    let nv = (inc.values()[l] / 2).max(1);
+                    inc.set(l, nv);
                 }
                 None => {
                     if j > i {
                         // Everything is already mb=1: split the group.
                         let cut = i + rng.index(j - i);
-                        s.values[cut.max(1)] = SYNC;
-                    } else if s.values[0] > 1 {
-                        s.values[0] = (s.values[0] / 2).max(1);
+                        inc.set(cut.max(1), SYNC);
+                    } else if inc.values()[0] > 1 {
+                        let nv = (inc.values()[0] / 2).max(1);
+                        inc.set(0, nv);
                     } else {
                         // Single layer at mb=1 still overflowing: weights +
                         // one sample exceed the condition. Nothing a fusion
                         // mapper can do; leave as-is (scored as invalid).
+                        break;
+                    }
+                }
+            }
+        }
+        s.values = inc.into_values();
+    }
+
+    /// Pre-refactor path: two full chain walks per move (kept for the
+    /// perf bench's baseline measurement).
+    fn repair_full_walk(&self, p: &FusionProblem, s: &mut Strategy, rng: &mut Rng) {
+        for _ in 0..8 * p.n_slots {
+            let (_, _, valid) = p.model.latency_of(s);
+            if valid {
+                return;
+            }
+            let (i, j, _) = p.model.worst_group(s);
+            let fattest = (i..=j)
+                .filter(|&l| s.values[l] != SYNC && s.values[l] > 1)
+                .max_by(|&a, &b| {
+                    let wa = staged_bytes(p, &s.values, a);
+                    let wb = staged_bytes(p, &s.values, b);
+                    wa.partial_cmp(&wb).unwrap()
+                });
+            match fattest {
+                Some(l) => {
+                    s.values[l] = (s.values[l] / 2).max(1);
+                }
+                None => {
+                    if j > i {
+                        let cut = i + rng.index(j - i);
+                        s.values[cut.max(1)] = SYNC;
+                    } else if s.values[0] > 1 {
+                        s.values[0] = (s.values[0] / 2).max(1);
+                    } else {
                         return;
                     }
                 }
@@ -167,6 +230,13 @@ impl GSampler {
         Strategy::new(values)
     }
 
+    /// Score a generation as one engine batch, pairing strategies with
+    /// their scores in input order (identical to serial scoring).
+    fn scored(p: &FusionProblem, batch: Vec<Strategy>) -> Vec<(Strategy, f64)> {
+        let scores = p.eval_population(&batch);
+        batch.into_iter().zip(scores).collect()
+    }
+
     fn tournament_pick<'a>(
         &self,
         scored: &'a [(Strategy, f64)],
@@ -183,18 +253,10 @@ impl GSampler {
     }
 }
 
-impl FusionProblem {
-    /// Bytes slot `l` stages on-chip under `s` (helper for repair).
-    fn model_staged_bytes(&self, s: &Strategy, l: usize) -> f64 {
-        let mb = if s.values[l] == SYNC { 1 } else { s.values[l] };
-        self.model_out_bytes(l) * mb as f64
-    }
-
-    fn model_out_bytes(&self, l: usize) -> f64 {
-        // Exposed via CostModel's cached vectors through evaluate();
-        // recompute from the report-free path: we keep a tiny accessor.
-        self.model.out_bytes_of(l)
-    }
+/// Bytes slot `l` stages on-chip under `values` (helper for repair).
+fn staged_bytes(p: &FusionProblem, values: &[i32], l: usize) -> f64 {
+    let mb = if values[l] == SYNC { 1 } else { values[l] };
+    p.model.out_bytes_of(l) * mb as f64
 }
 
 impl Optimizer for GSampler {
@@ -205,14 +267,15 @@ impl Optimizer for GSampler {
     fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult {
         let mut tr = Tracker::new("G-Sampler", budget);
         // Init population (seed evaluations count against the budget).
+        // Individuals are generated first (one rng stream, same order as
+        // the serial code), then scored as a batch through the engine.
         let mut pop: Vec<(Strategy, f64)> = Vec::with_capacity(self.population);
-        // Always include the no-fusion individual: a feasible anchor.
-        let anchor = Strategy::no_fusion(p.n_slots - 1);
-        let sc = tr.observe(p, &anchor);
-        pop.push((anchor, sc));
-        while pop.len() < self.population && !tr.exhausted() {
-            let s = self.seed_individual(p, rng);
-            let sc = tr.observe(p, &s);
+        let mut seeds: Vec<Strategy> = vec![Strategy::no_fusion(p.n_slots - 1)];
+        while seeds.len() < self.population.min(tr.remaining()) {
+            seeds.push(self.seed_individual(p, rng));
+        }
+        for (s, sc) in Self::scored(p, seeds) {
+            tr.observe_scored(&s, sc);
             pop.push((s, sc));
         }
 
@@ -221,7 +284,9 @@ impl Optimizer for GSampler {
             pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
             let mut next: Vec<(Strategy, f64)> =
                 pop.iter().take(self.elites).cloned().collect();
-            while next.len() < self.population && !tr.exhausted() {
+            let want = (self.population - next.len()).min(tr.remaining());
+            let mut children = Vec::with_capacity(want);
+            while children.len() < want {
                 let pa = self.tournament_pick(&pop, rng);
                 let child0 = if rng.chance(self.crossover_rate) {
                     let pb = self.tournament_pick(&pop, rng);
@@ -232,7 +297,10 @@ impl Optimizer for GSampler {
                 let mut child = child0;
                 self.mutate(p, &mut child, rng);
                 self.repair(p, &mut child, rng);
-                let sc = tr.observe(p, &child);
+                children.push(child);
+            }
+            for (child, sc) in Self::scored(p, children) {
+                tr.observe_scored(&child, sc);
                 next.push((child, sc));
             }
             pop = next;

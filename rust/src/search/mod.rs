@@ -22,6 +22,7 @@ pub mod tbpsa;
 
 use std::time::Instant;
 
+use crate::cost::engine::{BatchEval, StrategyCost};
 use crate::cost::{CostModel, HwConfig};
 use crate::env::FusionEnv;
 use crate::fusion::{ActionCodec, Strategy, SYNC};
@@ -78,35 +79,45 @@ impl FusionProblem {
         Strategy::new(values)
     }
 
-    /// Evaluate a decoded strategy (the hot path: one `latency_of` call).
+    /// Scalarize an engine evaluation: speedup when valid, negative
+    /// overflow when not — every valid strategy dominates every invalid
+    /// one, and infeasible strategies keep a slope toward feasibility.
+    pub fn scalarize(&self, c: &StrategyCost) -> f64 {
+        if c.valid {
+            self.model.baseline_latency() / c.latency_s
+        } else {
+            -(c.peak_mem_bytes as f64 / self.model.hw.buffer_bytes as f64)
+        }
+    }
+
+    /// Evaluate a decoded strategy — ONE engine group-walk yields latency,
+    /// validity and the act-usage readback together (the seed paid a
+    /// second full report walk for `peak_act_bytes`).
     pub fn eval_strategy(&self, s: &Strategy) -> Eval {
-        let (lat, peak_mem, valid) = self.model.latency_of(s);
-        let speedup = self.model.baseline_latency() / lat;
-        let score = if valid {
-            speedup
-        } else {
-            -(peak_mem as f64 / self.model.hw.buffer_bytes as f64)
-        };
+        let c = self.model.cost_of(s);
         Eval {
-            score,
-            speedup,
-            peak_act_bytes: self.peak_act(s),
-            valid,
+            score: self.scalarize(&c),
+            speedup: self.model.baseline_latency() / c.latency_s,
+            peak_act_bytes: c.peak_act_bytes,
+            valid: c.valid,
         }
     }
 
-    /// Cheap eval without the act-usage readback (search inner loops).
+    /// Scalar score of one strategy (search inner loops).
     pub fn score(&self, s: &Strategy) -> f64 {
-        let (lat, peak_mem, valid) = self.model.latency_of(s);
-        if valid {
-            self.model.baseline_latency() / lat
-        } else {
-            -(peak_mem as f64 / self.model.hw.buffer_bytes as f64)
-        }
+        self.scalarize(&self.model.cost_of(s))
     }
 
-    fn peak_act(&self, s: &Strategy) -> u64 {
-        self.model.evaluate(s).peak_act_bytes
+    /// Score a whole population through the engine's [`BatchEval`]:
+    /// results are in input order and identical to calling
+    /// [`FusionProblem::score`] per strategy — the batch fans out over the
+    /// shared thread pool once it carries enough work to pay for it.
+    pub fn eval_population(&self, pop: &[Strategy]) -> Vec<f64> {
+        BatchEval::default()
+            .eval(&self.model, pop)
+            .iter()
+            .map(|c| self.scalarize(c))
+            .collect()
     }
 
     pub fn eval_point(&self, x: &[f64]) -> (Strategy, Eval) {
@@ -185,6 +196,13 @@ impl Tracker {
     /// Record one evaluation; returns the score.
     pub fn observe(&mut self, p: &FusionProblem, s: &Strategy) -> f64 {
         let score = p.score(s);
+        self.observe_scored(s, score)
+    }
+
+    /// Record an evaluation whose score was already computed (batch
+    /// evaluation path — [`FusionProblem::eval_population`]). Budget and
+    /// history accounting are identical to [`Tracker::observe`].
+    pub fn observe_scored(&mut self, s: &Strategy, score: f64) -> f64 {
         self.used += 1;
         let improved = self.best.as_ref().map(|(_, b)| score > *b).unwrap_or(true);
         if improved {

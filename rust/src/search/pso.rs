@@ -47,16 +47,20 @@ impl Optimizer for Pso {
         let mut swarm: Vec<Particle> = Vec::with_capacity(self.particles);
         let mut gbest: Option<(Vec<f64>, f64)> = None;
 
-        for _ in 0..self.particles {
-            if tr.exhausted() {
-                break;
-            }
+        // Init swarm: generate positions/velocities, score as one batch.
+        let n_init = self.particles.min(tr.remaining());
+        let mut init: Vec<(Vec<f64>, Vec<f64>)> = Vec::with_capacity(n_init);
+        for _ in 0..n_init {
             let x: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
             let v: Vec<f64> = (0..d)
                 .map(|_| rng.range_f64(-self.v_max, self.v_max))
                 .collect();
-            let s = p.decode(&x);
-            let score = tr.observe(p, &s);
+            init.push((x, v));
+        }
+        let strategies: Vec<_> = init.iter().map(|(x, _)| p.decode(x)).collect();
+        let scores = p.eval_population(&strategies);
+        for (((x, v), s), score) in init.into_iter().zip(&strategies).zip(scores) {
+            tr.observe_scored(s, score);
             if gbest.as_ref().map(|(_, g)| score > *g).unwrap_or(true) {
                 gbest = Some((x.clone(), score));
             }
@@ -68,12 +72,13 @@ impl Optimizer for Pso {
             });
         }
 
+        // Synchronous sweeps: all particles move against the sweep-start
+        // gbest, the moved swarm is scored as one engine batch, then the
+        // personal/global bests update.
         while !tr.exhausted() {
             let (gx, _) = gbest.clone().unwrap();
-            for part in swarm.iter_mut() {
-                if tr.exhausted() {
-                    break;
-                }
+            let moving = swarm.len().min(tr.remaining());
+            for part in swarm.iter_mut().take(moving) {
                 for k in 0..d {
                     let r1 = rng.f64();
                     let r2 = rng.f64();
@@ -83,8 +88,11 @@ impl Optimizer for Pso {
                         .clamp(-self.v_max, self.v_max);
                     part.x[k] = (part.x[k] + part.v[k]).clamp(-1.0, 1.0);
                 }
-                let s = p.decode(&part.x);
-                let score = tr.observe(p, &s);
+            }
+            let strategies: Vec<_> = swarm[..moving].iter().map(|pt| p.decode(&pt.x)).collect();
+            let scores = p.eval_population(&strategies);
+            for ((part, s), score) in swarm.iter_mut().zip(&strategies).zip(scores) {
+                tr.observe_scored(s, score);
                 if score > part.best_score {
                     part.best_score = score;
                     part.best_x = part.x.clone();

@@ -16,10 +16,21 @@ impl Optimizer for RandomSearch {
     fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult {
         let mut tr = Tracker::new("Random", budget);
         let d = p.n_slots;
+        // Draw in chunks and score each chunk as one engine batch; the rng
+        // stream and the tracker accounting match the serial loop exactly.
+        const CHUNK: usize = 256;
         while !tr.exhausted() {
-            let x: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
-            let s = p.decode(&x);
-            tr.observe(p, &s);
+            let n = CHUNK.min(tr.remaining());
+            let strategies: Vec<_> = (0..n)
+                .map(|_| {
+                    let x: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                    p.decode(&x)
+                })
+                .collect();
+            let scores = p.eval_population(&strategies);
+            for (s, sc) in strategies.iter().zip(scores) {
+                tr.observe_scored(s, sc);
+            }
         }
         tr.finish(p)
     }

@@ -39,22 +39,21 @@ impl Optimizer for StdGa {
     fn run(&self, p: &FusionProblem, budget: usize, rng: &mut Rng) -> SearchResult {
         let mut tr = Tracker::new("stdGA", budget);
         let d = p.n_slots;
-        let mut pop: Vec<(Vec<f64>, f64)> = Vec::with_capacity(self.population);
-        for _ in 0..self.population {
-            if tr.exhausted() {
-                break;
-            }
-            let x: Vec<f64> = (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect();
-            let s = p.decode(&x);
-            let score = tr.observe(p, &s);
-            pop.push((x, score));
-        }
+        // Generate, then score the whole generation as one engine batch
+        // (deterministic, input-ordered — identical to serial scoring).
+        let n_init = self.population.min(tr.remaining());
+        let xs: Vec<Vec<f64>> = (0..n_init)
+            .map(|_| (0..d).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let mut pop: Vec<(Vec<f64>, f64)> = score_batch(p, &mut tr, xs);
 
         while !tr.exhausted() {
             pop.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
             let mut next: Vec<(Vec<f64>, f64)> =
                 pop.iter().take(self.elites).cloned().collect();
-            while next.len() < self.population && !tr.exhausted() {
+            let want = (self.population - next.len()).min(tr.remaining());
+            let mut children: Vec<Vec<f64>> = Vec::with_capacity(want);
+            while children.len() < want {
                 let pa = tournament(&pop, self.tournament, rng);
                 let pb = tournament(&pop, self.tournament, rng);
                 let mut child: Vec<f64> = (0..d)
@@ -65,14 +64,31 @@ impl Optimizer for StdGa {
                         *c = (*c + self.mutation_sigma * rng.normal()).clamp(-1.0, 1.0);
                     }
                 }
-                let s = p.decode(&child);
-                let score = tr.observe(p, &s);
-                next.push((child, score));
+                children.push(child);
             }
+            next.extend(score_batch(p, &mut tr, children));
             pop = next;
         }
         tr.finish(p)
     }
+}
+
+/// Decode + score a batch of continuous points through the engine,
+/// recording each against the tracker in input order.
+fn score_batch(
+    p: &FusionProblem,
+    tr: &mut Tracker,
+    xs: Vec<Vec<f64>>,
+) -> Vec<(Vec<f64>, f64)> {
+    let strategies: Vec<_> = xs.iter().map(|x| p.decode(x)).collect();
+    let scores = p.eval_population(&strategies);
+    xs.into_iter()
+        .zip(strategies.iter().zip(&scores))
+        .map(|(x, (s, &sc))| {
+            tr.observe_scored(s, sc);
+            (x, sc)
+        })
+        .collect()
 }
 
 fn tournament<'a>(pop: &'a [(Vec<f64>, f64)], k: usize, rng: &mut Rng) -> &'a [f64] {

@@ -42,16 +42,20 @@ impl Optimizer for Tbpsa {
         let mut last_best = f64::NEG_INFINITY;
 
         while !tr.exhausted() {
-            let mut gen: Vec<(Vec<f64>, f64)> = Vec::with_capacity(lambda);
-            for _ in 0..lambda {
-                if tr.exhausted() {
-                    break;
-                }
-                let x: Vec<f64> = (0..d)
-                    .map(|i| (mean[i] + sigma * rng.normal()).clamp(-1.0, 1.0))
-                    .collect();
-                let s = p.decode(&x);
-                let score = tr.observe(p, &s);
+            // Sample the generation, then score it as one engine batch.
+            let n_gen = lambda.min(tr.remaining());
+            let xs: Vec<Vec<f64>> = (0..n_gen)
+                .map(|_| {
+                    (0..d)
+                        .map(|i| (mean[i] + sigma * rng.normal()).clamp(-1.0, 1.0))
+                        .collect()
+                })
+                .collect();
+            let strategies: Vec<_> = xs.iter().map(|x| p.decode(x)).collect();
+            let scores = p.eval_population(&strategies);
+            let mut gen: Vec<(Vec<f64>, f64)> = Vec::with_capacity(n_gen);
+            for ((x, s), score) in xs.into_iter().zip(&strategies).zip(scores) {
+                tr.observe_scored(s, score);
                 gen.push((x, score));
             }
             if gen.is_empty() {

@@ -1,11 +1,18 @@
 //! Fixed thread pool (offline substitute for a tokio runtime / rayon).
 //!
-//! The coordinator and the population-based searches use this for fan-out
-//! work. Plain std threads + channels: jobs are `FnOnce` closures, `scope`
-//! style joins are provided by [`ThreadPool::run_batch`].
+//! The coordinator, the cost engine's [`BatchEval`](crate::cost::engine::BatchEval)
+//! and teacher-dataset generation use this for fan-out work. Plain std
+//! threads + channels: jobs are `FnOnce` closures, `scope`-style joins are
+//! provided by [`ThreadPool::run_batch`].
+//!
+//! A process-wide pool is available through [`ThreadPool::shared`] so
+//! short-lived callers don't pay thread-spawn latency per use. Jobs that
+//! themselves want to fan out must stay serial inside a worker
+//! ([`ThreadPool::on_pool_worker`]) — blocking a worker on the queue it
+//! feeds is how pools deadlock.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -15,11 +22,18 @@ enum Msg {
     Shutdown,
 }
 
-/// A fixed-size pool. Dropping the pool joins all workers.
+/// A fixed-size pool. Dropping the pool joins all workers. The pool is
+/// `Sync` (the submit side is mutex-guarded), so it can be shared by
+/// reference across threads and stored in a global.
 pub struct ThreadPool {
-    tx: Sender<Msg>,
+    tx: Mutex<Sender<Msg>>,
     workers: Vec<JoinHandle<()>>,
 }
+
+/// Worker-thread name prefix, used by [`ThreadPool::on_pool_worker`].
+const WORKER_PREFIX: &str = "dnnfuser-pool";
+
+static SHARED: OnceLock<ThreadPool> = OnceLock::new();
 
 impl ThreadPool {
     /// Create a pool with `n` worker threads (n ≥ 1).
@@ -31,17 +45,44 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 std::thread::Builder::new()
-                    .name(format!("dnnfuser-pool-{i}"))
+                    .name(format!("{WORKER_PREFIX}-{i}"))
                     .spawn(move || worker_loop(rx))
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { tx, workers }
+        ThreadPool {
+            tx: Mutex::new(tx),
+            workers,
+        }
+    }
+
+    /// The process-wide pool, sized to the host's parallelism. Created on
+    /// first use; lives for the process (its workers are idle when unused).
+    pub fn shared() -> &'static ThreadPool {
+        SHARED.get_or_init(|| {
+            let n = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            ThreadPool::new(n)
+        })
+    }
+
+    /// True when the calling thread is one of this crate's pool workers.
+    /// Fan-out helpers use this to fall back to serial execution instead of
+    /// risking a blocked-worker deadlock on nested batches.
+    pub fn on_pool_worker() -> bool {
+        std::thread::current()
+            .name()
+            .is_some_and(|n| n.starts_with(WORKER_PREFIX))
     }
 
     /// Fire-and-forget job.
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        self.tx.send(Msg::Run(Box::new(job))).expect("pool closed");
+        self.tx
+            .lock()
+            .expect("pool tx poisoned")
+            .send(Msg::Run(Box::new(job)))
+            .expect("pool closed");
     }
 
     /// Run a batch of jobs and collect their results in input order,
@@ -89,8 +130,10 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Msg::Shutdown);
+        if let Ok(tx) = self.tx.lock() {
+            for _ in &self.workers {
+                let _ = tx.send(Msg::Shutdown);
+            }
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -139,5 +182,25 @@ mod tests {
     fn zero_requested_becomes_one() {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.size(), 1);
+    }
+
+    #[test]
+    fn shared_pool_is_usable_and_stable() {
+        let a = ThreadPool::shared();
+        let b = ThreadPool::shared();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.size() >= 1);
+        let jobs: Vec<Box<dyn FnOnce() -> u32 + Send>> =
+            (0..8u32).map(|i| Box::new(move || i + 1) as _).collect();
+        assert_eq!(a.run_batch(jobs), (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_detection() {
+        assert!(!ThreadPool::on_pool_worker());
+        let pool = ThreadPool::new(1);
+        let jobs: Vec<Box<dyn FnOnce() -> bool + Send>> =
+            vec![Box::new(ThreadPool::on_pool_worker)];
+        assert_eq!(pool.run_batch(jobs), vec![true]);
     }
 }

@@ -114,3 +114,85 @@ fn startup_failure_is_synchronous() {
     };
     assert!(format!("{err:#}").contains("startup failed"), "{err:#}");
 }
+
+// --- Search fallback: serving without artifacts/PJRT -------------------
+//
+// These tests need no build artifacts: the backend is the (engine-
+// accelerated, pool-parallel) G-Sampler search.
+
+fn fallback_service() -> MapperService {
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.search_fallback = true;
+    cfg.fallback_budget = 400; // keep test wall-time small
+    cfg.batch_window = Duration::from_millis(10);
+    MapperService::spawn(cfg).expect("fallback spawn must succeed")
+}
+
+#[test]
+fn search_fallback_serves_without_artifacts_and_caches() {
+    let svc = fallback_service();
+    let client = svc.client.clone();
+
+    let r1 = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    assert_eq!(r1.source, Source::Search);
+    assert_eq!(r1.strategy.values.len(), 15);
+    assert!(r1.valid, "fallback teacher must satisfy the condition");
+    assert!(r1.speedup >= 1.0, "speedup {}", r1.speedup);
+    assert!(r1.act_usage_mb <= 20.0 + 1e-9, "act {}", r1.act_usage_mb);
+
+    // Repeat condition: cache answers, no second search.
+    let r2 = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    assert_eq!(r2.source, Source::Cache);
+    assert_eq!(r2.strategy, r1.strategy);
+
+    let m = client.metrics();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.cache_hits, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn search_fallback_is_deterministic_per_condition() {
+    // Two services, same request → same strategy (seeded per request key),
+    // so a restarted control plane gives tenants stable mappings.
+    let a = {
+        let svc = fallback_service();
+        let r = svc.client.map(MapRequest::new("resnet18", 64, 24.0)).unwrap();
+        svc.shutdown();
+        r
+    };
+    let b = {
+        let svc = fallback_service();
+        let r = svc.client.map(MapRequest::new("resnet18", 64, 24.0)).unwrap();
+        svc.shutdown();
+        r
+    };
+    assert_eq!(a.strategy, b.strategy);
+    assert_eq!(a.speedup, b.speedup);
+}
+
+#[test]
+fn search_fallback_handles_concurrent_mixed_requests() {
+    let svc = fallback_service();
+    let client = svc.client.clone();
+    let mut handles = Vec::new();
+    for (w, n) in [("vgg16", 15usize), ("resnet18", 19), ("mnasnet", 51)] {
+        let c: MapperClient = client.clone();
+        let w = w.to_string();
+        handles.push(std::thread::spawn(move || {
+            let r = c.map(MapRequest::new(&w, 64, 32.0)).unwrap();
+            (r, n)
+        }));
+    }
+    for h in handles {
+        let (r, n) = h.join().unwrap();
+        assert_eq!(r.strategy.values.len(), n);
+        assert_eq!(r.source, Source::Search);
+    }
+    // Unknown workloads still fail cleanly, service stays alive.
+    let err = client.map(MapRequest::new("alexnet", 64, 20.0)).unwrap_err();
+    assert!(err.to_string().contains("unknown workload"), "{err}");
+    let ok = client.map(MapRequest::new("vgg16", 64, 24.0)).unwrap();
+    assert_eq!(ok.source, Source::Search);
+    svc.shutdown();
+}

@@ -3,8 +3,9 @@
 //! G-Sampler (the teacher) additionally must satisfy the memory condition
 //! and beat the generic baselines on the paper's setup.
 
-use dnnfuser::cost::HwConfig;
-use dnnfuser::fusion::SYNC;
+use dnnfuser::cost::engine::{reference, BatchEval, StrategyCost};
+use dnnfuser::cost::{CostModel, HwConfig};
+use dnnfuser::fusion::{Strategy, SYNC};
 use dnnfuser::search::{
     all_baselines, gsampler::GSampler, random::RandomSearch, FusionProblem, Optimizer,
 };
@@ -109,6 +110,110 @@ fn decoded_points_round_trip_through_codec() {
         }
         Ok(())
     });
+}
+
+fn random_strategy(rng: &mut Rng, n_slots: usize, batch: usize) -> Strategy {
+    let mut values = Vec::with_capacity(n_slots);
+    values.push(1 + rng.index(batch) as i32);
+    for _ in 1..n_slots {
+        values.push(if rng.chance(0.35) {
+            SYNC
+        } else {
+            1 + rng.index(batch) as i32
+        });
+    }
+    Strategy::new(values)
+}
+
+/// Engine property (ISSUE 1 satellite): an `IncrementalEval` under random
+/// single-slot mutations must match a full re-evaluation — and the
+/// pre-refactor full-walk reference — on 1k random strategies for EVERY
+/// zoo workload. The byte counts are integer-valued f64s, so peak-memory
+/// and act-usage agreement is exact; latency is compared at 1e-9 relative.
+#[test]
+fn incremental_eval_matches_full_reeval_on_every_zoo_workload() {
+    let batch = 64usize;
+    for w in zoo::all() {
+        let m = CostModel::new(&w, batch, HwConfig::paper().with_buffer_mb(24.0));
+        let n_slots = w.n_layers() + 1;
+        let mut rng = Rng::seed_from_u64(0xC0DE ^ w.n_layers() as u64);
+        for case in 0..1000 {
+            let s = random_strategy(&mut rng, n_slots, batch);
+            let mut inc = m.engine().incremental(&s.values);
+            // A couple of chained mutations per strategy: value↔value,
+            // boundary insertion (split) and removal (merge) all occur.
+            for _ in 0..1 + rng.index(3) {
+                let slot = rng.index(n_slots);
+                let v = if slot > 0 && rng.chance(0.35) {
+                    SYNC
+                } else {
+                    1 + rng.index(batch) as i32
+                };
+                inc.set(slot, v);
+                let mutated = Strategy::new(inc.values().to_vec());
+                let full = m.engine().cost_of(&mutated.values);
+                assert_eq!(
+                    inc.cost(),
+                    full,
+                    "{}: incremental != full after set({slot}, {v}) case {case} on {}",
+                    w.name,
+                    mutated.display()
+                );
+                let (ref_lat, ref_mem, ref_valid) = reference::latency_of(&m, &mutated);
+                let ref_act = reference::peak_act_of(&m, &mutated);
+                let rel = (full.latency_s - ref_lat).abs() / ref_lat.max(1e-300);
+                assert!(
+                    rel < 1e-9,
+                    "{}: engine latency {} vs reference {ref_lat}",
+                    w.name,
+                    full.latency_s
+                );
+                assert_eq!(full.peak_mem_bytes, ref_mem, "{}", w.name);
+                assert_eq!(full.peak_act_bytes, ref_act, "{}", w.name);
+                assert_eq!(full.valid, ref_valid, "{}", w.name);
+            }
+        }
+    }
+}
+
+/// Engine property (ISSUE 1 satellite): `BatchEval` results are identical
+/// and identically ordered vs. serial evaluation — including when the
+/// batch is forced across the thread pool.
+#[test]
+fn batch_eval_identical_and_ordered_vs_serial() {
+    let batch = 64usize;
+    for (wname, count) in [("vgg16", 1000usize), ("resnet50", 300)] {
+        let w = zoo::by_name(wname).unwrap();
+        let m = CostModel::new(&w, batch, HwConfig::paper().with_buffer_mb(20.0));
+        let mut rng = Rng::seed_from_u64(0xBA7C4);
+        let pop: Vec<Strategy> = (0..count)
+            .map(|_| random_strategy(&mut rng, w.n_layers() + 1, batch))
+            .collect();
+        let serial: Vec<StrategyCost> =
+            pop.iter().map(|s| m.engine().cost_of(&s.values)).collect();
+        for be in [BatchEval::default(), BatchEval::force_parallel()] {
+            let out = be.eval(&m, &pop);
+            assert_eq!(out.len(), serial.len());
+            for (i, (a, b)) in out.iter().zip(&serial).enumerate() {
+                assert_eq!(a, b, "{wname}: row {i} diverged (ordering or value)");
+            }
+        }
+    }
+}
+
+/// The batched generation scoring inside the optimizers must agree with
+/// per-strategy scoring (same scalarization, same order).
+#[test]
+fn eval_population_matches_per_strategy_score() {
+    let p = FusionProblem::new(&zoo::resnet18(), 64, HwConfig::paper(), 32.0);
+    let mut rng = Rng::seed_from_u64(77);
+    let pop: Vec<Strategy> = (0..400)
+        .map(|_| random_strategy(&mut rng, p.n_slots, 64))
+        .collect();
+    let batch_scores = p.eval_population(&pop);
+    for (s, &bs) in pop.iter().zip(&batch_scores) {
+        assert_eq!(p.score(s), bs);
+    }
 }
 
 #[test]

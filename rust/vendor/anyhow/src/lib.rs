@@ -1,0 +1,260 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline registry cache does not carry `anyhow`, so this path
+//! dependency provides the exact API surface the repo uses: the
+//! context-chained [`Error`] type, the [`Result`] alias, the [`Context`]
+//! extension trait for `Result` and `Option`, and the [`anyhow!`] /
+//! [`bail!`] macros. Display semantics match the real crate where the
+//! code relies on them: `{}` prints the outermost message, `{:#}` prints
+//! the whole chain separated by `: `.
+
+use std::fmt;
+
+/// A context-chained error. Unlike `std` error types it intentionally does
+/// NOT implement `std::error::Error`, which is what lets the blanket
+/// `From<E: std::error::Error>` conversion below coexist with `?`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap with an outer context message (innermost cause stays last).
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error {
+            msg: ctx.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The error chain, outermost first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost error message.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(src) = cur.source.as_deref() {
+            cur = src;
+        }
+        &cur.msg
+    }
+}
+
+/// Iterator over an error chain, outermost first.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut src = self.source.as_deref();
+            while let Some(e) = src {
+                write!(f, ": {}", e.msg)?;
+                src = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut src = self.source.as_deref();
+            while let Some(e) = src {
+                write!(f, "\n    {}", e.msg)?;
+                src = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into [`Error`], preserving its source chain.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Collect the std source chain (innermost last), then nest it.
+        let mut msgs = vec![e.to_string()];
+        let mut src: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error {
+                msg,
+                source: err.map(Box::new),
+            });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// `anyhow::Result<T>` — the crate-wide fallible return type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option` (mirrors the real crate's trait of the same name).
+pub trait Context<T, E> {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, ctx: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        let alt = format!("{e:#}");
+        assert!(alt.starts_with("reading config: "), "{alt}");
+        assert!(alt.contains("missing file"), "{alt}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e:#}").contains("missing file"));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+        let some = Some(7u32).with_context(|| "unused").unwrap();
+        assert_eq!(some, 7);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 3;
+        let b = anyhow!("value {x}");
+        assert_eq!(b.to_string(), "value 3");
+        let c = anyhow!("{} and {}", 1, 2);
+        assert_eq!(c.to_string(), "1 and 2");
+        let s = String::from("owned message");
+        let d = anyhow!(s);
+        assert_eq!(d.to_string(), "owned message");
+        fn bails() -> Result<()> {
+            bail!("stop {}", "now");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop now");
+    }
+
+    #[test]
+    fn chain_and_root_cause() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        let msgs: Vec<String> = e.chain().map(|x| x.to_string()).collect();
+        assert_eq!(msgs, ["outer", "mid", "inner"]);
+        assert_eq!(e.root_cause(), "inner");
+    }
+}
