@@ -6,8 +6,9 @@
 //! needs a mapping *now*. Reports router metrics: latency percentiles,
 //! batch occupancy, cache hit rate, throughput.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_mapper
-//!       [-- path/to/model.ckpt]`
+//! Run: `cargo run --release --example serve_mapper [-- path/to/model.ckpt]`
+//! (with `make artifacts` the model backend serves; without, the example
+//! falls back to G-Sampler search serving — same protocol, same cache).
 
 use std::time::{Duration, Instant};
 
@@ -15,6 +16,20 @@ use dnnfuser::coordinator::service::{MapperService, ServiceConfig};
 use dnnfuser::coordinator::{MapRequest, Source};
 use dnnfuser::model::ModelKind;
 use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::WorkloadSpec;
+
+/// An "unseen" network — not in the zoo. Tenants post definitions like
+/// this inline; the service registers them on first use.
+const CUSTOM_NET: &str = r#"{
+  "name": "tenant_custom_a",
+  "layers": [
+    {"name": "stem", "k": 32, "c": 3, "y": 56, "x": 56, "r": 3, "s": 3, "stride": 2},
+    {"k": 32, "c": 32, "y": 56, "x": 56, "r": 3, "s": 3, "depthwise": true},
+    {"k": 64, "c": 32, "y": 28, "x": 28, "r": 3, "s": 3, "stride": 2},
+    {"k": 128, "c": 64, "y": 14, "x": 14, "r": 3, "s": 3, "stride": 2},
+    {"k": 1000, "c": 128, "y": 1, "x": 1, "r": 1, "s": 1}
+  ]
+}"#;
 
 fn main() -> anyhow::Result<()> {
     let ckpt = std::env::args().nth(1);
@@ -22,6 +37,9 @@ fn main() -> anyhow::Result<()> {
     cfg.model = ModelKind::Df;
     cfg.checkpoint = ckpt.map(Into::into);
     cfg.batch_window = Duration::from_millis(5);
+    // Keep the example runnable without built artifacts: fall back to
+    // G-Sampler searches when the model backend can't load.
+    cfg.search_fallback = true;
     if cfg.checkpoint.is_none() {
         println!("(no checkpoint given — serving an untrained model; pass runs/e2e_df.ckpt)");
     }
@@ -83,12 +101,37 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // An unseen tenant network, posted inline — no zoo entry, no
+    // redeploy. A second tenant posting the *same* layers under a
+    // different name shares the first one's cache entry (content-hash
+    // identity).
+    println!("\nunseen custom network:");
+    let spec_a = WorkloadSpec::from_json(CUSTOM_NET)?;
+    let r1 = client.map(MapRequest::with_spec(spec_a.clone(), 64, 32.0))?;
+    println!(
+        "  tenant A first post : source {:?}, speedup {:.2}x, {:?}",
+        r1.source, r1.speedup, r1.latency
+    );
+    let r2 = client.map(MapRequest::with_spec(spec_a, 64, 32.0))?;
+    println!("  tenant A repeat     : source {:?}, {:?}", r2.source, r2.latency);
+    let renamed = CUSTOM_NET.replace("tenant_custom_a", "tenant_custom_b");
+    let spec_b = WorkloadSpec::from_json(&renamed)?;
+    let r3 = client.map(MapRequest::with_spec(spec_b, 64, 32.0))?;
+    println!(
+        "  tenant B, same net  : source {:?} (shared via content hash)",
+        r3.source
+    );
+    // And it is now addressable by name, like a zoo workload.
+    let r4 = client.map(MapRequest::new("tenant_custom_a", 64, 32.0))?;
+    println!("  by-name re-request  : source {:?}", r4.source);
+
     let m = client.metrics();
     println!("\nrouter metrics after {:?}:", t0.elapsed());
     println!("  {}", m.report());
     println!(
-        "  cache hit rate: {:.0}%  mean batch occupancy: {:.2}",
-        100.0 * m.cache_hits as f64 / m.requests as f64,
+        "  cache hit rate: {:.0}%  cache size: {}  mean batch occupancy: {:.2}",
+        100.0 * m.cache_hit_rate(),
+        m.cache_size,
         m.mean_batch_occupancy()
     );
     svc.shutdown();

@@ -11,18 +11,32 @@ use crate::fusion::Strategy;
 
 /// Cache key: condition quantized to 0.25 MB so float jitter in the
 /// requested memory doesn't defeat caching.
+///
+/// The workload component is the registry's content hash
+/// ([`crate::workload::Workload::content_hash`]), not a name: identical
+/// nets posted under different names share one entry. The hardware
+/// component ([`crate::cost::HwConfig::content_hash`]) keeps requests for
+/// different accelerator configs from sharing mappings. The service
+/// validates conditions *before* building a key — NaN/negative values
+/// saturate `mem_q` to 0 here and would collide with legitimate tiny
+/// conditions (see `service::validate`).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Key {
-    pub workload: String,
+    /// Content hash of the resolved workload.
+    pub workload_hash: u64,
+    /// Content hash of the request's hardware config (buffer excluded —
+    /// the condition carries it).
+    pub hw_hash: u64,
     pub batch: usize,
     /// mem_cond_mb * 4, rounded.
     pub mem_q: u64,
 }
 
 impl Key {
-    pub fn new(workload: &str, batch: usize, mem_cond_mb: f64) -> Key {
+    pub fn new(workload_hash: u64, hw_hash: u64, batch: usize, mem_cond_mb: f64) -> Key {
         Key {
-            workload: workload.to_string(),
+            workload_hash,
+            hw_hash,
             batch,
             mem_q: (mem_cond_mb * 4.0).round() as u64,
         }
@@ -123,15 +137,28 @@ mod tests {
 
     #[test]
     fn quantized_keys_absorb_jitter() {
-        assert_eq!(Key::new("vgg16", 64, 20.0), Key::new("vgg16", 64, 20.05));
-        assert_ne!(Key::new("vgg16", 64, 20.0), Key::new("vgg16", 64, 21.0));
-        assert_ne!(Key::new("vgg16", 64, 20.0), Key::new("vgg16", 128, 20.0));
+        assert_eq!(Key::new(7, 0, 64, 20.0), Key::new(7, 0, 64, 20.05));
+        assert_ne!(Key::new(7, 0, 64, 20.0), Key::new(7, 0, 64, 21.0));
+        assert_ne!(Key::new(7, 0, 64, 20.0), Key::new(7, 0, 128, 20.0));
+        assert_ne!(Key::new(7, 0, 64, 20.0), Key::new(8, 0, 64, 20.0));
+        // Different hardware configs never share an entry.
+        assert_ne!(Key::new(7, 1, 64, 20.0), Key::new(7, 2, 64, 20.0));
+    }
+
+    #[test]
+    fn malformed_conditions_would_collide_hence_service_validation() {
+        // NaN and negative conditions saturate the quantizer to 0 —
+        // indistinguishable from a legitimate tiny condition. The service
+        // rejects these before any Key is built (`service::validate`);
+        // this test documents the collision that validation prevents.
+        assert_eq!(Key::new(7, 0, 64, f64::NAN), Key::new(7, 0, 64, 0.05));
+        assert_eq!(Key::new(7, 0, 64, -8.0), Key::new(7, 0, 64, 0.05));
     }
 
     #[test]
     fn hit_and_miss_accounting() {
         let mut c = MappingCache::new(8);
-        let k = Key::new("vgg16", 64, 20.0);
+        let k = Key::new(7, 0, 64, 20.0);
         assert!(c.get(&k).is_none());
         c.put(k.clone(), entry(1));
         assert!(c.get(&k).is_some());
@@ -143,9 +170,9 @@ mod tests {
     #[test]
     fn lru_eviction_prefers_stale() {
         let mut c = MappingCache::new(2);
-        let k1 = Key::new("a", 1, 1.0);
-        let k2 = Key::new("b", 1, 1.0);
-        let k3 = Key::new("c", 1, 1.0);
+        let k1 = Key::new(1, 0, 1, 1.0);
+        let k2 = Key::new(2, 0, 1, 1.0);
+        let k3 = Key::new(3, 0, 1, 1.0);
         c.put(k1.clone(), entry(1));
         c.put(k2.clone(), entry(2));
         let _ = c.get(&k1); // refresh k1
@@ -159,8 +186,8 @@ mod tests {
     #[test]
     fn reinserting_same_key_does_not_evict() {
         let mut c = MappingCache::new(2);
-        let k1 = Key::new("a", 1, 1.0);
-        let k2 = Key::new("b", 1, 1.0);
+        let k1 = Key::new(1, 0, 1, 1.0);
+        let k2 = Key::new(2, 0, 1, 1.0);
         c.put(k1.clone(), entry(1));
         c.put(k2.clone(), entry(2));
         c.put(k1.clone(), entry(3)); // update in place

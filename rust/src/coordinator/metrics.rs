@@ -80,15 +80,29 @@ impl LatencyHistogram {
 }
 
 /// Full service metrics snapshot.
+///
+/// Cache counters (`cache_hits`, `cache_misses`, `cache_size`) mirror the
+/// service's [`super::cache::MappingCache`] — the cache is the single
+/// source of truth and the service copies its counters into each snapshot,
+/// so the hit rate reported here can never drift from what the cache saw.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests: u64,
+    /// Requests rejected by validation (malformed condition/batch,
+    /// unknown or unrepresentable workload) before touching the cache
+    /// or a backend.
+    pub rejected: u64,
     pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Current number of cached mappings.
+    pub cache_size: usize,
     pub model_batches: u64,
     pub model_mapped: u64,
     pub invalid_responses: u64,
     pub latency: LatencyHistogram,
-    /// Histogram over decode batch occupancy (index = rows used).
+    /// Histogram over decode batch occupancy (index = rows used). Grows
+    /// on demand: a batch larger than the current histogram extends it
+    /// rather than dropping the sample.
     pub batch_occupancy: Vec<u64>,
 }
 
@@ -100,12 +114,22 @@ impl Metrics {
         }
     }
 
+    /// Pre-size the occupancy histogram for the backend's real max batch
+    /// (known only after the backend loads). `record_batch` still grows on
+    /// overflow, so this is an allocation optimization, not a cap.
+    pub fn ensure_batch_capacity(&mut self, max_batch: usize) {
+        if self.batch_occupancy.len() < max_batch + 1 {
+            self.batch_occupancy.resize(max_batch + 1, 0);
+        }
+    }
+
     pub fn record_batch(&mut self, used_rows: usize) {
         self.model_batches += 1;
         self.model_mapped += used_rows as u64;
-        if used_rows < self.batch_occupancy.len() {
-            self.batch_occupancy[used_rows] += 1;
+        if used_rows >= self.batch_occupancy.len() {
+            self.batch_occupancy.resize(used_rows + 1, 0);
         }
+        self.batch_occupancy[used_rows] += 1;
     }
 
     pub fn mean_batch_occupancy(&self) -> f64 {
@@ -115,12 +139,26 @@ impl Metrics {
         self.model_mapped as f64 / self.model_batches as f64
     }
 
+    /// Cache hit rate over all lookups (0.0 when nothing was looked up).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} cache_hits={} batches={} mean_occupancy={:.2} invalid={} \
+            "requests={} rejected={} cache_hits={} hit_rate={:.0}% cache_size={} \
+             batches={} mean_occupancy={:.2} invalid={} \
              latency mean={:?} p50={:?} p95={:?} max={:?}",
             self.requests,
+            self.rejected,
             self.cache_hits,
+            100.0 * self.cache_hit_rate(),
+            self.cache_size,
             self.model_batches,
             self.mean_batch_occupancy(),
             self.invalid_responses,
@@ -170,10 +208,50 @@ mod tests {
     }
 
     #[test]
+    fn occupancy_grows_beyond_initial_capacity() {
+        // The service sizes the histogram only once the backend is up;
+        // until then (and for any overshoot) samples must be counted, not
+        // dropped.
+        let mut m = Metrics::new(16);
+        m.record_batch(20);
+        assert_eq!(m.batch_occupancy.len(), 21);
+        assert_eq!(m.batch_occupancy[20], 1);
+        assert_eq!(m.model_mapped, 20);
+        m.record_batch(3);
+        assert_eq!(m.batch_occupancy[3], 1);
+        assert!((m.mean_batch_occupancy() - 11.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ensure_batch_capacity_grows_but_never_shrinks() {
+        let mut m = Metrics::new(0);
+        m.ensure_batch_capacity(32);
+        assert_eq!(m.batch_occupancy.len(), 33);
+        m.ensure_batch_capacity(8);
+        assert_eq!(m.batch_occupancy.len(), 33);
+    }
+
+    #[test]
+    fn cache_hit_rate_handles_empty_and_counts() {
+        let mut m = Metrics::new(0);
+        assert_eq!(m.cache_hit_rate(), 0.0);
+        m.cache_hits = 3;
+        m.cache_misses = 1;
+        assert!((m.cache_hit_rate() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
     fn report_mentions_key_fields() {
         let m = Metrics::new(8);
         let r = m.report();
-        for needle in ["requests=", "p95=", "mean_occupancy="] {
+        for needle in [
+            "requests=",
+            "rejected=",
+            "p95=",
+            "mean_occupancy=",
+            "hit_rate=",
+            "cache_size=",
+        ] {
             assert!(r.contains(needle), "{r}");
         }
     }

@@ -13,8 +13,9 @@
 //!   the **dynamic batcher**: concurrent mapping requests are coalesced
 //!   (up to the AOT inference batch, within a small batching window) into
 //!   one batched autoregressive decode;
-//! - [`cache`] — resolved mappings keyed by (workload, batch, condition):
-//!   repeat conditions are answered without touching the model;
+//! - [`cache`] — resolved mappings keyed by (workload content hash, batch,
+//!   condition): repeat conditions are answered without touching the
+//!   model, and identical nets posted under different names share entries;
 //! - [`metrics`] — request counts, latency percentiles, batch-size
 //!   occupancy, cache hit rate.
 //!
@@ -27,13 +28,16 @@ pub mod service;
 
 use crate::cost::HwConfig;
 use crate::fusion::Strategy;
+use crate::workload::WorkloadSpec;
 
 /// One mapping request: "give me a fusion strategy for this workload under
 /// this memory condition".
 #[derive(Debug, Clone, PartialEq)]
 pub struct MapRequest {
-    /// Zoo workload name (the service owns the zoo lookup).
-    pub workload: String,
+    /// The workload: a registered name (zoo pre-seeded) or an inline
+    /// layer list — the service resolves it through its
+    /// [`crate::workload::WorkloadRegistry`].
+    pub workload: WorkloadSpec,
     pub batch: usize,
     /// Available on-chip buffer right now, MB (the HW condition).
     pub mem_cond_mb: f64,
@@ -41,9 +45,15 @@ pub struct MapRequest {
 }
 
 impl MapRequest {
+    /// Request by registered name.
     pub fn new(workload: &str, batch: usize, mem_cond_mb: f64) -> Self {
+        MapRequest::with_spec(WorkloadSpec::named(workload), batch, mem_cond_mb)
+    }
+
+    /// Request with an explicit spec (e.g. an inline custom workload).
+    pub fn with_spec(spec: WorkloadSpec, batch: usize, mem_cond_mb: f64) -> Self {
         MapRequest {
-            workload: workload.to_string(),
+            workload: spec,
             batch,
             mem_cond_mb,
             hw: HwConfig::paper(),
@@ -82,6 +92,6 @@ mod tests {
     fn request_constructor_defaults() {
         let r = MapRequest::new("vgg16", 64, 20.0);
         assert_eq!(r.hw, HwConfig::paper());
-        assert_eq!(r.workload, "vgg16");
+        assert_eq!(r.workload, WorkloadSpec::named("vgg16"));
     }
 }

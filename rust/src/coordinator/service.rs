@@ -1,6 +1,13 @@
 //! The mapper service actor: owns the backend on one thread, batches
 //! concurrent requests dynamically, caches resolved mappings.
 //!
+//! Requests name workloads through a [`crate::workload::WorkloadSpec`]
+//! (registered name or inline layer list) resolved against the shared
+//! [`WorkloadRegistry`] — zoo pre-seeded, extended at runtime — so an
+//! unseen tenant network is served without a redeploy. All keying
+//! (mapping cache, fallback search seeds) uses the registry's content
+//! hash, never the name.
+//!
 //! Actor pattern rather than shared state: PJRT handles are not Sync, so
 //! the service thread *constructs* the runtime itself and everything else
 //! talks to it through channels. This is the same shape a vLLM router
@@ -35,7 +42,7 @@ use crate::fusion::Strategy;
 use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
-use crate::workload::{zoo, Workload};
+use crate::workload::{Workload, WorkloadRegistry};
 
 use super::cache::{Entry, Key, MappingCache};
 use super::metrics::Metrics;
@@ -61,9 +68,15 @@ pub struct ServiceConfig {
     /// Sampling budget per fallback search (paper teacher budget: 2000).
     pub fallback_budget: usize,
     /// Base seed for fallback searches; the per-request seed is derived
-    /// from (workload, batch, condition) so identical requests get
-    /// identical strategies (cache-coherent).
+    /// from (workload content hash, batch, condition) so identical
+    /// requests get identical strategies (cache-coherent) — even when the
+    /// same net is posted under different names.
     pub fallback_seed: u64,
+    /// The workload registry the service resolves requests against,
+    /// pre-seeded with the zoo. Shared: register custom nets here (CLI
+    /// `--workload-file`) before or after spawn, or let inline request
+    /// specs register themselves on first use.
+    pub registry: Arc<WorkloadRegistry>,
 }
 
 impl ServiceConfig {
@@ -78,6 +91,7 @@ impl ServiceConfig {
             search_fallback: false,
             fallback_budget: 2000,
             fallback_seed: 0x5EED,
+            registry: Arc::new(WorkloadRegistry::with_zoo()),
         }
     }
 }
@@ -119,7 +133,11 @@ impl MapperService {
     /// failed), so callers get construction errors synchronously.
     pub fn spawn(cfg: ServiceConfig) -> Result<MapperService> {
         let (tx, rx) = channel::<Msg>();
-        let metrics = Arc::new(Mutex::new(Metrics::new(16)));
+        // The real max batch (manifest batches, or pool size in fallback
+        // mode) is only known once the backend is up; the service thread
+        // sizes the occupancy histogram then, and `record_batch` grows it
+        // on overflow — no sample is ever dropped.
+        let metrics = Arc::new(Mutex::new(Metrics::new(0)));
         let metrics_thread = Arc::clone(&metrics);
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let handle = std::thread::Builder::new()
@@ -170,21 +188,60 @@ impl MapperClient {
     }
 }
 
-/// Deterministic per-request search seed: identical (workload, batch,
-/// condition) requests resolve to identical strategies, which keeps the
-/// cache and repeat requests coherent.
-fn request_seed(base: u64, workload: &str, batch: usize, mem_cond_mb: f64) -> u64 {
+/// Deterministic per-request search seed, derived from the cache [`Key`]:
+/// the exact identity that decides cache sharing (workload content, hw,
+/// batch, quantized condition) decides the search, so repeat requests —
+/// and the same net posted under different names — get identical
+/// strategies, and the two can never quantize differently.
+fn request_seed(base: u64, key: &Key) -> u64 {
     const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = 0xcbf2_9ce4_8422_2325u64 ^ base.wrapping_mul(FNV_PRIME);
-    for b in workload.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(FNV_PRIME);
+    for v in [key.workload_hash, key.hw_hash, key.batch as u64, key.mem_q] {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
     }
-    h ^= batch as u64;
-    h = h.wrapping_mul(FNV_PRIME);
-    // Quantized like the cache key so jittered conditions share a seed.
-    h ^= (mem_cond_mb * 4.0).round() as u64;
     h.wrapping_mul(FNV_PRIME)
+}
+
+/// Reject malformed requests before they can reach [`Key::new`] or
+/// `request_seed`, where a NaN/negative condition saturates the 0.25 MB
+/// quantizer to 0 and collides with legitimate tiny conditions.
+fn validate(req: &MapRequest) -> Result<(), String> {
+    if req.batch == 0 {
+        return Err("invalid request: batch must be >= 1".into());
+    }
+    if !req.mem_cond_mb.is_finite() || req.mem_cond_mb <= 0.0 {
+        return Err(format!(
+            "invalid request: mem_cond_mb must be finite and positive, got {}",
+            req.mem_cond_mb
+        ));
+    }
+    // The hw config is client-supplied too: degenerate rates would flow
+    // into the cost model as NaN/inf and get cached under a stable key.
+    if let Err(e) = req.hw.validate() {
+        return Err(format!("invalid request: {e}"));
+    }
+    Ok(())
+}
+
+/// Meter and answer one rejected request (validation or resolution
+/// failure) without poisoning the rest of the batch.
+fn reject(metrics: &Arc<Mutex<Metrics>>, job: Job, msg: String) {
+    let mut m = metrics.lock().expect("metrics");
+    m.requests += 1;
+    m.rejected += 1;
+    drop(m);
+    let _ = job.reply.send(Err(msg));
+}
+
+/// Copy the cache's counters into the metrics snapshot — the cache is the
+/// single source of truth for hit/miss accounting.
+fn sync_cache_stats(m: &mut Metrics, cache: &MappingCache) {
+    m.cache_hits = cache.hits;
+    m.cache_misses = cache.misses;
+    m.cache_size = cache.len();
 }
 
 fn service_loop(
@@ -242,6 +299,13 @@ fn service_loop(
         // Search fallback: one pool worker per in-flight search.
         Backend::Search { .. } => ThreadPool::shared().size().max(1),
     };
+    // Size the occupancy histogram for the backend we actually got
+    // (spawn couldn't know); overshoot still grows on record.
+    metrics
+        .lock()
+        .expect("metrics")
+        .ensure_batch_capacity(max_batch);
+    let registry = Arc::clone(&cfg.registry);
     let mut cache = MappingCache::new(cfg.cache_capacity);
 
     loop {
@@ -270,19 +334,40 @@ fn service_loop(
             }
         }
 
-        // Serve cache hits immediately; keep the misses for the backend.
-        let mut to_resolve: Vec<Job> = Vec::new();
+        // Validate and resolve first: malformed requests and unknown /
+        // unrepresentable workloads are rejected per-request — before
+        // they can touch the cache — without poisoning the batch.
+        let mut resolved: Vec<(Job, Arc<Workload>, u64)> = Vec::new();
         for job in pending {
-            let key = Key::new(&job.req.workload, job.req.batch, job.req.mem_cond_mb);
+            if let Err(msg) = validate(&job.req) {
+                reject(&metrics, job, msg);
+                continue;
+            }
+            match registry.resolve(&job.req.workload) {
+                Ok((w, hash)) => resolved.push((job, w, hash)),
+                Err(e) => reject(&metrics, job, format!("{e:#}")),
+            }
+        }
+
+        // Serve cache hits immediately; keep the misses for the backend.
+        let mut jobs: Vec<(Job, Arc<Workload>, Key)> = Vec::new();
+        for (job, w, hash) in resolved {
+            let key = Key::new(
+                hash,
+                job.req.hw.content_hash(),
+                job.req.batch,
+                job.req.mem_cond_mb,
+            );
             if let Some(hit) = cache.get(&key) {
+                let latency = job.enqueued.elapsed();
                 let mut m = metrics.lock().expect("metrics");
                 m.requests += 1;
-                m.cache_hits += 1;
-                let latency = job.enqueued.elapsed();
                 m.latency.record(latency);
                 if !hit.valid {
                     m.invalid_responses += 1;
                 }
+                sync_cache_stats(&mut m, &cache);
+                drop(m);
                 let _ = job.reply.send(Ok(MapResponse {
                     strategy: hit.strategy,
                     speedup: hit.speedup,
@@ -292,32 +377,7 @@ fn service_loop(
                     latency,
                 }));
             } else {
-                to_resolve.push(job);
-            }
-        }
-        if to_resolve.is_empty() {
-            if stop_after {
-                return;
-            }
-            continue;
-        }
-
-        // Resolve workloads; reject unknown ones without poisoning the
-        // batch (shared by both backends).
-        let mut workloads: Vec<Workload> = Vec::new();
-        let mut jobs: Vec<Job> = Vec::new();
-        for job in to_resolve {
-            match zoo::by_name(&job.req.workload) {
-                Some(w) => {
-                    workloads.push(w);
-                    jobs.push(job);
-                }
-                None => {
-                    metrics.lock().expect("metrics").requests += 1;
-                    let _ = job
-                        .reply
-                        .send(Err(format!("unknown workload `{}`", job.req.workload)));
-                }
+                jobs.push((job, w, key));
             }
         }
         if jobs.is_empty() {
@@ -329,12 +389,11 @@ fn service_loop(
 
         match &backend {
             Backend::Model { rt, model } => {
-                let envs: Vec<FusionEnv> = workloads
+                let envs: Vec<FusionEnv> = jobs
                     .iter()
-                    .zip(&jobs)
-                    .map(|(w, job)| {
+                    .map(|(job, w, _)| {
                         FusionEnv::new(
-                            w.clone(),
+                            (**w).clone(),
                             job.req.batch,
                             job.req.hw,
                             job.req.mem_cond_mb,
@@ -345,11 +404,12 @@ fn service_loop(
                 match model.infer_batch(rt, &env_refs) {
                     Ok(trajs) => {
                         metrics.lock().expect("metrics").record_batch(jobs.len());
-                        for (job, traj) in jobs.into_iter().zip(trajs) {
+                        for ((job, _, key), traj) in jobs.into_iter().zip(trajs) {
                             respond(
                                 &metrics,
                                 &mut cache,
                                 job,
+                                key,
                                 traj.strategy,
                                 traj.speedup,
                                 traj.peak_act_bytes as f64 / MB,
@@ -360,8 +420,14 @@ fn service_loop(
                     }
                     Err(e) => {
                         let msg = format!("inference failed: {e:#}");
-                        for job in jobs {
-                            metrics.lock().expect("metrics").requests += 1;
+                        let mut m = metrics.lock().expect("metrics");
+                        m.requests += jobs.len() as u64;
+                        // The lookups above already counted misses in the
+                        // cache; keep the snapshot in step even though no
+                        // entry gets written.
+                        sync_cache_stats(&mut m, &cache);
+                        drop(m);
+                        for (job, _, _) in jobs {
                             let _ = job.reply.send(Err(msg.clone()));
                         }
                     }
@@ -374,11 +440,10 @@ fn service_loop(
                 // a pool worker stays serial by design).
                 let (budget, base_seed) = (*budget, *seed);
                 let tasks: Vec<Box<dyn FnOnce() -> (Strategy, f64, f64, bool) + Send>> =
-                    workloads
-                        .iter()
-                        .zip(&jobs)
-                        .map(|(w, job)| {
-                            let w = w.clone();
+                    jobs.iter()
+                        .map(|(job, w, key)| {
+                            let w = Arc::clone(w);
+                            let key = key.clone();
                             let req = job.req.clone();
                             Box::new(move || {
                                 let prob = FusionProblem::new(
@@ -387,12 +452,7 @@ fn service_loop(
                                     req.hw,
                                     req.mem_cond_mb,
                                 );
-                                let sd = request_seed(
-                                    base_seed,
-                                    &req.workload,
-                                    req.batch,
-                                    req.mem_cond_mb,
-                                );
+                                let sd = request_seed(base_seed, &key);
                                 let r = GSampler::default().run(
                                     &prob,
                                     budget,
@@ -410,12 +470,12 @@ fn service_loop(
                         .collect();
                 let results = ThreadPool::shared().run_batch(tasks);
                 metrics.lock().expect("metrics").record_batch(jobs.len());
-                for (job, (strategy, speedup, act_mb, valid)) in
+                for ((job, _, key), (strategy, speedup, act_mb, valid)) in
                     jobs.into_iter().zip(results)
                 {
                     respond(
-                        &metrics, &mut cache, job, strategy, speedup, act_mb, valid,
-                        Source::Search,
+                        &metrics, &mut cache, job, key, strategy, speedup, act_mb,
+                        valid, Source::Search,
                     );
                 }
             }
@@ -432,6 +492,7 @@ fn respond(
     metrics: &Arc<Mutex<Metrics>>,
     cache: &mut MappingCache,
     job: Job,
+    key: Key,
     strategy: Strategy,
     speedup: f64,
     act_usage_mb: f64,
@@ -448,7 +509,7 @@ fn respond(
         latency,
     };
     cache.put(
-        Key::new(&job.req.workload, job.req.batch, job.req.mem_cond_mb),
+        key,
         Entry {
             strategy,
             speedup,
@@ -462,6 +523,7 @@ fn respond(
     if !valid {
         m.invalid_responses += 1;
     }
+    sync_cache_stats(&mut m, cache);
     drop(m);
     let _ = job.reply.send(Ok(resp));
 }

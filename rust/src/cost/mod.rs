@@ -101,6 +101,54 @@ impl HwConfig {
     pub fn peak_macs(&self) -> f64 {
         self.pes as f64 * self.macs_per_pe as f64 * self.freq_hz
     }
+
+    /// Sanity-check a (possibly client-supplied) config before it reaches
+    /// the cost model or a serving cache key: non-finite or non-positive
+    /// rates turn every roofline term into NaN/inf, and zero PE counts
+    /// divide by zero. `buffer_bytes` is not checked — the serving
+    /// condition supersedes it.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pes == 0 || self.macs_per_pe == 0 {
+            return Err("hw: `pes` and `macs_per_pe` must be >= 1".into());
+        }
+        for (what, v) in [
+            ("freq_hz", self.freq_hz),
+            ("bw_off", self.bw_off),
+            ("bw_on", self.bw_on),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!("hw: `{what}` must be finite and positive, got {v}"));
+            }
+        }
+        if !self.t_switch_s.is_finite() || self.t_switch_s < 0.0 {
+            return Err(format!(
+                "hw: `t_switch_s` must be finite and non-negative, got {}",
+                self.t_switch_s
+            ));
+        }
+        Ok(())
+    }
+
+    /// Identity hash for serving-path keys: FNV-1a over the accelerator
+    /// parameters. `buffer_bytes` is deliberately excluded — the serving
+    /// condition overrides the usable buffer per request
+    /// ([`HwConfig::with_buffer_mb`]), so two configs differing only there
+    /// produce identical mappings and should share cache entries.
+    pub fn content_hash(&self) -> u64 {
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for v in [
+            self.pes,
+            self.macs_per_pe,
+            self.t_switch_s.to_bits(),
+            self.freq_hz.to_bits(),
+            self.bw_off.to_bits(),
+            self.bw_on.to_bits(),
+        ] {
+            h = (h ^ v).wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
 }
 
 /// Per-group cost breakdown (kept for analysis benches and Fig. 4 output).
@@ -444,5 +492,35 @@ mod tests {
         assert_eq!(hw.pes, 1024);
         assert_eq!(hw.buffer_bytes, 64 * 1024 * 1024);
         assert_eq!(hw.with_buffer_mb(20.0).buffer_bytes, 20 * 1024 * 1024);
+    }
+
+    #[test]
+    fn hw_validate_rejects_degenerate_configs() {
+        assert!(HwConfig::paper().validate().is_ok());
+        let mut hw = HwConfig::paper();
+        hw.bw_off = 0.0;
+        assert!(hw.validate().is_err());
+        hw = HwConfig::paper();
+        hw.freq_hz = f64::NAN;
+        assert!(hw.validate().is_err());
+        hw = HwConfig::paper();
+        hw.pes = 0;
+        assert!(hw.validate().is_err());
+        hw = HwConfig::paper();
+        hw.t_switch_s = -1.0;
+        assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn hw_content_hash_ignores_buffer_only() {
+        let hw = HwConfig::paper();
+        assert_eq!(
+            hw.content_hash(),
+            hw.with_buffer_mb(20.0).content_hash(),
+            "condition carries the buffer; it must not split cache entries"
+        );
+        let mut other = hw;
+        other.bw_off /= 2.0;
+        assert_ne!(hw.content_hash(), other.content_hash());
     }
 }

@@ -291,6 +291,13 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         .opt("requests", Some("64"), "synthetic requests to issue")
         .opt("clients", Some("4"), "concurrent client threads")
         .opt("window-ms", Some("5"), "dynamic batching window (ms)")
+        .opt("cache-capacity", Some("1024"), "mapping cache capacity (entries)")
+        .opt("fallback-budget", Some("2000"), "G-Sampler budget per fallback search")
+        .opt(
+            "workload-file",
+            None,
+            "custom workload JSON file(s), comma-separated; registered and mixed into the stream",
+        )
         .opt("seed", Some("7"), "request stream seed")
         .switch(
             "search-fallback",
@@ -302,8 +309,29 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     cfg.checkpoint = p.get("ckpt").map(PathBuf::from);
     cfg.batch_window = Duration::from_millis(p.get_u64("window-ms")?);
     cfg.search_fallback = p.flag("search-fallback");
+    cfg.cache_capacity = p.get_usize("cache-capacity")?.max(1);
+    cfg.fallback_budget = p.get_usize("fallback-budget")?.max(1);
     let n_requests = p.get_usize("requests")?;
     let n_clients = p.get_usize("clients")?.max(1);
+
+    // Custom nets join the zoo in the request mix: registered up front so
+    // named requests resolve, exactly like a tenant onboarding one.
+    let mut stream: Vec<String> = ["vgg16", "resnet18", "resnet50", "mobilenet_v2", "mnasnet"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    if let Some(files) = p.get("workload-file") {
+        for path in files.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let w = dnnfuser::workload::custom::from_file(path)?;
+            let name = w.name.clone();
+            cfg.registry
+                .register(w)
+                .with_context(|| format!("registering workload from {path}"))?;
+            println!("registered custom workload `{name}` from {path}");
+            stream.push(name);
+        }
+    }
+    let stream = std::sync::Arc::new(stream);
 
     println!("starting mapper service…");
     let svc = MapperService::spawn(cfg)?;
@@ -311,18 +339,18 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
 
     // The paper's scenario: buffer availability jumps around as other
     // kernels come and go; several tenants ask for fresh mappings.
-    let workloads = ["vgg16", "resnet18", "resnet50", "mobilenet_v2", "mnasnet"];
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_clients {
         let client = client.clone();
+        let stream = std::sync::Arc::clone(&stream);
         let seed = p.get_u64("seed")? + c as u64;
         let quota = n_requests / n_clients + usize::from(c < n_requests % n_clients);
         handles.push(std::thread::spawn(move || {
             let mut rng = Rng::seed_from_u64(seed);
             let mut ok = 0usize;
             for _ in 0..quota {
-                let w = workloads[rng.index(workloads.len())];
+                let w = &stream[rng.index(stream.len())];
                 let mem = [16.0, 20.0, 24.0, 28.0, 32.0, 40.0, 48.0, 64.0][rng.index(8)];
                 match client.map(MapRequest::new(w, 64, mem)) {
                     Ok(resp) => {

@@ -20,10 +20,9 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::env::T_MAX;
 use crate::util::json::Json;
 
-use super::{Layer, Workload};
+use super::{check_depth, Layer, Workload};
 
 /// Parse a workload from JSON text.
 pub fn from_json(text: &str) -> Result<Workload> {
@@ -41,13 +40,6 @@ pub fn from_json(text: &str) -> Result<Workload> {
         .context("`layers` must be an array")?;
     if layers_json.is_empty() {
         bail!("workload `{name}` has no layers");
-    }
-    if layers_json.len() > T_MAX - 1 {
-        bail!(
-            "workload `{name}` has {} layers; the AOT models support at most {}",
-            layers_json.len(),
-            T_MAX - 1
-        );
     }
     let mut layers = Vec::with_capacity(layers_json.len());
     for (i, lj) in layers_json.iter().enumerate() {
@@ -93,6 +85,7 @@ pub fn from_json(text: &str) -> Result<Workload> {
     }
     let w = Workload { name, layers };
     w.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+    check_depth(&w).map_err(|e| anyhow::anyhow!("{e}"))?;
     Ok(w)
 }
 

@@ -10,7 +10,10 @@
 //! activation geometry (they are not fusion decision points).
 
 pub mod custom;
+pub mod registry;
 pub mod zoo;
+
+pub use registry::{WorkloadRegistry, WorkloadSpec};
 
 /// One weighted layer in 6-loop notation. `y`/`x` are OUTPUT activation
 /// dimensions; the input activation is `c × (y·stride) × (x·stride)`.
@@ -68,7 +71,7 @@ impl Layer {
 }
 
 /// A workload: an ordered chain of weighted layers.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Workload {
     pub name: String,
     pub layers: Vec<Layer>,
@@ -123,6 +126,52 @@ impl Workload {
     pub fn max_out_bytes(&self) -> u64 {
         self.layers.iter().map(|l| l.out_bytes()).max().unwrap_or(0)
     }
+
+    /// Content identity: FNV-1a over the structural layer fields, in order.
+    /// Names (workload and layer) are cosmetic and deliberately excluded —
+    /// two tenants posting the same net under different names hash equal,
+    /// so they share cache entries and search seeds.
+    pub fn content_hash(&self) -> u64 {
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        fn mix(h: u64, v: u64) -> u64 {
+            (h ^ v).wrapping_mul(FNV_PRIME)
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        h = mix(h, self.layers.len() as u64);
+        for l in &self.layers {
+            for v in [l.k, l.c, l.y, l.x, l.r, l.s, l.stride] {
+                h = mix(h, v as u64);
+            }
+            h = mix(h, l.depthwise as u64);
+        }
+        h
+    }
+
+    /// Structural equality — exactly the fields [`Workload::content_hash`]
+    /// covers (layer count + per-layer dims), names ignored. Used by the
+    /// registry to verify that equal hashes really mean equal nets.
+    pub fn same_structure(&self, other: &Workload) -> bool {
+        self.layers.len() == other.layers.len()
+            && self.layers.iter().zip(&other.layers).all(|(a, b)| {
+                (a.k, a.c, a.y, a.x, a.r, a.s, a.stride, a.depthwise)
+                    == (b.k, b.c, b.y, b.x, b.r, b.s, b.stride, b.depthwise)
+            })
+    }
+}
+
+/// Depth gate shared by the JSON loader and the workload registry: the AOT
+/// models allocate [`crate::env::T_MAX`] slots and a strategy has
+/// `n_layers + 1` entries, so deeper chains cannot be represented.
+pub fn check_depth(w: &Workload) -> Result<(), String> {
+    let limit = crate::env::T_MAX - 1;
+    if w.n_layers() > limit {
+        return Err(format!(
+            "workload `{}` has {} layers; the AOT models support at most {limit}",
+            w.name,
+            w.n_layers()
+        ));
+    }
+    Ok(())
 }
 
 /// Convenience constructor used by the zoo and by tests.
@@ -198,6 +247,42 @@ mod tests {
             layers: vec![conv("a", 64, 3, 8, 8, 3, 3, 1), conv("b", 64, 64, 16, 16, 3, 3, 1)],
         };
         assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn content_hash_ignores_names_but_not_structure() {
+        let a = Workload {
+            name: "net_a".into(),
+            layers: vec![conv("x", 64, 3, 8, 8, 3, 3, 1)],
+        };
+        let mut b = a.clone();
+        b.name = "net_b".into();
+        b.layers[0].name = "renamed".into();
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert!(a.same_structure(&b));
+        let mut c = a.clone();
+        c.layers[0].stride = 2;
+        assert_ne!(a.content_hash(), c.content_hash());
+        assert!(!a.same_structure(&c));
+        let mut d = a.clone();
+        d.layers[0].depthwise = true;
+        assert_ne!(a.content_hash(), d.content_hash());
+    }
+
+    #[test]
+    fn check_depth_gates_at_t_max() {
+        let layer = conv("l", 8, 8, 8, 8, 1, 1, 1);
+        let ok = Workload {
+            name: "ok".into(),
+            layers: vec![layer.clone(); crate::env::T_MAX - 1],
+        };
+        assert!(check_depth(&ok).is_ok());
+        let deep = Workload {
+            name: "deep".into(),
+            layers: vec![layer; crate::env::T_MAX],
+        };
+        let err = check_depth(&deep).unwrap_err();
+        assert!(err.contains("at most"), "{err}");
     }
 
     #[test]

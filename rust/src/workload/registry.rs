@@ -1,0 +1,354 @@
+//! Workload registry: the serving path's source of workload truth.
+//!
+//! The zoo covers the paper's five evaluation networks, but DNNFuser's
+//! headline claim is one-shot generalization to *unseen* workloads — a
+//! tenant shows up with *their* network and expects a mapping now, not
+//! after a redeploy. The registry makes that a first-class serving
+//! operation:
+//!
+//! - [`WorkloadSpec`] is what a [`crate::coordinator::MapRequest`]
+//!   carries: either a registered name or an inline layer list (the
+//!   [`super::custom`] JSON schema);
+//! - [`WorkloadRegistry`] resolves specs, pre-seeded with the zoo and
+//!   extended at runtime via [`WorkloadRegistry::register`] (CLI
+//!   `--workload-file`, or implicitly by inline requests);
+//! - identity is the **content hash** ([`Workload::content_hash`]):
+//!   names are aliases, so two tenants posting the same net under
+//!   different names share one registry entry — and hence one mapping
+//!   cache entry and one deterministic search seed.
+//!
+//! Registration validates the chain and gates depth at `T_MAX − 1`
+//! (deeper chains cannot be represented by the AOT models), so
+//! everything downstream of a resolved spec can trust the workload.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{check_depth, custom, zoo, Workload};
+
+/// How a request names its workload: a registered name, or the full
+/// inline definition (resolved — and registered — on first use).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// A name known to the registry (zoo pre-seeded; more via `register`).
+    Named(String),
+    /// An inline layer list in the [`custom::from_json`] schema.
+    Inline(Workload),
+}
+
+impl WorkloadSpec {
+    pub fn named(name: &str) -> WorkloadSpec {
+        WorkloadSpec::Named(name.to_string())
+    }
+
+    /// Parse an inline spec from JSON text (the `custom::from_json` schema).
+    pub fn from_json(text: &str) -> Result<WorkloadSpec> {
+        Ok(WorkloadSpec::Inline(custom::from_json(text)?))
+    }
+
+    /// Load an inline spec from a JSON file.
+    pub fn from_file(path: &str) -> Result<WorkloadSpec> {
+        Ok(WorkloadSpec::Inline(custom::from_file(path)?))
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// Name → content hash. Multiple names may alias one hash.
+    by_name: HashMap<String, u64>,
+    /// Content hash → the shared workload.
+    by_hash: HashMap<u64, Arc<Workload>>,
+}
+
+/// Default bound on distinct registered workloads. Inline request specs
+/// register themselves, so without a bound a long-running service would
+/// grow without limit under many (or adversarial) distinct tenants; the
+/// mapping cache is LRU-bounded and the registry must be bounded too.
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Thread-safe workload registry, shared between the CLI and the service
+/// thread (cheap to clone behind an `Arc`).
+#[derive(Debug)]
+pub struct WorkloadRegistry {
+    inner: Mutex<Inner>,
+    /// Max distinct workloads; names (aliases) are bounded at 4× this.
+    capacity: usize,
+}
+
+impl WorkloadRegistry {
+    /// An empty registry with [`DEFAULT_CAPACITY`] (production uses
+    /// [`with_zoo`]).
+    ///
+    /// [`with_zoo`]: WorkloadRegistry::with_zoo
+    pub fn new() -> WorkloadRegistry {
+        WorkloadRegistry::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// An empty registry bounded at `capacity` distinct workloads.
+    pub fn with_capacity(capacity: usize) -> WorkloadRegistry {
+        WorkloadRegistry {
+            inner: Mutex::new(Inner::default()),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// The serving default: the paper's five evaluation networks, plus the
+    /// `mobilenetv2` spelling the CLI has always accepted.
+    pub fn with_zoo() -> WorkloadRegistry {
+        let reg = WorkloadRegistry::new();
+        for w in zoo::all() {
+            reg.register(w).expect("zoo workloads are valid");
+        }
+        let mut alias = zoo::mobilenet_v2();
+        alias.name = "mobilenetv2".into();
+        reg.register(alias).expect("zoo workloads are valid");
+        reg
+    }
+
+    /// Register a workload under its name. Validates the chain and the
+    /// depth gate; content-hash identity means registering the same layers
+    /// under a new name aliases the existing entry rather than duplicating
+    /// it. Re-registering an identical (name, layers) pair is idempotent;
+    /// reusing a name for *different* layers is an error, as is exceeding
+    /// the registry's capacity.
+    pub fn register(&self, w: Workload) -> Result<u64> {
+        if w.name.is_empty() {
+            bail!("workload has no name");
+        }
+        w.validate().map_err(|e| anyhow!("{e}"))?;
+        check_depth(&w).map_err(|e| anyhow!("{e}"))?;
+        let hash = w.content_hash();
+        let mut g = self.inner.lock().expect("registry poisoned");
+        // Collision guard: a 64-bit structural hash is identity only if
+        // equal hash really means equal layers — verify rather than
+        // silently serving tenant A's mappings for tenant B's net.
+        if let Some(existing) = g.by_hash.get(&hash) {
+            if !existing.same_structure(&w) {
+                bail!(
+                    "workload content-hash collision between `{}` and `{}`; \
+                     refusing to alias them",
+                    existing.name,
+                    w.name
+                );
+            }
+        }
+        if let Some(&existing) = g.by_name.get(&w.name) {
+            if existing != hash {
+                bail!(
+                    "workload name `{}` is already registered with different layers",
+                    w.name
+                );
+            }
+            return Ok(hash);
+        }
+        // Capacity bounds: inline specs self-register, so an unbounded
+        // registry would grow forever in a long-running service.
+        if !g.by_hash.contains_key(&hash) && g.by_hash.len() >= self.capacity {
+            bail!(
+                "workload registry is full ({} distinct workloads); \
+                 raise the capacity or retire old nets",
+                self.capacity
+            );
+        }
+        if g.by_name.len() >= self.capacity.saturating_mul(4) {
+            bail!(
+                "workload registry is full ({} names registered)",
+                g.by_name.len()
+            );
+        }
+        let name = w.name.clone();
+        g.by_hash.entry(hash).or_insert_with(|| Arc::new(w));
+        g.by_name.insert(name, hash);
+        Ok(hash)
+    }
+
+    /// Look a registered workload up by name (exact, then
+    /// ASCII-lowercased — zoo names are lowercase).
+    pub fn get(&self, name: &str) -> Option<(Arc<Workload>, u64)> {
+        let g = self.inner.lock().expect("registry poisoned");
+        let hash = g
+            .by_name
+            .get(name)
+            .or_else(|| g.by_name.get(&name.to_ascii_lowercase()))
+            .copied()?;
+        let w = g.by_hash.get(&hash).expect("name maps to registered hash");
+        Some((Arc::clone(w), hash))
+    }
+
+    /// Resolve a request spec to `(workload, content_hash)`. Inline specs
+    /// are registered as a side effect, so the net becomes addressable by
+    /// name afterwards and identical posts dedup onto one entry.
+    pub fn resolve(&self, spec: &WorkloadSpec) -> Result<(Arc<Workload>, u64)> {
+        match spec {
+            // Names are tenant-supplied; don't enumerate other tenants'
+            // registrations in the request-path error.
+            WorkloadSpec::Named(name) => self.get(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown workload `{name}` (not registered; register it \
+                     or post the layer list inline)"
+                )
+            }),
+            WorkloadSpec::Inline(w) => {
+                // Fast path for the hot serving pattern — a tenant posting
+                // the same net inline on every request: one lock, no
+                // clone/re-validate once (name, content) is registered.
+                let hash = w.content_hash();
+                {
+                    let g = self.inner.lock().expect("registry poisoned");
+                    if let Some(existing) = g.by_hash.get(&hash) {
+                        if existing.same_structure(w) && g.by_name.get(&w.name) == Some(&hash) {
+                            return Ok((Arc::clone(existing), hash));
+                        }
+                    }
+                }
+                let hash = self.register(w.clone())?;
+                let g = self.inner.lock().expect("registry poisoned");
+                let w = g.by_hash.get(&hash).expect("just registered");
+                Ok((Arc::clone(w), hash))
+            }
+        }
+    }
+
+    /// Registered names, sorted (aliases included).
+    pub fn names(&self) -> Vec<String> {
+        let g = self.inner.lock().expect("registry poisoned");
+        let mut names: Vec<String> = g.by_name.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Number of *distinct* workloads (content hashes, not names).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("registry poisoned").by_hash.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for WorkloadRegistry {
+    fn default() -> Self {
+        WorkloadRegistry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::conv;
+
+    fn toy(name: &str, k: usize) -> Workload {
+        Workload {
+            name: name.into(),
+            layers: vec![conv("l0", k, 3, 8, 8, 3, 3, 1)],
+        }
+    }
+
+    #[test]
+    fn zoo_is_preseeded_and_resolvable() {
+        let reg = WorkloadRegistry::with_zoo();
+        assert_eq!(reg.len(), 5);
+        let (w, h) = reg.resolve(&WorkloadSpec::named("vgg16")).unwrap();
+        assert_eq!(w.name, "vgg16");
+        assert_eq!(h, w.content_hash());
+        // Alias and case-insensitive lookups both resolve to the same net.
+        let (alias, ah) = reg.resolve(&WorkloadSpec::named("MobileNetV2")).unwrap();
+        let (canon, ch) = reg.resolve(&WorkloadSpec::named("mobilenet_v2")).unwrap();
+        assert_eq!(ah, ch);
+        assert!(Arc::ptr_eq(&alias, &canon));
+    }
+
+    #[test]
+    fn unknown_name_error_does_not_leak_registrations() {
+        let reg = WorkloadRegistry::with_zoo();
+        reg.register(toy("tenant_secret_net", 16)).unwrap();
+        let err = reg
+            .resolve(&WorkloadSpec::named("alexnet"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown workload `alexnet`"), "{err}");
+        // Other tenants' registrations must not be enumerated back.
+        assert!(!err.contains("tenant_secret_net"), "{err}");
+    }
+
+    #[test]
+    fn content_hash_dedups_across_names() {
+        let reg = WorkloadRegistry::new();
+        let h1 = reg.register(toy("tenant_a", 16)).unwrap();
+        let h2 = reg.register(toy("tenant_b", 16)).unwrap();
+        assert_eq!(h1, h2);
+        assert_eq!(reg.len(), 1, "same layers must share one entry");
+        let (a, _) = reg.get("tenant_a").unwrap();
+        let (b, _) = reg.get("tenant_b").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn name_conflicts_and_reregistration() {
+        let reg = WorkloadRegistry::new();
+        reg.register(toy("net", 16)).unwrap();
+        // Idempotent for identical content.
+        reg.register(toy("net", 16)).unwrap();
+        assert_eq!(reg.names(), vec!["net".to_string()]);
+        // Same name, different layers: rejected.
+        let err = reg.register(toy("net", 32)).unwrap_err().to_string();
+        assert!(err.contains("different layers"), "{err}");
+    }
+
+    #[test]
+    fn register_enforces_validation_and_depth() {
+        let reg = WorkloadRegistry::new();
+        let bad = Workload {
+            name: "bad".into(),
+            layers: vec![
+                conv("a", 64, 3, 8, 8, 3, 3, 1),
+                conv("b", 32, 128, 8, 8, 3, 3, 1),
+            ],
+        };
+        assert!(reg.register(bad).is_err());
+        let deep = Workload {
+            name: "deep".into(),
+            layers: vec![conv("l", 8, 8, 8, 8, 1, 1, 1); crate::env::T_MAX],
+        };
+        let err = reg.register(deep).unwrap_err().to_string();
+        assert!(err.contains("at most"), "{err}");
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn layer_names_are_cosmetic_for_dedup() {
+        let reg = WorkloadRegistry::new();
+        let a = toy("a", 16);
+        let mut b = toy("b", 16);
+        b.layers[0].name = "renamed".into();
+        let h1 = reg.register(a).unwrap();
+        let h2 = reg.register(b).unwrap();
+        assert_eq!(h1, h2, "layer names must not affect identity");
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn capacity_bounds_distinct_workloads_not_aliases() {
+        let reg = WorkloadRegistry::with_capacity(2);
+        reg.register(toy("a", 8)).unwrap();
+        reg.register(toy("b", 16)).unwrap();
+        // Aliasing existing content at capacity is fine…
+        reg.register(toy("c", 16)).unwrap();
+        assert_eq!(reg.len(), 2);
+        // …a third distinct net is not.
+        let err = reg.register(toy("d", 32)).unwrap_err().to_string();
+        assert!(err.contains("full"), "{err}");
+    }
+
+    #[test]
+    fn inline_resolve_registers_for_named_reuse() {
+        let reg = WorkloadRegistry::new();
+        let spec = WorkloadSpec::Inline(toy("posted", 16));
+        let (_, h1) = reg.resolve(&spec).unwrap();
+        let (_, h2) = reg.resolve(&WorkloadSpec::named("posted")).unwrap();
+        assert_eq!(h1, h2);
+    }
+}

@@ -6,6 +6,7 @@ use std::time::Duration;
 use dnnfuser::coordinator::service::{MapperClient, MapperService, ServiceConfig};
 use dnnfuser::coordinator::{MapRequest, Source};
 use dnnfuser::model::ModelKind;
+use dnnfuser::workload::WorkloadSpec;
 
 fn service() -> Option<MapperService> {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
@@ -169,6 +170,139 @@ fn search_fallback_is_deterministic_per_condition() {
     };
     assert_eq!(a.strategy, b.strategy);
     assert_eq!(a.speedup, b.speedup);
+}
+
+/// An "unseen" network — deliberately not in the zoo.
+const UNSEEN: &str = r#"{
+    "name": "unseen_net",
+    "layers": [
+        {"name": "stem", "k": 24, "c": 3, "y": 32, "x": 32, "r": 3, "s": 3, "stride": 2},
+        {"k": 24, "c": 24, "y": 32, "x": 32, "r": 3, "s": 3, "depthwise": true},
+        {"k": 48, "c": 24, "y": 16, "x": 16, "r": 3, "s": 3, "stride": 2},
+        {"k": 96, "c": 48, "y": 8, "x": 8, "r": 3, "s": 3, "stride": 2}
+    ]
+}"#;
+
+#[test]
+fn unseen_inline_workload_is_served_cached_and_content_deduped() {
+    let svc = fallback_service();
+    let client = svc.client.clone();
+
+    // An inline custom workload is mapped end-to-end (search fallback).
+    let spec = WorkloadSpec::from_json(UNSEEN).unwrap();
+    let r1 = client.map(MapRequest::with_spec(spec.clone(), 64, 16.0)).unwrap();
+    assert_eq!(r1.source, Source::Search);
+    assert_eq!(r1.strategy.values.len(), 5); // 4 layers + mB_0
+
+    // Repeat request hits the cache.
+    let r2 = client.map(MapRequest::with_spec(spec, 64, 16.0)).unwrap();
+    assert_eq!(r2.source, Source::Cache);
+    assert_eq!(r2.strategy, r1.strategy);
+
+    // The same layers posted under a *different* name share the entry:
+    // cache identity is the content hash, not the name.
+    let renamed_json = UNSEEN.replace("unseen_net", "other_tenant_net");
+    let renamed = WorkloadSpec::from_json(&renamed_json).unwrap();
+    let r3 = client.map(MapRequest::with_spec(renamed, 64, 16.0)).unwrap();
+    assert_eq!(r3.source, Source::Cache);
+    assert_eq!(r3.strategy, r1.strategy);
+
+    // The first post registered the name, so by-name requests now resolve.
+    let r4 = client.map(MapRequest::new("unseen_net", 64, 16.0)).unwrap();
+    assert_eq!(r4.source, Source::Cache);
+
+    let m = client.metrics();
+    assert_eq!(m.requests, 4);
+    assert_eq!(m.cache_hits, 3);
+    assert_eq!(m.cache_size, 1, "all four requests must share one cache entry");
+    svc.shutdown();
+}
+
+#[test]
+fn malformed_requests_are_rejected_before_cache_or_backend() {
+    let svc = fallback_service();
+    let client = svc.client.clone();
+    let mut bad_hw = MapRequest::new("vgg16", 64, 20.0);
+    bad_hw.hw.bw_off = 0.0; // degenerate rate → NaN/inf cost terms
+    for req in [
+        MapRequest::new("vgg16", 0, 20.0),
+        MapRequest::new("vgg16", 64, f64::NAN),
+        MapRequest::new("vgg16", 64, -4.0),
+        MapRequest::new("vgg16", 64, f64::INFINITY),
+        bad_hw,
+    ] {
+        let err = client.map(req).unwrap_err();
+        assert!(err.to_string().contains("invalid request"), "{err}");
+    }
+    let m = client.metrics();
+    assert_eq!(m.requests, 5);
+    assert_eq!(m.rejected, 5);
+    assert_eq!(m.cache_size, 0, "malformed requests must not touch the cache");
+    assert_eq!(m.cache_misses, 0, "malformed requests must not touch the cache");
+    // Service is still healthy afterwards.
+    let ok = client.map(MapRequest::new("vgg16", 64, 24.0)).unwrap();
+    assert_eq!(ok.source, Source::Search);
+    svc.shutdown();
+}
+
+#[test]
+fn over_deep_inline_workload_rejected_without_poisoning_the_batch() {
+    use dnnfuser::workload::{conv, Workload};
+    // 70 chain-valid layers exceed the AOT models' T_MAX − 1 slots. Built
+    // directly (bypassing the JSON loader's own depth gate) so the
+    // registry must catch it at resolution time.
+    let deep = Workload {
+        name: "too_deep".into(),
+        layers: (0..70).map(|i| conv(&format!("l{i}"), 8, 8, 8, 8, 1, 1, 1)).collect(),
+    };
+    let svc = fallback_service();
+    let client = svc.client.clone();
+    // Fire the bad and a good request into the same batching window.
+    let c2: MapperClient = client.clone();
+    let good = std::thread::spawn(move || c2.map(MapRequest::new("resnet18", 64, 24.0)));
+    let err = client
+        .map(MapRequest::with_spec(WorkloadSpec::Inline(deep), 64, 24.0))
+        .unwrap_err();
+    assert!(err.to_string().contains("at most"), "{err}");
+    let good = good.join().unwrap().unwrap();
+    assert_eq!(good.source, Source::Search);
+    assert_eq!(good.strategy.values.len(), 19);
+    svc.shutdown();
+}
+
+#[test]
+fn different_hw_configs_do_not_share_cache_entries() {
+    let svc = fallback_service();
+    let client = svc.client.clone();
+    let r1 = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    assert_eq!(r1.source, Source::Search);
+    // Same workload/batch/condition, different accelerator: must be a
+    // fresh mapping, not r1's cached one.
+    let mut req = MapRequest::new("vgg16", 64, 20.0);
+    req.hw.bw_off /= 2.0;
+    let r2 = client.map(req.clone()).unwrap();
+    assert_eq!(r2.source, Source::Search);
+    // But repeating the custom-hw request hits its own entry.
+    let r3 = client.map(req).unwrap();
+    assert_eq!(r3.source, Source::Cache);
+    assert_eq!(r3.strategy, r2.strategy);
+    svc.shutdown();
+}
+
+#[test]
+fn cache_capacity_config_is_respected() {
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.search_fallback = true;
+    cfg.fallback_budget = 200;
+    cfg.cache_capacity = 1;
+    let svc = MapperService::spawn(cfg).expect("fallback spawn");
+    let client = svc.client.clone();
+    client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    client.map(MapRequest::new("vgg16", 64, 24.0)).unwrap(); // evicts 20.0
+    let r = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    assert_eq!(r.source, Source::Search, "capacity-1 cache must have evicted");
+    assert_eq!(client.metrics().cache_size, 1);
+    svc.shutdown();
 }
 
 #[test]
