@@ -7,8 +7,9 @@
 //! batch occupancy, cache hit rate, throughput.
 //!
 //! Run: `cargo run --release --example serve_mapper [-- path/to/model.ckpt]`
-//! (with `make artifacts` the model backend serves; without, the example
-//! falls back to G-Sampler search serving — same protocol, same cache).
+//! (with `make artifacts` the PJRT backend serves; without, the default
+//! `BackendChoice::Auto` serves through the native in-process transformer
+//! — same protocol, same cache, no artifacts needed).
 
 use std::time::{Duration, Instant};
 
@@ -37,8 +38,8 @@ fn main() -> anyhow::Result<()> {
     cfg.model = ModelKind::Df;
     cfg.checkpoint = ckpt.map(Into::into);
     cfg.batch_window = Duration::from_millis(5);
-    // Keep the example runnable without built artifacts: fall back to
-    // G-Sampler searches when the model backend can't load.
+    // Backend is Auto: PJRT when real artifacts load, else the native
+    // in-process transformer. Search stays available as a last resort.
     cfg.search_fallback = true;
     if cfg.checkpoint.is_none() {
         println!("(no checkpoint given — serving an untrained model; pass runs/e2e_df.ckpt)");
@@ -72,9 +73,11 @@ fn main() -> anyhow::Result<()> {
                         .map(MapRequest::new(workload, 64, mem + jitter))
                         .expect("map");
                     match r.source {
-                        // Search-fallback responses are "fresh mappings"
-                        // for reporting purposes, same as model decodes.
-                        Source::Model | Source::Search => lat_model.push(r.latency),
+                        // Fresh mappings, whichever backend produced them
+                        // (native / PJRT decode or search fallback).
+                        Source::Native | Source::Model | Source::Search => {
+                            lat_model.push(r.latency)
+                        }
                         Source::Cache => lat_cache.push(r.latency),
                     }
                 }

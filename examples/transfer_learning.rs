@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         m: vec![0.0; general.theta.len()],
         v: vec![0.0; general.theta.len()],
         step: 0.0,
+        native_cfg: general.native_cfg,
     };
     transfer.train(&rt, &new_ds, transfer_steps, &mut rng, |_, _| {})?;
     let mut direct = MapperModel::init(&rt, ModelKind::Df, 2)?;

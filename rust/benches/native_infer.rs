@@ -1,0 +1,170 @@
+//! Native inference throughput bench → `BENCH_native_infer.json`.
+//!
+//! Measures the serving-critical numbers of the native backend:
+//!
+//! - single-mapping latency and token throughput per zoo workload
+//!   (KV-cache decode, paper-config weights);
+//! - batched serve throughput (`infer_batch`, pool fan-out);
+//! - KV-cache vs full-recompute (graph) decode speedup — the win the KV
+//!   cache exists for, and an absolute floor CI gates on;
+//! - an in-process matmul calibration, used to normalize throughput into
+//!   tokens-per-GFLOP so the committed baseline is comparable across
+//!   machines of different speeds (CI runners vary ~2x; architecture
+//!   efficiency doesn't).
+//!
+//! Quick mode for CI: set `DNNFUSER_BENCH_QUICK=1`. The regression gate is
+//! `scripts/check_bench_regression.py` against `BENCH_baseline.json`.
+
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::model::native::{decoder, ops, NativeConfig, NativeEngine};
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::Runtime;
+use dnnfuser::util::bench::{black_box, Bencher};
+use dnnfuser::util::json::Json;
+use dnnfuser::util::pool::ThreadPool;
+use dnnfuser::workload::zoo;
+
+fn quick_mode() -> bool {
+    std::env::var("DNNFUSER_BENCH_QUICK")
+        .ok()
+        .is_some_and(|v| v != "0" && !v.is_empty())
+}
+
+/// Measure raw `ops::linear` throughput (GFLOP/s) as the machine-speed
+/// calibration: the decode hot loop is the same kernel, so the ratio
+/// decode-throughput / calibration is stable across machines.
+fn calibrate_matmul(b: &Bencher) -> f64 {
+    const N: usize = 256;
+    let x = vec![0.5f32; N];
+    let w: Vec<f32> = (0..N * N).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
+    let mut out = vec![0.0f32; N];
+    let s = b.report("native/calibration_linear_256", || {
+        ops::linear(&x, &w, None, N, N, &mut out);
+        black_box(out[0])
+    });
+    let flops = 2.0 * (N * N) as f64;
+    flops / s.mean_ns // GFLOP/s (flops per ns = GFLOP/s)
+}
+
+fn main() {
+    println!("=== native inference throughput ===\n");
+    let quick = quick_mode();
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+
+    let cfg = NativeConfig::paper();
+    let rt = Runtime::load_native("artifacts", Some(cfg)).expect("native runtime");
+    let model = MapperModel::init(&rt, ModelKind::Df, 1).expect("init");
+    let eng: &NativeEngine = rt.native_engine().unwrap();
+
+    let calib_gflops = calibrate_matmul(&b);
+    println!("    → calibration: {calib_gflops:.2} GFLOP/s (ops::linear 256×256)\n");
+
+    // Single-mapping latency per workload (KV decode).
+    let workloads: &[&str] = if quick {
+        &["vgg16"]
+    } else {
+        &["vgg16", "resnet18", "resnet50"]
+    };
+    let mut rows: Vec<(String, Json)> = Vec::new();
+    let mut vgg16_tokens_per_gflop = 0.0f64;
+    for wname in workloads {
+        let w = zoo::by_name(wname).unwrap();
+        let env = FusionEnv::new(w, 64, HwConfig::paper(), 24.0);
+        let tokens_per_mapping = 3.0 * env.steps() as f64;
+        let s = b.report(&format!("native/kv_map/{wname}"), || {
+            black_box(model.infer(&rt, &env).expect("infer"))
+        });
+        let mappings_per_sec = 1e9 / s.mean_ns;
+        let tokens_per_sec = tokens_per_mapping * mappings_per_sec;
+        let tokens_per_gflop = tokens_per_sec / calib_gflops.max(1e-9);
+        if *wname == "vgg16" {
+            vgg16_tokens_per_gflop = tokens_per_gflop;
+        }
+        println!(
+            "    → {wname}: {:.1} ms/mapping | {:.0} tokens/s | {:.0} tokens/GFLOP",
+            s.mean_ns / 1e6,
+            tokens_per_sec,
+            tokens_per_gflop
+        );
+        rows.push((
+            wname.to_string(),
+            Json::obj(vec![
+                ("mapping_ms", Json::num(s.mean_ns / 1e6)),
+                ("mappings_per_sec", Json::num(mappings_per_sec)),
+                ("tokens_per_sec", Json::num(tokens_per_sec)),
+                ("tokens_per_gflop", Json::num(tokens_per_gflop)),
+            ]),
+        ));
+    }
+
+    // Batched serve throughput: 8 mixed conditions in one pool pass.
+    let envs: Vec<FusionEnv> = [16.0, 20.0, 24.0, 28.0, 32.0, 40.0, 48.0, 64.0]
+        .iter()
+        .map(|&mem| FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), mem))
+        .collect();
+    let env_refs: Vec<&FusionEnv> = envs.iter().collect();
+    let s_batch = b.report("native/kv_map_batch8/vgg16", || {
+        black_box(model.infer_batch(&rt, &env_refs).expect("batch"))
+    });
+    let batch8_mappings_per_sec = 8.0 * 1e9 / s_batch.mean_ns;
+    let batch8_mappings_per_gflop = batch8_mappings_per_sec / calib_gflops.max(1e-9);
+    println!(
+        "    → batch8: {:.1} mappings/s ({:.2} mappings/GFLOP, {} pool workers)",
+        batch8_mappings_per_sec,
+        batch8_mappings_per_gflop,
+        ThreadPool::shared().size()
+    );
+
+    // KV cache vs full-recompute graph decode — the cache's raison d'être.
+    let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 24.0);
+    let s_kv = b.report("native/kv_decode/vgg16", || {
+        black_box(decoder::infer_env(
+            eng,
+            &model.theta,
+            &env,
+            dnnfuser::model::native::Sampling::Greedy,
+        ))
+    });
+    let quick_b = Bencher::quick();
+    let s_graph = quick_b.report("native/graph_decode/vgg16", || {
+        black_box(decoder::graph_infer(eng, &model.theta, &env))
+    });
+    let kv_vs_graph_speedup = s_graph.mean_ns / s_kv.mean_ns;
+    println!("    → KV cache vs graph recompute: {kv_vs_graph_speedup:.1}x\n");
+
+    let row_refs: Vec<(&str, Json)> = rows.iter().map(|(n, j)| (n.as_str(), j.clone())).collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("native_infer")),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::num(ThreadPool::shared().size() as f64)),
+        (
+            "config",
+            Json::obj(vec![
+                ("d_model", Json::num(cfg.d_model as f64)),
+                ("n_blocks", Json::num(cfg.n_blocks as f64)),
+                ("n_heads", Json::num(cfg.n_heads as f64)),
+            ]),
+        ),
+        ("calibration_gflops", Json::num(calib_gflops)),
+        ("workloads", Json::obj(row_refs)),
+        ("batch8_mappings_per_sec", Json::num(batch8_mappings_per_sec)),
+        ("batch8_mappings_per_gflop", Json::num(batch8_mappings_per_gflop)),
+        ("kv_vs_graph_speedup", Json::num(kv_vs_graph_speedup)),
+        (
+            "gates",
+            Json::obj(vec![
+                // Machine-portable values the CI regression gate compares
+                // against BENCH_baseline.json (>20% drop fails).
+                ("vgg16_tokens_per_gflop", Json::num(vgg16_tokens_per_gflop)),
+                ("batch8_mappings_per_gflop", Json::num(batch8_mappings_per_gflop)),
+                ("kv_vs_graph_speedup", Json::num(kv_vs_graph_speedup)),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_native_infer.json");
+    match std::fs::write(path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -7,7 +7,7 @@
 //! the no-fusion baseline ("N/A" when the memory constraint is violated),
 //! peak activation usage, and search/mapping wall time in minutes.
 //!
-//! Expectation (DESIGN.md §7): absolute numbers differ (rebuilt cost model,
+//! Expectation (DESIGN.md §8): absolute numbers differ (rebuilt cost model,
 //! different host) but the SHAPE must hold — generic black-box methods
 //! blow the constraint at this budget, G-Sampler satisfies it with real
 //! speedup, the sequence models match teacher quality at orders-of-

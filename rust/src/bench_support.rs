@@ -31,7 +31,7 @@ pub fn cache_dir() -> PathBuf {
 /// Training steps for bench checkpoints (env-overridable). Imitation on
 /// the teacher datasets (tens of distinct trajectories) plateaus within
 /// ~20 steps — 60 is comfortably past convergence; the paper's 100K-epoch
-/// setting is reachable by overriding (DESIGN.md §8).
+/// setting is reachable by overriding (DESIGN.md §9).
 pub fn bench_steps() -> usize {
     std::env::var("DNNFUSER_BENCH_STEPS")
         .ok()
@@ -141,6 +141,7 @@ pub fn ensure_trained(
             m: vec![0.0; src.theta.len()],
             v: vec![0.0; src.theta.len()],
             step: 0.0,
+            native_cfg: src.native_cfg,
         },
         None => MapperModel::init(rt, kind, seed as i32)?,
     };

@@ -6,6 +6,8 @@
 
 use std::time::Duration;
 
+use super::Source;
+
 /// Log-scale latency histogram: bucket i covers [base·r^i, base·r^(i+1)).
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {
@@ -99,7 +101,17 @@ pub struct Metrics {
     pub model_batches: u64,
     pub model_mapped: u64,
     pub invalid_responses: u64,
+    /// Pooled latency over every answered request (kept for dashboards
+    /// that want one number).
     pub latency: LatencyHistogram,
+    /// Per-backend latency, indexed by response [`Source`] — the signal
+    /// the CI speedup gate reads (native inference vs search fallback
+    /// must not be pooled into one histogram or the 66x-class gap
+    /// disappears into the mean).
+    pub latency_native: LatencyHistogram,
+    pub latency_pjrt: LatencyHistogram,
+    pub latency_search: LatencyHistogram,
+    pub latency_cache: LatencyHistogram,
     /// Histogram over decode batch occupancy (index = rows used). Grows
     /// on demand: a batch larger than the current histogram extends it
     /// rather than dropping the sample.
@@ -121,6 +133,50 @@ impl Metrics {
         if self.batch_occupancy.len() < max_batch + 1 {
             self.batch_occupancy.resize(max_batch + 1, 0);
         }
+    }
+
+    /// Record one answered request's latency under its backend (and the
+    /// pooled histogram).
+    pub fn record_latency(&mut self, source: Source, d: Duration) {
+        self.latency.record(d);
+        self.latency_for_mut(source).record(d);
+    }
+
+    pub fn latency_for(&self, source: Source) -> &LatencyHistogram {
+        match source {
+            Source::Native => &self.latency_native,
+            Source::Model => &self.latency_pjrt,
+            Source::Search => &self.latency_search,
+            Source::Cache => &self.latency_cache,
+        }
+    }
+
+    fn latency_for_mut(&mut self, source: Source) -> &mut LatencyHistogram {
+        match source {
+            Source::Native => &mut self.latency_native,
+            Source::Model => &mut self.latency_pjrt,
+            Source::Search => &mut self.latency_search,
+            Source::Cache => &mut self.latency_cache,
+        }
+    }
+
+    /// Measured speedup of native inference over search serving (p50 over
+    /// p50); `None` until both histograms have samples. A single service
+    /// instance runs one model backend, so within one service this only
+    /// populates in mixed runs; the `serve` CLI's `--compare-search` flag
+    /// measures the same ratio out-of-band (timed reference searches vs
+    /// the model histogram) and reports it in `--metrics-json` — that is
+    /// the deployable form of the paper's 66x–127x comparison.
+    pub fn native_vs_search_speedup(&self) -> Option<f64> {
+        if self.latency_native.count() == 0 || self.latency_search.count() == 0 {
+            return None;
+        }
+        let n = self.latency_native.percentile(0.5).as_secs_f64();
+        let s = self.latency_search.percentile(0.5).as_secs_f64();
+        if n <= 0.0 {
+            return None;
+        }
+        Some(s / n)
     }
 
     pub fn record_batch(&mut self, used_rows: usize) {
@@ -150,7 +206,7 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} rejected={} cache_hits={} hit_rate={:.0}% cache_size={} \
              batches={} mean_occupancy={:.2} invalid={} \
              latency mean={:?} p50={:?} p95={:?} max={:?}",
@@ -166,7 +222,23 @@ impl Metrics {
             self.latency.percentile(0.5),
             self.latency.percentile(0.95),
             self.latency.max(),
-        )
+        );
+        for source in [Source::Native, Source::Model, Source::Search, Source::Cache] {
+            let h = self.latency_for(source);
+            if h.count() > 0 {
+                s.push_str(&format!(
+                    " | {}: n={} p50={:?} p95={:?}",
+                    source.name(),
+                    h.count(),
+                    h.percentile(0.5),
+                    h.percentile(0.95),
+                ));
+            }
+        }
+        if let Some(x) = self.native_vs_search_speedup() {
+            s.push_str(&format!(" | native_vs_search_speedup={x:.1}x"));
+        }
+        s
     }
 }
 
@@ -254,5 +326,39 @@ mod tests {
         ] {
             assert!(r.contains(needle), "{r}");
         }
+    }
+
+    #[test]
+    fn per_backend_latency_is_split_not_pooled() {
+        let mut m = Metrics::new(0);
+        // Fast native answers, slow search answers.
+        for _ in 0..10 {
+            m.record_latency(Source::Native, Duration::from_micros(100));
+            m.record_latency(Source::Search, Duration::from_millis(50));
+        }
+        assert_eq!(m.latency.count(), 20);
+        assert_eq!(m.latency_for(Source::Native).count(), 10);
+        assert_eq!(m.latency_for(Source::Search).count(), 10);
+        assert_eq!(m.latency_for(Source::Model).count(), 0);
+        let native_p50 = m.latency_for(Source::Native).percentile(0.5);
+        let search_p50 = m.latency_for(Source::Search).percentile(0.5);
+        assert!(native_p50 < search_p50 / 100, "{native_p50:?} {search_p50:?}");
+        // The gate signal: measured speedup, not pooled away.
+        let x = m.native_vs_search_speedup().unwrap();
+        assert!(x > 100.0, "speedup {x}");
+        let r = m.report();
+        assert!(r.contains("native: n=10"), "{r}");
+        assert!(r.contains("search: n=10"), "{r}");
+        assert!(r.contains("native_vs_search_speedup="), "{r}");
+    }
+
+    #[test]
+    fn speedup_needs_both_backends() {
+        let mut m = Metrics::new(0);
+        assert!(m.native_vs_search_speedup().is_none());
+        m.record_latency(Source::Native, Duration::from_micros(50));
+        assert!(m.native_vs_search_speedup().is_none());
+        m.record_latency(Source::Search, Duration::from_millis(5));
+        assert!(m.native_vs_search_speedup().is_some());
     }
 }

@@ -64,12 +64,28 @@ impl MapRequest {
 /// Where a response came from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Source {
+    /// One-shot inference on the native in-process transformer — the
+    /// paper's serving story, preferred whenever available.
+    Native,
+    /// One-shot inference through the PJRT (AOT executable) backend.
     Model,
     Cache,
-    /// Search fallback: no model backend was available, so the service
-    /// answered with a (pool-parallel, engine-accelerated) G-Sampler
-    /// search. Slower than inference but keeps the control plane up.
+    /// Search fallback: answered by a (pool-parallel, engine-accelerated)
+    /// G-Sampler search — either requested explicitly
+    /// (`--backend search`) or because no model backend could load.
+    /// Slower than inference but keeps the control plane up.
     Search,
+}
+
+impl Source {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Source::Native => "native",
+            Source::Model => "pjrt",
+            Source::Cache => "cache",
+            Source::Search => "search",
+        }
+    }
 }
 
 /// The answer.

@@ -13,18 +13,20 @@
 //! talks to it through channels. This is the same shape a vLLM router
 //! takes — front-end queue, batching window, one engine loop.
 //!
-//! Two backends:
+//! Three backends, selected by [`BackendChoice`]:
 //!
-//! - **Model** — the PJRT runtime + sequence model (the paper's serving
-//!   story): a batch of requests becomes one batched autoregressive
-//!   decode;
-//! - **Search fallback** (opt-in via [`ServiceConfig::search_fallback`]) —
-//!   when the model backend cannot load (no artifacts, no PJRT), requests
-//!   are answered by G-Sampler searches instead: each batch fans out over
-//!   the shared thread pool, and every search runs on the incremental
-//!   cost engine. Slower than inference, but the control plane stays up
-//!   in pure-Rust environments, and repeat conditions still hit the
-//!   mapping cache.
+//! - **Native model** (preferred) — the pure-Rust transformer
+//!   ([`crate::model::native`]): a batch of requests becomes one pool
+//!   pass of KV-cache decodes. Artifact-free; always available.
+//! - **PJRT model** — the AOT executables: a batch becomes one padded
+//!   lock-step autoregressive decode. Needs real artifacts + libxla.
+//! - **Search** — explicit (`BackendChoice::Search`) or the opt-in
+//!   fallback ([`ServiceConfig::search_fallback`]) when a model backend
+//!   cannot load: requests are answered by G-Sampler searches fanned over
+//!   the shared thread pool on the incremental cost engine. Slower than
+//!   inference (this is the 66x-class gap the paper is about — see
+//!   `Metrics::native_vs_search_speedup`), but the control plane stays
+//!   up, and repeat conditions still hit the mapping cache.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -36,8 +38,9 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::cost::MB;
 use crate::env::FusionEnv;
-use crate::model::{MapperModel, ModelKind};
-use crate::runtime::{LoadSet, Runtime};
+use crate::model::native::NativeConfig;
+use crate::model::{MapperModel, ModelKind, RawCheckpoint};
+use crate::runtime::{BackendKind, LoadSet, Runtime};
 use crate::fusion::Strategy;
 use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
 use crate::util::pool::ThreadPool;
@@ -48,10 +51,45 @@ use super::cache::{Entry, Key, MappingCache};
 use super::metrics::Metrics;
 use super::{MapRequest, MapResponse, Source};
 
+/// Which backend the service should serve from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// Model backend preferred: PJRT when real artifacts load, else the
+    /// native in-process transformer (always available). Search only via
+    /// [`ServiceConfig::search_fallback`].
+    #[default]
+    Auto,
+    /// The native transformer, explicitly (artifact-free).
+    Native,
+    /// The PJRT/AOT executables, strictly — fail at spawn when absent.
+    Pjrt,
+    /// G-Sampler search, explicitly (the demoted fallback as a primary:
+    /// useful for baselines and for environments with no model at all).
+    Search,
+}
+
+impl BackendChoice {
+    pub fn by_name(name: &str) -> Option<BackendChoice> {
+        match name.to_ascii_lowercase().as_str() {
+            "auto" => Some(BackendChoice::Auto),
+            "native" => Some(BackendChoice::Native),
+            "pjrt" | "model" => Some(BackendChoice::Pjrt),
+            "search" => Some(BackendChoice::Search),
+            _ => None,
+        }
+    }
+}
+
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub artifacts_dir: PathBuf,
+    /// Backend selection policy (default: model preferred, PJRT → native).
+    pub backend: BackendChoice,
+    /// Architecture override for the native backend (default: checkpoint
+    /// config if the checkpoint records one, else manifest constants if an
+    /// artifacts directory exists, else paper geometry).
+    pub native_config: Option<NativeConfig>,
     /// Trained checkpoint; `None` serves a freshly-initialized model
     /// (useful for wiring tests and demos).
     pub checkpoint: Option<PathBuf>,
@@ -83,6 +121,8 @@ impl ServiceConfig {
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
         ServiceConfig {
             artifacts_dir: artifacts_dir.into(),
+            backend: BackendChoice::Auto,
+            native_config: None,
             checkpoint: None,
             model: ModelKind::Df,
             batch_window: Duration::from_millis(2),
@@ -113,6 +153,70 @@ enum Msg {
 enum Backend {
     Model { rt: Runtime, model: MapperModel },
     Search { budget: usize, seed: u64 },
+}
+
+/// Load the PJRT model backend (strict: real artifacts + a real PJRT
+/// client or an error).
+fn build_pjrt(cfg: &ServiceConfig) -> Result<Backend> {
+    let set = if cfg.checkpoint.is_some() {
+        LoadSet::InferOnly
+    } else {
+        LoadSet::Serve
+    };
+    let rt = Runtime::load(&cfg.artifacts_dir, set)?;
+    let model = match &cfg.checkpoint {
+        Some(path) => MapperModel::load(&rt, path)?,
+        None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
+    };
+    Ok(Backend::Model { rt, model })
+}
+
+/// Load the native model backend. Architecture: explicit config override,
+/// else whatever the checkpoint records, else manifest constants / paper
+/// geometry (resolved by `Runtime::load_native`). The checkpoint is read
+/// exactly once: the raw bytes size the engine *and* become the model.
+fn build_native(cfg: &ServiceConfig) -> Result<Backend> {
+    let raw = match &cfg.checkpoint {
+        Some(path) => Some(RawCheckpoint::read(path).context("reading checkpoint")?),
+        None => None,
+    };
+    let native_cfg = cfg
+        .native_config
+        .or_else(|| raw.as_ref().and_then(|r| r.config));
+    let rt = Runtime::load_native(&cfg.artifacts_dir, native_cfg)?;
+    let model = match raw {
+        Some(raw) => MapperModel::from_raw(&rt, raw)?,
+        None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
+    };
+    Ok(Backend::Model { rt, model })
+}
+
+fn build_backend(cfg: &ServiceConfig) -> Result<Backend> {
+    let search = || Backend::Search {
+        budget: cfg.fallback_budget.max(1),
+        seed: cfg.fallback_seed,
+    };
+    let primary = match cfg.backend {
+        BackendChoice::Search => return Ok(search()),
+        BackendChoice::Pjrt => build_pjrt(cfg),
+        BackendChoice::Native => build_native(cfg),
+        BackendChoice::Auto => build_pjrt(cfg).or_else(|pjrt_err| {
+            build_native(cfg).map_err(|native_err| {
+                anyhow!("pjrt backend: {pjrt_err:#}; native backend: {native_err:#}")
+            })
+        }),
+    };
+    match primary {
+        Ok(b) => Ok(b),
+        Err(e) if cfg.search_fallback => {
+            eprintln!(
+                "mapper service: model backend unavailable ({e:#}); \
+                 serving via G-Sampler search fallback"
+            );
+            Ok(search())
+        }
+        Err(e) => Err(e).context("loading model backend"),
+    }
 }
 
 /// Cheap cloneable handle to the service.
@@ -251,34 +355,7 @@ fn service_loop(
     ready: Sender<Result<(), String>>,
 ) {
     // Construct the backend inside the thread (PJRT is not Sync).
-    let built = (|| -> Result<Backend> {
-        let set = if cfg.checkpoint.is_some() {
-            LoadSet::InferOnly
-        } else {
-            LoadSet::Serve
-        };
-        match Runtime::load(&cfg.artifacts_dir, set) {
-            Ok(rt) => {
-                let model = match &cfg.checkpoint {
-                    Some(path) => MapperModel::load(&rt, path)?,
-                    None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
-                };
-                Ok(Backend::Model { rt, model })
-            }
-            Err(e) if cfg.search_fallback => {
-                eprintln!(
-                    "mapper service: model backend unavailable ({e:#}); \
-                     serving via G-Sampler search fallback"
-                );
-                Ok(Backend::Search {
-                    budget: cfg.fallback_budget.max(1),
-                    seed: cfg.fallback_seed,
-                })
-            }
-            Err(e) => Err(e).context("loading artifacts"),
-        }
-    })();
-    let backend = match built {
+    let backend = match build_backend(&cfg) {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b
@@ -288,14 +365,27 @@ fn service_loop(
             return;
         }
     };
+    // What non-cache answers from this backend are tagged as.
+    let model_source = match &backend {
+        Backend::Model { rt, .. } => match rt.backend() {
+            BackendKind::Native => Source::Native,
+            BackendKind::Pjrt => Source::Model,
+        },
+        Backend::Search { .. } => Source::Search,
+    };
 
     let max_batch = match &backend {
-        Backend::Model { rt, model } => rt
-            .manifest
-            .infer_batches(model.kind.tag())
-            .last()
-            .copied()
-            .unwrap_or(1),
+        Backend::Model { rt, model } => match rt.backend() {
+            // Native decode has no AOT batch table: sequences fan out
+            // over the shared pool, one worker each.
+            BackendKind::Native => ThreadPool::shared().size().max(1),
+            BackendKind::Pjrt => rt
+                .manifest
+                .infer_batches(model.kind.tag())
+                .last()
+                .copied()
+                .unwrap_or(1),
+        },
         // Search fallback: one pool worker per in-flight search.
         Backend::Search { .. } => ThreadPool::shared().size().max(1),
     };
@@ -362,7 +452,7 @@ fn service_loop(
                 let latency = job.enqueued.elapsed();
                 let mut m = metrics.lock().expect("metrics");
                 m.requests += 1;
-                m.latency.record(latency);
+                m.record_latency(Source::Cache, latency);
                 if !hit.valid {
                     m.invalid_responses += 1;
                 }
@@ -414,7 +504,7 @@ fn service_loop(
                                 traj.speedup,
                                 traj.peak_act_bytes as f64 / MB,
                                 traj.valid,
-                                Source::Model,
+                                model_source,
                             );
                         }
                     }
@@ -519,7 +609,7 @@ fn respond(
     );
     let mut m = metrics.lock().expect("metrics");
     m.requests += 1;
-    m.latency.record(latency);
+    m.record_latency(source, latency);
     if !valid {
         m.invalid_responses += 1;
     }

@@ -50,7 +50,7 @@ pub struct HwConfig {
     /// each PE as a 2048-MAC tile (≈2 PMAC/s total, a TPU-class
     /// compute:bandwidth ratio of ~2300 MAC/byte against the 900 GB/s
     /// off-chip BW), which places the paper's workloads in the memory-bound
-    /// regime its reported speedups (1.2×–4×) imply. See DESIGN.md §4 + §8.
+    /// regime its reported speedups (1.2×–4×) imply. See DESIGN.md §4 + §9.
     pub macs_per_pe: u64,
     /// Layer-switch overhead per PE-array invocation, seconds. In a fused
     /// group the array time-multiplexes between the group's layers once per

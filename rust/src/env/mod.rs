@@ -51,6 +51,7 @@ impl Trajectory {
 }
 
 /// The environment. Reusable across episodes; cheap to clone.
+#[derive(Clone)]
 pub struct FusionEnv {
     pub workload: Workload,
     pub model: CostModel,
@@ -72,7 +73,7 @@ pub struct FusionEnv {
 pub struct Episode<'e> {
     env: &'e FusionEnv,
     /// Strategy under construction; suffix defaults to SYNC. Kept in
-    /// lock-step with `inc` by [`Episode::apply`] — mutate through the
+    /// lock-step with `inc` by `Episode::apply` — mutate through the
     /// step methods, not directly.
     pub values: Vec<i32>,
     pub t: usize,

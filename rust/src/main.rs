@@ -4,13 +4,15 @@
 //!
 //! - `collect` — run the G-Sampler teacher over (workload × memory
 //!   condition) and write the demonstration dataset (§4.5.1 steps 1–2);
-//! - `train`   — imitation-learn a sequence model from a dataset via the
-//!   AOT `train_step` executable (§4.5.1 step 3);
+//! - `train`   — imitation-learn a sequence model from a dataset
+//!   (§4.5.1 step 3) — natively in-process (`--backend native`,
+//!   artifact-free) or through the AOT `train_step` executable;
 //! - `infer`   — map a workload at a condition with a trained model
 //!   (§4.5.2), optionally comparing against a fresh G-Sampler search;
-//! - `search`  — run any search-based mapper directly;
-//! - `serve`   — start the mapper service and drive a synthetic request
-//!   stream through the dynamic batcher, reporting router metrics;
+//! - `search`  — run a search-based mapper directly;
+//! - `serve`   — start the mapper service (`--backend
+//!   auto|native|pjrt|search`) on a synthetic request stream through the
+//!   dynamic batcher, reporting per-backend router metrics;
 //! - `eval`    — model vs teacher across a condition grid.
 
 use std::path::PathBuf;
@@ -18,12 +20,14 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use dnnfuser::coordinator::service::{MapperService, ServiceConfig};
-use dnnfuser::coordinator::MapRequest;
+use dnnfuser::coordinator::service::{BackendChoice, MapperService, ServiceConfig};
+use dnnfuser::coordinator::{MapRequest, Source};
 use dnnfuser::cost::HwConfig;
 use dnnfuser::env::FusionEnv;
-use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::model::native::NativeConfig;
+use dnnfuser::model::{peek_checkpoint_config, MapperModel, ModelKind};
 use dnnfuser::runtime::{LoadSet, Runtime};
+use dnnfuser::util::json::Json;
 use dnnfuser::search::{
     a2c::A2c, cma::CmaEs, de::De, gsampler::GSampler, pso::Pso, random::RandomSearch,
     stdga::StdGa, tbpsa::Tbpsa, FusionProblem, Optimizer,
@@ -90,6 +94,72 @@ fn parse_list_f64(s: &str) -> Result<Vec<f64>> {
     s.split(',')
         .map(|x| x.trim().parse::<f64>().map_err(|e| anyhow!("bad number `{x}`: {e}")))
         .collect()
+}
+
+/// Parse the shared native-architecture options (`--native-preset` plus
+/// per-dimension overrides). Returns `None` when nothing was requested, so
+/// checkpoint / manifest / paper defaults apply downstream.
+fn native_cfg_from_args(p: &dnnfuser::util::args::ParsedArgs) -> Result<Option<NativeConfig>> {
+    let preset = p.get("native-preset");
+    let overrides = [p.get("d-model"), p.get("n-blocks"), p.get("n-heads")];
+    if preset.is_none() && overrides.iter().all(Option::is_none) {
+        return Ok(None);
+    }
+    let mut cfg = match preset {
+        None | Some("paper") => NativeConfig::paper(),
+        Some("tiny") => NativeConfig::tiny(),
+        Some(other) => bail!("unknown --native-preset `{other}` (paper|tiny)"),
+    };
+    if let Some(d) = p.get("d-model") {
+        cfg.d_model = d.parse().map_err(|e| anyhow!("bad --d-model: {e}"))?;
+        cfg.d_ff = 4 * cfg.d_model;
+    }
+    if let Some(b) = p.get("n-blocks") {
+        cfg.n_blocks = b.parse().map_err(|e| anyhow!("bad --n-blocks: {e}"))?;
+    }
+    if let Some(h) = p.get("n-heads") {
+        cfg.n_heads = h.parse().map_err(|e| anyhow!("bad --n-heads: {e}"))?;
+    }
+    cfg.validate()?;
+    Ok(Some(cfg))
+}
+
+/// Build a runtime per `--backend`: `pjrt` (strict), `native`
+/// (artifact-free; architecture from explicit config, else the
+/// checkpoint, else manifest/paper), or `auto` (PJRT when it loads, else
+/// native).
+fn load_runtime(
+    artifacts: &str,
+    backend: &str,
+    set: LoadSet,
+    ckpt: Option<&str>,
+    cfg: Option<NativeConfig>,
+) -> Result<Runtime> {
+    // (CLI commands load the model separately, so the checkpoint is read
+    // twice here — acceptable at process start; the serving coordinator's
+    // spawn path reads it once via RawCheckpoint.)
+    let native = |cfg: Option<NativeConfig>| -> Result<Runtime> {
+        let cfg = match (cfg, ckpt) {
+            (Some(c), _) => Some(c),
+            (None, Some(path)) if std::path::Path::new(path).exists() => {
+                peek_checkpoint_config(path)?
+            }
+            _ => None,
+        };
+        Runtime::load_native(artifacts, cfg)
+    };
+    match backend {
+        "pjrt" => Runtime::load(artifacts, set),
+        "native" => native(cfg),
+        "auto" => match Runtime::load(artifacts, set) {
+            Ok(rt) => Ok(rt),
+            Err(e) => {
+                eprintln!("pjrt backend unavailable ({e:#}); using the native backend");
+                native(cfg)
+            }
+        },
+        other => bail!("unknown --backend `{other}` (auto|native|pjrt)"),
+    }
 }
 
 fn optimizer_by_name(name: &str) -> Result<Box<dyn Optimizer>> {
@@ -173,6 +243,15 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         .opt("steps", Some("300"), "Adam steps")
         .opt("seed", Some("0"), "init / sampling seed")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt(
+            "backend",
+            Some("auto"),
+            "auto|native|pjrt (auto: pjrt if artifacts load, else native)",
+        )
+        .opt("native-preset", None, "native architecture preset: paper|tiny")
+        .opt("d-model", None, "native hidden dim override (sets d_ff = 4*d_model)")
+        .opt("n-blocks", None, "native transformer blocks override")
+        .opt("n-heads", None, "native attention heads override")
         .opt("init-ckpt", None, "warm-start checkpoint (transfer learning)")
         .opt("ckpt", Some("runs/model.ckpt"), "output checkpoint")
         .opt("log-every", Some("25"), "loss print interval");
@@ -187,7 +266,14 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         buffer.mean_speedup()
     );
 
-    let rt = Runtime::load(p.req("artifacts")?, LoadSet::All)?;
+    let rt = load_runtime(
+        p.req("artifacts")?,
+        p.req("backend")?,
+        LoadSet::All,
+        p.get("init-ckpt"),
+        native_cfg_from_args(&p)?,
+    )?;
+    println!("training on the {} backend", rt.backend().name());
     let mut model = match p.get("init-ckpt") {
         Some(path) => {
             println!("warm-starting from {path}");
@@ -219,18 +305,40 @@ fn cmd_infer(raw: &[String]) -> Result<()> {
         .opt("batch", Some("64"), "input batch size")
         .opt("mem", Some("20"), "memory condition (MB)")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("backend", Some("auto"), "auto|native|pjrt")
+        .opt("top-k", None, "sample among the k nearest actions (native backend)")
+        .opt("temperature", Some("0.25"), "top-k sampling temperature")
+        .opt("sample-seed", Some("0"), "top-k sampling seed")
         .switch("compare-teacher", "also run a fresh G-Sampler search");
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let w = resolve_workload(&p)?;
     let batch = p.get_usize("batch")?;
     let mem = p.get_f64("mem")?;
 
-    let rt = Runtime::load(p.req("artifacts")?, LoadSet::All)?;
+    let rt = load_runtime(
+        p.req("artifacts")?,
+        p.req("backend")?,
+        LoadSet::All,
+        p.get("ckpt"),
+        None,
+    )?;
     let model = MapperModel::load(&rt, p.req("ckpt")?)?;
+    let sampling = match p.get("top-k") {
+        Some(k) => dnnfuser::model::native::Sampling::TopK {
+            k: k.parse().map_err(|e| anyhow!("bad --top-k: {e}"))?,
+            temperature: p.get_f64("temperature")? as f32,
+            seed: p.get_u64("sample-seed")?,
+        },
+        None => dnnfuser::model::native::Sampling::Greedy,
+    };
     let env = FusionEnv::new(w.clone(), batch, HwConfig::paper(), mem);
     let t0 = std::time::Instant::now();
-    let traj = model.infer(&rt, &env)?;
+    let traj = model
+        .infer_batch_with(&rt, &[&env], sampling)?
+        .pop()
+        .expect("one trajectory");
     let dt = t0.elapsed();
+    println!("backend  : {}", rt.backend().name());
     println!("strategy : {}", traj.strategy.display());
     println!(
         "speedup  : {:.2}x over no-fusion baseline (valid: {})",
@@ -288,23 +396,42 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         .opt("ckpt", None, "model checkpoint (default: fresh init)")
         .opt("model", Some("df"), "df or s2s (when no checkpoint)")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt(
+            "backend",
+            Some("auto"),
+            "auto|native|pjrt|search (auto: pjrt if artifacts load, else native)",
+        )
+        .opt("native-preset", None, "native architecture preset: paper|tiny")
+        .opt("d-model", None, "native hidden dim override (sets d_ff = 4*d_model)")
+        .opt("n-blocks", None, "native transformer blocks override")
+        .opt("n-heads", None, "native attention heads override")
         .opt("requests", Some("64"), "synthetic requests to issue")
         .opt("clients", Some("4"), "concurrent client threads")
         .opt("window-ms", Some("5"), "dynamic batching window (ms)")
         .opt("cache-capacity", Some("1024"), "mapping cache capacity (entries)")
         .opt("fallback-budget", Some("2000"), "G-Sampler budget per fallback search")
         .opt(
+            "compare-search",
+            Some("4"),
+            "after the stream, time N reference G-Sampler searches and report the \
+             model-vs-search speedup (0 disables)",
+        )
+        .opt(
             "workload-file",
             None,
             "custom workload JSON file(s), comma-separated; registered and mixed into the stream",
         )
+        .opt("metrics-json", None, "write a machine-readable metrics report to this path")
         .opt("seed", Some("7"), "request stream seed")
         .switch(
             "search-fallback",
-            "serve via G-Sampler search when artifacts/PJRT are unavailable",
+            "serve via G-Sampler search when no model backend is available",
         );
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let mut cfg = ServiceConfig::new(p.req("artifacts")?);
+    cfg.backend = BackendChoice::by_name(p.req("backend")?)
+        .context("bad --backend (auto|native|pjrt|search)")?;
+    cfg.native_config = native_cfg_from_args(&p)?;
     cfg.model = ModelKind::by_name(p.req("model")?).context("bad --model")?;
     cfg.checkpoint = p.get("ckpt").map(PathBuf::from);
     cfg.batch_window = Duration::from_millis(p.get_u64("window-ms")?);
@@ -332,6 +459,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         }
     }
     let stream = std::sync::Arc::new(stream);
+    let registry = std::sync::Arc::clone(&cfg.registry);
 
     println!("starting mapper service…");
     let svc = MapperService::spawn(cfg)?;
@@ -372,6 +500,95 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         "  throughput: {:.1} mappings/s",
         served as f64 / wall.as_secs_f64()
     );
+
+    // Out-of-band search baseline (the paper's 66x-class comparison): a
+    // service instance runs ONE model backend, so inference-vs-search
+    // cannot be read off its own histograms — instead, time a few
+    // reference G-Sampler searches over the same request distribution
+    // and compare p50s.
+    let compare_n = p.get_usize("compare-search")?;
+    let model_src = [Source::Native, Source::Model]
+        .into_iter()
+        .find(|&s| m.latency_for(s).count() > 0);
+    let mut search_baseline: Option<(Duration, f64)> = None;
+    if compare_n > 0 {
+        if let Some(src) = model_src {
+            let budget = p.get_usize("fallback-budget")?.max(1);
+            let mut rng = Rng::seed_from_u64(p.get_u64("seed")?.wrapping_add(0xBA5E));
+            let mut lats: Vec<Duration> = Vec::with_capacity(compare_n);
+            for _ in 0..compare_n {
+                let name = &stream[rng.index(stream.len())];
+                let mem = [16.0, 20.0, 24.0, 28.0, 32.0, 40.0, 48.0, 64.0][rng.index(8)];
+                let (w, _) = registry
+                    .resolve(&dnnfuser::workload::WorkloadSpec::named(name))
+                    .with_context(|| format!("resolving `{name}` for the search baseline"))?;
+                let prob = FusionProblem::new(&w, 64, HwConfig::paper(), mem);
+                let ts = std::time::Instant::now();
+                let _ = GSampler::default().run(&prob, budget, &mut rng);
+                lats.push(ts.elapsed());
+            }
+            lats.sort();
+            let search_p50 = lats[lats.len() / 2];
+            let model_p50 = m.latency_for(src).percentile(0.5);
+            let speedup = search_p50.as_secs_f64() / model_p50.as_secs_f64().max(1e-9);
+            println!(
+                "  search baseline: n={compare_n} budget={budget} p50={search_p50:?} → \
+                 {}_vs_search_speedup={speedup:.1}x",
+                src.name()
+            );
+            search_baseline = Some((search_p50, speedup));
+        }
+    }
+
+    if let Some(path) = p.get("metrics-json") {
+        let source_obj = |s: Source| {
+            let h = m.latency_for(s);
+            Json::obj(vec![
+                ("count", Json::num(h.count() as f64)),
+                ("mean_us", Json::num(h.mean().as_secs_f64() * 1e6)),
+                ("p50_us", Json::num(h.percentile(0.5).as_secs_f64() * 1e6)),
+                ("p95_us", Json::num(h.percentile(0.95).as_secs_f64() * 1e6)),
+            ])
+        };
+        let doc = Json::obj(vec![
+            ("requests", Json::num(m.requests as f64)),
+            ("served", Json::num(served as f64)),
+            ("rejected", Json::num(m.rejected as f64)),
+            ("cache_hits", Json::num(m.cache_hits as f64)),
+            ("cache_misses", Json::num(m.cache_misses as f64)),
+            ("cache_size", Json::num(m.cache_size as f64)),
+            ("invalid_responses", Json::num(m.invalid_responses as f64)),
+            ("model_batches", Json::num(m.model_batches as f64)),
+            ("mean_batch_occupancy", Json::num(m.mean_batch_occupancy())),
+            ("throughput_per_sec", Json::num(served as f64 / wall.as_secs_f64())),
+            (
+                "sources",
+                Json::obj(vec![
+                    ("native", source_obj(Source::Native)),
+                    ("pjrt", source_obj(Source::Model)),
+                    ("search", source_obj(Source::Search)),
+                    ("cache", source_obj(Source::Cache)),
+                ]),
+            ),
+            (
+                "search_baseline_p50_us",
+                search_baseline
+                    .map_or(Json::Null, |(p50, _)| Json::num(p50.as_secs_f64() * 1e6)),
+            ),
+            (
+                // Measured out-of-band when --compare-search ran; falls
+                // back to the in-service metric (mixed-backend runs).
+                "native_vs_search_speedup",
+                search_baseline
+                    .map(|(_, s)| Json::num(s))
+                    .or_else(|| m.native_vs_search_speedup().map(Json::num))
+                    .unwrap_or(Json::Null),
+            ),
+        ]);
+        std::fs::write(path, doc.to_pretty())
+            .with_context(|| format!("writing metrics report {path}"))?;
+        println!("  wrote metrics report to {path}");
+    }
     svc.shutdown();
     Ok(())
 }
@@ -385,13 +602,20 @@ fn cmd_eval(raw: &[String]) -> Result<()> {
         .opt("mems", Some("20,25,30,35,40,45"), "conditions (MB)")
         .opt("budget", Some("2000"), "teacher budget per condition")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
+        .opt("backend", Some("auto"), "auto|native|pjrt")
         .opt("seed", Some("3"), "teacher seed");
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let w = resolve_workload(&p)?;
     let batch = p.get_usize("batch")?;
     let mems = parse_list_f64(p.req("mems")?)?;
 
-    let rt = Runtime::load(p.req("artifacts")?, LoadSet::All)?;
+    let rt = load_runtime(
+        p.req("artifacts")?,
+        p.req("backend")?,
+        LoadSet::All,
+        p.get("ckpt"),
+        None,
+    )?;
     let model = MapperModel::load(&rt, p.req("ckpt")?)?;
     let mut rng = Rng::seed_from_u64(p.get_u64("seed")?);
 

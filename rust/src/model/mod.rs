@@ -1,17 +1,28 @@
 //! Model drivers (L3): parameter state, the imitation-learning trainer, and
-//! the autoregressive inference loop for the two AOT-compiled sequence
-//! models — DNNFuser (`df`) and the Seq2Seq baseline (`s2s`).
+//! the autoregressive inference loop for the sequence models — DNNFuser
+//! (`df`) and the Seq2Seq baseline (`s2s`).
 //!
-//! Everything here drives PJRT executables; there is no NN math in Rust.
-//! Training (paper §4.5.1): sample [`TokenBatch`]s from the replay buffer
-//! and fold them through `<tag>_train`. Inference (§4.5.2): run the
-//! environment in the loop — the model proposes an action token, the env
-//! (cost model) decodes it, applies it, and produces the next state — so
-//! a mapping for an N-layer workload costs N+1 executable calls.
+//! Every driver dispatches on the [`Runtime`]'s backend:
+//!
+//! - **PJRT** — the AOT-compiled HLO executables (`<tag>_init`,
+//!   `<tag>_train`, `<tag>_infer_b{B}`); Rust holds no NN math, mappings
+//!   cost N+1 executable calls (paper §4.5.2).
+//! - **Native** — the pure-Rust transformer in [`native`]: same flat
+//!   parameter layout, same train-step update, same decode loop, but the
+//!   forward pass runs in-process with a KV cache, batches have no AOT
+//!   size table (any batch decodes in one pass, sequences fanned over the
+//!   shared thread pool), and training needs no artifacts at all.
+//!
+//! Checkpoints are interchangeable: v1 files (PJRT-era) load everywhere at
+//! paper geometry; v2 files additionally record the native architecture so
+//! small-config models round-trip exactly.
+
+pub mod native;
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -20,10 +31,14 @@ use crate::runtime::tensor::Tensor;
 use crate::runtime::Runtime;
 use crate::trajectory::{ReplayBuffer, TokenBatch};
 use crate::util::binio::{BinReader, BinWriter};
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 
+use native::{decoder, NativeConfig, NativeEngine, Sampling};
+
 const CKPT_MAGIC: &[u8; 4] = b"DNFC";
-const CKPT_VERSION: u32 = 1;
+/// v1: kind, step, theta, m, v. v2 appends the native architecture.
+const CKPT_VERSION: u32 = 2;
 
 /// Which sequence model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,11 +73,94 @@ pub struct MapperModel {
     pub m: Vec<f32>,
     pub v: Vec<f32>,
     pub step: f32,
+    /// Architecture of the weights when they were produced by (or for) the
+    /// native backend. `None` for PJRT-era checkpoints — those are always
+    /// paper geometry.
+    pub native_cfg: Option<NativeConfig>,
+}
+
+/// A checkpoint as stored on disk, before backend validation.
+pub struct RawCheckpoint {
+    pub kind: ModelKind,
+    pub step: f32,
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub config: Option<NativeConfig>,
+}
+
+impl RawCheckpoint {
+    /// Read a checkpoint file (v1 or v2) without a runtime.
+    pub fn read(path: impl AsRef<Path>) -> Result<RawCheckpoint> {
+        let f = File::open(path.as_ref())
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        let (mut r, version) =
+            BinReader::new_versioned(BufReader::new(f), CKPT_MAGIC, &[1, CKPT_VERSION])?;
+        let tag = r.str()?;
+        let kind = ModelKind::by_name(&tag).with_context(|| format!("unknown model tag {tag}"))?;
+        let step = r.f64()? as f32;
+        let theta = r.f32_slice()?;
+        let m = r.f32_slice()?;
+        let v = r.f32_slice()?;
+        let config = if version >= 2 {
+            let has = r.u32()? != 0;
+            if has {
+                let cfg = NativeConfig {
+                    d_model: r.u32()? as usize,
+                    n_blocks: r.u32()? as usize,
+                    n_heads: r.u32()? as usize,
+                    d_ff: r.u32()? as usize,
+                    train_batch: r.u32()? as usize,
+                };
+                cfg.validate().context("checkpoint native config")?;
+                Some(cfg)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        Ok(RawCheckpoint {
+            kind,
+            step,
+            theta,
+            m,
+            v,
+            config,
+        })
+    }
+}
+
+/// Read only the native architecture recorded in a checkpoint (None for
+/// v1 / PJRT checkpoints). The serving coordinator uses this to build a
+/// native runtime of the right geometry before loading the model proper.
+pub fn peek_checkpoint_config(path: impl AsRef<Path>) -> Result<Option<NativeConfig>> {
+    Ok(RawCheckpoint::read(path)?.config)
 }
 
 impl MapperModel {
-    /// Initialize from the AOT `<tag>_init` executable.
+    /// Initialize fresh parameters: the AOT `<tag>_init` executable on the
+    /// PJRT backend, [`NativeEngine::init_theta`] on the native backend
+    /// (DNNFuser only — the LSTM baseline has no native implementation).
     pub fn init(rt: &Runtime, kind: ModelKind, seed: i32) -> Result<MapperModel> {
+        if let Some(eng) = rt.native_engine() {
+            if kind != ModelKind::Df {
+                bail!(
+                    "the native backend implements the DNNFuser decision transformer only; \
+                     run the s2s baseline through the PJRT backend"
+                );
+            }
+            let theta = eng.init_theta(seed);
+            let n = theta.len();
+            return Ok(MapperModel {
+                kind,
+                theta,
+                m: vec![0.0; n],
+                v: vec![0.0; n],
+                step: 0.0,
+                native_cfg: Some(eng.cfg),
+            });
+        }
         let name = format!("{}_init", kind.tag());
         let out = rt.call(&name, &[Tensor::scalar_i32(seed)])?;
         let theta = out
@@ -80,6 +178,7 @@ impl MapperModel {
             v: vec![0.0; n],
             step: 0.0,
             theta,
+            native_cfg: None,
         })
     }
 
@@ -89,6 +188,16 @@ impl MapperModel {
 
     /// One Adam step on a token batch; returns the loss.
     pub fn train_step(&mut self, rt: &Runtime, batch: &TokenBatch) -> Result<f32> {
+        if let Some(eng) = rt.native_engine() {
+            return native::train::train_step(
+                eng,
+                &mut self.theta,
+                &mut self.m,
+                &mut self.v,
+                &mut self.step,
+                batch,
+            );
+        }
         let name = format!("{}_train", self.kind.tag());
         let b = batch.batch;
         let n = self.n_params(); // capture before mem::take empties theta
@@ -135,14 +244,76 @@ impl MapperModel {
         Ok(losses)
     }
 
-    /// Map a batch of environments autoregressively (paper §4.5.2): pick
-    /// the smallest AOT inference batch ≥ `envs.len()`, pad, and run the
-    /// env-in-the-loop decode. Environments may have different depths and
-    /// conditions; rows that finish early stop being advanced.
+    /// Map a batch of environments autoregressively (paper §4.5.2) with
+    /// greedy decoding. Environments may have different depths and
+    /// conditions.
     pub fn infer_batch(&self, rt: &Runtime, envs: &[&FusionEnv]) -> Result<Vec<Trajectory>> {
+        self.infer_batch_with(rt, envs, Sampling::Greedy)
+    }
+
+    /// Batched mapping with an explicit decode policy. On the native
+    /// backend each sequence runs a KV-cache decode, fanned over the
+    /// shared thread pool (one pass for a full serve batch, any batch
+    /// size); on PJRT the batch is padded to the smallest AOT inference
+    /// batch and decoded in lock-step (greedy only).
+    pub fn infer_batch_with(
+        &self,
+        rt: &Runtime,
+        envs: &[&FusionEnv],
+        sampling: Sampling,
+    ) -> Result<Vec<Trajectory>> {
         if envs.is_empty() {
             return Ok(Vec::new());
         }
+        if let Some(eng) = rt.native_engine() {
+            return self.native_infer_batch(eng, envs, sampling);
+        }
+        if sampling != Sampling::Greedy {
+            bail!("top-k sampling requires the native backend");
+        }
+        self.pjrt_infer_batch(rt, envs)
+    }
+
+    fn native_infer_batch(
+        &self,
+        eng: &NativeEngine,
+        envs: &[&FusionEnv],
+        sampling: Sampling,
+    ) -> Result<Vec<Trajectory>> {
+        if self.theta.len() != eng.n_params() {
+            bail!(
+                "model has {} params, native engine expects {} — config mismatch",
+                self.theta.len(),
+                eng.n_params()
+            );
+        }
+        let pool = ThreadPool::shared();
+        if envs.len() < 2 || pool.size() < 2 || ThreadPool::on_pool_worker() {
+            return Ok(envs
+                .iter()
+                .map(|env| decoder::infer_env(eng, &self.theta, env, sampling))
+                .collect());
+        }
+        // Per-sequence fan-out: decode and trajectory post-processing run
+        // on the same worker, so a full serve batch is one pool pass.
+        let eng_arc = Arc::new(eng.clone());
+        let theta = Arc::new(self.theta.clone());
+        let jobs: Vec<Box<dyn FnOnce() -> Trajectory + Send + 'static>> = envs
+            .iter()
+            .map(|env| {
+                let eng = Arc::clone(&eng_arc);
+                let th = Arc::clone(&theta);
+                let env = (*env).clone();
+                Box::new(move || decoder::infer_env(&eng, &th, &env, sampling))
+                    as Box<dyn FnOnce() -> Trajectory + Send + 'static>
+            })
+            .collect();
+        Ok(pool.run_batch(jobs))
+    }
+
+    /// The PJRT env-in-the-loop decode: pick the smallest AOT inference
+    /// batch ≥ `envs.len()`, pad, advance every row one slot per call.
+    fn pjrt_infer_batch(&self, rt: &Runtime, envs: &[&FusionEnv]) -> Result<Vec<Trajectory>> {
         let batches = rt.manifest.infer_batches(self.kind.tag());
         let bi = batches
             .iter()
@@ -214,7 +385,8 @@ impl MapperModel {
         Ok(self.infer_batch(rt, &[env])?.pop().unwrap())
     }
 
-    /// Save parameters + optimizer state.
+    /// Save parameters + optimizer state (+ native architecture when the
+    /// model has one — v2 checkpoint layout).
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let f = File::create(path.as_ref())
             .with_context(|| format!("creating {}", path.as_ref().display()))?;
@@ -224,34 +396,68 @@ impl MapperModel {
         w.f32_slice(&self.theta)?;
         w.f32_slice(&self.m)?;
         w.f32_slice(&self.v)?;
+        match &self.native_cfg {
+            Some(cfg) => {
+                w.u32(1)?;
+                w.u32(cfg.d_model as u32)?;
+                w.u32(cfg.n_blocks as u32)?;
+                w.u32(cfg.n_heads as u32)?;
+                w.u32(cfg.d_ff as u32)?;
+                w.u32(cfg.train_batch as u32)?;
+            }
+            None => w.u32(0)?,
+        }
         w.finish()
     }
 
     /// Load a checkpoint; the kind and parameter count must match the
-    /// manifest of the runtime it will be used with.
+    /// backend of the runtime it will be used with.
     pub fn load(rt: &Runtime, path: impl AsRef<Path>) -> Result<MapperModel> {
-        let f = File::open(path.as_ref())
-            .with_context(|| format!("opening {}", path.as_ref().display()))?;
-        let mut r = BinReader::new(BufReader::new(f), CKPT_MAGIC, CKPT_VERSION)?;
-        let tag = r.str()?;
-        let kind = ModelKind::by_name(&tag).with_context(|| format!("unknown model tag {tag}"))?;
-        let step = r.f64()? as f32;
-        let theta = r.f32_slice()?;
-        let m = r.f32_slice()?;
-        let v = r.f32_slice()?;
-        let want = rt.manifest.params_of(kind.tag())?;
-        if theta.len() != want {
-            bail!(
-                "checkpoint has {} params, manifest wants {want} — stale artifacts?",
-                theta.len()
-            );
+        Self::from_raw(rt, RawCheckpoint::read(path.as_ref())?)
+    }
+
+    /// Validate an already-read checkpoint against the runtime's backend
+    /// and turn it into a model — callers that need the raw config first
+    /// (the serving coordinator sizes its native engine from it) read the
+    /// file once and finish the load here.
+    pub fn from_raw(rt: &Runtime, raw: RawCheckpoint) -> Result<MapperModel> {
+        if let Some(eng) = rt.native_engine() {
+            if raw.kind != ModelKind::Df {
+                bail!("the native backend serves DNNFuser checkpoints only (got s2s)");
+            }
+            if let Some(cfg) = raw.config {
+                if cfg != eng.cfg {
+                    bail!(
+                        "checkpoint architecture {cfg:?} != runtime native config {:?} — \
+                         spawn the runtime with the checkpoint's config",
+                        eng.cfg
+                    );
+                }
+            }
+            if raw.theta.len() != eng.n_params() {
+                bail!(
+                    "checkpoint has {} params, native engine expects {} — \
+                     wrong architecture for this runtime",
+                    raw.theta.len(),
+                    eng.n_params()
+                );
+            }
+        } else {
+            let want = rt.manifest.params_of(raw.kind.tag())?;
+            if raw.theta.len() != want {
+                bail!(
+                    "checkpoint has {} params, manifest wants {want} — stale artifacts?",
+                    raw.theta.len()
+                );
+            }
         }
         Ok(MapperModel {
-            kind,
-            theta,
-            m,
-            v,
-            step,
+            kind: raw.kind,
+            theta: raw.theta,
+            m: raw.m,
+            v: raw.v,
+            step: raw.step,
+            native_cfg: raw.config.or_else(|| rt.native_engine().map(|e| e.cfg)),
         })
     }
 }
@@ -259,6 +465,8 @@ impl MapperModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cost::HwConfig;
+    use crate::workload::zoo;
 
     #[test]
     fn model_kind_names() {
@@ -268,5 +476,71 @@ mod tests {
         assert_eq!(ModelKind::Df.tag(), "df");
     }
 
-    // Runtime-dependent paths are covered by rust/tests/runtime_integration.rs.
+    fn native_rt(cfg: NativeConfig) -> Runtime {
+        Runtime::load_native("/nonexistent/artifacts", Some(cfg)).unwrap()
+    }
+
+    #[test]
+    fn native_init_train_save_load_infer_roundtrip() {
+        let rt = native_rt(NativeConfig::tiny());
+        let mut model = MapperModel::init(&rt, ModelKind::Df, 3).unwrap();
+        assert_eq!(model.n_params(), NativeConfig::tiny().n_params());
+
+        // A couple of train steps on real rollouts.
+        let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 24.0);
+        let mut rng = Rng::seed_from_u64(1);
+        let mut buf = ReplayBuffer::new(16);
+        for _ in 0..3 {
+            buf.push(env.rollout(|_, _| rng.range_f64(-1.0, 1.0) as f32));
+        }
+        let losses = model.train(&rt, &buf, 3, &mut rng, |_, _| {}).unwrap();
+        assert!(losses.iter().all(|l| l.is_finite()));
+
+        let before = model.infer(&rt, &env).unwrap();
+        let path = std::env::temp_dir().join("dnnfuser_native_roundtrip.ckpt");
+        model.save(&path).unwrap();
+        let loaded = MapperModel::load(&rt, &path).unwrap();
+        assert_eq!(loaded.theta, model.theta);
+        assert_eq!(loaded.native_cfg, Some(NativeConfig::tiny()));
+        let after = loaded.infer(&rt, &env).unwrap();
+        assert_eq!(before.strategy, after.strategy);
+        assert_eq!(before.actions, after.actions);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn native_rejects_s2s_and_config_mismatch() {
+        let rt = native_rt(NativeConfig::tiny());
+        assert!(MapperModel::init(&rt, ModelKind::S2s, 0).is_err());
+
+        let model = MapperModel::init(&rt, ModelKind::Df, 0).unwrap();
+        let path = std::env::temp_dir().join("dnnfuser_native_mismatch.ckpt");
+        model.save(&path).unwrap();
+        let rt_paper = native_rt(NativeConfig::paper());
+        let err = MapperModel::load(&rt_paper, &path).unwrap_err();
+        assert!(format!("{err:#}").contains("config"), "{err:#}");
+        assert_eq!(
+            peek_checkpoint_config(&path).unwrap(),
+            Some(NativeConfig::tiny())
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn native_batched_inference_matches_serial() {
+        let rt = native_rt(NativeConfig::tiny());
+        let model = MapperModel::init(&rt, ModelKind::Df, 9).unwrap();
+        let e1 = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let e2 = FusionEnv::new(zoo::resnet18(), 64, HwConfig::paper(), 32.0);
+        let e3 = FusionEnv::new(zoo::mobilenet_v2(), 64, HwConfig::paper(), 48.0);
+        let batched = model.infer_batch(&rt, &[&e1, &e2, &e3]).unwrap();
+        assert_eq!(batched.len(), 3);
+        for (traj, env) in batched.iter().zip([&e1, &e2, &e3]) {
+            let solo = model.infer(&rt, env).unwrap();
+            assert_eq!(traj.strategy, solo.strategy, "{}", env.workload.name);
+            assert_eq!(traj.actions, solo.actions);
+        }
+    }
+
+    // PJRT-dependent paths are covered by rust/tests/runtime_integration.rs.
 }

@@ -1,0 +1,485 @@
+//! Autoregressive decoding for the native transformer: the KV-cache
+//! serving path and the AOT-graph reference path.
+//!
+//! **KV-cache layout** (DESIGN.md §7): one session per sequence; per
+//! block, two contiguous row-major `[3·T_MAX, d_model]` buffers (keys,
+//! values). Heads are column ranges of width `d_head` inside a row, so a
+//! head's attention walks a strided window of the same buffer — no
+//! per-head allocation, and appending a token writes each block's K/V row
+//! exactly once. A session costs `n_blocks · 2 · 3·T_MAX · d_model`
+//! floats (~600 KB at paper scale).
+//!
+//! **Why two paths.** The AOT executables recompute the full padded
+//! sequence every step (`df_infer_b{B}` takes whole `[B, T_MAX]` token
+//! arrays); the serving path appends 3 tokens per strategy slot to a live
+//! session. Causal attention makes the two produce bit-identical
+//! predictions — both accumulate softmax terms in ascending key order and
+//! the graph's masked future keys contribute exactly 0.0 — which
+//! `rust/tests/native_parity.rs` pins on every zoo workload.
+
+use crate::env::{FusionEnv, Trajectory, STATE_DIM, T_MAX};
+use crate::util::rng::Rng;
+
+use super::ops;
+use super::{NativeEngine, Sampling, SEQ_LEN};
+
+/// Incremental decode state for one sequence.
+pub struct KvSession<'a> {
+    eng: &'a NativeEngine,
+    theta: &'a [f32],
+    /// Tokens appended so far (= next row index in the caches).
+    pos: usize,
+    /// Per block: keys / values, row-major `[SEQ_LEN, d_model]`.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Hidden state of the most recent token after all blocks (pre-ln_f).
+    h: Vec<f32>,
+    // Scratch (reused across appends; no steady-state allocation).
+    pre: Vec<f32>,
+    xhat: Vec<f32>,
+    q: Vec<f32>,
+    att: Vec<f32>,
+    o: Vec<f32>,
+    h1: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl<'a> KvSession<'a> {
+    pub fn new(eng: &'a NativeEngine, theta: &'a [f32]) -> KvSession<'a> {
+        assert_eq!(
+            theta.len(),
+            eng.layout.n_params,
+            "theta length does not match the engine layout"
+        );
+        let d = eng.cfg.d_model;
+        KvSession {
+            eng,
+            theta,
+            pos: 0,
+            k: (0..eng.cfg.n_blocks).map(|_| vec![0.0; SEQ_LEN * d]).collect(),
+            v: (0..eng.cfg.n_blocks).map(|_| vec![0.0; SEQ_LEN * d]).collect(),
+            h: vec![0.0; d],
+            pre: vec![0.0; d],
+            xhat: vec![0.0; d],
+            q: vec![0.0; d],
+            att: vec![0.0; d],
+            o: vec![0.0; d],
+            h1: vec![0.0; eng.cfg.d_ff],
+            scores: vec![0.0; SEQ_LEN],
+        }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Append one embedded token and advance it through every block,
+    /// extending each block's KV cache by one row.
+    pub fn append(&mut self, emb: &[f32]) {
+        assert!(self.pos < SEQ_LEN, "KV session full ({SEQ_LEN} tokens)");
+        let th = self.theta;
+        let cfg = self.eng.cfg;
+        let (d, ff, dh) = (cfg.d_model, cfg.d_ff, cfg.d_head());
+        let row = self.pos * d;
+        self.h.copy_from_slice(emb);
+        for (b, bo) in self.eng.layout.blocks.iter().enumerate() {
+            // Pre-LN attention.
+            ops::layernorm(
+                &self.h,
+                &th[bo.ln1_g..bo.ln1_g + d],
+                &th[bo.ln1_b..bo.ln1_b + d],
+                &mut self.xhat,
+                &mut self.pre,
+            );
+            ops::linear(&self.pre, &th[bo.wq..bo.wq + d * d], None, d, d, &mut self.q);
+            ops::linear(
+                &self.pre,
+                &th[bo.wk..bo.wk + d * d],
+                None,
+                d,
+                d,
+                &mut self.k[b][row..row + d],
+            );
+            ops::linear(
+                &self.pre,
+                &th[bo.wv..bo.wv + d * d],
+                None,
+                d,
+                d,
+                &mut self.v[b][row..row + d],
+            );
+            for head in 0..cfg.n_heads {
+                let col = head * dh;
+                ops::attend_one(
+                    &self.q[col..col + dh],
+                    &self.k[b],
+                    &self.v[b],
+                    self.pos + 1,
+                    d,
+                    col,
+                    dh,
+                    &mut self.scores,
+                    &mut self.att[col..col + dh],
+                );
+            }
+            ops::linear(
+                &self.att,
+                &th[bo.wo..bo.wo + d * d],
+                Some(&th[bo.bo..bo.bo + d]),
+                d,
+                d,
+                &mut self.o,
+            );
+            for (hv, &ov) in self.h.iter_mut().zip(&self.o) {
+                *hv += ov;
+            }
+            // Pre-LN MLP.
+            ops::layernorm(
+                &self.h,
+                &th[bo.ln2_g..bo.ln2_g + d],
+                &th[bo.ln2_b..bo.ln2_b + d],
+                &mut self.xhat,
+                &mut self.pre,
+            );
+            ops::linear(
+                &self.pre,
+                &th[bo.w1..bo.w1 + d * ff],
+                Some(&th[bo.b1..bo.b1 + ff]),
+                d,
+                ff,
+                &mut self.h1,
+            );
+            for x in self.h1.iter_mut() {
+                *x = ops::gelu(*x);
+            }
+            ops::linear(
+                &self.h1,
+                &th[bo.w2..bo.w2 + ff * d],
+                Some(&th[bo.b2..bo.b2 + d]),
+                ff,
+                d,
+                &mut self.o,
+            );
+            for (hv, &ov) in self.h.iter_mut().zip(&self.o) {
+                *hv += ov;
+            }
+        }
+        self.pos += 1;
+    }
+
+    /// Head read-out of the most recently appended token: final layer
+    /// norm, linear head, tanh (only meaningful on state tokens).
+    pub fn pred(&mut self) -> f32 {
+        let th = self.theta;
+        let l = &self.eng.layout;
+        let d = self.eng.cfg.d_model;
+        ops::layernorm(
+            &self.h,
+            &th[l.ln_f_g..l.ln_f_g + d],
+            &th[l.ln_f_b..l.ln_f_b + d],
+            &mut self.xhat,
+            &mut self.pre,
+        );
+        let mut z = th[l.head_b];
+        for (xv, wv) in self.pre.iter().zip(&th[l.head_w..l.head_w + d]) {
+            z += xv * wv;
+        }
+        z.tanh()
+    }
+}
+
+/// Token embedding: `value·w + b + step[t]` (rtg and action tokens) or
+/// `state·W + b + step[t]` — `python/compile/model.py::forward`'s three
+/// embedding rows.
+pub fn embed_rtg(eng: &NativeEngine, theta: &[f32], t: usize, rtg: f32, out: &mut [f32]) {
+    let l = &eng.layout;
+    let d = eng.cfg.d_model;
+    let step = &theta[l.embed_step + t * d..l.embed_step + (t + 1) * d];
+    for j in 0..d {
+        out[j] = rtg * theta[l.embed_rtg_w + j] + theta[l.embed_rtg_b + j] + step[j];
+    }
+}
+
+pub fn embed_state(eng: &NativeEngine, theta: &[f32], t: usize, state: &[f32], out: &mut [f32]) {
+    let l = &eng.layout;
+    let d = eng.cfg.d_model;
+    ops::linear(
+        state,
+        &theta[l.embed_state_w..l.embed_state_w + STATE_DIM * d],
+        Some(&theta[l.embed_state_b..l.embed_state_b + d]),
+        STATE_DIM,
+        d,
+        out,
+    );
+    let step = &theta[l.embed_step + t * d..l.embed_step + (t + 1) * d];
+    for (o, &s) in out.iter_mut().zip(step) {
+        *o += s;
+    }
+}
+
+pub fn embed_action(eng: &NativeEngine, theta: &[f32], t: usize, action: f32, out: &mut [f32]) {
+    let l = &eng.layout;
+    let d = eng.cfg.d_model;
+    let step = &theta[l.embed_step + t * d..l.embed_step + (t + 1) * d];
+    for j in 0..d {
+        out[j] = action * theta[l.embed_action_w + j] + theta[l.embed_action_b + j] + step[j];
+    }
+}
+
+/// The `df_infer_b{B}` artifact contract for one row, natively: full
+/// padded `[T_MAX]` token arrays in, predictions at every slot out. Used
+/// by [`graph_infer`] and by the PJRT-parity tests.
+pub fn seq_preds(
+    eng: &NativeEngine,
+    theta: &[f32],
+    rtg: &[f32],
+    states: &[f32],
+    actions: &[f32],
+) -> Vec<f32> {
+    assert_eq!(rtg.len(), T_MAX);
+    assert_eq!(states.len(), T_MAX * STATE_DIM);
+    assert_eq!(actions.len(), T_MAX);
+    let d = eng.cfg.d_model;
+    let mut sess = KvSession::new(eng, theta);
+    let mut emb = vec![0.0f32; d];
+    let mut preds = vec![0.0f32; T_MAX];
+    for t in 0..T_MAX {
+        embed_rtg(eng, theta, t, rtg[t], &mut emb);
+        sess.append(&emb);
+        embed_state(eng, theta, t, &states[t * STATE_DIM..(t + 1) * STATE_DIM], &mut emb);
+        sess.append(&emb);
+        preds[t] = sess.pred();
+        embed_action(eng, theta, t, actions[t], &mut emb);
+        sess.append(&emb);
+    }
+    preds
+}
+
+/// Turn the head's continuous prediction into the raw value the episode
+/// decodes. Greedy passes the prediction straight through (the codec
+/// rounds to the nearest quantized action); top-k samples among the `k`
+/// codebook encodings nearest to the prediction. `codebook` is the
+/// pre-encoded alphabet ([`infer_env`] builds it once per decode, not per
+/// step).
+fn select_raw(codebook: Option<&[f32]>, pred: f32, sampling: Sampling, rng: &mut Rng) -> f32 {
+    match sampling {
+        Sampling::Greedy => pred,
+        Sampling::TopK { k, temperature, .. } => {
+            let codebook = codebook.expect("codebook is built for top-k decodes");
+            let k = k.max(1).min(codebook.len());
+            // k nearest encodings by insertion (ties broken toward the
+            // smaller encoding, matching the codec's rounding).
+            let mut best: Vec<(f32, f32)> = Vec::with_capacity(k + 1);
+            for &e in codebook {
+                let d = (e - pred).abs();
+                let mut i = best.len();
+                while i > 0 && (best[i - 1].1 > d || (best[i - 1].1 == d && best[i - 1].0 > e)) {
+                    i -= 1;
+                }
+                if i < k {
+                    best.insert(i, (e, d));
+                    best.truncate(k);
+                }
+            }
+            let tau = temperature.max(1e-4);
+            let weight = |d: f32| (-((d / tau) as f64).powi(2)).exp();
+            let total: f64 = best.iter().map(|&(_, d)| weight(d)).sum();
+            let mut pick = rng.f64() * total;
+            for &(e, d) in &best {
+                pick -= weight(d);
+                if pick <= 0.0 {
+                    return e;
+                }
+            }
+            best.last().expect("k >= 1").0
+        }
+    }
+}
+
+/// Per-sequence sampling stream, derived from the seed and the *request
+/// content* (workload structure, batch, condition) — never from the
+/// sequence's position in a batch, so a request decodes identically
+/// whether it is served solo or coalesced into any batch.
+fn sampling_rng(sampling: Sampling, env: &FusionEnv) -> Rng {
+    let seed = match sampling {
+        Sampling::Greedy => 0,
+        Sampling::TopK { seed, .. } => seed,
+    };
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for v in [
+        env.workload.content_hash(),
+        env.batch as u64,
+        env.mem_cond_bytes.to_bits(),
+    ] {
+        h ^= v;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    Rng::seed_from_u64(h)
+}
+
+/// Serving decode: one persistent KV session, 3 appended tokens per
+/// strategy slot, condition-projected episode stepping
+/// (`Episode::step_raw_projected`) — the paper's §4.5.2 decode with the
+/// env in the loop.
+pub fn infer_env(
+    eng: &NativeEngine,
+    theta: &[f32],
+    env: &FusionEnv,
+    sampling: Sampling,
+) -> Trajectory {
+    let d = eng.cfg.d_model;
+    let mut rng = sampling_rng(sampling, env);
+    let codebook: Option<Vec<f32>> = match sampling {
+        Sampling::Greedy => None,
+        Sampling::TopK { .. } => Some(
+            env.codec
+                .alphabet()
+                .into_iter()
+                .map(|a| env.codec.encode(a))
+                .collect(),
+        ),
+    };
+    let mut sess = KvSession::new(eng, theta);
+    let mut ep = env.begin();
+    let mut emb = vec![0.0f32; d];
+    for t in 0..env.steps().min(T_MAX) {
+        embed_rtg(eng, theta, t, env.rtg_token(), &mut emb);
+        sess.append(&emb);
+        let st = ep.observe();
+        embed_state(eng, theta, t, &st, &mut emb);
+        sess.append(&emb);
+        let pred = sess.pred();
+        ep.step_raw_projected(select_raw(codebook.as_deref(), pred, sampling, &mut rng));
+        embed_action(eng, theta, t, ep.traj.actions[t], &mut emb);
+        sess.append(&emb);
+    }
+    ep.into_trajectory()
+}
+
+/// Reference decode with the AOT executables' semantics: a fresh
+/// full-sequence recompute over zero-padded `[T_MAX]` token arrays at
+/// every step, reading the prediction at slot `t` — the exact loop
+/// `MapperModel::infer_batch` drives through PJRT. Greedy only (it exists
+/// to pin parity, not to serve).
+pub fn graph_infer(eng: &NativeEngine, theta: &[f32], env: &FusionEnv) -> Trajectory {
+    let mut ep = env.begin();
+    let mut rtg = vec![0.0f32; T_MAX];
+    let mut states = vec![0.0f32; T_MAX * STATE_DIM];
+    let mut actions = vec![0.0f32; T_MAX];
+    for t in 0..env.steps().min(T_MAX) {
+        rtg[t] = env.rtg_token();
+        let st = ep.observe();
+        states[t * STATE_DIM..(t + 1) * STATE_DIM].copy_from_slice(&st);
+        let preds = seq_preds(eng, theta, &rtg, &states, &actions);
+        ep.step_raw_projected(preds[t]);
+        actions[t] = ep.traj.actions[t];
+    }
+    ep.into_trajectory()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::model::native::NativeConfig;
+    use crate::workload::zoo;
+
+    fn tiny_engine() -> NativeEngine {
+        NativeEngine::new(NativeConfig::tiny()).unwrap()
+    }
+
+    #[test]
+    fn session_is_deterministic_and_input_sensitive() {
+        let eng = tiny_engine();
+        let th = eng.init_theta(1);
+        let d = eng.cfg.d_model;
+        let mut emb = vec![0.0f32; d];
+        let mut run = |state_val: f32| {
+            let mut s = KvSession::new(&eng, &th);
+            embed_rtg(&eng, &th, 0, 0.5, &mut emb);
+            s.append(&emb);
+            embed_state(&eng, &th, 0, &[state_val; STATE_DIM], &mut emb);
+            s.append(&emb);
+            s.pred()
+        };
+        let a = run(0.3);
+        let b = run(0.3);
+        let c = run(0.7);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!((-1.0..=1.0).contains(&a));
+    }
+
+    #[test]
+    fn seq_preds_prefix_matches_incremental_session() {
+        // The prediction at slot t must not depend on the zero-padded
+        // future — the property that makes KV decode == graph decode.
+        let eng = tiny_engine();
+        let th = eng.init_theta(3);
+        let d = eng.cfg.d_model;
+        let mut rtg = vec![0.0f32; T_MAX];
+        let mut states = vec![0.0f32; T_MAX * STATE_DIM];
+        let mut actions = vec![0.0f32; T_MAX];
+        for t in 0..4 {
+            rtg[t] = 0.4;
+            for s in 0..STATE_DIM {
+                states[t * STATE_DIM + s] = 0.1 * (t as f32 + 1.0) + 0.01 * s as f32;
+            }
+            actions[t] = 0.2 - 0.1 * t as f32;
+        }
+        let full = seq_preds(&eng, &th, &rtg, &states, &actions);
+        let mut sess = KvSession::new(&eng, &th);
+        let mut emb = vec![0.0f32; d];
+        for t in 0..4 {
+            embed_rtg(&eng, &th, t, rtg[t], &mut emb);
+            sess.append(&emb);
+            embed_state(&eng, &th, t, &states[t * STATE_DIM..(t + 1) * STATE_DIM], &mut emb);
+            sess.append(&emb);
+            assert_eq!(sess.pred().to_bits(), full[t].to_bits(), "slot {t}");
+            embed_action(&eng, &th, t, actions[t], &mut emb);
+            sess.append(&emb);
+        }
+    }
+
+    #[test]
+    fn kv_and_graph_decode_agree_on_vgg16() {
+        let eng = tiny_engine();
+        let th = eng.init_theta(11);
+        let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let a = infer_env(&eng, &th, &env, Sampling::Greedy);
+        let b = graph_infer(&eng, &th, &env);
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.actions, b.actions);
+        assert_eq!(a.speedup, b.speedup);
+    }
+
+    #[test]
+    fn top1_sampling_equals_greedy() {
+        let eng = tiny_engine();
+        let th = eng.init_theta(5);
+        let env = FusionEnv::new(zoo::resnet18(), 64, HwConfig::paper(), 24.0);
+        let g = infer_env(&eng, &th, &env, Sampling::Greedy);
+        let t1 = infer_env(
+            &eng,
+            &th,
+            &env,
+            Sampling::TopK { k: 1, temperature: 0.1, seed: 99 },
+        );
+        assert_eq!(g.strategy, t1.strategy);
+    }
+
+    #[test]
+    fn topk_sampling_is_seed_deterministic_and_valid() {
+        let eng = tiny_engine();
+        let th = eng.init_theta(5);
+        let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+        let s = Sampling::TopK { k: 5, temperature: 0.3, seed: 42 };
+        let a = infer_env(&eng, &th, &env, s);
+        let b = infer_env(&eng, &th, &env, s);
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.steps(), env.steps());
+        // Projection keeps even sampled decodes within the condition.
+        assert!(a.valid, "projected decode must satisfy the condition");
+    }
+}

@@ -1,0 +1,348 @@
+//! `model::native` — a pure-Rust implementation of the DNNFuser decision
+//! transformer (paper §5.1: three blocks, two heads, hidden dimension 128).
+//!
+//! The PJRT path executes AOT-compiled HLO; in environments without a real
+//! XLA backend that path cannot run and serving used to degrade to the
+//! G-Sampler search fallback — the repo reproduced the baseline, not the
+//! paper's one-shot inference mapper. This module is the first-class
+//! serving path: the full forward pass (token/condition embedding,
+//! multi-head causal attention with a KV cache, GELU MLP, layer norm,
+//! greedy + top-k decode), the training backward pass and the Adam update
+//! all in plain Rust over the same flat `theta` vector the PJRT
+//! executables use (`python/compile/model.py::param_spec` fixes the
+//! layout; [`Layout`] mirrors it offset-for-offset).
+//!
+//! Two decode routes share every primitive in [`ops`]:
+//!
+//! - [`decoder::infer_env`] — the serving route: one [`decoder::KvSession`]
+//!   per sequence, 3 appended tokens per strategy slot;
+//! - [`decoder::graph_infer`] — the AOT-graph reference: a full
+//!   `3·T_MAX`-token recompute per step, exactly the work `df_infer_b{B}`
+//!   performs. Causal masking makes the two bit-identical
+//!   (`rust/tests/native_parity.rs` pins this on every zoo workload).
+
+pub mod decoder;
+pub mod ops;
+pub mod train;
+
+use anyhow::{bail, Context, Result};
+
+use crate::env::{STATE_DIM, T_MAX};
+use crate::runtime::manifest::Manifest;
+use crate::util::rng::Rng;
+
+/// Interleaved (rtg, state, action) sequence length.
+pub const SEQ_LEN: usize = 3 * T_MAX;
+
+/// Architecture hyper-parameters of the native decision transformer.
+/// `paper()` matches `python/compile/common.py`; smaller configs exist for
+/// CI-speed training (`tiny()`) and are recorded in v2 checkpoints so a
+/// model trained at one size loads at that size everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NativeConfig {
+    pub d_model: usize,
+    pub n_blocks: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    /// Default training batch (the PJRT path bakes TRAIN_BATCH into the
+    /// artifact; the native trainer accepts any batch and uses this as the
+    /// manifest constant).
+    pub train_batch: usize,
+}
+
+impl NativeConfig {
+    /// Paper §5.1 geometry (mirrors `python/compile/common.py`).
+    pub fn paper() -> NativeConfig {
+        NativeConfig {
+            d_model: 128,
+            n_blocks: 3,
+            n_heads: 2,
+            d_ff: 512,
+            train_batch: 32,
+        }
+    }
+
+    /// CI-scale config: trains in seconds on one core, same architecture.
+    pub fn tiny() -> NativeConfig {
+        NativeConfig {
+            d_model: 32,
+            n_blocks: 1,
+            n_heads: 2,
+            d_ff: 128,
+            train_batch: 8,
+        }
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model == 0 || self.n_blocks == 0 || self.n_heads == 0 || self.d_ff == 0 {
+            bail!("native config dimensions must all be >= 1 ({self:?})");
+        }
+        if self.d_model % self.n_heads != 0 {
+            bail!(
+                "d_model {} must be divisible by n_heads {}",
+                self.d_model,
+                self.n_heads
+            );
+        }
+        if self.train_batch == 0 {
+            bail!("train_batch must be >= 1");
+        }
+        Ok(())
+    }
+
+    /// Read the architecture out of an artifacts manifest — the same
+    /// constants `python/compile/aot.py` records — so a native runtime
+    /// pointed at a real artifacts directory decodes with the exact
+    /// geometry the AOT executables were lowered with.
+    pub fn from_manifest(m: &Manifest) -> Result<NativeConfig> {
+        let d_model = m.constant("D_MODEL").context("native config")? as usize;
+        let n_blocks = m.constant("N_BLOCKS").context("native config")? as usize;
+        let n_heads = m.constant("N_HEADS").context("native config")? as usize;
+        let train_batch = m.constant("TRAIN_BATCH").unwrap_or(32.0) as usize;
+        let cfg = NativeConfig {
+            d_model,
+            n_blocks,
+            n_heads,
+            d_ff: 4 * d_model,
+            train_batch,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn n_params(&self) -> usize {
+        Layout::new(*self).n_params
+    }
+}
+
+/// Flat-parameter offsets of one transformer block.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockOffsets {
+    pub ln1_g: usize,
+    pub ln1_b: usize,
+    pub wq: usize,
+    pub wk: usize,
+    pub wv: usize,
+    pub wo: usize,
+    pub bo: usize,
+    pub ln2_g: usize,
+    pub ln2_b: usize,
+    pub w1: usize,
+    pub b1: usize,
+    pub w2: usize,
+    pub b2: usize,
+}
+
+/// Offsets into the flat `theta` vector, in the exact order of
+/// `python/compile/model.py::param_spec` (which is what `df_init` /
+/// `df_train` produce and consume) — a checkpoint moves between the PJRT
+/// and native backends without conversion.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub cfg: NativeConfig,
+    pub embed_rtg_w: usize,
+    pub embed_rtg_b: usize,
+    pub embed_state_w: usize,
+    pub embed_state_b: usize,
+    pub embed_action_w: usize,
+    pub embed_action_b: usize,
+    pub embed_step: usize,
+    pub blocks: Vec<BlockOffsets>,
+    pub ln_f_g: usize,
+    pub ln_f_b: usize,
+    pub head_w: usize,
+    pub head_b: usize,
+    pub n_params: usize,
+}
+
+impl Layout {
+    pub fn new(cfg: NativeConfig) -> Layout {
+        let (d, ff) = (cfg.d_model, cfg.d_ff);
+        let mut off = 0usize;
+        let mut alloc = |n: usize| {
+            let o = off;
+            off += n;
+            o
+        };
+        let embed_rtg_w = alloc(d);
+        let embed_rtg_b = alloc(d);
+        let embed_state_w = alloc(STATE_DIM * d);
+        let embed_state_b = alloc(d);
+        let embed_action_w = alloc(d);
+        let embed_action_b = alloc(d);
+        let embed_step = alloc(T_MAX * d);
+        let mut blocks = Vec::with_capacity(cfg.n_blocks);
+        for _ in 0..cfg.n_blocks {
+            blocks.push(BlockOffsets {
+                ln1_g: alloc(d),
+                ln1_b: alloc(d),
+                wq: alloc(d * d),
+                wk: alloc(d * d),
+                wv: alloc(d * d),
+                wo: alloc(d * d),
+                bo: alloc(d),
+                ln2_g: alloc(d),
+                ln2_b: alloc(d),
+                w1: alloc(d * ff),
+                b1: alloc(ff),
+                w2: alloc(ff * d),
+                b2: alloc(d),
+            });
+        }
+        let ln_f_g = alloc(d);
+        let ln_f_b = alloc(d);
+        let head_w = alloc(d);
+        let head_b = alloc(1);
+        Layout {
+            cfg,
+            embed_rtg_w,
+            embed_rtg_b,
+            embed_state_w,
+            embed_state_b,
+            embed_action_w,
+            embed_action_b,
+            embed_step,
+            blocks,
+            ln_f_g,
+            ln_f_b,
+            head_w,
+            head_b,
+            n_params: off,
+        }
+    }
+}
+
+/// The native execution engine: a validated config plus its parameter
+/// layout. Stateless — every method takes `theta` by reference, so one
+/// engine serves any number of models of that geometry.
+#[derive(Debug, Clone)]
+pub struct NativeEngine {
+    pub cfg: NativeConfig,
+    pub layout: Layout,
+}
+
+impl NativeEngine {
+    pub fn new(cfg: NativeConfig) -> Result<NativeEngine> {
+        cfg.validate()?;
+        Ok(NativeEngine {
+            cfg,
+            layout: Layout::new(cfg),
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layout.n_params
+    }
+
+    /// Initialize a flat parameter vector: zeros for biases, ones for
+    /// layer-norm gains, `0.02·N(0,1)` for the step embedding and
+    /// `N(0,1)/√fan_in` elsewhere — the same scheme as
+    /// `python/compile/model.py::init_params` (deterministic per seed;
+    /// not bit-identical to the jax PRNG stream).
+    pub fn init_theta(&self, seed: i32) -> Vec<f32> {
+        let l = &self.layout;
+        let (d, ff) = (self.cfg.d_model, self.cfg.d_ff);
+        let mut rng = Rng::seed_from_u64(seed as u32 as u64);
+        let mut th = vec![0.0f32; l.n_params];
+        let mut gauss = |th: &mut [f32], off: usize, n: usize, scale: f64| {
+            for x in th[off..off + n].iter_mut() {
+                *x = (rng.normal() * scale) as f32;
+            }
+        };
+        gauss(&mut th, l.embed_rtg_w, d, 1.0);
+        gauss(&mut th, l.embed_state_w, STATE_DIM * d, 1.0 / (STATE_DIM as f64).sqrt());
+        gauss(&mut th, l.embed_action_w, d, 1.0);
+        gauss(&mut th, l.embed_step, T_MAX * d, 0.02);
+        let dscale = 1.0 / (d as f64).sqrt();
+        let fscale = 1.0 / (ff as f64).sqrt();
+        for b in 0..self.cfg.n_blocks {
+            let bo = l.blocks[b];
+            th[bo.ln1_g..bo.ln1_g + d].fill(1.0);
+            gauss(&mut th, bo.wq, d * d, dscale);
+            gauss(&mut th, bo.wk, d * d, dscale);
+            gauss(&mut th, bo.wv, d * d, dscale);
+            gauss(&mut th, bo.wo, d * d, dscale);
+            th[bo.ln2_g..bo.ln2_g + d].fill(1.0);
+            gauss(&mut th, bo.w1, d * ff, dscale);
+            gauss(&mut th, bo.w2, ff * d, fscale);
+        }
+        th[l.ln_f_g..l.ln_f_g + d].fill(1.0);
+        gauss(&mut th, l.head_w, d, dscale);
+        th
+    }
+}
+
+/// How the decoder turns the head's continuous prediction into an action.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// Deterministic: the codec's nearest quantized action (the paper's
+    /// serving decode; both backends use this by default).
+    Greedy,
+    /// Sample among the `k` codebook actions nearest to the prediction,
+    /// weighted by `exp(-dist²/temperature²)`. `k = 1` degenerates to
+    /// greedy. Deterministic per seed.
+    TopK { k: usize, temperature: f32, seed: u64 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_layout_matches_python_param_spec() {
+        // python/compile/model.py::n_params() for d=128, 3 blocks, 2 heads,
+        // ff=512, T_MAX=65, STATE_DIM=8.
+        let cfg = NativeConfig::paper();
+        let d = 128;
+        let embeds = d + d + 8 * d + d + d + d + T_MAX * d;
+        let per_block = d + d + 4 * d * d + d + d + d + d * 512 + 512 + 512 * d + d;
+        let tail = d + d + d + 1;
+        assert_eq!(cfg.n_params(), embeds + 3 * per_block + tail);
+    }
+
+    #[test]
+    fn layout_offsets_are_contiguous_and_ordered() {
+        let l = Layout::new(NativeConfig::tiny());
+        assert_eq!(l.embed_rtg_w, 0);
+        assert!(l.embed_rtg_b > l.embed_rtg_w);
+        assert!(l.blocks[0].ln1_g > l.embed_step);
+        assert!(l.head_b == l.n_params - 1);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_structured() {
+        let eng = NativeEngine::new(NativeConfig::tiny()).unwrap();
+        let a = eng.init_theta(7);
+        let b = eng.init_theta(7);
+        let c = eng.init_theta(8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let l = &eng.layout;
+        let d = eng.cfg.d_model;
+        // Biases zero, gains one.
+        assert!(a[l.embed_rtg_b..l.embed_rtg_b + d].iter().all(|&x| x == 0.0));
+        assert!(a[l.ln_f_g..l.ln_f_g + d].iter().all(|&x| x == 1.0));
+        assert!(a[l.blocks[0].bo..l.blocks[0].bo + d].iter().all(|&x| x == 0.0));
+        // Weights populated and finite.
+        assert!(a[l.blocks[0].wq..l.blocks[0].wq + d * d]
+            .iter()
+            .any(|&x| x != 0.0));
+        assert!(a.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_shapes() {
+        let mut cfg = NativeConfig::tiny();
+        cfg.n_heads = 3; // 32 % 3 != 0
+        assert!(cfg.validate().is_err());
+        cfg = NativeConfig::tiny();
+        cfg.d_model = 0;
+        assert!(cfg.validate().is_err());
+        assert!(NativeConfig::paper().validate().is_ok());
+        assert!(NativeConfig::tiny().validate().is_ok());
+    }
+}

@@ -1,0 +1,208 @@
+//! Shared tensor primitives for the native transformer.
+//!
+//! Every consumer — the KV-cache serving decoder, the AOT-graph reference
+//! path and the trainer's forward pass — calls these exact functions with
+//! identical accumulation order, which is what makes the KV and
+//! full-recompute routes bit-for-bit equal (`rust/tests/native_parity.rs`)
+//! and a trained model behave identically at serve time.
+//!
+//! All matrices are row-major `[rows, cols]` flat `f32` slices, matching
+//! the jax layout in `python/compile/model.py` (`x @ W` with `W: [in,
+//! out]`).
+
+/// `out = bias + x · W` for `W: [d_in, d_out]`. Accumulates over `d_in`
+/// in ascending order (fixed order ⇒ reproducible bits).
+pub fn linear(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    d_in: usize,
+    d_out: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(out.len(), d_out);
+    match bias {
+        Some(b) => out.copy_from_slice(b),
+        None => out.fill(0.0),
+    }
+    for (k, &xv) in x.iter().enumerate() {
+        let row = &w[k * d_out..(k + 1) * d_out];
+        for (o, &wv) in out.iter_mut().zip(row) {
+            *o += xv * wv;
+        }
+    }
+}
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// Row layer norm (eps matches `kernels/ref.py`): `(x−μ)/√(σ²+ε)·g + b`.
+/// Writes the normalized-but-unscaled `x̂` into `xhat` (the trainer's
+/// backward pass needs it; inference passes a scratch buffer) and returns
+/// `1/√(σ²+ε)`.
+pub fn layernorm(x: &[f32], gain: &[f32], bias: &[f32], xhat: &mut [f32], out: &mut [f32]) -> f32 {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(x.len(), xhat.len());
+    let d = x.len() as f32;
+    let mut mu = 0.0f32;
+    for &v in x {
+        mu += v;
+    }
+    mu /= d;
+    let mut var = 0.0f32;
+    for &v in x {
+        let c = v - mu;
+        var += c * c;
+    }
+    var /= d;
+    let rstd = 1.0 / (var + LN_EPS).sqrt();
+    for i in 0..x.len() {
+        xhat[i] = (x[i] - mu) * rstd;
+        out[i] = xhat[i] * gain[i] + bias[i];
+    }
+    rstd
+}
+
+const GELU_C: f32 = 0.797_884_6; // sqrt(2/π)
+
+/// Tanh-approximate GELU (`jax.nn.gelu(approximate=True)`).
+pub fn gelu(x: f32) -> f32 {
+    let u = GELU_C * (x + 0.044715 * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+/// d/dx of [`gelu`].
+pub fn dgelu(x: f32) -> f32 {
+    let u = GELU_C * (x + 0.044715 * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// One causal attention query for one head: attend `q` (length `dh`) over
+/// the first `n_keys` rows of the cached key/value matrices (row stride
+/// `d_model`, head column offset `col`). Writes the attended value into
+/// `out` and returns nothing. `scores` is caller-provided scratch of at
+/// least `n_keys`.
+///
+/// Softmax subtracts the running max and accumulates in ascending key
+/// order — masked-out future keys simply don't exist here, which is
+/// bit-identical to the graph's `finfo.min` masking (their exp underflows
+/// to exactly 0.0).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_one(
+    q: &[f32],
+    k_cache: &[f32],
+    v_cache: &[f32],
+    n_keys: usize,
+    d_model: usize,
+    col: usize,
+    dh: usize,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut max = f32::NEG_INFINITY;
+    for s in 0..n_keys {
+        let krow = &k_cache[s * d_model + col..s * d_model + col + dh];
+        let mut dot = 0.0f32;
+        for (a, b) in q.iter().zip(krow) {
+            dot += a * b;
+        }
+        let sc = dot * scale;
+        scores[s] = sc;
+        if sc > max {
+            max = sc;
+        }
+    }
+    let mut sum = 0.0f32;
+    for s in scores.iter_mut().take(n_keys) {
+        *s = (*s - max).exp();
+        sum += *s;
+    }
+    let inv = 1.0 / sum;
+    out[..dh].fill(0.0);
+    for s in 0..n_keys {
+        let p = scores[s] * inv;
+        scores[s] = p; // leave probabilities behind for the trainer
+        let vrow = &v_cache[s * d_model + col..s * d_model + col + dh];
+        for (o, &vv) in out[..dh].iter_mut().zip(vrow) {
+            *o += p * vv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_matches_hand_computation() {
+        // x=[1,2], W=[[1,2,3],[4,5,6]], b=[10,20,30] → [19, 32, 45]
+        let mut out = vec![0.0; 3];
+        linear(
+            &[1.0, 2.0],
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            Some(&[10.0, 20.0, 30.0]),
+            2,
+            3,
+            &mut out,
+        );
+        assert_eq!(out, vec![19.0, 32.0, 45.0]);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let g = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let mut xhat = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        let rstd = layernorm(&x, &g, &b, &mut xhat, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        let var: f32 = out.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((var - 1.0).abs() < 1e-3, "{var}");
+        assert!(rstd > 0.0);
+        assert_eq!(out, xhat, "unit gain, zero bias ⇒ out == x̂");
+    }
+
+    #[test]
+    fn gelu_fixed_points_and_derivative() {
+        assert_eq!(gelu(0.0), 0.0);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        // Finite-difference check of dgelu at a few points.
+        for &x in &[-2.0f32, -0.3, 0.0, 0.7, 2.5] {
+            let h = 1e-3f32;
+            let num = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((dgelu(x) - num).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn attend_one_single_key_is_identity() {
+        // With one key, softmax is 1 and out == v row.
+        let q = [0.5f32, -0.5];
+        let kc = [1.0f32, 2.0]; // d_model == dh == 2, col 0
+        let vc = [3.0f32, -4.0];
+        let mut scores = [0.0f32; 1];
+        let mut out = [0.0f32; 2];
+        attend_one(&q, &kc, &vc, 1, 2, 0, 2, &mut scores, &mut out);
+        assert_eq!(out, [3.0, -4.0]);
+        assert!((scores[0] - 1.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn attend_one_prefers_aligned_key() {
+        // Two keys; q aligned with key 1 → output pulled toward v[1].
+        let q = [4.0f32, 0.0];
+        let kc = [-4.0f32, 0.0, 4.0, 0.0];
+        let vc = [0.0f32, 0.0, 10.0, 10.0];
+        let mut scores = [0.0f32; 2];
+        let mut out = [0.0f32; 2];
+        attend_one(&q, &kc, &vc, 2, 2, 0, 2, &mut scores, &mut out);
+        assert!(out[0] > 9.9, "{out:?}");
+        assert!((scores[0] + scores[1] - 1.0).abs() < 1e-6);
+    }
+}

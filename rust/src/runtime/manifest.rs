@@ -107,6 +107,30 @@ impl Manifest {
         })
     }
 
+    /// Synthesize a manifest for the artifact-free native backend: the
+    /// same constants `python/compile/aot.py` records, the native
+    /// engine's parameter count, and no artifacts (there is no HLO to
+    /// execute). Drivers that read `TRAIN_BATCH` / `params_of` work
+    /// unchanged.
+    pub fn for_native(cfg: crate::model::native::NativeConfig, n_params: usize) -> Manifest {
+        let mut constants = BTreeMap::new();
+        constants.insert("T_MAX".to_string(), T_MAX as f64);
+        constants.insert("STATE_DIM".to_string(), STATE_DIM as f64);
+        constants.insert("SEQ_LEN".to_string(), (3 * T_MAX) as f64);
+        constants.insert("D_MODEL".to_string(), cfg.d_model as f64);
+        constants.insert("N_BLOCKS".to_string(), cfg.n_blocks as f64);
+        constants.insert("N_HEADS".to_string(), cfg.n_heads as f64);
+        constants.insert("TRAIN_BATCH".to_string(), cfg.train_batch as f64);
+        let mut n = BTreeMap::new();
+        n.insert("df".to_string(), n_params);
+        Manifest {
+            version: MANIFEST_VERSION,
+            constants,
+            n_params: n,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
     /// Constant lookup with error context.
     pub fn constant(&self, name: &str) -> Result<f64> {
         self.constants
@@ -226,6 +250,18 @@ mod tests {
         let text = toy_manifest(MANIFEST_VERSION, T_MAX).replace("[100]", "[99]");
         let m = Manifest::parse(&text).unwrap();
         assert!(m.validate_against_build().is_err());
+    }
+
+    #[test]
+    fn native_manifest_validates_and_carries_constants() {
+        let cfg = crate::model::native::NativeConfig::tiny();
+        let m = Manifest::for_native(cfg, cfg.n_params());
+        m.validate_against_build().unwrap();
+        assert_eq!(m.constant("D_MODEL").unwrap() as usize, cfg.d_model);
+        assert_eq!(m.constant("TRAIN_BATCH").unwrap() as usize, cfg.train_batch);
+        assert_eq!(m.params_of("df").unwrap(), cfg.n_params());
+        assert!(m.artifacts.is_empty());
+        assert_eq!(m.infer_batches("df"), Vec::<usize>::new());
     }
 
     #[test]

@@ -1,14 +1,19 @@
-//! PJRT runtime (L3 ⇄ L2 bridge): load the AOT-compiled HLO-text artifacts
-//! and execute them on the PJRT CPU client.
+//! Model runtime (L3 ⇄ L2 bridge), two backends behind one handle:
 //!
-//! `make artifacts` (Python, build time) produces `artifacts/*.hlo.txt`
-//! plus `manifest.json`; this module is the only place the two sides meet,
-//! so it validates the manifest against the crate's compiled-in constants
-//! ([`crate::env::T_MAX`], [`crate::env::STATE_DIM`]) and refuses stale
-//! artifact directories loudly.
+//! - **PJRT** — load the AOT-compiled HLO-text artifacts (`make
+//!   artifacts`, Python at build time) and execute them on the PJRT CPU
+//!   client. `manifest.json` is validated against the crate's compiled-in
+//!   constants ([`crate::env::T_MAX`], [`crate::env::STATE_DIM`]) so a
+//!   stale artifact directory fails loudly at load.
+//! - **Native** — no artifacts, no PJRT: the pure-Rust transformer in
+//!   [`crate::model::native`] executes in-process. When an artifacts
+//!   directory is present its manifest supplies the architecture
+//!   constants (D_MODEL, N_BLOCKS, N_HEADS); otherwise the runtime
+//!   synthesizes a manifest from an explicit or paper-default
+//!   [`NativeConfig`], making serving fully self-contained.
 //!
-//! Python never runs at serve time — after `Runtime::load` the process is
-//! self-contained.
+//! Python never runs at serve time — after `Runtime::load` /
+//! [`Runtime::load_native`] the process is self-contained.
 
 pub mod manifest;
 pub mod tensor;
@@ -18,6 +23,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::model::native::{NativeConfig, NativeEngine};
 use manifest::Manifest;
 use tensor::Tensor;
 
@@ -43,28 +49,47 @@ impl LoadSet {
     }
 }
 
-/// The loaded runtime: a PJRT CPU client plus compiled executables.
+/// Which execution engine a [`Runtime`] carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Pjrt,
+    Native,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+enum Exec {
+    Pjrt {
+        #[allow(dead_code)] // owns the executables' device context
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    },
+    Native {
+        engine: NativeEngine,
+    },
+}
+
+/// The loaded runtime: a manifest plus one of the two execution engines.
 pub struct Runtime {
-    pub client: xla::PjRtClient,
     pub manifest: Manifest,
     pub dir: PathBuf,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    exec: Exec,
 }
 
 impl Runtime {
-    /// Load `artifacts/` — parse + validate the manifest, then compile the
-    /// requested artifact set onto the CPU client.
+    /// Load `artifacts/` onto the PJRT backend — parse + validate the
+    /// manifest, then compile the requested artifact set on the CPU
+    /// client.
     pub fn load(dir: impl AsRef<Path>, set: LoadSet) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!(
-                "reading {} — run `make artifacts` first",
-                manifest_path.display()
-            )
-        })?;
-        let manifest = Manifest::parse(&text)?;
-        manifest.validate_against_build()?;
+        let manifest = Self::read_manifest(&dir)?;
 
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let mut executables = HashMap::new();
@@ -84,26 +109,118 @@ impl Runtime {
             executables.insert(name.clone(), exe);
         }
         Ok(Runtime {
-            client,
             manifest,
             dir,
-            executables,
+            exec: Exec::Pjrt {
+                client,
+                executables,
+            },
         })
     }
 
+    /// Load the native backend. Architecture resolution, most specific
+    /// wins: an explicit `config`, else the constants of
+    /// `dir/manifest.json` when that file exists, else paper geometry.
+    /// The directory does not need to exist — native serving is
+    /// artifact-free.
+    pub fn load_native(dir: impl AsRef<Path>, config: Option<NativeConfig>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let disk_manifest = if dir.join("manifest.json").exists() {
+            Some(Self::read_manifest(&dir)?)
+        } else {
+            None
+        };
+        let cfg = match (config, &disk_manifest) {
+            (Some(cfg), _) => cfg,
+            (None, Some(m)) => NativeConfig::from_manifest(m)
+                .context("deriving native config from artifacts manifest")?,
+            (None, None) => NativeConfig::paper(),
+        };
+        let engine = NativeEngine::new(cfg)?;
+        // When the architecture came from a real manifest, its recorded
+        // parameter count must agree with our layout — catching any drift
+        // between python/compile/model.py and model::native.
+        if config.is_none() {
+            if let Some(m) = &disk_manifest {
+                if let Ok(n) = m.params_of("df") {
+                    if n != engine.n_params() {
+                        bail!(
+                            "manifest says df has {n} params but the native layout \
+                             computes {} for {cfg:?} — param_spec drift?",
+                            engine.n_params()
+                        );
+                    }
+                }
+            }
+        }
+        let manifest = match disk_manifest {
+            Some(m) if config.is_none() => m,
+            _ => Manifest::for_native(cfg, engine.n_params()),
+        };
+        Ok(Runtime {
+            manifest,
+            dir,
+            exec: Exec::Native { engine },
+        })
+    }
+
+    fn read_manifest(dir: &Path) -> Result<Manifest> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        manifest.validate_against_build()?;
+        Ok(manifest)
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        match &self.exec {
+            Exec::Pjrt { .. } => BackendKind::Pjrt,
+            Exec::Native { .. } => BackendKind::Native,
+        }
+    }
+
+    /// The native engine, when this runtime carries one.
+    pub fn native_engine(&self) -> Option<&NativeEngine> {
+        match &self.exec {
+            Exec::Native { engine } => Some(engine),
+            Exec::Pjrt { .. } => None,
+        }
+    }
+
     pub fn has(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
+        match &self.exec {
+            Exec::Pjrt { executables, .. } => executables.contains_key(name),
+            Exec::Native { .. } => false,
+        }
     }
 
     pub fn loaded_names(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
-        v.sort();
-        v
+        match &self.exec {
+            Exec::Pjrt { executables, .. } => {
+                let mut v: Vec<&str> = executables.keys().map(|s| s.as_str()).collect();
+                v.sort();
+                v
+            }
+            Exec::Native { .. } => Vec::new(),
+        }
     }
 
-    /// Execute an artifact by name. Inputs are checked against the
-    /// manifest signature; the output tuple is decomposed into tensors.
+    /// Execute an AOT artifact by name (PJRT backend only — the native
+    /// backend is driven through `MapperModel`, not HLO executables).
+    /// Inputs are checked against the manifest signature; the output
+    /// tuple is decomposed into tensors.
     pub fn call(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let executables = match &self.exec {
+            Exec::Pjrt { executables, .. } => executables,
+            Exec::Native { .. } => {
+                bail!("`{name}`: the native backend does not execute AOT artifacts")
+            }
+        };
         let art = self
             .manifest
             .artifacts
@@ -125,8 +242,7 @@ impl Runtime {
                 );
             }
         }
-        let exe = self
-            .executables
+        let exe = executables
             .get(name)
             .with_context(|| format!("artifact `{name}` not loaded (LoadSet)"))?;
 
@@ -161,8 +277,9 @@ impl Runtime {
 mod tests {
     use super::*;
 
-    // Runtime tests that need built artifacts live in
-    // rust/tests/runtime_integration.rs; here we cover path errors.
+    // PJRT tests that need built artifacts live in
+    // rust/tests/runtime_integration.rs; here we cover path errors and the
+    // artifact-free native load.
 
     #[test]
     fn missing_dir_is_a_clear_error() {
@@ -171,5 +288,38 @@ mod tests {
             .expect("must fail");
         let msg = format!("{err:#}");
         assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn native_load_works_without_artifacts() {
+        let rt = Runtime::load_native("/nonexistent/artifacts", None).unwrap();
+        assert_eq!(rt.backend(), BackendKind::Native);
+        let eng = rt.native_engine().unwrap();
+        assert_eq!(eng.cfg, NativeConfig::paper());
+        // The synthesized manifest satisfies the drivers' contract.
+        assert_eq!(
+            rt.manifest.constant("TRAIN_BATCH").unwrap() as usize,
+            NativeConfig::paper().train_batch
+        );
+        assert_eq!(rt.manifest.params_of("df").unwrap(), eng.n_params());
+        rt.manifest.validate_against_build().unwrap();
+        // And AOT calls are a clean error, not a panic.
+        assert!(rt.call("df_init", &[]).is_err());
+        assert!(!rt.has("df_infer_b8"));
+    }
+
+    #[test]
+    fn native_load_honors_explicit_config() {
+        let cfg = NativeConfig::tiny();
+        let rt = Runtime::load_native("/nonexistent/artifacts", Some(cfg)).unwrap();
+        assert_eq!(rt.native_engine().unwrap().cfg, cfg);
+        assert_eq!(rt.manifest.params_of("df").unwrap(), cfg.n_params());
+    }
+
+    #[test]
+    fn native_load_rejects_invalid_config() {
+        let mut cfg = NativeConfig::tiny();
+        cfg.n_heads = 5; // 32 % 5 != 0
+        assert!(Runtime::load_native("/nonexistent", Some(cfg)).is_err());
     }
 }

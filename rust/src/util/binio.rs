@@ -71,7 +71,18 @@ pub struct BinReader<R: Read> {
 }
 
 impl<R: Read> BinReader<R> {
-    pub fn new(mut r: R, magic: &[u8; 4], version: u32) -> Result<Self> {
+    pub fn new(r: R, magic: &[u8; 4], version: u32) -> Result<Self> {
+        let (reader, _) = BinReader::new_versioned(r, magic, &[version])?;
+        Ok(reader)
+    }
+
+    /// Open a file that may be any of `versions` (ascending); returns the
+    /// version actually found so the caller can branch on the layout.
+    pub fn new_versioned(
+        mut r: R,
+        magic: &[u8; 4],
+        versions: &[u32],
+    ) -> Result<(Self, u32)> {
         let mut m = [0u8; 4];
         r.read_exact(&mut m).context("reading magic")?;
         if &m != magic {
@@ -84,10 +95,10 @@ impl<R: Read> BinReader<R> {
         let mut vb = [0u8; 4];
         r.read_exact(&mut vb)?;
         let v = u32::from_le_bytes(vb);
-        if v != version {
-            bail!("file version {v}, this build reads {version}");
+        if !versions.contains(&v) {
+            bail!("file version {v}, this build reads {versions:?}");
         }
-        Ok(BinReader { r })
+        Ok((BinReader { r }, v))
     }
 
     pub fn u32(&mut self) -> Result<u32> {

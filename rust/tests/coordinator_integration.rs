@@ -3,8 +3,9 @@
 
 use std::time::Duration;
 
-use dnnfuser::coordinator::service::{MapperClient, MapperService, ServiceConfig};
+use dnnfuser::coordinator::service::{BackendChoice, MapperClient, MapperService, ServiceConfig};
 use dnnfuser::coordinator::{MapRequest, Source};
+use dnnfuser::model::native::NativeConfig;
 use dnnfuser::model::ModelKind;
 use dnnfuser::workload::WorkloadSpec;
 
@@ -14,6 +15,7 @@ fn service() -> Option<MapperService> {
         return None;
     }
     let mut cfg = ServiceConfig::new("artifacts");
+    cfg.backend = BackendChoice::Pjrt;
     cfg.model = ModelKind::S2s; // faster decode; the protocol is identical
     cfg.batch_window = Duration::from_millis(20);
     Some(MapperService::spawn(cfg).expect("service spawn"))
@@ -108,7 +110,9 @@ fn mixed_workload_batch_resolves_each_correctly() {
 
 #[test]
 fn startup_failure_is_synchronous() {
-    let cfg = ServiceConfig::new("/nonexistent/artifacts");
+    // Strict PJRT with no artifacts must fail at spawn, synchronously.
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Pjrt;
     let err = match MapperService::spawn(cfg) {
         Err(e) => e,
         Ok(_) => panic!("must fail"),
@@ -116,14 +120,110 @@ fn startup_failure_is_synchronous() {
     assert!(format!("{err:#}").contains("startup failed"), "{err:#}");
 }
 
-// --- Search fallback: serving without artifacts/PJRT -------------------
+// --- Native backend: the first-class serving path ----------------------
+//
+// No artifacts needed: the in-process transformer serves (fresh-init
+// weights — the wiring under test is the service, not model quality).
+
+fn native_service() -> MapperService {
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Native;
+    cfg.native_config = Some(NativeConfig::tiny());
+    cfg.batch_window = Duration::from_millis(10);
+    MapperService::spawn(cfg).expect("native spawn must succeed")
+}
+
+#[test]
+fn native_service_serves_and_caches_without_artifacts() {
+    let svc = native_service();
+    let client = svc.client.clone();
+
+    let r1 = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    assert_eq!(r1.source, Source::Native);
+    assert_eq!(r1.strategy.values.len(), 15);
+    assert!(r1.valid, "projected decode must satisfy the condition");
+    assert!(r1.speedup > 0.0);
+
+    let r2 = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    assert_eq!(r2.source, Source::Cache);
+    assert_eq!(r2.strategy, r1.strategy);
+
+    let m = client.metrics();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.cache_hits, 1);
+    // Per-backend accounting: one native decode, one cache answer, and
+    // crucially zero search-fallback invocations.
+    assert_eq!(m.latency_for(Source::Native).count(), 1);
+    assert_eq!(m.latency_for(Source::Cache).count(), 1);
+    assert_eq!(m.latency_for(Source::Search).count(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn native_service_is_deterministic_across_restarts() {
+    let a = {
+        let svc = native_service();
+        let r = svc.client.map(MapRequest::new("resnet18", 64, 24.0)).unwrap();
+        svc.shutdown();
+        r
+    };
+    let b = {
+        let svc = native_service();
+        let r = svc.client.map(MapRequest::new("resnet18", 64, 24.0)).unwrap();
+        svc.shutdown();
+        r
+    };
+    assert_eq!(a.strategy, b.strategy);
+    assert_eq!(a.speedup, b.speedup);
+}
+
+#[test]
+fn native_service_batches_concurrent_mixed_requests() {
+    let svc = native_service();
+    let client = svc.client.clone();
+    client.map(MapRequest::new("resnet18", 64, 64.0)).unwrap(); // warm
+    let mut handles = Vec::new();
+    for (w, n) in [("vgg16", 15usize), ("resnet18", 19), ("mobilenet_v2", 54)] {
+        let c: MapperClient = client.clone();
+        let w = w.to_string();
+        handles.push(std::thread::spawn(move || {
+            let r = c.map(MapRequest::new(&w, 64, 32.0)).unwrap();
+            (r, n)
+        }));
+    }
+    for h in handles {
+        let (r, n) = h.join().unwrap();
+        assert_eq!(r.strategy.values.len(), n);
+        assert_eq!(r.source, Source::Native);
+    }
+    let m = client.metrics();
+    assert_eq!(m.latency_for(Source::Search).count(), 0);
+    assert!(m.model_batches >= 1);
+    svc.shutdown();
+}
+
+#[test]
+fn auto_backend_prefers_a_model_over_search() {
+    // Auto with no artifacts and search_fallback enabled must still pick
+    // the native model — Search is demoted to explicit fallback.
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Auto;
+    cfg.search_fallback = true;
+    cfg.native_config = Some(NativeConfig::tiny());
+    let svc = MapperService::spawn(cfg).expect("auto spawn");
+    let r = svc.client.map(MapRequest::new("vgg16", 64, 24.0)).unwrap();
+    assert_eq!(r.source, Source::Native);
+    svc.shutdown();
+}
+
+// --- Search backend: the explicit fallback -----------------------------
 //
 // These tests need no build artifacts: the backend is the (engine-
-// accelerated, pool-parallel) G-Sampler search.
+// accelerated, pool-parallel) G-Sampler search, selected explicitly.
 
 fn fallback_service() -> MapperService {
     let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
-    cfg.search_fallback = true;
+    cfg.backend = BackendChoice::Search;
     cfg.fallback_budget = 400; // keep test wall-time small
     cfg.batch_window = Duration::from_millis(10);
     MapperService::spawn(cfg).expect("fallback spawn must succeed")
@@ -292,7 +392,7 @@ fn different_hw_configs_do_not_share_cache_entries() {
 #[test]
 fn cache_capacity_config_is_respected() {
     let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
-    cfg.search_fallback = true;
+    cfg.backend = BackendChoice::Search;
     cfg.fallback_budget = 200;
     cfg.cache_capacity = 1;
     let svc = MapperService::spawn(cfg).expect("fallback spawn");

@@ -1,0 +1,200 @@
+//! Native-backend parity and round-trip guarantees (no artifacts needed):
+//!
+//! - **Golden trajectories** — greedy decode is deterministic across runs
+//!   and bit-for-bit identical between the KV-cache serving path and the
+//!   AOT-graph reference path (full padded recompute per step — the exact
+//!   computation the `df_infer_b{B}` PJRT executables perform) for every
+//!   zoo workload and an inline custom net.
+//! - **Train → save → load → infer** — a tiny-config model trained
+//!   in-process round-trips through a checkpoint and reproduces its
+//!   trajectories exactly.
+//! - **Checkpoint compatibility** — v1 (PJRT-era) checkpoints still load.
+//!
+//! `rust/tests/runtime_integration.rs` covers the same drivers against
+//! real compiled artifacts when those exist; this file is the tier-1,
+//! always-on half of the parity story.
+
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::FusionEnv;
+use dnnfuser::model::native::{decoder, NativeConfig, Sampling};
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::{BackendKind, Runtime};
+use dnnfuser::trajectory::ReplayBuffer;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::{custom, zoo, Workload};
+
+const CUSTOM_NET: &str = r#"{
+    "name": "parity_custom",
+    "layers": [
+        {"name": "stem", "k": 24, "c": 3, "y": 32, "x": 32, "r": 3, "s": 3, "stride": 2},
+        {"k": 24, "c": 24, "y": 32, "x": 32, "r": 3, "s": 3, "depthwise": true},
+        {"k": 48, "c": 24, "y": 16, "x": 16, "r": 3, "s": 3, "stride": 2},
+        {"k": 96, "c": 48, "y": 8, "x": 8, "r": 3, "s": 3, "stride": 2}
+    ]
+}"#;
+
+fn parity_workloads() -> Vec<Workload> {
+    let mut ws = zoo::all();
+    ws.push(custom::from_json(CUSTOM_NET).expect("inline net"));
+    ws
+}
+
+fn tiny_rt() -> Runtime {
+    Runtime::load_native("/nonexistent/artifacts", Some(NativeConfig::tiny())).unwrap()
+}
+
+/// A model with non-trivial weights: a few imitation steps on quick
+/// teacher-ish rollouts, so parity is checked on a *trained* network, not
+/// just the init distribution.
+fn trained_model(rt: &Runtime) -> MapperModel {
+    let mut model = MapperModel::init(rt, ModelKind::Df, 7).unwrap();
+    let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 24.0);
+    let mut rng = Rng::seed_from_u64(17);
+    let mut buf = ReplayBuffer::new(32);
+    for _ in 0..4 {
+        buf.push(env.rollout(|_, _| rng.range_f64(-1.0, 1.0) as f32));
+    }
+    model.train(rt, &buf, 4, &mut rng, |_, _| {}).unwrap();
+    model
+}
+
+#[test]
+fn golden_greedy_trajectories_kv_equals_graph_on_all_workloads() {
+    let rt = tiny_rt();
+    assert_eq!(rt.backend(), BackendKind::Native);
+    let model = trained_model(&rt);
+    let eng = rt.native_engine().unwrap();
+    for w in parity_workloads() {
+        let env = FusionEnv::new(w.clone(), 64, HwConfig::paper(), 24.0);
+
+        // Deterministic across runs…
+        let kv1 = model.infer(&rt, &env).unwrap();
+        let kv2 = model.infer(&rt, &env).unwrap();
+        assert_eq!(kv1.strategy, kv2.strategy, "{}: nondeterministic decode", w.name);
+        assert_eq!(kv1.actions, kv2.actions, "{}", w.name);
+
+        // …and bit-for-bit identical to the AOT-graph reference path.
+        let graph = decoder::graph_infer(eng, &model.theta, &env);
+        assert_eq!(kv1.strategy, graph.strategy, "{}: KV != graph strategy", w.name);
+        assert_eq!(
+            kv1.actions.iter().map(|a| a.to_bits()).collect::<Vec<_>>(),
+            graph.actions.iter().map(|a| a.to_bits()).collect::<Vec<_>>(),
+            "{}: KV != graph action bits",
+            w.name
+        );
+        for (t, (a, b)) in kv1.states.iter().zip(&graph.states).enumerate() {
+            for j in 0..a.len() {
+                assert_eq!(
+                    a[j].to_bits(),
+                    b[j].to_bits(),
+                    "{}: state bits differ at slot {t} dim {j}",
+                    w.name
+                );
+            }
+        }
+        assert_eq!(kv1.speedup, graph.speedup, "{}", w.name);
+        assert_eq!(kv1.valid, graph.valid, "{}", w.name);
+        assert_eq!(kv1.steps(), env.steps(), "{}", w.name);
+    }
+}
+
+#[test]
+fn train_save_load_infer_roundtrip_reproduces_trajectories() {
+    let rt = tiny_rt();
+    let model = trained_model(&rt);
+    let path = std::env::temp_dir().join("dnnfuser_parity_roundtrip.ckpt");
+    model.save(&path).unwrap();
+
+    // A fresh runtime built only from the checkpoint's recorded config —
+    // the serving coordinator's load path.
+    let cfg = dnnfuser::model::peek_checkpoint_config(&path).unwrap().unwrap();
+    assert_eq!(cfg, NativeConfig::tiny());
+    let rt2 = Runtime::load_native("/nonexistent/artifacts", Some(cfg)).unwrap();
+    let loaded = MapperModel::load(&rt2, &path).unwrap();
+    assert_eq!(loaded.theta, model.theta);
+    assert_eq!(loaded.step, model.step);
+
+    for w in zoo::all() {
+        let env = FusionEnv::new(w.clone(), 64, HwConfig::paper(), 32.0);
+        let before = model.infer(&rt, &env).unwrap();
+        let after = loaded.infer(&rt2, &env).unwrap();
+        assert_eq!(before.strategy, after.strategy, "{}", w.name);
+        assert_eq!(
+            before.actions.iter().map(|a| a.to_bits()).collect::<Vec<_>>(),
+            after.actions.iter().map(|a| a.to_bits()).collect::<Vec<_>>(),
+            "{}",
+            w.name
+        );
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn batched_decode_equals_sequential_on_mixed_workloads() {
+    let rt = tiny_rt();
+    let model = trained_model(&rt);
+    let envs: Vec<FusionEnv> = parity_workloads()
+        .into_iter()
+        .map(|w| FusionEnv::new(w, 64, HwConfig::paper(), 28.0))
+        .collect();
+    let refs: Vec<&FusionEnv> = envs.iter().collect();
+    let batched = model.infer_batch(&rt, &refs).unwrap();
+    assert_eq!(batched.len(), envs.len());
+    for (traj, env) in batched.iter().zip(&envs) {
+        let solo = model.infer(&rt, env).unwrap();
+        assert_eq!(traj.strategy, solo.strategy, "{}", env.workload.name);
+        assert_eq!(traj.actions, solo.actions, "{}", env.workload.name);
+    }
+}
+
+#[test]
+fn topk_sampling_stays_on_distribution_and_is_reproducible() {
+    let rt = tiny_rt();
+    let model = trained_model(&rt);
+    let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+    let s = Sampling::TopK { k: 4, temperature: 0.3, seed: 123 };
+    let a = model.infer_batch_with(&rt, &[&env], s).unwrap().pop().unwrap();
+    let b = model.infer_batch_with(&rt, &[&env], s).unwrap().pop().unwrap();
+    assert_eq!(a.strategy, b.strategy, "same seed must reproduce");
+    assert!(a.valid, "projection must keep sampled decodes feasible");
+    // The sampling stream is derived from request content, never batch
+    // position: the same request decodes identically inside any batch.
+    let env2 = FusionEnv::new(zoo::resnet18(), 64, HwConfig::paper(), 32.0);
+    let batched = model.infer_batch_with(&rt, &[&env2, &env], s).unwrap();
+    assert_eq!(batched[1].strategy, a.strategy, "batch position changed a sampled decode");
+    let other = model
+        .infer_batch_with(&rt, &[&env], Sampling::TopK { k: 4, temperature: 0.3, seed: 124 })
+        .unwrap()
+        .pop()
+        .unwrap();
+    // Different seeds may legitimately coincide on short nets, but the
+    // machinery must at least produce a decodable strategy.
+    assert_eq!(other.steps(), env.steps());
+}
+
+#[test]
+fn v1_checkpoints_still_load_at_paper_geometry() {
+    use dnnfuser::util::binio::BinWriter;
+    use std::io::BufWriter;
+
+    let paper = NativeConfig::paper();
+    let n = paper.n_params();
+    let path = std::env::temp_dir().join("dnnfuser_parity_v1.ckpt");
+    {
+        let f = std::fs::File::create(&path).unwrap();
+        let mut w = BinWriter::new(BufWriter::new(f), b"DNFC", 1).unwrap();
+        w.str("df").unwrap();
+        w.f64(5.0).unwrap();
+        w.f32_slice(&vec![0.25f32; n]).unwrap();
+        w.f32_slice(&vec![0.0f32; n]).unwrap();
+        w.f32_slice(&vec![0.0f32; n]).unwrap();
+        w.finish().unwrap();
+    }
+    assert_eq!(dnnfuser::model::peek_checkpoint_config(&path).unwrap(), None);
+    let rt = Runtime::load_native("/nonexistent/artifacts", None).unwrap();
+    let model = MapperModel::load(&rt, &path).unwrap();
+    assert_eq!(model.n_params(), n);
+    assert_eq!(model.step, 5.0);
+    assert_eq!(model.native_cfg, Some(paper));
+    std::fs::remove_file(path).ok();
+}

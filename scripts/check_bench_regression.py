@@ -1,0 +1,72 @@
+#!/usr/bin/env python3
+"""CI perf gate: compare a measured BENCH_*.json against the committed
+baseline and fail on >tolerance regressions.
+
+Usage:
+    python3 scripts/check_bench_regression.py BENCH_native_infer.json \
+        BENCH_baseline.json [--tolerance 0.20]
+
+Both files carry a "gates" object of {metric: number}. Gated metrics are
+machine-portable by construction (tokens-per-GFLOP normalized against an
+in-process matmul calibration, and the KV-vs-graph speedup ratio), so one
+committed baseline is meaningful across runner generations.
+
+Bootstrap: a baseline value of null means "not yet measured on CI" — the
+check prints the measured value (to be committed into BENCH_baseline.json)
+and passes. Only non-null baselines gate.
+"""
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("measured")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional regression (default 0.20)")
+    args = ap.parse_args()
+
+    with open(args.measured) as f:
+        measured = json.load(f).get("gates", {})
+    with open(args.baseline) as f:
+        baseline_doc = json.load(f)
+    baseline = baseline_doc.get("gates", {})
+
+    failures = []
+    for key, base in sorted(baseline.items()):
+        got = measured.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from measured gates")
+            continue
+        if base is None:
+            print(f"BOOTSTRAP {key}: measured {got:.3f} — commit this into "
+                  f"{args.baseline} to arm the gate")
+            continue
+        floor = base * (1.0 - args.tolerance)
+        status = "OK"
+        if got < floor:
+            status = "FAIL"
+            failures.append(
+                f"{key}: measured {got:.3f} < floor {floor:.3f} "
+                f"(baseline {base:.3f}, tolerance {args.tolerance:.0%})")
+        elif got > base * (1.0 + args.tolerance):
+            status = "OK (improved — consider ratcheting the baseline)"
+        print(f"{key}: measured {got:.3f} vs baseline {base:.3f} → {status}")
+
+    extra = sorted(set(measured) - set(baseline))
+    if extra:
+        print(f"note: measured gates not in baseline (unchecked): {', '.join(extra)}")
+
+    if failures:
+        print("\nPERF GATE FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
