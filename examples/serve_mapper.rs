@@ -38,6 +38,9 @@ fn main() -> anyhow::Result<()> {
     cfg.model = ModelKind::Df;
     cfg.checkpoint = ckpt.map(Into::into);
     cfg.batch_window = Duration::from_millis(5);
+    // Two engine workers: batches decode concurrently; the admission
+    // queue, batch former, cache and registry are shared (DESIGN.md §10).
+    cfg.workers = 2;
     // Backend is Auto: PJRT when real artifacts load, else the native
     // in-process transformer. Search stays available as a last resort.
     cfg.search_fallback = true;
@@ -127,6 +130,14 @@ fn main() -> anyhow::Result<()> {
     // And it is now addressable by name, like a zoo workload.
     let r4 = client.map(MapRequest::new("tenant_custom_a", 64, 32.0))?;
     println!("  by-name re-request  : source {:?}", r4.source);
+
+    // Deadline-aware admission: this request must reach a worker within
+    // its budget. Generous here, so it is served; under overload it would
+    // be shed with a distinct `deadline exceeded` error instead of
+    // waiting in the queue past the point of usefulness.
+    let r5 = client
+        .map(MapRequest::new("resnet18", 64, 24.0).with_timeout(Duration::from_millis(250)))?;
+    println!("  deadline-bounded    : source {:?}, {:?}", r5.source, r5.latency);
 
     let m = client.metrics();
     println!("\nrouter metrics after {:?}:", t0.elapsed());

@@ -1,0 +1,137 @@
+//! Serving-core load bench → `BENCH_serve_load.json`.
+//!
+//! Measures the deadline-aware concurrent serving core (DESIGN.md §10)
+//! under traffic, artifact-free (tiny native model, fresh-init weights —
+//! the system under test is the serving core, not model quality):
+//!
+//! - **worker scaling** — closed-loop saturation throughput at
+//!   `--workers 1` vs `--workers 4` with `max_batch = 1` (per-request
+//!   dispatch), on a cache-defeating dense condition grid. This isolates
+//!   the engine-worker axis: every request costs one in-worker decode, so
+//!   the ratio is the serving core's concurrency win and is
+//!   machine-portable (both arms run on the same host);
+//! - **open loop** — requests offered at a fixed rate (60% of the
+//!   measured 4-worker capacity) with a per-request deadline: p50/p95/p99
+//!   from *scheduled* send time, shed + backpressure rates, and batch
+//!   occupancy under realistic arrivals.
+//!
+//! Quick mode for CI: set `DNNFUSER_BENCH_QUICK=1`. The regression gate is
+//! `scripts/check_bench_regression.py` against `BENCH_baseline.json`
+//! (`worker_scaling_4v1` armed; the open-loop latency gates bootstrap).
+
+use std::time::Duration;
+
+use dnnfuser::coordinator::loadgen::{self, LoadSpec};
+use dnnfuser::coordinator::service::{BackendChoice, MapperService, ServiceConfig};
+use dnnfuser::model::native::NativeConfig;
+use dnnfuser::util::json::Json;
+use dnnfuser::util::pool::ThreadPool;
+
+fn quick_mode() -> bool {
+    std::env::var("DNNFUSER_BENCH_QUICK")
+        .ok()
+        .is_some_and(|v| v != "0" && !v.is_empty())
+}
+
+fn service(workers: usize, max_batch: Option<usize>, cache_capacity: usize) -> MapperService {
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Native;
+    cfg.native_config = Some(NativeConfig::tiny());
+    cfg.workers = workers;
+    cfg.max_batch = max_batch;
+    cfg.cache_capacity = cache_capacity;
+    cfg.batch_window = Duration::from_millis(1);
+    MapperService::spawn(cfg).expect("native service spawn")
+}
+
+/// Dense 0.25 MB condition grid: 193 distinct conditions × 5 workloads,
+/// far beyond the tiny cache we give the service — every measured request
+/// is fresh decode work, not a cache hit.
+fn dense_spec(seed: u64) -> LoadSpec {
+    let mut spec = LoadSpec::zoo_mix(seed);
+    spec.mems = (0..=192).map(|i| 16.0 + 0.25 * i as f64).collect();
+    spec
+}
+
+fn main() {
+    println!("=== serving-core load bench ===\n");
+    let quick = quick_mode();
+    let (scale_requests, open_secs) = if quick { (160, 2.0) } else { (800, 5.0) };
+    let clients = 8;
+
+    // --- Worker scaling: closed-loop saturation, per-request dispatch ---
+    let mut closed_reports: Vec<(usize, loadgen::LoadReport)> = Vec::new();
+    for workers in [1usize, 4] {
+        let svc = service(workers, Some(1), 16);
+        let client = svc.client.clone();
+        // Warm (backend construction, lazy cost tables) outside the clock.
+        let _ = loadgen::closed_loop(&client, &dense_spec(1), 4, 32);
+        let report = loadgen::closed_loop(&client, &dense_spec(7), clients, scale_requests);
+        println!("    → workers={workers}: {}", report.summary());
+        svc.shutdown();
+        closed_reports.push((workers, report));
+    }
+    let thr1 = closed_reports[0].1.throughput;
+    let thr4 = closed_reports[1].1.throughput;
+    let worker_scaling = if thr1 > 0.0 { thr4 / thr1 } else { 0.0 };
+    println!("    → worker scaling 4v1: {worker_scaling:.2}x\n");
+
+    // --- Open loop at 60% of measured capacity, with deadlines ---------
+    let rps = (0.6 * thr4).clamp(20.0, 2000.0);
+    let svc = service(4, None, 16);
+    let client = svc.client.clone();
+    let _ = loadgen::closed_loop(&client, &dense_spec(2), 4, 32); // warm
+    let mut spec = dense_spec(11);
+    spec.timeout = Some(Duration::from_millis(250));
+    let duration = Duration::from_secs_f64(open_secs);
+    let open = loadgen::open_loop(&client, &spec, rps, duration, 256);
+    println!("    → open loop @ {rps:.0} req/s: {}", open.summary());
+    let m = client.metrics();
+    println!(
+        "    → batches={} mean_occupancy={:.2}\n",
+        m.model_batches,
+        m.mean_batch_occupancy()
+    );
+    svc.shutdown();
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("serve_load")),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::num(ThreadPool::shared().size() as f64)),
+        (
+            "closed_loop",
+            Json::obj(vec![
+                ("workers1", closed_reports[0].1.to_json()),
+                ("workers4", closed_reports[1].1.to_json()),
+            ]),
+        ),
+        (
+            "open_loop",
+            Json::obj(vec![
+                ("offered_rps", Json::num(rps)),
+                ("workers", Json::num(4.0)),
+                ("report", open.to_json()),
+                ("model_batches", Json::num(m.model_batches as f64)),
+                ("mean_batch_occupancy", Json::num(m.mean_batch_occupancy())),
+            ]),
+        ),
+        (
+            "gates",
+            Json::obj(vec![
+                // Throughput ratio of the same workload on the same host:
+                // machine-portable, armed in BENCH_baseline.json. Must stay
+                // strictly above 1 — more workers must serve more.
+                ("worker_scaling_4v1", Json::num(worker_scaling)),
+                // Lower-is-better gates (direction encoded in the
+                // baseline); bootstrap until CI-measured values land.
+                ("open_loop_p99_ms", Json::num(open.p99_ms)),
+                ("open_loop_shed_rate", Json::num(open.shed_rate())),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_load.json");
+    match std::fs::write(path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

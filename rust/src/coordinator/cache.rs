@@ -4,6 +4,11 @@
 //! a small set of values (other kernels starting/stopping); repeat
 //! conditions should not pay an autoregressive decode. Bounded LRU-ish:
 //! on overflow the least-recently-used entry is dropped.
+//!
+//! One instance is shared by every engine worker of the serving core
+//! behind a single mutex (lookups and inserts are short critical
+//! sections next to a decode); its `hits`/`misses` counters are the
+//! single source of truth that metrics snapshots copy at read time.
 
 use std::collections::HashMap;
 

@@ -1,0 +1,446 @@
+//! Closed- and open-loop load generation for the serving core.
+//!
+//! One harness, two disciplines, shared by `serve --load-gen` and
+//! `benches/serve_load.rs` so the CLI smoke test and the CI-gated bench
+//! measure the service the same way:
+//!
+//! - **Closed loop** ([`closed_loop`]) — M client threads, each with one
+//!   outstanding request at a time. Measures *sustained capacity*: the
+//!   service is never offered more than M in-flight requests, so latency
+//!   stays bounded and throughput is the saturation number.
+//! - **Open loop** ([`open_loop`]) — requests fire at a fixed offered
+//!   rate regardless of completions, the way independent tenants actually
+//!   arrive. Latency is measured from each request's *scheduled* send
+//!   time (not the actual send), so generator lag cannot hide queueing
+//!   delay (the coordinated-omission trap). Overload shows up honestly as
+//!   deadline sheds, queue-full backpressure, and growing percentiles.
+//!
+//! Every request is classified into an [`Outcome`]: served, shed
+//! (deadline), queue-full (backpressure), hard error, or dropped by the
+//! generator's own in-flight cap before reaching the service.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::service::{MapperClient, ERR_DEADLINE, ERR_QUEUE_FULL};
+use super::MapRequest;
+
+/// The request mix one load run draws from.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Workload names to draw from (must resolve in the service registry).
+    pub workloads: Vec<String>,
+    /// Input batch size on every request.
+    pub batch: usize,
+    /// Memory conditions (MB) to draw from. A dense grid defeats the
+    /// mapping cache (every request is fresh work); the paper's 8-value
+    /// grid exercises it.
+    pub mems: Vec<f64>,
+    /// Per-request deadline; `None` never sheds.
+    pub timeout: Option<Duration>,
+    /// Stream seed: draws are deterministic given (seed, thread, index).
+    pub seed: u64,
+}
+
+impl LoadSpec {
+    /// The `serve` CLI's canonical mix: the five zoo networks over the
+    /// paper's 8-condition grid.
+    pub fn zoo_mix(seed: u64) -> LoadSpec {
+        LoadSpec {
+            workloads: ["vgg16", "resnet18", "resnet50", "mobilenet_v2", "mnasnet"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            batch: 64,
+            mems: vec![16.0, 20.0, 24.0, 28.0, 32.0, 40.0, 48.0, 64.0],
+            timeout: None,
+            seed,
+        }
+    }
+
+    fn draw(&self, rng: &mut Rng) -> MapRequest {
+        let w = &self.workloads[rng.index(self.workloads.len())];
+        let mem = self.mems[rng.index(self.mems.len())];
+        let mut req = MapRequest::new(w, self.batch, mem);
+        req.timeout = self.timeout;
+        req
+    }
+}
+
+/// How one offered request ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served (any source: model, cache, search).
+    Served,
+    /// Shed by the service: deadline expired in the admission queue.
+    Shed,
+    /// Refused at admission: bounded queue full (backpressure).
+    QueueFull,
+    /// Hard error (validation, resolution, inference failure, …).
+    Error,
+    /// Never offered to the service: the generator's in-flight cap was
+    /// reached (open loop only).
+    Dropped,
+}
+
+/// Classify one reply; hard errors keep their message (sheds and
+/// backpressure are expected load outcomes, not diagnostics).
+fn classify(result: &anyhow::Result<super::MapResponse>) -> (Outcome, Option<String>) {
+    match result {
+        Ok(_) => (Outcome::Served, None),
+        Err(e) => {
+            let msg = e.to_string();
+            if msg.contains(ERR_DEADLINE) {
+                (Outcome::Shed, None)
+            } else if msg.contains(ERR_QUEUE_FULL) {
+                (Outcome::QueueFull, None)
+            } else {
+                (Outcome::Error, Some(msg))
+            }
+        }
+    }
+}
+
+/// Aggregated result of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Generator discipline ("closed" / "open").
+    pub mode: &'static str,
+    pub offered: usize,
+    pub served: usize,
+    pub shed: usize,
+    pub queue_full: usize,
+    pub errors: usize,
+    pub dropped: usize,
+    pub elapsed_s: f64,
+    /// Served requests per second of wall time.
+    pub throughput: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// Up to five distinct hard-error messages, so a nonzero `errors`
+    /// count is diagnosable from the report (and from CI logs) without
+    /// re-running the load.
+    pub error_samples: Vec<String>,
+}
+
+impl LoadReport {
+    fn from_samples(
+        mode: &'static str,
+        outcomes: &[Outcome],
+        mut served_ms: Vec<f64>,
+        errors: Vec<String>,
+        elapsed_s: f64,
+    ) -> LoadReport {
+        let count = |o: Outcome| outcomes.iter().filter(|&&x| x == o).count();
+        let mut error_samples: Vec<String> = Vec::new();
+        for e in errors {
+            if error_samples.len() >= 5 {
+                break;
+            }
+            if !error_samples.contains(&e) {
+                error_samples.push(e);
+            }
+        }
+        served_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+        let pct = |p: f64| {
+            if served_ms.is_empty() {
+                0.0
+            } else {
+                served_ms[((served_ms.len() - 1) as f64 * p).round() as usize]
+            }
+        };
+        let served = served_ms.len();
+        LoadReport {
+            mode,
+            offered: outcomes.len(),
+            served,
+            shed: count(Outcome::Shed),
+            queue_full: count(Outcome::QueueFull),
+            errors: count(Outcome::Error),
+            dropped: count(Outcome::Dropped),
+            elapsed_s,
+            throughput: if elapsed_s > 0.0 {
+                served as f64 / elapsed_s
+            } else {
+                0.0
+            },
+            mean_ms: if served == 0 {
+                0.0
+            } else {
+                served_ms.iter().sum::<f64>() / served as f64
+            },
+            p50_ms: pct(0.50),
+            p95_ms: pct(0.95),
+            p99_ms: pct(0.99),
+            max_ms: served_ms.last().copied().unwrap_or(0.0),
+            error_samples,
+        }
+    }
+
+    /// Fraction of offered requests that were not served because of load
+    /// (sheds + backpressure + generator drops; hard errors excluded —
+    /// those are bugs, not load).
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        (self.shed + self.queue_full + self.dropped) as f64 / self.offered as f64
+    }
+
+    /// One printable line (plus the first error message when any request
+    /// failed hard — counts alone are not diagnosable).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{}-loop: offered={} served={} shed={} queue_full={} errors={} dropped={} \
+             | {:.1} served/s | latency p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms \
+             | shed_rate={:.1}%",
+            self.mode,
+            self.offered,
+            self.served,
+            self.shed,
+            self.queue_full,
+            self.errors,
+            self.dropped,
+            self.throughput,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.max_ms,
+            100.0 * self.shed_rate(),
+        );
+        if let Some(e) = self.error_samples.first() {
+            s.push_str(&format!(" | first error: {e}"));
+        }
+        s
+    }
+
+    /// Machine-readable form (for `--metrics-json` and the bench JSON).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(self.mode)),
+            ("offered", Json::num(self.offered as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("queue_full", Json::num(self.queue_full as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("throughput_per_sec", Json::num(self.throughput)),
+            ("shed_rate", Json::num(self.shed_rate())),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+            (
+                "error_samples",
+                Json::arr(self.error_samples.iter().map(|e| Json::str(e.clone()))),
+            ),
+        ])
+    }
+}
+
+/// Closed-loop run: `clients` threads issue `total` requests between them
+/// (split as evenly as possible), each thread keeping exactly one request
+/// in flight. Latency is the blocking `map` call's wall time.
+pub fn closed_loop(
+    client: &MapperClient,
+    spec: &LoadSpec,
+    clients: usize,
+    total: usize,
+) -> LoadReport {
+    let clients = clients.max(1);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let client = client.clone();
+        let spec = spec.clone();
+        let quota = total / clients + usize::from(c < total % clients);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed_from_u64(spec.seed.wrapping_add(c as u64));
+            let mut out: Vec<(Outcome, f64, Option<String>)> = Vec::with_capacity(quota);
+            for _ in 0..quota {
+                let req = spec.draw(&mut rng);
+                let sent = Instant::now();
+                let result = client.map(req);
+                let (o, err) = classify(&result);
+                out.push((o, sent.elapsed().as_secs_f64() * 1e3, err));
+            }
+            out
+        }));
+    }
+    let mut outcomes = Vec::with_capacity(total);
+    let mut served_ms = Vec::with_capacity(total);
+    let mut errors = Vec::new();
+    for h in handles {
+        for (o, ms, err) in h.join().expect("load client panicked") {
+            if o == Outcome::Served {
+                served_ms.push(ms);
+            }
+            errors.extend(err);
+            outcomes.push(o);
+        }
+    }
+    LoadReport::from_samples("closed", &outcomes, served_ms, errors, t0.elapsed().as_secs_f64())
+}
+
+/// Open-loop run: offer `rps` requests per second for `duration`,
+/// regardless of completions. Requests are executed by a pool of
+/// reusable sender threads, grown on demand up to `max_inflight` (so the
+/// generator never pays a thread spawn per request in steady state);
+/// when every sender is busy the generator drops the request and says
+/// so, rather than queueing it — an open loop must not silently smear
+/// its offered rate. Latency is measured from the request's *scheduled*
+/// send instant, so generator lag cannot hide queueing delay.
+pub fn open_loop(
+    client: &MapperClient,
+    spec: &LoadSpec,
+    rps: f64,
+    duration: Duration,
+    max_inflight: usize,
+) -> LoadReport {
+    let rps = rps.max(0.1);
+    let max_inflight = max_inflight.max(1);
+    let total = ((rps * duration.as_secs_f64()).round() as usize).max(1);
+    let gap = Duration::from_secs_f64(1.0 / rps);
+    // Tickets issued minus completions: the single pacer thread
+    // increments *before* sending a ticket, senders decrement after
+    // replying, so the count is the true number outstanding.
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let (res_tx, res_rx) = channel::<(Outcome, f64, Option<String>)>();
+    let (ticket_tx, ticket_rx) = channel::<(Instant, MapRequest)>();
+    let ticket_rx = Arc::new(Mutex::new(ticket_rx));
+    let mut senders: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    let t0 = Instant::now();
+    for i in 0..total {
+        let scheduled = t0 + gap.mul_f64(i as f64);
+        let now = Instant::now();
+        if scheduled > now {
+            std::thread::sleep(scheduled - now);
+        }
+        let req = spec.draw(&mut rng);
+        let busy = inflight.load(Ordering::Acquire);
+        if busy >= max_inflight {
+            let _ = res_tx.send((Outcome::Dropped, 0.0, None));
+            continue;
+        }
+        if busy == senders.len() {
+            // No idle sender: grow the pool (bounded by max_inflight).
+            let client = client.clone();
+            let inflight = Arc::clone(&inflight);
+            let res_tx = res_tx.clone();
+            let ticket_rx = Arc::clone(&ticket_rx);
+            senders.push(std::thread::spawn(move || {
+                loop {
+                    let ticket = {
+                        let rx = ticket_rx.lock().expect("ticket queue poisoned");
+                        rx.recv()
+                    };
+                    let Ok((scheduled, req)) = ticket else { return };
+                    let result = client.map(req);
+                    let ms = scheduled.elapsed().as_secs_f64() * 1e3;
+                    let (o, err) = classify(&result);
+                    let _ = res_tx.send((o, ms, err));
+                    inflight.fetch_sub(1, Ordering::AcqRel);
+                }
+            }));
+        }
+        inflight.fetch_add(1, Ordering::AcqRel);
+        let _ = ticket_tx.send((scheduled, req));
+    }
+    drop(ticket_tx);
+    drop(res_tx);
+    let mut outcomes = Vec::with_capacity(total);
+    let mut served_ms = Vec::new();
+    let mut errors = Vec::new();
+    while let Ok((o, ms, err)) = res_rx.recv() {
+        if o == Outcome::Served {
+            served_ms.push(ms);
+        }
+        errors.extend(err);
+        outcomes.push(o);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    for h in senders {
+        let _ = h.join();
+    }
+    LoadReport::from_samples("open", &outcomes, served_ms, errors, elapsed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_math_is_consistent() {
+        let outcomes = [
+            Outcome::Served,
+            Outcome::Served,
+            Outcome::Shed,
+            Outcome::QueueFull,
+            Outcome::Dropped,
+            Outcome::Error,
+        ];
+        let errs = vec!["boom".to_string(), "boom".to_string()];
+        let r = LoadReport::from_samples("open", &outcomes, vec![4.0, 2.0], errs, 2.0);
+        assert_eq!(r.offered, 6);
+        assert_eq!(r.served, 2);
+        assert_eq!(r.shed, 1);
+        assert_eq!(r.queue_full, 1);
+        assert_eq!(r.dropped, 1);
+        assert_eq!(r.errors, 1);
+        assert!((r.throughput - 1.0).abs() < 1e-9);
+        assert!((r.shed_rate() - 0.5).abs() < 1e-9);
+        assert!((r.mean_ms - 3.0).abs() < 1e-9);
+        assert_eq!(r.p99_ms, 4.0);
+        assert_eq!(r.max_ms, 4.0);
+        // Distinct-deduped diagnostics survive into summary and JSON.
+        assert_eq!(r.error_samples, vec!["boom".to_string()]);
+        assert!(r.summary().contains("first error: boom"), "{}", r.summary());
+        let arr = r.to_json();
+        let samples = arr.get("error_samples").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(samples.len(), 1);
+    }
+
+    #[test]
+    fn empty_run_is_all_zero() {
+        let r = LoadReport::from_samples("closed", &[], Vec::new(), Vec::new(), 0.0);
+        assert_eq!(r.offered, 0);
+        assert_eq!(r.shed_rate(), 0.0);
+        assert_eq!(r.p99_ms, 0.0);
+        assert_eq!(r.throughput, 0.0);
+        assert!(r.error_samples.is_empty());
+    }
+
+    #[test]
+    fn spec_draws_are_deterministic() {
+        let spec = LoadSpec::zoo_mix(7);
+        let mut a = Rng::seed_from_u64(spec.seed);
+        let mut b = Rng::seed_from_u64(spec.seed);
+        for _ in 0..32 {
+            assert_eq!(spec.draw(&mut a), spec.draw(&mut b));
+        }
+    }
+
+    #[test]
+    fn summary_and_json_mention_key_fields() {
+        let r = LoadReport::from_samples("open", &[Outcome::Served], vec![1.5], Vec::new(), 1.0);
+        let s = r.summary();
+        for needle in ["served=1", "shed_rate=", "p99="] {
+            assert!(s.contains(needle), "{s}");
+        }
+        let j = r.to_json();
+        assert_eq!(j.get("served").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("mode").and_then(|v| v.as_str()), Some("open"));
+        assert!(j.get("p99_ms").is_some());
+    }
+}

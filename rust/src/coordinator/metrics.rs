@@ -3,7 +3,18 @@
 //! Latencies go into a fixed-resolution log-bucket histogram (no
 //! allocation per sample, percentile queries at report time) — the same
 //! scheme request routers use for pXX dashboards.
+//!
+//! Concurrency model: with N engine workers reporting at once, a single
+//! `Mutex<Metrics>` would serialize every request on one hot lock (and a
+//! lock-free sprinkling of atomics over the histograms would tear the
+//! count/sum/bucket triples). Instead the service uses a [`MetricsHub`]:
+//! one shard per reporting thread (admission front-end, dispatcher, each
+//! worker), each behind its own uncontended mutex, merged into one
+//! [`Metrics`] snapshot at read time ([`MetricsHub::snapshot`]). Shard
+//! merging is exact — counters add, histogram buckets add bucket-wise —
+//! so no sample is lost or double-counted regardless of worker count.
 
+use std::sync::Mutex;
 use std::time::Duration;
 
 use super::Source;
@@ -48,6 +59,20 @@ impl LatencyHistogram {
         self.max_ns = self.max_ns.max(ns);
     }
 
+    /// Fold another histogram into this one (exact: same fixed bucket
+    /// geometry, buckets add). Used by [`MetricsHub::snapshot`] to merge
+    /// per-worker shards.
+    pub fn merge_from(&mut self, other: &LatencyHistogram) {
+        debug_assert_eq!(self.buckets.len(), other.buckets.len());
+        debug_assert_eq!(self.base_ns, other.base_ns);
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -85,8 +110,10 @@ impl LatencyHistogram {
 ///
 /// Cache counters (`cache_hits`, `cache_misses`, `cache_size`) mirror the
 /// service's [`super::cache::MappingCache`] — the cache is the single
-/// source of truth and the service copies its counters into each snapshot,
-/// so the hit rate reported here can never drift from what the cache saw.
+/// source of truth, and [`super::service::MapperClient::metrics`] copies
+/// its counters into each snapshot at read time, so the hit rate reported
+/// here can never drift from what the cache saw (and shard merging can
+/// never double-count it).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub requests: u64,
@@ -94,6 +121,13 @@ pub struct Metrics {
     /// unknown or unrepresentable workload) before touching the cache
     /// or a backend.
     pub rejected: u64,
+    /// Requests shed because their deadline expired while they waited in
+    /// the admission queue — answered with a distinct error before they
+    /// could join a batch (see `service::ERR_DEADLINE`).
+    pub shed: u64,
+    /// Requests refused at admission because the bounded queue was full
+    /// (backpressure; see `service::ERR_QUEUE_FULL`).
+    pub queue_full: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
     /// Current number of cached mappings.
@@ -205,13 +239,44 @@ impl Metrics {
         }
     }
 
+    /// Fold another snapshot into this one. Counters add, histograms add
+    /// bucket-wise, the occupancy histogram adds element-wise (growing to
+    /// the longer of the two). Cache counters add too — shards keep them
+    /// at zero and the client overwrites them from the cache itself at
+    /// snapshot time.
+    pub fn merge_from(&mut self, o: &Metrics) {
+        self.requests += o.requests;
+        self.rejected += o.rejected;
+        self.shed += o.shed;
+        self.queue_full += o.queue_full;
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
+        self.cache_size += o.cache_size;
+        self.model_batches += o.model_batches;
+        self.model_mapped += o.model_mapped;
+        self.invalid_responses += o.invalid_responses;
+        self.latency.merge_from(&o.latency);
+        self.latency_native.merge_from(&o.latency_native);
+        self.latency_pjrt.merge_from(&o.latency_pjrt);
+        self.latency_search.merge_from(&o.latency_search);
+        self.latency_cache.merge_from(&o.latency_cache);
+        if self.batch_occupancy.len() < o.batch_occupancy.len() {
+            self.batch_occupancy.resize(o.batch_occupancy.len(), 0);
+        }
+        for (a, b) in self.batch_occupancy.iter_mut().zip(&o.batch_occupancy) {
+            *a += b;
+        }
+    }
+
     pub fn report(&self) -> String {
         let mut s = format!(
-            "requests={} rejected={} cache_hits={} hit_rate={:.0}% cache_size={} \
-             batches={} mean_occupancy={:.2} invalid={} \
-             latency mean={:?} p50={:?} p95={:?} max={:?}",
+            "requests={} rejected={} shed={} queue_full={} cache_hits={} hit_rate={:.0}% \
+             cache_size={} batches={} mean_occupancy={:.2} invalid={} \
+             latency mean={:?} p50={:?} p95={:?} p99={:?} max={:?}",
             self.requests,
             self.rejected,
+            self.shed,
+            self.queue_full,
             self.cache_hits,
             100.0 * self.cache_hit_rate(),
             self.cache_size,
@@ -221,6 +286,7 @@ impl Metrics {
             self.latency.mean(),
             self.latency.percentile(0.5),
             self.latency.percentile(0.95),
+            self.latency.percentile(0.99),
             self.latency.max(),
         );
         for source in [Source::Native, Source::Model, Source::Search, Source::Cache] {
@@ -239,6 +305,56 @@ impl Metrics {
             s.push_str(&format!(" | native_vs_search_speedup={x:.1}x"));
         }
         s
+    }
+}
+
+/// Sharded metrics for the concurrent serving core: one [`Metrics`] shard
+/// per reporting thread, merged at read time.
+///
+/// Shard assignment (see `service`): shard [`MetricsHub::ADMISSION`] is
+/// written by client threads (queue-full backpressure), shard
+/// [`MetricsHub::DISPATCH`] by the batch former (deadline sheds), and
+/// shard `WORKER0 + i` exclusively by engine worker `i` — so in steady
+/// state every mutex here is uncontended and workers never serialize on
+/// metrics.
+#[derive(Debug)]
+pub struct MetricsHub {
+    shards: Vec<Mutex<Metrics>>,
+}
+
+impl MetricsHub {
+    /// Shard written by client threads at admission (queue_full).
+    pub const ADMISSION: usize = 0;
+    /// Shard written by the dispatcher / batch former (shed).
+    pub const DISPATCH: usize = 1;
+    /// First engine-worker shard; worker `i` owns `WORKER0 + i`.
+    pub const WORKER0: usize = 2;
+
+    /// A hub with shards for admission, dispatch, and `workers` workers.
+    pub fn for_workers(workers: usize) -> MetricsHub {
+        let n = Self::WORKER0 + workers.max(1);
+        MetricsHub {
+            shards: (0..n).map(|_| Mutex::new(Metrics::default())).collect(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Borrow one shard's mutex. Indexes beyond the shard count wrap, so
+    /// a caller with an out-of-range id still records somewhere exact.
+    pub fn shard(&self, i: usize) -> &Mutex<Metrics> {
+        &self.shards[i % self.shards.len()]
+    }
+
+    /// Merge every shard into one exact snapshot.
+    pub fn snapshot(&self) -> Metrics {
+        let mut out = Metrics::default();
+        for s in &self.shards {
+            out.merge_from(&s.lock().expect("metrics shard poisoned"));
+        }
+        out
     }
 }
 
@@ -266,6 +382,27 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.percentile(0.99), Duration::ZERO);
         assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn histogram_merge_is_exact() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        let mut whole = LatencyHistogram::default();
+        for ms in 1..=50u64 {
+            a.record(Duration::from_millis(ms));
+            whole.record(Duration::from_millis(ms));
+        }
+        for ms in 51..=100u64 {
+            b.record(Duration::from_millis(ms));
+            whole.record(Duration::from_millis(ms));
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.percentile(0.5), whole.percentile(0.5));
+        assert_eq!(a.percentile(0.99), whole.percentile(0.99));
+        assert_eq!(a.max(), whole.max());
+        assert_eq!(a.mean(), whole.mean());
     }
 
     #[test]
@@ -319,7 +456,10 @@ mod tests {
         for needle in [
             "requests=",
             "rejected=",
+            "shed=",
+            "queue_full=",
             "p95=",
+            "p99=",
             "mean_occupancy=",
             "hit_rate=",
             "cache_size=",
@@ -360,5 +500,77 @@ mod tests {
         assert!(m.native_vs_search_speedup().is_none());
         m.record_latency(Source::Search, Duration::from_millis(5));
         assert!(m.native_vs_search_speedup().is_some());
+    }
+
+    #[test]
+    fn metrics_merge_combines_counters_and_occupancy() {
+        let mut a = Metrics::new(2);
+        a.requests = 3;
+        a.shed = 1;
+        a.record_batch(2);
+        let mut b = Metrics::new(8);
+        b.requests = 4;
+        b.queue_full = 2;
+        b.record_batch(7);
+        b.record_latency(Source::Native, Duration::from_micros(10));
+        a.merge_from(&b);
+        assert_eq!(a.requests, 7);
+        assert_eq!(a.shed, 1);
+        assert_eq!(a.queue_full, 2);
+        assert_eq!(a.model_batches, 2);
+        assert_eq!(a.model_mapped, 9);
+        assert_eq!(a.batch_occupancy[2], 1);
+        assert_eq!(a.batch_occupancy[7], 1);
+        assert_eq!(a.latency_for(Source::Native).count(), 1);
+    }
+
+    #[test]
+    fn hub_concurrent_recording_loses_nothing() {
+        // The race the shards exist to prevent: N threads hammering
+        // counters + histograms concurrently must merge to exact totals.
+        use std::sync::Arc;
+        const THREADS: usize = 8;
+        const PER_THREAD: u64 = 5_000;
+        let hub = Arc::new(MetricsHub::for_workers(4));
+        let mut handles = Vec::new();
+        for t in 0..THREADS {
+            let hub = Arc::clone(&hub);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    let shard = hub.shard(MetricsHub::WORKER0 + (t % 4));
+                    let mut m = shard.lock().unwrap();
+                    m.requests += 1;
+                    m.record_latency(Source::Native, Duration::from_micros(1 + i % 500));
+                    if i % 8 == 0 {
+                        m.record_batch((i % 5) as usize + 1);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = hub.snapshot();
+        let total = THREADS as u64 * PER_THREAD;
+        assert_eq!(snap.requests, total);
+        assert_eq!(snap.latency.count(), total);
+        assert_eq!(snap.latency_for(Source::Native).count(), total);
+        let batches: u64 = THREADS as u64 * (PER_THREAD / 8 + u64::from(PER_THREAD % 8 != 0));
+        assert_eq!(snap.model_batches, batches);
+        assert_eq!(snap.batch_occupancy.iter().sum::<u64>(), batches);
+    }
+
+    #[test]
+    fn hub_shard_roles_are_distinct_and_snapshot_merges() {
+        let hub = MetricsHub::for_workers(2);
+        assert_eq!(hub.shards(), 4);
+        hub.shard(MetricsHub::ADMISSION).lock().unwrap().queue_full = 2;
+        hub.shard(MetricsHub::DISPATCH).lock().unwrap().shed = 3;
+        hub.shard(MetricsHub::WORKER0).lock().unwrap().requests = 5;
+        hub.shard(MetricsHub::WORKER0 + 1).lock().unwrap().requests = 7;
+        let snap = hub.snapshot();
+        assert_eq!(snap.queue_full, 2);
+        assert_eq!(snap.shed, 3);
+        assert_eq!(snap.requests, 12);
     }
 }

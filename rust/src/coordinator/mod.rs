@@ -7,22 +7,30 @@
 //! mapper (minutes per query) cannot.
 //!
 //! This module is that control-plane service, structured like a vLLM-style
-//! router front end:
+//! router front end (DESIGN.md §10):
 //!
-//! - [`service`] — the actor that owns the PJRT runtime + model and runs
-//!   the **dynamic batcher**: concurrent mapping requests are coalesced
-//!   (up to the AOT inference batch, within a small batching window) into
-//!   one batched autoregressive decode;
+//! - [`service`] — the deadline-aware concurrent serving core: a bounded
+//!   admission queue with backpressure, a dispatcher that coalesces
+//!   requests into batches until the backend max batch or the *earliest
+//!   request deadline* forces dispatch (shedding expired requests before
+//!   they can occupy a batch slot), and N parallel engine workers each
+//!   owning a backend handle;
 //! - [`cache`] — resolved mappings keyed by (workload content hash, batch,
 //!   condition): repeat conditions are answered without touching the
-//!   model, and identical nets posted under different names share entries;
+//!   model, and identical nets posted under different names share entries
+//!   (shared across workers behind one lock);
 //! - [`metrics`] — request counts, latency percentiles, batch-size
-//!   occupancy, cache hit rate.
+//!   occupancy, cache hit rate, shed/backpressure counters — sharded per
+//!   reporting thread and merged at read time;
+//! - [`loadgen`] — the closed- and open-loop load generator the `serve`
+//!   CLI and `benches/serve_load.rs` share to measure the core under
+//!   traffic.
 //!
-//! Python never runs here; the service thread is self-contained after
+//! Python never runs here; the service threads are self-contained after
 //! `Runtime::load`.
 
 pub mod cache;
+pub mod loadgen;
 pub mod metrics;
 pub mod service;
 
@@ -42,6 +50,17 @@ pub struct MapRequest {
     /// Available on-chip buffer right now, MB (the HW condition).
     pub mem_cond_mb: f64,
     pub hw: HwConfig,
+    /// Optional deadline budget: service must *start* within this much
+    /// time of the request being enqueued. The batch former dispatches a
+    /// deadline-bearing request with a quarter of its budget still in
+    /// hand (so an uncontended request always meets its deadline), and a
+    /// request whose deadline has passed — in the admission queue or in
+    /// the worker hand-off — is **shed** with a distinct error
+    /// (`service::ERR_DEADLINE`) instead of being served stale: the
+    /// paper's serving scenario asks for a mapping *now*, so a late
+    /// answer is worth less than fast feedback to re-ask. `None` (the
+    /// default) never sheds.
+    pub timeout: Option<std::time::Duration>,
 }
 
 impl MapRequest {
@@ -57,7 +76,14 @@ impl MapRequest {
             batch,
             mem_cond_mb,
             hw: HwConfig::paper(),
+            timeout: None,
         }
+    }
+
+    /// Attach a queueing deadline (builder style).
+    pub fn with_timeout(mut self, timeout: std::time::Duration) -> Self {
+        self.timeout = Some(timeout);
+        self
     }
 }
 

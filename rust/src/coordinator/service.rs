@@ -1,5 +1,5 @@
-//! The mapper service actor: owns the backend on one thread, batches
-//! concurrent requests dynamically, caches resolved mappings.
+//! The deadline-aware concurrent serving core: a bounded admission queue,
+//! a batch-forming dispatcher, and N parallel engine workers.
 //!
 //! Requests name workloads through a [`crate::workload::WorkloadSpec`]
 //! (registered name or inline layer list) resolved against the shared
@@ -8,48 +8,84 @@
 //! (mapping cache, fallback search seeds) uses the registry's content
 //! hash, never the name.
 //!
-//! Actor pattern rather than shared state: PJRT handles are not Sync, so
-//! the service thread *constructs* the runtime itself and everything else
-//! talks to it through channels. This is the same shape a vLLM router
-//! takes — front-end queue, batching window, one engine loop.
+//! Request path (DESIGN.md §10):
+//!
+//! 1. **Admission** — [`MapperClient::map`] enqueues onto a *bounded*
+//!    queue ([`ServiceConfig::queue_capacity`]). A full queue answers
+//!    immediately with [`ERR_QUEUE_FULL`] (backpressure) instead of
+//!    letting latency grow without bound.
+//! 2. **Batch forming** — the dispatcher thread coalesces requests until
+//!    the backend max batch fills, the batching window
+//!    ([`ServiceConfig::batch_window`]) closes, or the **earliest
+//!    per-request deadline** ([`MapRequest::timeout`]) forces dispatch
+//!    (at three quarters of the remaining budget, leaving hand-off
+//!    headroom) — whichever comes first. A request whose deadline
+//!    already passed when the dispatcher pops it is **shed** with
+//!    [`ERR_DEADLINE`] before it can occupy a batch slot; workers
+//!    re-check on batch pickup, so an expired request is never served
+//!    stale from the hand-off queue either.
+//! 3. **Engine workers** — [`ServiceConfig::workers`] threads, each
+//!    owning its *own* backend handle (PJRT handles are not `Sync`; the
+//!    native backend is, but per-worker models keep the two paths
+//!    symmetric). A checkpoint is read from disk exactly once
+//!    ([`RawCheckpoint`]) and shared; the mapping cache and the workload
+//!    registry are shared behind their existing locks. With one worker a
+//!    batch fans per-sequence over the shared thread pool (maximum
+//!    intra-batch parallelism); with several, each worker decodes its
+//!    batch serially so parallelism comes from worker concurrency
+//!    instead of N workers contending for the same pool.
+//! 4. **Drain** — `shutdown` stops admission, flushes everything already
+//!    queued through the workers, and joins: an admitted request always
+//!    gets an answer (a mapping, a rejection, or a shed), never a dropped
+//!    reply.
 //!
 //! Three backends, selected by [`BackendChoice`]:
 //!
 //! - **Native model** (preferred) — the pure-Rust transformer
-//!   ([`crate::model::native`]): a batch of requests becomes one pool
-//!   pass of KV-cache decodes. Artifact-free; always available.
+//!   ([`crate::model::native`]). Artifact-free; always available.
 //! - **PJRT model** — the AOT executables: a batch becomes one padded
 //!   lock-step autoregressive decode. Needs real artifacts + libxla.
 //! - **Search** — explicit (`BackendChoice::Search`) or the opt-in
 //!   fallback ([`ServiceConfig::search_fallback`]) when a model backend
-//!   cannot load: requests are answered by G-Sampler searches fanned over
-//!   the shared thread pool on the incremental cost engine. Slower than
-//!   inference (this is the 66x-class gap the paper is about — see
+//!   cannot load: requests are answered by G-Sampler searches on the
+//!   incremental cost engine. Slower than inference (this is the
+//!   66x-class gap the paper is about — see
 //!   `Metrics::native_vs_search_speedup`), but the control plane stays
 //!   up, and repeat conditions still hit the mapping cache.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{
+    channel, Receiver, RecvTimeoutError, Sender, sync_channel, SyncSender, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cost::MB;
 use crate::env::FusionEnv;
+use crate::fusion::Strategy;
 use crate::model::native::NativeConfig;
 use crate::model::{MapperModel, ModelKind, RawCheckpoint};
 use crate::runtime::{BackendKind, LoadSet, Runtime};
-use crate::fusion::Strategy;
 use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 use crate::workload::{Workload, WorkloadRegistry};
 
 use super::cache::{Entry, Key, MappingCache};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, MetricsHub};
 use super::{MapRequest, MapResponse, Source};
+
+/// Error prefix for requests shed because their deadline expired in the
+/// admission queue. Load generators and clients match on this to count
+/// sheds separately from hard failures.
+pub const ERR_DEADLINE: &str = "deadline exceeded";
+
+/// Error prefix for requests refused at admission because the bounded
+/// queue was full (backpressure).
+pub const ERR_QUEUE_FULL: &str = "admission queue full";
 
 /// Which backend the service should serve from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -91,14 +127,29 @@ pub struct ServiceConfig {
     /// artifacts directory exists, else paper geometry).
     pub native_config: Option<NativeConfig>,
     /// Trained checkpoint; `None` serves a freshly-initialized model
-    /// (useful for wiring tests and demos).
+    /// (useful for wiring tests and demos). Read from disk exactly once
+    /// at spawn, shared by every worker.
     pub checkpoint: Option<PathBuf>,
     pub model: ModelKind,
-    /// How long the batcher waits for co-travellers after the first
-    /// request of a batch.
+    /// How long the batch former waits for co-travellers after the first
+    /// request of a batch. An earlier per-request deadline shortens the
+    /// wait; it never lengthens it.
     pub batch_window: Duration,
     pub cache_capacity: usize,
     pub init_seed: i32,
+    /// Parallel engine workers (≥ 1). Each owns a backend handle; the
+    /// admission queue, dispatcher, cache, registry and metrics are
+    /// shared. Default 1 — which also enables per-sequence pool fan-out
+    /// inside a batch (with several workers each batch decodes serially
+    /// in its worker, so the workers are the parallelism axis).
+    pub workers: usize,
+    /// Bound on the admission queue; a full queue answers
+    /// [`ERR_QUEUE_FULL`] immediately (backpressure) instead of queueing
+    /// unboundedly.
+    pub queue_capacity: usize,
+    /// Optional cap on coalesced batch size (default: the backend's real
+    /// max batch — AOT batch table on PJRT, shared-pool size natively).
+    pub max_batch: Option<usize>,
     /// Serve via G-Sampler search when the model backend cannot load
     /// (missing artifacts / PJRT). Off by default so misconfigured model
     /// deployments still fail loudly at spawn.
@@ -108,7 +159,8 @@ pub struct ServiceConfig {
     /// Base seed for fallback searches; the per-request seed is derived
     /// from (workload content hash, batch, condition) so identical
     /// requests get identical strategies (cache-coherent) — even when the
-    /// same net is posted under different names.
+    /// same net is posted under different names or served by different
+    /// workers.
     pub fallback_seed: u64,
     /// The workload registry the service resolves requests against,
     /// pre-seeded with the zoo. Shared: register custom nets here (CLI
@@ -128,6 +180,9 @@ impl ServiceConfig {
             batch_window: Duration::from_millis(2),
             cache_capacity: 1024,
             init_seed: 0,
+            workers: 1,
+            queue_capacity: 1024,
+            max_batch: None,
             search_fallback: false,
             fallback_budget: 2000,
             fallback_seed: 0x5EED,
@@ -140,6 +195,9 @@ struct Job {
     req: MapRequest,
     reply: Sender<Result<MapResponse, String>>,
     enqueued: Instant,
+    /// `enqueued + req.timeout`: the instant by which the dispatcher must
+    /// have handed this job to a worker, or shed it.
+    deadline: Option<Instant>,
 }
 
 enum Msg {
@@ -149,7 +207,12 @@ enum Msg {
     Stop,
 }
 
-/// What answers the requests.
+/// One formed batch on its way from the dispatcher to a worker.
+struct Batch {
+    jobs: Vec<Job>,
+}
+
+/// What answers the requests (one per worker).
 enum Backend {
     Model { rt: Runtime, model: MapperModel },
     Search { budget: usize, seed: u64 },
@@ -157,15 +220,17 @@ enum Backend {
 
 /// Load the PJRT model backend (strict: real artifacts + a real PJRT
 /// client or an error).
-fn build_pjrt(cfg: &ServiceConfig) -> Result<Backend> {
-    let set = if cfg.checkpoint.is_some() {
+fn build_pjrt(cfg: &ServiceConfig, raw: Option<&RawCheckpoint>) -> Result<Backend> {
+    let set = if raw.is_some() {
         LoadSet::InferOnly
     } else {
         LoadSet::Serve
     };
     let rt = Runtime::load(&cfg.artifacts_dir, set)?;
-    let model = match &cfg.checkpoint {
-        Some(path) => MapperModel::load(&rt, path)?,
+    let model = match raw {
+        // Weights only — workers never train, so the Adam moment vectors
+        // (2/3 of the checkpoint) are not duplicated per worker.
+        Some(raw) => MapperModel::from_raw(&rt, raw.clone_for_inference())?,
         None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
     };
     Ok(Backend::Model { rt, model })
@@ -173,35 +238,35 @@ fn build_pjrt(cfg: &ServiceConfig) -> Result<Backend> {
 
 /// Load the native model backend. Architecture: explicit config override,
 /// else whatever the checkpoint records, else manifest constants / paper
-/// geometry (resolved by `Runtime::load_native`). The checkpoint is read
-/// exactly once: the raw bytes size the engine *and* become the model.
-fn build_native(cfg: &ServiceConfig) -> Result<Backend> {
-    let raw = match &cfg.checkpoint {
-        Some(path) => Some(RawCheckpoint::read(path).context("reading checkpoint")?),
-        None => None,
-    };
-    let native_cfg = cfg
-        .native_config
-        .or_else(|| raw.as_ref().and_then(|r| r.config));
+/// geometry (resolved by `Runtime::load_native`). The checkpoint file was
+/// read exactly once at spawn; every worker builds its model from the
+/// shared raw bytes.
+fn build_native(cfg: &ServiceConfig, raw: Option<&RawCheckpoint>) -> Result<Backend> {
+    let native_cfg = cfg.native_config.or_else(|| raw.and_then(|r| r.config));
     let rt = Runtime::load_native(&cfg.artifacts_dir, native_cfg)?;
     let model = match raw {
-        Some(raw) => MapperModel::from_raw(&rt, raw)?,
+        // Weights only (see `RawCheckpoint::clone_for_inference`).
+        Some(raw) => MapperModel::from_raw(&rt, raw.clone_for_inference())?,
         None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
     };
     Ok(Backend::Model { rt, model })
 }
 
-fn build_backend(cfg: &ServiceConfig) -> Result<Backend> {
+fn build_backend(
+    cfg: &ServiceConfig,
+    raw: Option<&RawCheckpoint>,
+    announce: bool,
+) -> Result<Backend> {
     let search = || Backend::Search {
         budget: cfg.fallback_budget.max(1),
         seed: cfg.fallback_seed,
     };
     let primary = match cfg.backend {
         BackendChoice::Search => return Ok(search()),
-        BackendChoice::Pjrt => build_pjrt(cfg),
-        BackendChoice::Native => build_native(cfg),
-        BackendChoice::Auto => build_pjrt(cfg).or_else(|pjrt_err| {
-            build_native(cfg).map_err(|native_err| {
+        BackendChoice::Pjrt => build_pjrt(cfg, raw),
+        BackendChoice::Native => build_native(cfg, raw),
+        BackendChoice::Auto => build_pjrt(cfg, raw).or_else(|pjrt_err| {
+            build_native(cfg, raw).map_err(|native_err| {
                 anyhow!("pjrt backend: {pjrt_err:#}; native backend: {native_err:#}")
             })
         }),
@@ -209,94 +274,251 @@ fn build_backend(cfg: &ServiceConfig) -> Result<Backend> {
     match primary {
         Ok(b) => Ok(b),
         Err(e) if cfg.search_fallback => {
-            eprintln!(
-                "mapper service: model backend unavailable ({e:#}); \
-                 serving via G-Sampler search fallback"
-            );
+            if announce {
+                eprintln!(
+                    "mapper service: model backend unavailable ({e:#}); \
+                     serving via G-Sampler search fallback"
+                );
+            }
             Ok(search())
         }
         Err(e) => Err(e).context("loading model backend"),
     }
 }
 
+impl Backend {
+    /// What non-cache answers from this backend are tagged as.
+    fn source(&self) -> Source {
+        match self {
+            Backend::Model { rt, .. } => match rt.backend() {
+                BackendKind::Native => Source::Native,
+                BackendKind::Pjrt => Source::Model,
+            },
+            Backend::Search { .. } => Source::Search,
+        }
+    }
+
+    /// The largest batch this backend can decode in one dispatch. With
+    /// several workers the pool-backed backends report their share of the
+    /// pool, so N coalesced batches in flight don't oversubscribe cores.
+    fn max_batch(&self, workers: usize) -> usize {
+        let pool_share = (ThreadPool::shared().size() / workers.max(1)).max(1);
+        match self {
+            Backend::Model { rt, model } => match rt.backend() {
+                // Native decode has no AOT batch table: sequences fan out
+                // over the shared pool (one worker) or decode serially
+                // in-worker (several workers).
+                BackendKind::Native => pool_share,
+                BackendKind::Pjrt => rt
+                    .manifest
+                    .infer_batches(model.kind.tag())
+                    .last()
+                    .copied()
+                    .unwrap_or(1),
+            },
+            // Search fallback: one pool worker per in-flight search.
+            Backend::Search { .. } => pool_share,
+        }
+    }
+}
+
 /// Cheap cloneable handle to the service.
 #[derive(Clone)]
 pub struct MapperClient {
-    tx: Sender<Msg>,
-    metrics: Arc<Mutex<Metrics>>,
+    tx: SyncSender<Msg>,
+    hub: Arc<MetricsHub>,
+    cache: Arc<Mutex<MappingCache>>,
 }
 
-/// The running service: client handle + join handle.
+/// The running service: client handle + the dispatcher and worker joins.
 pub struct MapperService {
     pub client: MapperClient,
-    handle: JoinHandle<()>,
+    dispatcher: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl MapperService {
-    /// Spawn the service thread. Blocks until the backend has loaded (or
+    /// Spawn the serving core: N engine workers (each constructing its own
+    /// backend; the checkpoint is read once and shared) plus the
+    /// batch-forming dispatcher. Blocks until every backend has loaded (or
     /// failed), so callers get construction errors synchronously.
     pub fn spawn(cfg: ServiceConfig) -> Result<MapperService> {
-        let (tx, rx) = channel::<Msg>();
-        // The real max batch (manifest batches, or pool size in fallback
-        // mode) is only known once the backend is up; the service thread
-        // sizes the occupancy histogram then, and `record_batch` grows it
-        // on overflow — no sample is ever dropped.
-        let metrics = Arc::new(Mutex::new(Metrics::new(0)));
-        let metrics_thread = Arc::clone(&metrics);
-        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
-        let handle = std::thread::Builder::new()
-            .name("dnnfuser-mapper".into())
-            .spawn(move || service_loop(cfg, rx, metrics_thread, ready_tx))
-            .context("spawning service thread")?;
-        ready_rx
-            .recv()
-            .context("service thread died during startup")?
-            .map_err(|e| anyhow!("service startup failed: {e}"))?;
+        let raw = match &cfg.checkpoint {
+            Some(path) => {
+                let raw = RawCheckpoint::read(path).context("reading checkpoint")?;
+                Some(Arc::new(raw))
+            }
+            None => None,
+        };
+        let n_workers = cfg.workers.max(1);
+        let cfg = Arc::new(cfg);
+        let hub = Arc::new(MetricsHub::for_workers(n_workers));
+        let cache = Arc::new(Mutex::new(MappingCache::new(cfg.cache_capacity)));
+        let (tx, rx) = sync_channel::<Msg>(cfg.queue_capacity.max(1));
+        // Small bounded hand-off: at most one formed batch waits per
+        // worker, so under overload the dispatcher blocks here and the
+        // pressure backs up into the (bounded) admission queue.
+        let (work_tx, work_rx) = sync_channel::<Batch>(n_workers);
+        let work_rx = Arc::new(Mutex::new(work_rx));
+        let (ready_tx, ready_rx) = channel::<Result<(usize, Source), String>>();
+
+        let mut workers = Vec::with_capacity(n_workers);
+        for i in 0..n_workers {
+            let cfg = Arc::clone(&cfg);
+            let raw = raw.clone();
+            let work_rx = Arc::clone(&work_rx);
+            let hub = Arc::clone(&hub);
+            let cache = Arc::clone(&cache);
+            let ready_tx = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("dnnfuser-mapper-{i}"))
+                .spawn(move || engine_worker(i, cfg, raw, work_rx, hub, cache, ready_tx))
+                .context("spawning engine worker")?;
+            workers.push(handle);
+        }
+        drop(ready_tx);
+
+        // Collect every worker's load result; the smallest reported max
+        // batch caps the batch former. All workers must land on the SAME
+        // backend: with `search_fallback` on, a transient load error in
+        // one worker would otherwise silently produce a mixed service —
+        // some requests answered by the model, some by 66x-slower search,
+        // nondeterministically — so a disagreement fails spawn instead.
+        let mut max_batch = usize::MAX;
+        let mut kind: Option<Source> = None;
+        let mut first_err: Option<String> = None;
+        for _ in 0..n_workers {
+            match ready_rx.recv() {
+                Ok(Ok((mb, src))) => {
+                    max_batch = max_batch.min(mb.max(1));
+                    match kind {
+                        None => kind = Some(src),
+                        Some(k) if k != src => {
+                            first_err.get_or_insert_with(|| {
+                                format!(
+                                    "engine workers loaded different backends ({} vs {}) — \
+                                     a mixed service would answer nondeterministically; \
+                                     check the artifacts/checkpoint and respawn",
+                                    k.name(),
+                                    src.name()
+                                )
+                            });
+                        }
+                        Some(_) => {}
+                    }
+                }
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert_with(|| "worker died during startup".into());
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            drop(work_tx); // lets already-loaded workers exit their loops
+            for w in workers {
+                let _ = w.join();
+            }
+            bail!("service startup failed: {e}");
+        }
+        if let Some(cap) = cfg.max_batch {
+            max_batch = max_batch.min(cap.max(1));
+        }
+
+        let hub_d = Arc::clone(&hub);
+        let cfg_d = Arc::clone(&cfg);
+        let dispatcher = std::thread::Builder::new()
+            .name("dnnfuser-dispatch".into())
+            .spawn(move || dispatch_loop(cfg_d, rx, work_tx, hub_d, max_batch))
+            .context("spawning dispatcher thread")?;
+
         Ok(MapperService {
-            client: MapperClient { tx, metrics },
-            handle,
+            client: MapperClient { tx, hub, cache },
+            dispatcher,
+            workers,
         })
     }
 
-    /// Stop the service. Safe even when cloned clients are still alive:
-    /// an explicit stop message ends the loop (in-flight requests on the
-    /// queue behind it get a service-down error from their dropped reply
-    /// channels).
+    /// Stop the service gracefully. Safe even when cloned clients are
+    /// still alive: an explicit stop message ends admission, the
+    /// dispatcher drains everything queued before the stop through the
+    /// workers, and all threads are joined. A request racing the stop
+    /// itself gets a definitive service-down error — refused at send
+    /// once the queue closes, or answered through its closed reply
+    /// channel if it slipped in behind the final drain poll. No `map`
+    /// call ever hangs or loses its reply silently.
     pub fn shutdown(self) {
-        let MapperService { client, handle } = self;
+        let MapperService {
+            client,
+            dispatcher,
+            workers,
+        } = self;
         let _ = client.tx.send(Msg::Stop);
         drop(client);
-        let _ = handle.join();
+        let _ = dispatcher.join();
+        for w in workers {
+            let _ = w.join();
+        }
     }
 }
 
 impl MapperClient {
-    /// Map one request (blocking).
+    /// Map one request (blocking). Admission is bounded: when the queue
+    /// is full the call returns an [`ERR_QUEUE_FULL`] error immediately
+    /// instead of queueing — callers are expected to back off and retry.
     pub fn map(&self, req: MapRequest) -> Result<MapResponse> {
         let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Msg::Job(Job {
-                req,
-                reply: reply_tx,
-                enqueued: Instant::now(),
-            }))
-            .map_err(|_| anyhow!("mapper service is down"))?;
+        let enqueued = Instant::now();
+        let deadline = req.timeout.map(|t| enqueued + t);
+        let job = Job {
+            req,
+            reply: reply_tx,
+            enqueued,
+            deadline,
+        };
+        match self.tx.try_send(Msg::Job(job)) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                let shard = self.hub.shard(MetricsHub::ADMISSION);
+                let mut m = shard.lock().expect("metrics");
+                m.requests += 1;
+                m.queue_full += 1;
+                drop(m);
+                return Err(anyhow!("{ERR_QUEUE_FULL}: service saturated, retry later"));
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(anyhow!("mapper service is down"));
+            }
+        }
+        // A closed reply channel means the service stopped (or died)
+        // between admitting this request and serving it — the shutdown
+        // race window. The caller gets a definitive service-down error,
+        // never a hang or a silently lost reply.
         reply_rx
             .recv()
-            .map_err(|_| anyhow!("mapper service dropped the request"))?
+            .map_err(|_| anyhow!("mapper service stopped before serving this request"))?
             .map_err(|e| anyhow!(e))
     }
 
+    /// An exact metrics snapshot: all per-thread shards merged, cache
+    /// counters copied from the cache itself (the single source of truth
+    /// for hit/miss accounting).
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().expect("metrics poisoned").clone()
+        let mut m = self.hub.snapshot();
+        let cache = self.cache.lock().expect("cache poisoned");
+        m.cache_hits = cache.hits;
+        m.cache_misses = cache.misses;
+        m.cache_size = cache.len();
+        m
     }
 }
 
 /// Deterministic per-request search seed, derived from the cache [`Key`]:
 /// the exact identity that decides cache sharing (workload content, hw,
 /// batch, quantized condition) decides the search, so repeat requests —
-/// and the same net posted under different names — get identical
-/// strategies, and the two can never quantize differently.
+/// and the same net posted under different names, and the same request
+/// served by different workers — get identical strategies.
 fn request_seed(base: u64, key: &Key) -> u64 {
     const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = 0xcbf2_9ce4_8422_2325u64 ^ base.wrapping_mul(FNV_PRIME);
@@ -332,263 +554,362 @@ fn validate(req: &MapRequest) -> Result<(), String> {
 
 /// Meter and answer one rejected request (validation or resolution
 /// failure) without poisoning the rest of the batch.
-fn reject(metrics: &Arc<Mutex<Metrics>>, job: Job, msg: String) {
-    let mut m = metrics.lock().expect("metrics");
+fn reject(shard: &Mutex<Metrics>, job: Job, msg: String) {
+    let mut m = shard.lock().expect("metrics");
     m.requests += 1;
     m.rejected += 1;
     drop(m);
     let _ = job.reply.send(Err(msg));
 }
 
-/// Copy the cache's counters into the metrics snapshot — the cache is the
-/// single source of truth for hit/miss accounting.
-fn sync_cache_stats(m: &mut Metrics, cache: &MappingCache) {
-    m.cache_hits = cache.hits;
-    m.cache_misses = cache.misses;
-    m.cache_size = cache.len();
+/// When a deadline job must be dispatched: three quarters of its
+/// remaining budget from now, so the hand-off to a worker still happens
+/// inside the budget — a deadline that forces dispatch is *met* (service
+/// starts with headroom), not met-then-shed at the worker's re-check.
+fn dispatch_cutoff(deadline: Instant) -> Instant {
+    let now = Instant::now();
+    match deadline.checked_duration_since(now) {
+        Some(rem) => now + rem.mul_f64(0.75),
+        None => now,
+    }
 }
 
-fn service_loop(
-    cfg: ServiceConfig,
+/// Shed-on-expiry: answer an expired job with a distinct error. Returns
+/// the job back when it still has time (or has no deadline). Called at
+/// both shed points: when the dispatcher pops the admission queue, and
+/// when a worker picks the job's batch up — so a request is never
+/// *served* after its deadline, no matter where it waited.
+fn admit(job: Job, shard: &Mutex<Metrics>) -> Option<Job> {
+    let Some(deadline) = job.deadline else {
+        return Some(job);
+    };
+    if Instant::now() <= deadline {
+        return Some(job);
+    }
+    let waited = job.enqueued.elapsed();
+    let mut m = shard.lock().expect("metrics");
+    m.requests += 1;
+    m.shed += 1;
+    drop(m);
+    let _ = job.reply.send(Err(format!(
+        "{ERR_DEADLINE}: request shed after {waited:?} in queue \
+         (timeout {:?})",
+        job.req.timeout.unwrap_or_default()
+    )));
+    None
+}
+
+/// The batch former. Coalesces admitted jobs into batches and hands them
+/// to the workers over a small bounded queue; under overload it blocks on
+/// that hand-off and the pressure backs up into the bounded admission
+/// queue (whose overflow is the client-visible backpressure signal).
+fn dispatch_loop(
+    cfg: Arc<ServiceConfig>,
     rx: Receiver<Msg>,
-    metrics: Arc<Mutex<Metrics>>,
-    ready: Sender<Result<(), String>>,
+    work_tx: SyncSender<Batch>,
+    hub: Arc<MetricsHub>,
+    max_batch: usize,
 ) {
-    // Construct the backend inside the thread (PJRT is not Sync).
-    let backend = match build_backend(&cfg) {
-        Ok(b) => {
-            let _ = ready.send(Ok(()));
-            b
+    let shard = hub.shard(MetricsHub::DISPATCH);
+    'serve: loop {
+        // Block for the first job of a batch.
+        let first = match rx.recv() {
+            Ok(Msg::Job(j)) => j,
+            Ok(Msg::Stop) | Err(_) => break 'serve,
+        };
+        let Some(first) = admit(first, shard) else {
+            continue;
+        };
+        // Deadline-aware coalescing: wait for co-travellers until the
+        // window closes — or the earliest dispatch cutoff among the
+        // pending jobs arrives, whichever is first. The cutoff leaves a
+        // quarter of the job's remaining budget for the worker hand-off,
+        // so a deadline that forces dispatch is *met*, not shed.
+        let window_end = Instant::now() + cfg.batch_window;
+        let mut dispatch_at = window_end;
+        if let Some(d) = first.deadline {
+            dispatch_at = dispatch_at.min(dispatch_cutoff(d));
         }
+        let mut pending = vec![first];
+        let mut stop_after = false;
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= dispatch_at {
+                break;
+            }
+            match rx.recv_timeout(dispatch_at - now) {
+                Ok(Msg::Job(j)) => {
+                    if let Some(j) = admit(j, shard) {
+                        if let Some(d) = j.deadline {
+                            dispatch_at = dispatch_at.min(dispatch_cutoff(d));
+                        }
+                        pending.push(j);
+                    }
+                }
+                Ok(Msg::Stop) => {
+                    stop_after = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    stop_after = true;
+                    break;
+                }
+            }
+        }
+        if work_tx.send(Batch { jobs: pending }).is_err() {
+            return; // workers gone — nothing left to serve
+        }
+        if stop_after {
+            break 'serve;
+        }
+    }
+    // Graceful drain: everything already admitted to the queue still gets
+    // served (in max_batch chunks). New arrivals race the drain: most are
+    // refused at send time once the receiver drops, and one that lands
+    // between the final Empty poll and that drop is answered through its
+    // dropped reply channel ("service stopped before serving") — a
+    // definitive outcome either way, never a lost reply.
+    let mut leftover: Vec<Job> = Vec::new();
+    loop {
+        match rx.try_recv() {
+            Ok(Msg::Job(j)) => {
+                if let Some(j) = admit(j, shard) {
+                    leftover.push(j);
+                }
+                if leftover.len() == max_batch {
+                    let jobs = std::mem::take(&mut leftover);
+                    if work_tx.send(Batch { jobs }).is_err() {
+                        return;
+                    }
+                }
+            }
+            Ok(Msg::Stop) => {}
+            Err(_) => break, // empty or disconnected: drain is complete
+        }
+    }
+    if !leftover.is_empty() {
+        let _ = work_tx.send(Batch { jobs: leftover });
+    }
+    // Dropping work_tx ends the workers once they finish what's queued.
+}
+
+/// One engine worker: builds its own backend, reports readiness (and its
+/// max batch), then serves formed batches until the dispatcher goes away.
+fn engine_worker(
+    idx: usize,
+    cfg: Arc<ServiceConfig>,
+    raw: Option<Arc<RawCheckpoint>>,
+    work: Arc<Mutex<Receiver<Batch>>>,
+    hub: Arc<MetricsHub>,
+    cache: Arc<Mutex<MappingCache>>,
+    ready: Sender<Result<usize, String>>,
+) {
+    let backend = match build_backend(&cfg, raw.as_deref(), idx == 0) {
+        Ok(b) => b,
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
             return;
         }
     };
-    // What non-cache answers from this backend are tagged as.
-    let model_source = match &backend {
-        Backend::Model { rt, .. } => match rt.backend() {
-            BackendKind::Native => Source::Native,
-            BackendKind::Pjrt => Source::Model,
-        },
-        Backend::Search { .. } => Source::Search,
-    };
+    let n_workers = cfg.workers.max(1);
+    let max_batch = backend.max_batch(n_workers);
+    let shard = hub.shard(MetricsHub::WORKER0 + idx);
+    // Size this shard's occupancy histogram for the backend we actually
+    // got (spawn couldn't know); overshoot still grows on record.
+    let effective_max = cfg.max_batch.map_or(max_batch, |c| c.min(max_batch));
+    shard.lock().expect("metrics").ensure_batch_capacity(effective_max);
+    let _ = ready.send(Ok((max_batch, backend.source())));
 
-    let max_batch = match &backend {
-        Backend::Model { rt, model } => match rt.backend() {
-            // Native decode has no AOT batch table: sequences fan out
-            // over the shared pool, one worker each.
-            BackendKind::Native => ThreadPool::shared().size().max(1),
-            BackendKind::Pjrt => rt
-                .manifest
-                .infer_batches(model.kind.tag())
-                .last()
-                .copied()
-                .unwrap_or(1),
-        },
-        // Search fallback: one pool worker per in-flight search.
-        Backend::Search { .. } => ThreadPool::shared().size().max(1),
-    };
-    // Size the occupancy histogram for the backend we actually got
-    // (spawn couldn't know); overshoot still grows on record.
-    metrics
-        .lock()
-        .expect("metrics")
-        .ensure_batch_capacity(max_batch);
-    let registry = Arc::clone(&cfg.registry);
-    let mut cache = MappingCache::new(cfg.cache_capacity);
-
+    // One worker: fan each batch per-sequence over the shared pool.
+    // Several workers: decode serially in-worker — the workers are the
+    // parallelism axis, and N batches in flight already cover the cores.
+    let intra_parallel = n_workers == 1;
+    let registry = &cfg.registry;
     loop {
-        // Block for the first job of a batch.
-        let first = match rx.recv() {
-            Ok(Msg::Job(j)) => j,
-            Ok(Msg::Stop) | Err(_) => return,
+        let batch = {
+            let rx = work.lock().expect("work queue poisoned");
+            rx.recv()
         };
-        let mut pending = vec![first];
-        // Dynamic batching window: gather co-travellers.
-        let deadline = Instant::now() + cfg.batch_window;
-        let mut stop_after = false;
-        while pending.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Job(j)) => pending.push(j),
-                Ok(Msg::Stop) => {
-                    stop_after = true; // serve what we have, then exit
-                    break;
-                }
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
+        let Ok(batch) = batch else { return };
+        serve_batch(batch, &backend, intra_parallel, registry, &cache, shard);
+    }
+}
 
-        // Validate and resolve first: malformed requests and unknown /
-        // unrepresentable workloads are rejected per-request — before
-        // they can touch the cache — without poisoning the batch.
-        let mut resolved: Vec<(Job, Arc<Workload>, u64)> = Vec::new();
-        for job in pending {
-            if let Err(msg) = validate(&job.req) {
-                reject(&metrics, job, msg);
-                continue;
-            }
-            match registry.resolve(&job.req.workload) {
-                Ok((w, hash)) => resolved.push((job, w, hash)),
-                Err(e) => reject(&metrics, job, format!("{e:#}")),
-            }
-        }
+/// Serve one formed batch on this worker's backend: validate + resolve
+/// (per-request rejects don't poison the batch), answer cache hits,
+/// decode/search the misses, cache and answer them.
+fn serve_batch(
+    batch: Batch,
+    backend: &Backend,
+    intra_parallel: bool,
+    registry: &WorkloadRegistry,
+    cache: &Mutex<MappingCache>,
+    shard: &Mutex<Metrics>,
+) {
+    let model_source = backend.source();
 
-        // Serve cache hits immediately; keep the misses for the backend.
-        let mut jobs: Vec<(Job, Arc<Workload>, Key)> = Vec::new();
-        for (job, w, hash) in resolved {
-            let key = Key::new(
-                hash,
-                job.req.hw.content_hash(),
-                job.req.batch,
-                job.req.mem_cond_mb,
-            );
-            if let Some(hit) = cache.get(&key) {
-                let latency = job.enqueued.elapsed();
-                let mut m = metrics.lock().expect("metrics");
-                m.requests += 1;
-                m.record_latency(Source::Cache, latency);
-                if !hit.valid {
-                    m.invalid_responses += 1;
-                }
-                sync_cache_stats(&mut m, &cache);
-                drop(m);
-                let _ = job.reply.send(Ok(MapResponse {
-                    strategy: hit.strategy,
-                    speedup: hit.speedup,
-                    act_usage_mb: hit.act_usage_mb,
-                    valid: hit.valid,
-                    source: Source::Cache,
-                    latency,
-                }));
-            } else {
-                jobs.push((job, w, key));
-            }
-        }
-        if jobs.is_empty() {
-            if stop_after {
-                return;
-            }
+    let mut resolved: Vec<(Job, Arc<Workload>, u64)> = Vec::new();
+    for job in batch.jobs {
+        // Second shed point: the job may have expired in the worker
+        // hand-off queue (under overload the dispatcher keeps forming
+        // batches that then wait for a free worker). A deadline bounds
+        // when service *starts*, so stale work is shed here too rather
+        // than served late.
+        let Some(job) = admit(job, shard) else {
+            continue;
+        };
+        if let Err(msg) = validate(&job.req) {
+            reject(shard, job, msg);
             continue;
         }
+        match registry.resolve(&job.req.workload) {
+            Ok((w, hash)) => resolved.push((job, w, hash)),
+            Err(e) => reject(shard, job, format!("{e:#}")),
+        }
+    }
 
-        match &backend {
-            Backend::Model { rt, model } => {
-                let envs: Vec<FusionEnv> = jobs
-                    .iter()
-                    .map(|(job, w, _)| {
-                        FusionEnv::new(
-                            (**w).clone(),
-                            job.req.batch,
-                            job.req.hw,
-                            job.req.mem_cond_mb,
-                        )
-                    })
-                    .collect();
+    // Serve cache hits immediately; keep the misses for the backend.
+    let mut jobs: Vec<(Job, Arc<Workload>, Key)> = Vec::new();
+    for (job, w, hash) in resolved {
+        let key = Key::new(
+            hash,
+            job.req.hw.content_hash(),
+            job.req.batch,
+            job.req.mem_cond_mb,
+        );
+        let hit = cache.lock().expect("cache poisoned").get(&key);
+        if let Some(hit) = hit {
+            let latency = job.enqueued.elapsed();
+            let mut m = shard.lock().expect("metrics");
+            m.requests += 1;
+            m.record_latency(Source::Cache, latency);
+            if !hit.valid {
+                m.invalid_responses += 1;
+            }
+            drop(m);
+            let _ = job.reply.send(Ok(MapResponse {
+                strategy: hit.strategy,
+                speedup: hit.speedup,
+                act_usage_mb: hit.act_usage_mb,
+                valid: hit.valid,
+                source: Source::Cache,
+                latency,
+            }));
+        } else {
+            jobs.push((job, w, key));
+        }
+    }
+    if jobs.is_empty() {
+        return;
+    }
+
+    match backend {
+        Backend::Model { rt, model } => {
+            let envs: Vec<FusionEnv> = jobs
+                .iter()
+                .map(|(job, w, _)| {
+                    FusionEnv::new(
+                        (**w).clone(),
+                        job.req.batch,
+                        job.req.hw,
+                        job.req.mem_cond_mb,
+                    )
+                })
+                .collect();
+            // PJRT always decodes the whole batch in one padded lock-step
+            // executable call — its parallelism is internal to XLA, not
+            // the shared pool, so the serial-in-worker policy (which only
+            // exists to keep N workers from contending for that pool)
+            // must never apply to it.
+            let batched = intra_parallel || rt.backend() == BackendKind::Pjrt;
+            let trajs = if batched {
                 let env_refs: Vec<&FusionEnv> = envs.iter().collect();
-                match model.infer_batch(rt, &env_refs) {
-                    Ok(trajs) => {
-                        metrics.lock().expect("metrics").record_batch(jobs.len());
-                        for ((job, _, key), traj) in jobs.into_iter().zip(trajs) {
-                            respond(
-                                &metrics,
-                                &mut cache,
-                                job,
-                                key,
-                                traj.strategy,
-                                traj.speedup,
-                                traj.peak_act_bytes as f64 / MB,
-                                traj.valid,
-                                model_source,
-                            );
-                        }
-                    }
-                    Err(e) => {
-                        let msg = format!("inference failed: {e:#}");
-                        let mut m = metrics.lock().expect("metrics");
-                        m.requests += jobs.len() as u64;
-                        // The lookups above already counted misses in the
-                        // cache; keep the snapshot in step even though no
-                        // entry gets written.
-                        sync_cache_stats(&mut m, &cache);
-                        drop(m);
-                        for (job, _, _) in jobs {
-                            let _ = job.reply.send(Err(msg.clone()));
-                        }
+                model.infer_batch(rt, &env_refs)
+            } else {
+                envs.iter()
+                    .map(|env| {
+                        model
+                            .infer_batch(rt, &[env])
+                            .map(|mut v| v.pop().expect("one trajectory"))
+                    })
+                    .collect()
+            };
+            match trajs {
+                Ok(trajs) => {
+                    shard.lock().expect("metrics").record_batch(jobs.len());
+                    for ((job, _, key), traj) in jobs.into_iter().zip(trajs) {
+                        let act_mb = traj.peak_act_bytes as f64 / MB;
+                        let result = (traj.strategy, traj.speedup, act_mb, traj.valid);
+                        respond(shard, cache, job, key, result, model_source);
                     }
                 }
-            }
-            Backend::Search { budget, seed } => {
-                // One teacher search per request, fanned out over the
-                // shared pool (the searches themselves run on the
-                // incremental cost engine; nested batch evaluation inside
-                // a pool worker stays serial by design).
-                let (budget, base_seed) = (*budget, *seed);
-                let tasks: Vec<Box<dyn FnOnce() -> (Strategy, f64, f64, bool) + Send>> =
-                    jobs.iter()
-                        .map(|(job, w, key)| {
-                            let w = Arc::clone(w);
-                            let key = key.clone();
-                            let req = job.req.clone();
-                            Box::new(move || {
-                                let prob = FusionProblem::new(
-                                    &w,
-                                    req.batch,
-                                    req.hw,
-                                    req.mem_cond_mb,
-                                );
-                                let sd = request_seed(base_seed, &key);
-                                let r = GSampler::default().run(
-                                    &prob,
-                                    budget,
-                                    &mut Rng::seed_from_u64(sd),
-                                );
-                                (
-                                    r.best,
-                                    r.best_eval.speedup,
-                                    r.act_usage_mb(),
-                                    r.best_eval.valid,
-                                )
-                            })
-                                as Box<dyn FnOnce() -> (Strategy, f64, f64, bool) + Send>
-                        })
-                        .collect();
-                let results = ThreadPool::shared().run_batch(tasks);
-                metrics.lock().expect("metrics").record_batch(jobs.len());
-                for ((job, _, key), (strategy, speedup, act_mb, valid)) in
-                    jobs.into_iter().zip(results)
-                {
-                    respond(
-                        &metrics, &mut cache, job, key, strategy, speedup, act_mb,
-                        valid, Source::Search,
-                    );
+                Err(e) => {
+                    let msg = format!("inference failed: {e:#}");
+                    let mut m = shard.lock().expect("metrics");
+                    m.requests += jobs.len() as u64;
+                    drop(m);
+                    for (job, _, _) in jobs {
+                        let _ = job.reply.send(Err(msg.clone()));
+                    }
                 }
             }
         }
-        if stop_after {
-            return;
+        Backend::Search { budget, seed } => {
+            // One teacher search per request. One worker: fanned over the
+            // shared pool. Several workers: run serially in-worker (the
+            // searches themselves stay deterministic either way — seeds
+            // derive from request content, not execution order).
+            let (budget, base_seed) = (*budget, *seed);
+            // `move` (budget/base_seed are Copy): the closure owns its
+            // captures, so the boxed pool tasks below satisfy 'static.
+            let run_one = move |w: &Arc<Workload>, key: &Key, req: &MapRequest| {
+                let prob = FusionProblem::new(w, req.batch, req.hw, req.mem_cond_mb);
+                let sd = request_seed(base_seed, key);
+                let r = GSampler::default().run(&prob, budget, &mut Rng::seed_from_u64(sd));
+                (
+                    r.best,
+                    r.best_eval.speedup,
+                    r.act_usage_mb(),
+                    r.best_eval.valid,
+                )
+            };
+            let results: Vec<(Strategy, f64, f64, bool)> = if intra_parallel {
+                let tasks: Vec<Box<dyn FnOnce() -> (Strategy, f64, f64, bool) + Send>> = jobs
+                    .iter()
+                    .map(|(job, w, key)| {
+                        let w = Arc::clone(w);
+                        let key = key.clone();
+                        let req = job.req.clone();
+                        Box::new(move || run_one(&w, &key, &req))
+                            as Box<dyn FnOnce() -> (Strategy, f64, f64, bool) + Send>
+                    })
+                    .collect();
+                ThreadPool::shared().run_batch(tasks)
+            } else {
+                jobs.iter()
+                    .map(|(job, w, key)| run_one(w, key, &job.req))
+                    .collect()
+            };
+            shard.lock().expect("metrics").record_batch(jobs.len());
+            for ((job, _, key), result) in jobs.into_iter().zip(results) {
+                respond(shard, cache, job, key, result, Source::Search);
+            }
         }
     }
 }
 
-/// Cache, meter and answer one resolved request.
-#[allow(clippy::too_many_arguments)]
+/// Cache, meter and answer one resolved request; `result` is
+/// `(strategy, speedup, act_usage_mb, valid)` from the backend.
 fn respond(
-    metrics: &Arc<Mutex<Metrics>>,
-    cache: &mut MappingCache,
+    shard: &Mutex<Metrics>,
+    cache: &Mutex<MappingCache>,
     job: Job,
     key: Key,
-    strategy: Strategy,
-    speedup: f64,
-    act_usage_mb: f64,
-    valid: bool,
+    result: (Strategy, f64, f64, bool),
     source: Source,
 ) {
+    let (strategy, speedup, act_usage_mb, valid) = result;
     let latency = job.enqueued.elapsed();
     let resp = MapResponse {
         strategy: strategy.clone(),
@@ -598,7 +919,7 @@ fn respond(
         source,
         latency,
     };
-    cache.put(
+    cache.lock().expect("cache poisoned").put(
         key,
         Entry {
             strategy,
@@ -607,16 +928,16 @@ fn respond(
             valid,
         },
     );
-    let mut m = metrics.lock().expect("metrics");
+    let mut m = shard.lock().expect("metrics");
     m.requests += 1;
     m.record_latency(source, latency);
     if !valid {
         m.invalid_responses += 1;
     }
-    sync_cache_stats(&mut m, cache);
     drop(m);
     let _ = job.reply.send(Ok(resp));
 }
 
 // Integration tests (spawn against built artifacts, concurrency, batching,
-// caching, search fallback) live in rust/tests/coordinator_integration.rs.
+// caching, deadlines, drain, multi-worker determinism, backpressure) live
+// in rust/tests/coordinator_integration.rs.

@@ -97,6 +97,22 @@ pub struct StrategyCost {
 
 /// Borrowing facade over a [`CostModel`]: the one place group costs are
 /// computed.
+///
+/// ```
+/// use dnnfuser::cost::engine::CostEngine;
+/// use dnnfuser::cost::{CostModel, HwConfig};
+/// use dnnfuser::fusion::Strategy;
+/// use dnnfuser::workload::zoo;
+///
+/// let w = zoo::vgg16();
+/// let m = CostModel::new(&w, 64, HwConfig::paper().with_buffer_mb(20.0));
+/// let engine = CostEngine::new(&m);
+/// let baseline = Strategy::no_fusion(w.n_layers());
+/// let c = engine.cost_of(&baseline.values);
+/// assert!(c.valid && c.latency_s > 0.0);
+/// // The unfused baseline defines speedup 1.0 by construction.
+/// assert!((m.speedup_of(&baseline) - 1.0).abs() < 1e-9);
+/// ```
 pub struct CostEngine<'m> {
     m: &'m CostModel,
 }

@@ -10,9 +10,12 @@
 //! - `infer`   — map a workload at a condition with a trained model
 //!   (§4.5.2), optionally comparing against a fresh G-Sampler search;
 //! - `search`  — run a search-based mapper directly;
-//! - `serve`   — start the mapper service (`--backend
-//!   auto|native|pjrt|search`) on a synthetic request stream through the
-//!   dynamic batcher, reporting per-backend router metrics;
+//! - `serve`   — start the deadline-aware mapper service (`--backend
+//!   auto|native|pjrt|search`, `--workers N`, `--timeout-ms`,
+//!   `--queue-capacity`) and drive it with a closed-loop client swarm or
+//!   the open-loop generator (`--load-gen <rps> --duration <s>`),
+//!   reporting per-backend router metrics plus p50/p95/p99, shed rate and
+//!   batch occupancy;
 //! - `eval`    — model vs teacher across a condition grid.
 
 use std::path::PathBuf;
@@ -20,8 +23,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use dnnfuser::coordinator::loadgen::{self, LoadSpec};
 use dnnfuser::coordinator::service::{BackendChoice, MapperService, ServiceConfig};
-use dnnfuser::coordinator::{MapRequest, Source};
+use dnnfuser::coordinator::Source;
 use dnnfuser::cost::HwConfig;
 use dnnfuser::env::FusionEnv;
 use dnnfuser::model::native::NativeConfig;
@@ -405,8 +409,24 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         .opt("d-model", None, "native hidden dim override (sets d_ff = 4*d_model)")
         .opt("n-blocks", None, "native transformer blocks override")
         .opt("n-heads", None, "native attention heads override")
-        .opt("requests", Some("64"), "synthetic requests to issue")
-        .opt("clients", Some("4"), "concurrent client threads")
+        .opt("requests", Some("64"), "synthetic requests to issue (closed loop)")
+        .opt("clients", Some("4"), "concurrent client threads (closed loop)")
+        .opt("workers", Some("1"), "parallel engine workers")
+        .opt("queue-capacity", Some("1024"), "admission queue bound (backpressure)")
+        .opt("max-batch", None, "cap coalesced batch size (default: backend max)")
+        .opt(
+            "timeout-ms",
+            None,
+            "per-request deadline; requests not dispatched in time are shed",
+        )
+        .opt(
+            "load-gen",
+            None,
+            "open-loop load generator: offered request rate (req/s) — replaces the \
+             closed-loop stream",
+        )
+        .opt("duration", Some("5"), "open-loop duration (seconds)")
+        .opt("max-inflight", Some("512"), "open-loop cap on in-flight requests")
         .opt("window-ms", Some("5"), "dynamic batching window (ms)")
         .opt("cache-capacity", Some("1024"), "mapping cache capacity (entries)")
         .opt("fallback-budget", Some("2000"), "G-Sampler budget per fallback search")
@@ -438,15 +458,26 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     cfg.search_fallback = p.flag("search-fallback");
     cfg.cache_capacity = p.get_usize("cache-capacity")?.max(1);
     cfg.fallback_budget = p.get_usize("fallback-budget")?.max(1);
+    cfg.workers = p.get_usize("workers")?.max(1);
+    cfg.queue_capacity = p.get_usize("queue-capacity")?.max(1);
+    cfg.max_batch = match p.get("max-batch") {
+        Some(s) => Some(s.parse().map_err(|e| anyhow!("bad --max-batch: {e}"))?),
+        None => None,
+    };
+    let timeout = match p.get("timeout-ms") {
+        Some(s) => {
+            let ms: u64 = s.parse().map_err(|e| anyhow!("bad --timeout-ms: {e}"))?;
+            Some(Duration::from_millis(ms))
+        }
+        None => None,
+    };
     let n_requests = p.get_usize("requests")?;
     let n_clients = p.get_usize("clients")?.max(1);
 
     // Custom nets join the zoo in the request mix: registered up front so
     // named requests resolve, exactly like a tenant onboarding one.
-    let mut stream: Vec<String> = ["vgg16", "resnet18", "resnet50", "mobilenet_v2", "mnasnet"]
-        .iter()
-        .map(|s| s.to_string())
-        .collect();
+    let mut spec = LoadSpec::zoo_mix(p.get_u64("seed")?);
+    spec.timeout = timeout;
     if let Some(files) = p.get("workload-file") {
         for path in files.split(',').map(str::trim).filter(|s| !s.is_empty()) {
             let w = dnnfuser::workload::custom::from_file(path)?;
@@ -455,51 +486,45 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
                 .register(w)
                 .with_context(|| format!("registering workload from {path}"))?;
             println!("registered custom workload `{name}` from {path}");
-            stream.push(name);
+            spec.workloads.push(name);
         }
     }
-    let stream = std::sync::Arc::new(stream);
     let registry = std::sync::Arc::clone(&cfg.registry);
 
-    println!("starting mapper service…");
+    println!(
+        "starting mapper service… ({} worker{}, queue {})",
+        cfg.workers,
+        if cfg.workers == 1 { "" } else { "s" },
+        cfg.queue_capacity
+    );
     let svc = MapperService::spawn(cfg)?;
     let client = svc.client.clone();
 
     // The paper's scenario: buffer availability jumps around as other
-    // kernels come and go; several tenants ask for fresh mappings.
-    let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    for c in 0..n_clients {
-        let client = client.clone();
-        let stream = std::sync::Arc::clone(&stream);
-        let seed = p.get_u64("seed")? + c as u64;
-        let quota = n_requests / n_clients + usize::from(c < n_requests % n_clients);
-        handles.push(std::thread::spawn(move || {
-            let mut rng = Rng::seed_from_u64(seed);
-            let mut ok = 0usize;
-            for _ in 0..quota {
-                let w = &stream[rng.index(stream.len())];
-                let mem = [16.0, 20.0, 24.0, 28.0, 32.0, 40.0, 48.0, 64.0][rng.index(8)];
-                match client.map(MapRequest::new(w, 64, mem)) {
-                    Ok(resp) => {
-                        ok += 1;
-                        let _ = resp;
-                    }
-                    Err(e) => eprintln!("request failed: {e}"),
-                }
-            }
-            ok
-        }));
-    }
-    let served: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
-    let wall = t0.elapsed();
+    // kernels come and go; several tenants ask for fresh mappings — as a
+    // closed loop of client threads, or an open-loop offered rate.
+    let report = match p.get("load-gen") {
+        Some(rps) => {
+            let rps: f64 = rps.parse().map_err(|e| anyhow!("bad --load-gen: {e}"))?;
+            let duration = Duration::from_secs_f64(p.get_f64("duration")?.max(0.1));
+            println!(
+                "open-loop load: {rps:.0} req/s for {:.1}s…",
+                duration.as_secs_f64()
+            );
+            loadgen::open_loop(
+                &client,
+                &spec,
+                rps,
+                duration,
+                p.get_usize("max-inflight")?.max(1),
+            )
+        }
+        None => loadgen::closed_loop(&client, &spec, n_clients, n_requests),
+    };
+    let served = report.served;
     let m = client.metrics();
-    println!("served {served}/{n_requests} requests in {wall:?}");
+    println!("  {}", report.summary());
     println!("  {}", m.report());
-    println!(
-        "  throughput: {:.1} mappings/s",
-        served as f64 / wall.as_secs_f64()
-    );
 
     // Out-of-band search baseline (the paper's 66x-class comparison): a
     // service instance runs ONE model backend, so inference-vs-search
@@ -517,8 +542,8 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             let mut rng = Rng::seed_from_u64(p.get_u64("seed")?.wrapping_add(0xBA5E));
             let mut lats: Vec<Duration> = Vec::with_capacity(compare_n);
             for _ in 0..compare_n {
-                let name = &stream[rng.index(stream.len())];
-                let mem = [16.0, 20.0, 24.0, 28.0, 32.0, 40.0, 48.0, 64.0][rng.index(8)];
+                let name = &spec.workloads[rng.index(spec.workloads.len())];
+                let mem = spec.mems[rng.index(spec.mems.len())];
                 let (w, _) = registry
                     .resolve(&dnnfuser::workload::WorkloadSpec::named(name))
                     .with_context(|| format!("resolving `{name}` for the search baseline"))?;
@@ -548,19 +573,23 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
                 ("mean_us", Json::num(h.mean().as_secs_f64() * 1e6)),
                 ("p50_us", Json::num(h.percentile(0.5).as_secs_f64() * 1e6)),
                 ("p95_us", Json::num(h.percentile(0.95).as_secs_f64() * 1e6)),
+                ("p99_us", Json::num(h.percentile(0.99).as_secs_f64() * 1e6)),
             ])
         };
         let doc = Json::obj(vec![
             ("requests", Json::num(m.requests as f64)),
             ("served", Json::num(served as f64)),
             ("rejected", Json::num(m.rejected as f64)),
+            ("shed", Json::num(m.shed as f64)),
+            ("queue_full", Json::num(m.queue_full as f64)),
             ("cache_hits", Json::num(m.cache_hits as f64)),
             ("cache_misses", Json::num(m.cache_misses as f64)),
             ("cache_size", Json::num(m.cache_size as f64)),
             ("invalid_responses", Json::num(m.invalid_responses as f64)),
             ("model_batches", Json::num(m.model_batches as f64)),
             ("mean_batch_occupancy", Json::num(m.mean_batch_occupancy())),
-            ("throughput_per_sec", Json::num(served as f64 / wall.as_secs_f64())),
+            ("throughput_per_sec", Json::num(report.throughput)),
+            ("load", report.to_json()),
             (
                 "sources",
                 Json::obj(vec![

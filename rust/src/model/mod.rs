@@ -79,7 +79,11 @@ pub struct MapperModel {
     pub native_cfg: Option<NativeConfig>,
 }
 
-/// A checkpoint as stored on disk, before backend validation.
+/// A checkpoint as stored on disk, before backend validation. The
+/// serving coordinator reads the file once and hands every engine worker
+/// its own copy of the weights via [`RawCheckpoint::clone_for_inference`]
+/// (full `Clone` is also available when the optimizer state matters).
+#[derive(Clone)]
 pub struct RawCheckpoint {
     pub kind: ModelKind,
     pub step: f32,
@@ -128,6 +132,26 @@ impl RawCheckpoint {
             v,
             config,
         })
+    }
+}
+
+impl RawCheckpoint {
+    /// A copy for inference-only use: weights and architecture without
+    /// the Adam moment vectors — `m`/`v` are two thirds of a
+    /// checkpoint's bytes and only `train_step` ever reads them. The
+    /// serving coordinator hands each engine worker one of these, so a
+    /// worker keeps a single `theta` resident instead of three
+    /// params-length vectors. The resulting model must not be trained or
+    /// saved (its optimizer state is empty).
+    pub fn clone_for_inference(&self) -> RawCheckpoint {
+        RawCheckpoint {
+            kind: self.kind,
+            step: self.step,
+            theta: self.theta.clone(),
+            m: Vec::new(),
+            v: Vec::new(),
+            config: self.config,
+        }
     }
 }
 

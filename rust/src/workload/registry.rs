@@ -180,6 +180,21 @@ impl WorkloadRegistry {
     /// Resolve a request spec to `(workload, content_hash)`. Inline specs
     /// are registered as a side effect, so the net becomes addressable by
     /// name afterwards and identical posts dedup onto one entry.
+    ///
+    /// ```
+    /// use dnnfuser::workload::{WorkloadRegistry, WorkloadSpec};
+    ///
+    /// let reg = WorkloadRegistry::with_zoo();
+    /// // Zoo networks resolve by name…
+    /// let (vgg, hash) = reg.resolve(&WorkloadSpec::named("vgg16")).unwrap();
+    /// assert_eq!(vgg.name, "vgg16");
+    /// assert_eq!(vgg.n_layers(), 14); // 13 convs + the FC-as-1x1-conv
+    /// // …and identity is the content hash, stable across lookups.
+    /// let (_, again) = reg.resolve(&WorkloadSpec::named("vgg16")).unwrap();
+    /// assert_eq!(hash, again);
+    /// // Unknown names are a clean error (post the layer list inline).
+    /// assert!(reg.resolve(&WorkloadSpec::named("alexnet")).is_err());
+    /// ```
     pub fn resolve(&self, spec: &WorkloadSpec) -> Result<(Arc<Workload>, u64)> {
         match spec {
             // Names are tenant-supplied; don't enumerate other tenants'

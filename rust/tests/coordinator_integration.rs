@@ -1,9 +1,14 @@
 //! Coordinator integration: service lifecycle, dynamic batching, caching,
-//! error paths. Requires built artifacts (skips loudly otherwise).
+//! error paths, and the deadline-aware concurrent serving core (deadline
+//! shedding, drain-on-shutdown, multi-worker determinism, backpressure).
+//! The PJRT section requires built artifacts (skips loudly otherwise);
+//! everything else is artifact-free.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use dnnfuser::coordinator::service::{BackendChoice, MapperClient, MapperService, ServiceConfig};
+use dnnfuser::coordinator::service::{
+    BackendChoice, MapperClient, MapperService, ServiceConfig, ERR_DEADLINE, ERR_QUEUE_FULL,
+};
 use dnnfuser::coordinator::{MapRequest, Source};
 use dnnfuser::model::native::NativeConfig;
 use dnnfuser::model::ModelKind;
@@ -402,6 +407,221 @@ fn cache_capacity_config_is_respected() {
     let r = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
     assert_eq!(r.source, Source::Search, "capacity-1 cache must have evicted");
     assert_eq!(client.metrics().cache_size, 1);
+    svc.shutdown();
+}
+
+// --- Deadline-aware concurrent serving core ----------------------------
+//
+// Artifact-free: the native tiny model or the search fallback exercises
+// the admission queue, the deadline-aware batch former, the N-worker
+// engine pool, and graceful drain.
+
+#[test]
+fn expired_requests_are_shed_with_distinct_error() {
+    let svc = fallback_service();
+    let client = svc.client.clone();
+    // A good request racing the doomed one through the same batching
+    // window must be unaffected (sheds don't poison the batch).
+    let c2: MapperClient = client.clone();
+    let good = std::thread::spawn(move || c2.map(MapRequest::new("resnet18", 64, 24.0)));
+    let err = client
+        .map(MapRequest::new("vgg16", 64, 20.0).with_timeout(Duration::ZERO))
+        .unwrap_err();
+    assert!(err.to_string().contains(ERR_DEADLINE), "{err}");
+    let good = good.join().unwrap().unwrap();
+    assert_eq!(good.source, Source::Search);
+    assert_eq!(good.strategy.values.len(), 19);
+    let m = client.metrics();
+    assert!(m.shed >= 1, "shed counter not incremented: {}", m.shed);
+    assert_eq!(m.requests, 2, "both requests metered");
+    assert_eq!(m.cache_misses, 1, "shed request must not touch the cache");
+    // Service healthy afterwards; the shed condition was never cached.
+    let again = client.map(MapRequest::new("vgg16", 64, 20.0)).unwrap();
+    assert_eq!(again.source, Source::Search);
+    svc.shutdown();
+}
+
+#[test]
+fn generous_deadline_is_met_not_shed() {
+    // A deadline *shorter than the batching window* forces early dispatch:
+    // the request is served at its deadline, not shed at the window close.
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Native;
+    cfg.native_config = Some(NativeConfig::tiny());
+    cfg.batch_window = Duration::from_secs(2);
+    let svc = MapperService::spawn(cfg).expect("native spawn");
+    let t0 = Instant::now();
+    let r = svc
+        .client
+        .map(MapRequest::new("vgg16", 64, 24.0).with_timeout(Duration::from_millis(50)))
+        .expect("must be served, not shed");
+    assert_eq!(r.source, Source::Native);
+    assert!(
+        t0.elapsed() < Duration::from_secs(1),
+        "deadline did not cut the 2s batching window: {:?}",
+        t0.elapsed()
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn deadline_expiry_in_the_worker_queue_is_shed_not_served_stale() {
+    // A deadline bounds when service *starts*: a request dispatched in
+    // time but stuck behind a long-running batch in the worker hand-off
+    // must be shed by the worker's re-check, not served late.
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Search;
+    cfg.fallback_budget = 1_000_000; // the occupying search runs long
+    cfg.workers = 1;
+    cfg.max_batch = Some(1);
+    cfg.batch_window = Duration::ZERO;
+    let svc = MapperService::spawn(cfg).expect("fallback spawn");
+    let client = svc.client.clone();
+    // Occupy the single worker.
+    let c1: MapperClient = client.clone();
+    let slow = std::thread::spawn(move || c1.map(MapRequest::new("resnet50", 64, 32.0)));
+    std::thread::sleep(Duration::from_millis(30));
+    // Dispatched almost immediately (cutoff at 75% of 50ms), then waits
+    // in the hand-off queue far longer than its budget.
+    let err = client
+        .map(MapRequest::new("vgg16", 64, 24.0).with_timeout(Duration::from_millis(50)))
+        .unwrap_err();
+    assert!(err.to_string().contains(ERR_DEADLINE), "{err}");
+    assert!(slow.join().unwrap().is_ok());
+    let m = client.metrics();
+    assert!(m.shed >= 1, "worker-side shed not counted: {}", m.shed);
+    svc.shutdown();
+}
+
+#[test]
+fn shutdown_drains_admitted_requests_without_dropped_replies() {
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Search;
+    cfg.fallback_budget = 20_000; // slow enough that shutdown races the work
+    cfg.batch_window = Duration::from_millis(5);
+    let svc = MapperService::spawn(cfg).expect("fallback spawn");
+    let client = svc.client.clone();
+    let mut handles = Vec::new();
+    for i in 0..6 {
+        let c: MapperClient = client.clone();
+        handles.push(std::thread::spawn(move || {
+            c.map(MapRequest::new("vgg16", 64, 16.0 + i as f64))
+        }));
+    }
+    // Let every request be admitted, then stop while work is in flight.
+    std::thread::sleep(Duration::from_millis(100));
+    svc.shutdown();
+    for h in handles {
+        let r = h.join().unwrap();
+        assert!(r.is_ok(), "drain dropped an admitted reply: {:?}", r.err());
+    }
+}
+
+#[test]
+fn multi_worker_service_matches_single_worker_responses() {
+    // Same request set → same responses regardless of --workers: decode
+    // depends on (weights, env) only, search seeds on request content.
+    let reqs: &[(&str, f64)] = &[
+        ("vgg16", 16.0),
+        ("vgg16", 32.0),
+        ("resnet18", 24.0),
+        ("mobilenet_v2", 48.0),
+        ("mnasnet", 20.0),
+        ("resnet50", 40.0),
+    ];
+    let run = |workers: usize| {
+        let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+        cfg.backend = BackendChoice::Native;
+        cfg.native_config = Some(NativeConfig::tiny());
+        cfg.workers = workers;
+        cfg.batch_window = Duration::from_millis(5);
+        let svc = MapperService::spawn(cfg).expect("native spawn");
+        let client = svc.client.clone();
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|&(w, mem)| {
+                let c: MapperClient = client.clone();
+                let w = w.to_string();
+                std::thread::spawn(move || c.map(MapRequest::new(&w, 64, mem)).unwrap())
+            })
+            .collect();
+        let out: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                let r = h.join().unwrap();
+                (r.strategy, r.speedup)
+            })
+            .collect();
+        let m = client.metrics();
+        assert_eq!(m.requests, reqs.len() as u64, "workers={workers}: lost metrics");
+        assert_eq!(m.latency_for(Source::Search).count(), 0);
+        svc.shutdown();
+        out
+    };
+    assert_eq!(run(1), run(4));
+}
+
+#[test]
+fn full_admission_queue_applies_backpressure() {
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Search;
+    cfg.fallback_budget = 100_000; // keeps the single worker busy for a while
+    cfg.workers = 1;
+    cfg.queue_capacity = 1;
+    cfg.max_batch = Some(1);
+    cfg.batch_window = Duration::ZERO;
+    let svc = MapperService::spawn(cfg).expect("fallback spawn");
+    let client = svc.client.clone();
+    // 8 concurrent distinct requests. The pipeline absorbs at most 4
+    // (1 in the worker + 1 buffered batch + 1 held by the blocked
+    // dispatcher + 1 admission slot); the rest must be refused
+    // immediately with the backpressure error, not queued forever.
+    let handles: Vec<_> = (0..8)
+        .map(|i| {
+            let c: MapperClient = client.clone();
+            std::thread::spawn(move || c.map(MapRequest::new("vgg16", 64, 16.0 + i as f64)))
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let full = results
+        .iter()
+        .filter(|r| {
+            r.as_ref()
+                .err()
+                .is_some_and(|e| e.to_string().contains(ERR_QUEUE_FULL))
+        })
+        .count();
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    assert!(full >= 1, "no backpressure at queue_capacity=1: {results:?}");
+    assert_eq!(ok + full, 8, "unexpected hard errors: {results:?}");
+    let m = client.metrics();
+    assert_eq!(m.queue_full as usize, full);
+    assert_eq!(m.requests as usize, 8, "refused requests metered too");
+    svc.shutdown();
+}
+
+#[test]
+fn max_batch_override_caps_coalescing() {
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Native;
+    cfg.native_config = Some(NativeConfig::tiny());
+    cfg.max_batch = Some(2);
+    cfg.batch_window = Duration::from_millis(50);
+    let svc = MapperService::spawn(cfg).expect("native spawn");
+    let client = svc.client.clone();
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            let c: MapperClient = client.clone();
+            std::thread::spawn(move || c.map(MapRequest::new("vgg16", 64, 16.0 + i as f64)))
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    let m = client.metrics();
+    assert!(m.model_batches >= 3, "6 requests / cap 2: {}", m.model_batches);
+    let oversized: u64 = m.batch_occupancy.iter().skip(3).sum();
+    assert_eq!(oversized, 0, "batch former exceeded max_batch=2: {:?}", m.batch_occupancy);
     svc.shutdown();
 }
 

@@ -6,18 +6,55 @@ Usage:
     python3 scripts/check_bench_regression.py BENCH_native_infer.json \
         BENCH_baseline.json [--tolerance 0.20]
 
-Both files carry a "gates" object of {metric: number}. Gated metrics are
-machine-portable by construction (tokens-per-GFLOP normalized against an
-in-process matmul calibration, and the KV-vs-graph speedup ratio), so one
-committed baseline is meaningful across runner generations.
+The measured file carries a "bench" name and a "gates" object of
+{metric: number}. The baseline holds per-bench gate sets under
+"benches": {<bench>: {"gates": {...}}} (a legacy top-level "gates"
+object is still honored as a fallback), so one committed baseline file
+gates every bench without cross-contaminating their metric sets.
 
-Bootstrap: a baseline value of null means "not yet measured on CI" — the
-check prints the measured value (to be committed into BENCH_baseline.json)
-and passes. Only non-null baselines gate.
+A baseline gate is either:
+  - a number            → higher-is-better; fail when measured drops more
+                          than `tolerance` below it;
+  - {"value": number,
+     "direction": "lower",
+     "slack": number}
+                        → lower-is-better (latencies, shed rates); fail
+                          when measured rises more than `tolerance`
+                          above it *plus* the absolute `slack` (default
+                          0). Slack exists because a multiplicative
+                          tolerance is degenerate around 0.0 — a shed
+                          rate measured at 0.0 would otherwise arm a
+                          gate that fails on the first shed ever;
+  - null (either form)  → bootstrap: "not yet measured on CI" — the check
+                          prints the measured value (to be committed into
+                          BENCH_baseline.json) and passes.
+
+Gated metrics are machine-portable by construction (ratios of two
+measurements on the same host, or throughput normalized against an
+in-process matmul calibration), so one committed baseline is meaningful
+across runner generations.
 """
 import argparse
 import json
 import sys
+
+
+def gate_spec(raw):
+    """Normalize a baseline gate entry to (value-or-None, direction, slack)."""
+    if isinstance(raw, dict):
+        direction = raw.get("direction", "higher")
+        if direction not in ("higher", "lower"):
+            raise ValueError(f"bad gate direction {direction!r}")
+        return raw.get("value"), direction, float(raw.get("slack", 0.0))
+    return raw, "higher", 0.0
+
+
+def baseline_gates(baseline_doc, bench_name):
+    benches = baseline_doc.get("benches", {})
+    if bench_name and bench_name in benches:
+        return benches[bench_name].get("gates", {})
+    # Legacy layout: one flat gates object for every caller.
+    return baseline_doc.get("gates", {})
 
 
 def main() -> int:
@@ -29,13 +66,18 @@ def main() -> int:
     args = ap.parse_args()
 
     with open(args.measured) as f:
-        measured = json.load(f).get("gates", {})
+        measured_doc = json.load(f)
+    measured = measured_doc.get("gates", {})
+    bench_name = measured_doc.get("bench")
     with open(args.baseline) as f:
         baseline_doc = json.load(f)
-    baseline = baseline_doc.get("gates", {})
+    baseline = baseline_gates(baseline_doc, bench_name)
+    if bench_name:
+        print(f"gating bench `{bench_name}` ({len(baseline)} baseline gates)")
 
     failures = []
-    for key, base in sorted(baseline.items()):
+    for key, raw in sorted(baseline.items()):
+        base, direction, slack = gate_spec(raw)
         got = measured.get(key)
         if got is None:
             failures.append(f"{key}: missing from measured gates")
@@ -44,16 +86,27 @@ def main() -> int:
             print(f"BOOTSTRAP {key}: measured {got:.3f} — commit this into "
                   f"{args.baseline} to arm the gate")
             continue
-        floor = base * (1.0 - args.tolerance)
+        if direction == "higher":
+            bound = base * (1.0 - args.tolerance)
+            bad = got < bound
+            improved = got > base * (1.0 + args.tolerance)
+            relation = f"< floor {bound:.3f}"
+        else:
+            bound = base * (1.0 + args.tolerance) + slack
+            bad = got > bound
+            improved = got < base * (1.0 - args.tolerance)
+            relation = f"> ceiling {bound:.3f}"
         status = "OK"
-        if got < floor:
+        if bad:
             status = "FAIL"
             failures.append(
-                f"{key}: measured {got:.3f} < floor {floor:.3f} "
-                f"(baseline {base:.3f}, tolerance {args.tolerance:.0%})")
-        elif got > base * (1.0 + args.tolerance):
+                f"{key}: measured {got:.3f} {relation} "
+                f"(baseline {base:.3f}, {direction}-is-better, "
+                f"tolerance {args.tolerance:.0%})")
+        elif improved:
             status = "OK (improved — consider ratcheting the baseline)"
-        print(f"{key}: measured {got:.3f} vs baseline {base:.3f} → {status}")
+        print(f"{key}: measured {got:.3f} vs baseline {base:.3f} "
+              f"[{direction}] → {status}")
 
     extra = sorted(set(measured) - set(baseline))
     if extra:
