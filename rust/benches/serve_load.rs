@@ -56,7 +56,10 @@ fn dense_spec(seed: u64) -> LoadSpec {
 fn main() {
     println!("=== serving-core load bench ===\n");
     let quick = quick_mode();
-    let (scale_requests, open_secs) = if quick { (160, 2.0) } else { (800, 5.0) };
+    // The scaling arms keep a larger sample even in quick mode: the 4v1
+    // ratio is a wall-clock measurement gated against a 1.04 floor, and
+    // on a shared runner 160 requests per arm leaves it little margin.
+    let (scale_requests, open_secs) = if quick { (480, 2.0) } else { (800, 5.0) };
     let clients = 8;
 
     // --- Worker scaling: closed-loop saturation, per-request dispatch ---
@@ -119,8 +122,11 @@ fn main() {
             "gates",
             Json::obj(vec![
                 // Throughput ratio of the same workload on the same host:
-                // machine-portable, armed in BENCH_baseline.json. Must stay
-                // strictly above 1 — more workers must serve more.
+                // machine-portable, armed in BENCH_baseline.json. More
+                // workers must serve more; the tolerance-bearing baseline
+                // gate is the only CI check — a separate strict >1.0
+                // assert was removed as redundant (it could only fail
+                // once the 1.04-floor gate had already failed).
                 ("worker_scaling_4v1", Json::num(worker_scaling)),
                 // Lower-is-better gates (direction encoded in the
                 // baseline); bootstrap until CI-measured values land.

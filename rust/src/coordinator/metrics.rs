@@ -98,8 +98,12 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target.max(1) {
+                // The bucket's upper bound can overshoot the true maximum
+                // (a report showing p99 > max reads as a bug); clamp to the
+                // observed max so percentiles never exceed it. count > 0
+                // here, so max_ns is the real maximum of the samples.
                 let upper = self.base_ns * self.ratio.powi(i as i32 + 1);
-                return Duration::from_nanos(upper as u64);
+                return Duration::from_nanos(upper.min(self.max_ns) as u64);
             }
         }
         self.max()
@@ -121,9 +125,10 @@ pub struct Metrics {
     /// unknown or unrepresentable workload) before touching the cache
     /// or a backend.
     pub rejected: u64,
-    /// Requests shed because their deadline expired while they waited in
-    /// the admission queue — answered with a distinct error before they
-    /// could join a batch (see `service::ERR_DEADLINE`).
+    /// Requests shed because their deadline expired before service
+    /// started — either waiting in the admission queue, or already in a
+    /// formed batch waiting for a free worker — answered with a distinct
+    /// error (see `service::ERR_DEADLINE`).
     pub shed: u64,
     /// Requests refused at admission because the bounded queue was full
     /// (backpressure; see `service::ERR_QUEUE_FULL`).
@@ -135,6 +140,11 @@ pub struct Metrics {
     pub model_batches: u64,
     pub model_mapped: u64,
     pub invalid_responses: u64,
+    /// Requests that reached a backend and failed hard (inference error) —
+    /// answered with `Err`, so they appear in no latency histogram. Without
+    /// this counter such failures would only show up as an unexplained gap
+    /// between `requests` and the sum of the other counters.
+    pub errors: u64,
     /// Pooled latency over every answered request (kept for dashboards
     /// that want one number).
     pub latency: LatencyHistogram,
@@ -255,6 +265,7 @@ impl Metrics {
         self.model_batches += o.model_batches;
         self.model_mapped += o.model_mapped;
         self.invalid_responses += o.invalid_responses;
+        self.errors += o.errors;
         self.latency.merge_from(&o.latency);
         self.latency_native.merge_from(&o.latency_native);
         self.latency_pjrt.merge_from(&o.latency_pjrt);
@@ -270,13 +281,14 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         let mut s = format!(
-            "requests={} rejected={} shed={} queue_full={} cache_hits={} hit_rate={:.0}% \
-             cache_size={} batches={} mean_occupancy={:.2} invalid={} \
+            "requests={} rejected={} shed={} queue_full={} errors={} cache_hits={} \
+             hit_rate={:.0}% cache_size={} batches={} mean_occupancy={:.2} invalid={} \
              latency mean={:?} p50={:?} p95={:?} p99={:?} max={:?}",
             self.requests,
             self.rejected,
             self.shed,
             self.queue_full,
+            self.errors,
             self.cache_hits,
             100.0 * self.cache_hit_rate(),
             self.cache_size,
@@ -378,6 +390,24 @@ mod tests {
     }
 
     #[test]
+    fn percentile_never_exceeds_max() {
+        // The bucket upper bound can overshoot the true max; a dashboard
+        // showing p99 > max reads as a bug, so percentile clamps.
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(137));
+        for p in [0.5, 0.95, 0.99, 1.0] {
+            assert!(h.percentile(p) <= h.max(), "p{p}: {:?} > {:?}", h.percentile(p), h.max());
+        }
+        assert_eq!(h.percentile(0.99), Duration::from_micros(137));
+        // Sub-microsecond samples land below the first bucket's upper
+        // bound (base_ns); the clamp must still hold there.
+        let mut tiny = LatencyHistogram::default();
+        tiny.record(Duration::from_nanos(500));
+        assert_eq!(tiny.percentile(0.99), Duration::from_nanos(500));
+        assert!(tiny.percentile(0.99) <= tiny.max());
+    }
+
+    #[test]
     fn empty_histogram_is_zero() {
         let h = LatencyHistogram::default();
         assert_eq!(h.percentile(0.99), Duration::ZERO);
@@ -458,6 +488,7 @@ mod tests {
             "rejected=",
             "shed=",
             "queue_full=",
+            "errors=",
             "p95=",
             "p99=",
             "mean_occupancy=",
@@ -511,12 +542,14 @@ mod tests {
         let mut b = Metrics::new(8);
         b.requests = 4;
         b.queue_full = 2;
+        b.errors = 5;
         b.record_batch(7);
         b.record_latency(Source::Native, Duration::from_micros(10));
         a.merge_from(&b);
         assert_eq!(a.requests, 7);
         assert_eq!(a.shed, 1);
         assert_eq!(a.queue_full, 2);
+        assert_eq!(a.errors, 5);
         assert_eq!(a.model_batches, 2);
         assert_eq!(a.model_mapped, 9);
         assert_eq!(a.batch_occupancy[2], 1);

@@ -703,7 +703,7 @@ fn engine_worker(
     work: Arc<Mutex<Receiver<Batch>>>,
     hub: Arc<MetricsHub>,
     cache: Arc<Mutex<MappingCache>>,
-    ready: Sender<Result<usize, String>>,
+    ready: Sender<Result<(usize, Source), String>>,
 ) {
     let backend = match build_backend(&cfg, raw.as_deref(), idx == 0) {
         Ok(b) => b,
@@ -712,6 +712,11 @@ fn engine_worker(
             return;
         }
     };
+    // The raw checkpoint (weights + Adam moments, 3x params) is only
+    // needed to construct the backend; drop this worker's handle so the
+    // last worker to finish startup frees it, instead of every worker
+    // pinning it for the service's lifetime.
+    drop(raw);
     let n_workers = cfg.workers.max(1);
     let max_batch = backend.max_batch(n_workers);
     let shard = hub.shard(MetricsHub::WORKER0 + idx);
@@ -720,6 +725,11 @@ fn engine_worker(
     let effective_max = cfg.max_batch.map_or(max_batch, |c| c.min(max_batch));
     shard.lock().expect("metrics").ensure_batch_capacity(effective_max);
     let _ = ready.send(Ok((max_batch, backend.source())));
+    // Drop the readiness sender now rather than holding it for the serve
+    // loop's lifetime: if a sibling worker panics before reporting, the
+    // channel must close once every live worker has reported so spawn's
+    // recv() sees the disconnect instead of blocking forever.
+    drop(ready);
 
     // One worker: fan each batch per-sequence over the shared pool.
     // Several workers: decode serially in-worker — the workers are the
@@ -823,34 +833,47 @@ fn serve_batch(
             // exists to keep N workers from contending for that pool)
             // must never apply to it.
             let batched = intra_parallel || rt.backend() == BackendKind::Pjrt;
-            let trajs = if batched {
+            let results: Vec<Result<_, String>> = if batched {
+                // One lock-step executable call: a failure here really is
+                // batch-wide, so every co-traveller gets the error.
                 let env_refs: Vec<&FusionEnv> = envs.iter().collect();
-                model.infer_batch(rt, &env_refs)
+                match model.infer_batch(rt, &env_refs) {
+                    Ok(trajs) => trajs.into_iter().map(Ok).collect(),
+                    Err(e) => {
+                        let msg = format!("inference failed: {e:#}");
+                        jobs.iter().map(|_| Err(msg.clone())).collect()
+                    }
+                }
             } else {
+                // Per-sequence serial decodes: each request succeeds or
+                // fails on its own — one bad decode must not discard the
+                // batch's already-completed trajectories.
                 envs.iter()
                     .map(|env| {
                         model
                             .infer_batch(rt, &[env])
                             .map(|mut v| v.pop().expect("one trajectory"))
+                            .map_err(|e| format!("inference failed: {e:#}"))
                     })
                     .collect()
             };
-            match trajs {
-                Ok(trajs) => {
-                    shard.lock().expect("metrics").record_batch(jobs.len());
-                    for ((job, _, key), traj) in jobs.into_iter().zip(trajs) {
+            let decoded = results.iter().filter(|r| r.is_ok()).count();
+            if decoded > 0 {
+                shard.lock().expect("metrics").record_batch(decoded);
+            }
+            for ((job, _, key), res) in jobs.into_iter().zip(results) {
+                match res {
+                    Ok(traj) => {
                         let act_mb = traj.peak_act_bytes as f64 / MB;
                         let result = (traj.strategy, traj.speedup, act_mb, traj.valid);
                         respond(shard, cache, job, key, result, model_source);
                     }
-                }
-                Err(e) => {
-                    let msg = format!("inference failed: {e:#}");
-                    let mut m = shard.lock().expect("metrics");
-                    m.requests += jobs.len() as u64;
-                    drop(m);
-                    for (job, _, _) in jobs {
-                        let _ = job.reply.send(Err(msg.clone()));
+                    Err(msg) => {
+                        let mut m = shard.lock().expect("metrics");
+                        m.requests += 1;
+                        m.errors += 1;
+                        drop(m);
+                        let _ = job.reply.send(Err(msg));
                     }
                 }
             }

@@ -586,6 +586,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             ("cache_misses", Json::num(m.cache_misses as f64)),
             ("cache_size", Json::num(m.cache_size as f64)),
             ("invalid_responses", Json::num(m.invalid_responses as f64)),
+            ("errors", Json::num(m.errors as f64)),
             ("model_batches", Json::num(m.model_batches as f64)),
             ("mean_batch_occupancy", Json::num(m.mean_batch_occupancy())),
             ("throughput_per_sec", Json::num(report.throughput)),

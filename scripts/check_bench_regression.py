@@ -10,7 +10,10 @@ The measured file carries a "bench" name and a "gates" object of
 {metric: number}. The baseline holds per-bench gate sets under
 "benches": {<bench>: {"gates": {...}}} (a legacy top-level "gates"
 object is still honored as a fallback), so one committed baseline file
-gates every bench without cross-contaminating their metric sets.
+gates every bench without cross-contaminating their metric sets. A bench
+with no entry under "benches" is a hard failure, not an empty gate set —
+a renamed or brand-new bench must get a baseline entry (null values
+bootstrap) rather than pass vacuously.
 
 A baseline gate is either:
   - a number            → higher-is-better; fail when measured drops more
@@ -50,9 +53,14 @@ def gate_spec(raw):
 
 
 def baseline_gates(baseline_doc, bench_name):
-    benches = baseline_doc.get("benches", {})
-    if bench_name and bench_name in benches:
-        return benches[bench_name].get("gates", {})
+    """Gate set for `bench_name`, or None when the baseline has no entry
+    for it — callers must treat None as a hard failure, not an empty gate
+    set, or a renamed/new bench would pass vacuously with zero gates."""
+    benches = baseline_doc.get("benches")
+    if benches is not None:
+        if bench_name and bench_name in benches:
+            return benches[bench_name].get("gates", {})
+        return None
     # Legacy layout: one flat gates object for every caller.
     return baseline_doc.get("gates", {})
 
@@ -72,6 +80,12 @@ def main() -> int:
     with open(args.baseline) as f:
         baseline_doc = json.load(f)
     baseline = baseline_gates(baseline_doc, bench_name)
+    if baseline is None:
+        print(f"PERF GATE FAILED: {args.baseline} has no gate set for bench "
+              f"{bench_name!r} — add a `benches.{bench_name}.gates` entry "
+              "(null values bootstrap) instead of shipping ungated",
+              file=sys.stderr)
+        return 1
     if bench_name:
         print(f"gating bench `{bench_name}` ({len(baseline)} baseline gates)")
 
