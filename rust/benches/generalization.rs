@@ -1,0 +1,157 @@
+//! Condition-generalization bench → `BENCH_generalization.json`.
+//!
+//! The paper's claim is that a trained mapper "can generalize its
+//! knowledge and infer new solutions for unseen conditions"; this bench
+//! makes that a regression-gated number (DESIGN.md §11). Fully
+//! self-contained and artifact-free:
+//!
+//! 1. collect a teacher dataset at the *training* memory conditions
+//!    (pool-parallel G-Sampler, deterministic per seed);
+//! 2. imitation-train a tiny native model on it in-process
+//!    (bit-reproducible — see DESIGN.md §7);
+//! 3. sweep a **held-out** grid — interpolated budgets between the
+//!    training conditions, extrapolated budgets outside them, and
+//!    perturbed accelerator rate points — via `eval::generalization`;
+//! 4. emit per-point and aggregate gap-to-search, feasibility rate and
+//!    inference-vs-search wall speedup, with the CI gates
+//!    (`aggregate_gap` lower-is-better, `feasibility_rate` floor,
+//!    `inference_vs_search_speedup`) and the shared `meta` block.
+//!
+//! Quick mode for CI: set `DNNFUSER_BENCH_QUICK=1`. The regression gate
+//! is `scripts/check_bench_regression.py` against `BENCH_baseline.json`.
+//! The `eval --sweep` CLI writes the same schema from an on-disk
+//! checkpoint; this bench is the no-setup local/CI entry point.
+
+use dnnfuser::bench_support::{bench_budget, bench_steps, teacher_runs};
+use dnnfuser::eval::generalization::{self, GridSpec, HwPerturb};
+use dnnfuser::model::native::NativeConfig;
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::Runtime;
+use dnnfuser::trajectory::ReplayBuffer;
+use dnnfuser::util::pool::ThreadPool;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::{zoo, Workload, WorkloadRegistry};
+
+fn quick_mode() -> bool {
+    std::env::var("DNNFUSER_BENCH_QUICK")
+        .ok()
+        .is_some_and(|v| v != "0" && !v.is_empty())
+}
+
+fn main() {
+    println!("=== condition-generalization bench ===\n");
+    let quick = quick_mode();
+    // Training conditions (declared in the grid as `train_mems`) and the
+    // corpus/training budgets. Quick mode trades teacher quality for CI
+    // wall time; the held-out structure of the grid is identical.
+    let workloads: &[&str] = if quick {
+        &["vgg16"]
+    } else {
+        &["vgg16", "resnet18"]
+    };
+    let teacher_budget = if quick { 200 } else { bench_budget() };
+    let runs_per_cond = if quick { 2 } else { 3 };
+    let train_steps = if quick { 30 } else { bench_steps() };
+    let train_mems = [16.0, 32.0, 48.0];
+
+    // 1. Teacher demonstrations at the training conditions.
+    let mut rng = Rng::seed_from_u64(11);
+    let mut jobs: Vec<(Workload, f64, Rng)> = Vec::new();
+    for wname in workloads {
+        let w = zoo::by_name(wname).expect("zoo workload");
+        for &mem in &train_mems {
+            for _ in 0..runs_per_cond {
+                jobs.push((w.clone(), mem, rng.fork()));
+            }
+        }
+    }
+    println!(
+        "    collecting {} demonstrations (budget {teacher_budget}, {} pool workers)…",
+        jobs.len(),
+        ThreadPool::shared().size()
+    );
+    let mut dataset = ReplayBuffer::new(4096);
+    for (traj, _wall_s) in teacher_runs(jobs, 64, teacher_budget) {
+        dataset.push(traj);
+    }
+    println!(
+        "    dataset: {} demonstrations, mean speedup {:.2}",
+        dataset.len(),
+        dataset.mean_speedup()
+    );
+
+    // 2. Train the tiny native model in-process (no artifacts).
+    let rt = Runtime::load_native("artifacts", Some(NativeConfig::tiny())).expect("native runtime");
+    let mut model = MapperModel::init(&rt, ModelKind::Df, 0).expect("init");
+    let mut train_rng = Rng::seed_from_u64(0);
+    let t0 = std::time::Instant::now();
+    let trained = model.train(&rt, &dataset, train_steps, &mut train_rng, |i, loss| {
+        if i % 10 == 0 || i + 1 == train_steps {
+            println!("    train step {i:>4}  loss {loss:.5}");
+        }
+    });
+    trained.expect("train");
+    println!("    trained {train_steps} steps in {:.1}s\n", t0.elapsed().as_secs_f64());
+
+    // 3. The held-out grid: interior budgets of each training gap,
+    // budgets outside the range (both above 14 MB, VGG16's minimum
+    // representable condition), and two rate perturbations.
+    let spec = GridSpec {
+        workloads: workloads.iter().map(|s| s.to_string()).collect(),
+        batch: 64,
+        train_mems: train_mems.to_vec(),
+        interpolate_per_gap: 1,
+        extrapolate_mems: vec![14.0, 72.0],
+        hw_perturbs: vec![
+            HwPerturb {
+                label: "bw_off_x0.5".into(),
+                bw_off_scale: 0.5,
+                bw_on_scale: 1.0,
+                freq_scale: 1.0,
+                t_switch_scale: 1.0,
+            },
+            HwPerturb {
+                label: "freq_x1.5".into(),
+                bw_off_scale: 1.0,
+                bw_on_scale: 1.0,
+                freq_scale: 1.5,
+                t_switch_scale: 1.0,
+            },
+        ],
+        search_budget: teacher_budget,
+        seed: 17,
+    };
+    let registry = WorkloadRegistry::with_zoo();
+    let report = generalization::run_sweep(&rt, &model, &registry, &spec).expect("sweep");
+
+    for pt in &report.points {
+        println!(
+            "    {:>10} mem={:>5.1}MB {:<13} hw={:<12} model={} search={:.2} gap={} {}",
+            pt.workload,
+            pt.mem_mb,
+            pt.kind.name(),
+            pt.hw_label,
+            pt.model_speedup.map_or("err".into(), |s| format!("{s:.2}")),
+            pt.search_speedup,
+            pt.gap.map_or("-".into(), |g| format!("{g:+.3}")),
+            pt.speedup_vs_search.map_or(String::new(), |x| format!("({x:.0}x faster)")),
+        );
+    }
+    println!(
+        "\n    → points={} feasibility={:.0}% mean_gap={:+.3} worst_gap={:+.3} \
+         inference_vs_search={:.0}x",
+        report.n_points,
+        100.0 * report.feasibility_rate,
+        report.mean_gap,
+        report.worst_gap,
+        report.speedup_vs_search_geomean,
+    );
+
+    // 4. Emit the gate-carrying document.
+    let doc = generalization::bench_doc(&report, &spec, rt.backend().name(), quick);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_generalization.json");
+    match std::fs::write(path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -20,7 +20,7 @@ use dnnfuser::env::FusionEnv;
 use dnnfuser::model::native::{decoder, ops, NativeConfig, NativeEngine};
 use dnnfuser::model::{MapperModel, ModelKind};
 use dnnfuser::runtime::Runtime;
-use dnnfuser::util::bench::{black_box, Bencher};
+use dnnfuser::util::bench::{black_box, fnv1a, meta_json, Bencher};
 use dnnfuser::util::json::Json;
 use dnnfuser::util::pool::ThreadPool;
 use dnnfuser::workload::zoo;
@@ -134,8 +134,15 @@ fn main() {
     println!("    → KV cache vs graph recompute: {kv_vs_graph_speedup:.1}x\n");
 
     let row_refs: Vec<(&str, Json)> = rows.iter().map(|(n, j)| (n.as_str(), j.clone())).collect();
+    let meta_hash = fnv1a(&[
+        cfg.d_model as u64,
+        cfg.n_blocks as u64,
+        cfg.n_heads as u64,
+        quick as u64,
+    ]);
     let doc = Json::obj(vec![
         ("bench", Json::str("native_infer")),
+        ("meta", meta_json(meta_hash)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::num(ThreadPool::shared().size() as f64)),
         (

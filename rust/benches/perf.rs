@@ -23,7 +23,7 @@ use dnnfuser::fusion::{ActionCodec, Strategy, SYNC};
 use dnnfuser::model::{MapperModel, ModelKind};
 use dnnfuser::search::{gsampler::GSampler, FusionProblem, Optimizer};
 use dnnfuser::trajectory::ReplayBuffer;
-use dnnfuser::util::bench::{black_box, Bencher, Stats};
+use dnnfuser::util::bench::{black_box, fnv1a, meta_json, Bencher, Stats};
 use dnnfuser::util::json::Json;
 use dnnfuser::util::pool::ThreadPool;
 use dnnfuser::util::rng::Rng;
@@ -200,8 +200,10 @@ fn main() {
             .iter()
             .map(|(name, j)| (name.as_str(), j.clone()))
             .collect();
+        let meta_hash = fnv1a(&[ThreadPool::shared().size() as u64]);
         let doc = Json::obj(vec![
             ("bench", Json::str("eval_throughput")),
+            ("meta", meta_json(meta_hash)),
             ("threads", Json::num(ThreadPool::shared().size() as f64)),
             (
                 "definitions",

@@ -24,6 +24,7 @@ use std::time::Duration;
 use dnnfuser::coordinator::loadgen::{self, LoadSpec};
 use dnnfuser::coordinator::service::{BackendChoice, MapperService, ServiceConfig};
 use dnnfuser::model::native::NativeConfig;
+use dnnfuser::util::bench::{fnv1a, meta_json};
 use dnnfuser::util::json::Json;
 use dnnfuser::util::pool::ThreadPool;
 
@@ -97,8 +98,15 @@ fn main() {
     );
     svc.shutdown();
 
+    let meta_hash = fnv1a(&[
+        scale_requests as u64,
+        open_secs.to_bits(),
+        clients as u64,
+        quick as u64,
+    ]);
     let doc = Json::obj(vec![
         ("bench", Json::str("serve_load")),
+        ("meta", meta_json(meta_hash)),
         ("quick", Json::Bool(quick)),
         ("threads", Json::num(ThreadPool::shared().size() as f64)),
         (

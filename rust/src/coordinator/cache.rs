@@ -32,12 +32,14 @@ pub struct Key {
     /// Content hash of the request's hardware config (buffer excluded —
     /// the condition carries it).
     pub hw_hash: u64,
+    /// Input batch size of the request.
     pub batch: usize,
-    /// mem_cond_mb * 4, rounded.
+    /// `mem_cond_mb * 4`, rounded.
     pub mem_q: u64,
 }
 
 impl Key {
+    /// Build a key, quantizing the condition to 0.25 MB steps.
     pub fn new(workload_hash: u64, hw_hash: u64, batch: usize, mem_cond_mb: f64) -> Key {
         Key {
             workload_hash,
@@ -48,11 +50,17 @@ impl Key {
     }
 }
 
+/// A cached resolved mapping (everything a [`crate::coordinator::MapResponse`]
+/// needs except its source/latency, which are per-request).
 #[derive(Debug, Clone)]
 pub struct Entry {
+    /// The resolved fusion strategy.
     pub strategy: Strategy,
+    /// Its speedup over the no-fusion baseline under the keyed condition.
     pub speedup: f64,
+    /// Its peak activation staging (MB).
     pub act_usage_mb: f64,
+    /// Whether it fits the keyed condition.
     pub valid: bool,
 }
 
@@ -61,11 +69,15 @@ pub struct MappingCache {
     capacity: usize,
     clock: u64,
     map: HashMap<Key, (Entry, u64)>,
+    /// Lookups answered from the cache (single source of truth — metrics
+    /// snapshots copy this counter at read time).
     pub hits: u64,
+    /// Lookups that fell through to a backend.
     pub misses: u64,
 }
 
 impl MappingCache {
+    /// An empty cache bounded at `capacity` entries (floored at 1).
     pub fn new(capacity: usize) -> Self {
         MappingCache {
             capacity: capacity.max(1),
@@ -76,14 +88,18 @@ impl MappingCache {
         }
     }
 
+    /// Current number of cached mappings.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether the cache holds no entries.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
+    /// Look a key up, refreshing its LRU stamp and counting the
+    /// hit/miss.
     pub fn get(&mut self, key: &Key) -> Option<Entry> {
         self.clock += 1;
         let clock = self.clock;
@@ -100,6 +116,8 @@ impl MappingCache {
         }
     }
 
+    /// Insert (or update) a mapping, evicting the least-recently-used
+    /// entry on overflow.
     pub fn put(&mut self, key: Key, entry: Entry) {
         self.clock += 1;
         if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
@@ -116,6 +134,7 @@ impl MappingCache {
         self.map.insert(key, (entry, self.clock));
     }
 
+    /// Hit rate over all lookups (0.0 before the first lookup).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {

@@ -88,9 +88,25 @@ pub enum Outcome {
     Dropped,
 }
 
-/// Classify one reply; hard errors keep their message (sheds and
-/// backpressure are expected load outcomes, not diagnostics).
-fn classify(result: &anyhow::Result<super::MapResponse>) -> (Outcome, Option<String>) {
+impl Outcome {
+    /// Stable lower-case tag for reports and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Outcome::Served => "served",
+            Outcome::Shed => "shed",
+            Outcome::QueueFull => "queue_full",
+            Outcome::Error => "error",
+            Outcome::Dropped => "dropped",
+        }
+    }
+}
+
+/// Classify one reply into an [`Outcome`] by its error text; hard errors
+/// keep their message (sheds and backpressure are expected load
+/// outcomes, not diagnostics). Shared by the load harness and the
+/// generalization sweep ([`crate::eval::generalization`]) so per-request
+/// and per-point error accounting agree.
+pub fn classify<T>(result: &anyhow::Result<T>) -> (Outcome, Option<String>) {
     match result {
         Ok(_) => (Outcome::Served, None),
         Err(e) => {
@@ -111,19 +127,31 @@ fn classify(result: &anyhow::Result<super::MapResponse>) -> (Outcome, Option<Str
 pub struct LoadReport {
     /// Generator discipline ("closed" / "open").
     pub mode: &'static str,
+    /// Requests the generator offered (including its own drops).
     pub offered: usize,
+    /// Requests answered with a mapping.
     pub served: usize,
+    /// Requests shed by the service (deadline expired before service).
     pub shed: usize,
+    /// Requests refused at admission (bounded queue full).
     pub queue_full: usize,
+    /// Requests that failed hard (see [`LoadReport::error_samples`]).
     pub errors: usize,
+    /// Requests the generator dropped at its own in-flight cap.
     pub dropped: usize,
+    /// Wall time of the run, seconds.
     pub elapsed_s: f64,
     /// Served requests per second of wall time.
     pub throughput: f64,
+    /// Mean served latency, ms.
     pub mean_ms: f64,
+    /// Median served latency, ms.
     pub p50_ms: f64,
+    /// 95th-percentile served latency, ms.
     pub p95_ms: f64,
+    /// 99th-percentile served latency, ms.
     pub p99_ms: f64,
+    /// Worst served latency, ms.
     pub max_ms: f64,
     /// Up to five distinct hard-error messages, so a nonzero `errors`
     /// count is diagnosable from the report (and from CI logs) without

@@ -45,6 +45,7 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Record one latency sample.
     pub fn record(&mut self, d: Duration) {
         let ns = d.as_nanos() as f64;
         let idx = if ns <= self.base_ns {
@@ -73,10 +74,12 @@ impl LatencyHistogram {
         self.max_ns = self.max_ns.max(other.max_ns);
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Mean of the recorded samples ([`Duration::ZERO`] when empty).
     pub fn mean(&self) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -84,6 +87,7 @@ impl LatencyHistogram {
         Duration::from_nanos((self.sum_ns / self.count as f64) as u64)
     }
 
+    /// Largest recorded sample.
     pub fn max(&self) -> Duration {
         Duration::from_nanos(self.max_ns as u64)
     }
@@ -120,6 +124,8 @@ impl LatencyHistogram {
 /// never double-count it).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
+    /// Total requests that reached a definitive outcome (served,
+    /// rejected, shed, refused at admission, or failed hard).
     pub requests: u64,
     /// Requests rejected by validation (malformed condition/batch,
     /// unknown or unrepresentable workload) before touching the cache
@@ -133,12 +139,19 @@ pub struct Metrics {
     /// Requests refused at admission because the bounded queue was full
     /// (backpressure; see `service::ERR_QUEUE_FULL`).
     pub queue_full: u64,
+    /// Lookups answered from the mapping cache (copied from the cache at
+    /// snapshot time — see the type-level docs).
     pub cache_hits: u64,
+    /// Lookups that fell through to a backend (copied from the cache).
     pub cache_misses: u64,
     /// Current number of cached mappings.
     pub cache_size: usize,
+    /// Backend decode/search batches dispatched.
     pub model_batches: u64,
+    /// Requests mapped across those batches (occupancy numerator).
     pub model_mapped: u64,
+    /// Served responses whose strategy did not fit the requested
+    /// condition (unsatisfiable conditions answered honestly).
     pub invalid_responses: u64,
     /// Requests that reached a backend and failed hard (inference error) —
     /// answered with `Err`, so they appear in no latency histogram. Without
@@ -153,8 +166,11 @@ pub struct Metrics {
     /// must not be pooled into one histogram or the 66x-class gap
     /// disappears into the mean).
     pub latency_native: LatencyHistogram,
+    /// Latency of answers decoded by the PJRT (AOT executable) backend.
     pub latency_pjrt: LatencyHistogram,
+    /// Latency of answers produced by the G-Sampler search path.
     pub latency_search: LatencyHistogram,
+    /// Latency of answers served from the mapping cache.
     pub latency_cache: LatencyHistogram,
     /// Histogram over decode batch occupancy (index = rows used). Grows
     /// on demand: a batch larger than the current histogram extends it
@@ -163,6 +179,8 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh metrics with the occupancy histogram pre-sized for
+    /// `max_batch`.
     pub fn new(max_batch: usize) -> Metrics {
         Metrics {
             batch_occupancy: vec![0; max_batch + 1],
@@ -186,6 +204,7 @@ impl Metrics {
         self.latency_for_mut(source).record(d);
     }
 
+    /// The latency histogram of one backend source.
     pub fn latency_for(&self, source: Source) -> &LatencyHistogram {
         match source {
             Source::Native => &self.latency_native,
@@ -223,6 +242,7 @@ impl Metrics {
         Some(s / n)
     }
 
+    /// Record one dispatched batch's occupancy (rows actually used).
     pub fn record_batch(&mut self, used_rows: usize) {
         self.model_batches += 1;
         self.model_mapped += used_rows as u64;
@@ -232,6 +252,7 @@ impl Metrics {
         self.batch_occupancy[used_rows] += 1;
     }
 
+    /// Mean decode-batch occupancy (0.0 before the first batch).
     pub fn mean_batch_occupancy(&self) -> f64 {
         if self.model_batches == 0 {
             return 0.0;
@@ -279,6 +300,8 @@ impl Metrics {
         }
     }
 
+    /// One printable summary line (counters, hit rate, percentiles, and
+    /// per-backend splits for every source with samples).
     pub fn report(&self) -> String {
         let mut s = format!(
             "requests={} rejected={} shed={} queue_full={} errors={} cache_hits={} \
@@ -350,6 +373,7 @@ impl MetricsHub {
         }
     }
 
+    /// Number of shards (admission + dispatch + one per worker).
     pub fn shards(&self) -> usize {
         self.shards.len()
     }

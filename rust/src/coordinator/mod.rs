@@ -28,6 +28,11 @@
 //!
 //! Python never runs here; the service threads are self-contained after
 //! `Runtime::load`.
+//!
+//! This tree is the serving API surface, so every public item is
+//! documented and the lint below keeps it that way (CI's
+//! `cargo doc --no-deps` runs with `-D warnings`).
+#![warn(missing_docs)]
 
 pub mod cache;
 pub mod loadgen;
@@ -46,9 +51,12 @@ pub struct MapRequest {
     /// layer list — the service resolves it through its
     /// [`crate::workload::WorkloadRegistry`].
     pub workload: WorkloadSpec,
+    /// Input batch size the mapping is for.
     pub batch: usize,
     /// Available on-chip buffer right now, MB (the HW condition).
     pub mem_cond_mb: f64,
+    /// The accelerator the mapping targets (defaults to the paper config;
+    /// client-supplied configs are validated before touching any state).
     pub hw: HwConfig,
     /// Optional deadline budget: service must *start* within this much
     /// time of the request being enqueued. The batch former dispatches a
@@ -95,6 +103,7 @@ pub enum Source {
     Native,
     /// One-shot inference through the PJRT (AOT executable) backend.
     Model,
+    /// Answered from the mapping cache (a previously resolved condition).
     Cache,
     /// Search fallback: answered by a (pool-parallel, engine-accelerated)
     /// G-Sampler search — either requested explicitly
@@ -104,6 +113,7 @@ pub enum Source {
 }
 
 impl Source {
+    /// Stable lower-case tag for metrics and JSON reports.
     pub fn name(&self) -> &'static str {
         match self {
             Source::Native => "native",
@@ -117,10 +127,17 @@ impl Source {
 /// The answer.
 #[derive(Debug, Clone)]
 pub struct MapResponse {
+    /// The resolved fusion strategy.
     pub strategy: Strategy,
+    /// Its speedup over the no-fusion baseline under the request's
+    /// condition.
     pub speedup: f64,
+    /// Its peak activation staging (MB) under the condition.
     pub act_usage_mb: f64,
+    /// Whether the strategy fits the conditioned buffer. Unsatisfiable
+    /// conditions are answered honestly (`false`) rather than failed.
     pub valid: bool,
+    /// Which backend (or the cache) produced this answer.
     pub source: Source,
     /// End-to-end service latency for this request.
     pub latency: std::time::Duration,

@@ -105,6 +105,7 @@ pub enum BackendChoice {
 }
 
 impl BackendChoice {
+    /// Parse the CLI `--backend` spelling (`auto|native|pjrt|search`).
     pub fn by_name(name: &str) -> Option<BackendChoice> {
         match name.to_ascii_lowercase().as_str() {
             "auto" => Some(BackendChoice::Auto),
@@ -119,6 +120,8 @@ impl BackendChoice {
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
+    /// Where the AOT artifacts live (PJRT backend; the native backend
+    /// reads its manifest constants from here when present).
     pub artifacts_dir: PathBuf,
     /// Backend selection policy (default: model preferred, PJRT → native).
     pub backend: BackendChoice,
@@ -130,12 +133,16 @@ pub struct ServiceConfig {
     /// (useful for wiring tests and demos). Read from disk exactly once
     /// at spawn, shared by every worker.
     pub checkpoint: Option<PathBuf>,
+    /// Which sequence model the service runs (`df` or the s2s baseline).
     pub model: ModelKind,
     /// How long the batch former waits for co-travellers after the first
     /// request of a batch. An earlier per-request deadline shortens the
     /// wait; it never lengthens it.
     pub batch_window: Duration,
+    /// Mapping-cache bound (entries; LRU eviction on overflow).
     pub cache_capacity: usize,
+    /// Init seed for the freshly-initialized model when no checkpoint is
+    /// configured.
     pub init_seed: i32,
     /// Parallel engine workers (≥ 1). Each owns a backend handle; the
     /// admission queue, dispatcher, cache, registry and metrics are
@@ -170,6 +177,9 @@ pub struct ServiceConfig {
 }
 
 impl ServiceConfig {
+    /// Defaults: auto backend, fresh-init DNNFuser model, 2 ms batching
+    /// window, one worker, 1024-entry queue and cache, no search
+    /// fallback.
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> Self {
         ServiceConfig {
             artifacts_dir: artifacts_dir.into(),
@@ -332,6 +342,8 @@ pub struct MapperClient {
 
 /// The running service: client handle + the dispatcher and worker joins.
 pub struct MapperService {
+    /// Handle for submitting requests and reading metrics (cheap to
+    /// clone; clones stay valid until `shutdown`).
     pub client: MapperClient,
     dispatcher: JoinHandle<()>,
     workers: Vec<JoinHandle<()>>,

@@ -24,6 +24,15 @@ pub const T_MAX: usize = 65;
 /// Reference memory for normalization: the full 64 MB buffer.
 pub const MEM_REF_BYTES: f64 = 64.0 * MB;
 
+/// Ceiling on the conditioning token: budgets beyond
+/// `MAX_RTG · MEM_REF_BYTES` (16× the full buffer, i.e. 1 GB) clamp
+/// instead of scaling the condition embedding without bound. Training
+/// conditions all sit in (0, 1]; far-out-of-range serving requests
+/// therefore encode deterministically at the ceiling rather than pushing
+/// the embedding arbitrarily far off the training manifold (the
+/// generalization sweep's extrapolation axis relies on this).
+pub const MAX_RTG: f32 = 16.0;
+
 /// A complete (reward, state, action) trajectory in encoded (model-side)
 /// form plus the decoded strategy it produced.
 #[derive(Debug, Clone)]
@@ -118,9 +127,11 @@ impl FusionEnv {
         self.workload.n_layers() + 1
     }
 
-    /// The constant conditioning-reward token (requested memory, normalized).
+    /// The constant conditioning-reward token (requested memory,
+    /// normalized by [`MEM_REF_BYTES`] and clamped to `[0, MAX_RTG]` so
+    /// out-of-range budgets encode deterministically).
     pub fn rtg_token(&self) -> f32 {
-        (self.mem_cond_bytes / MEM_REF_BYTES) as f32
+        ((self.mem_cond_bytes / MEM_REF_BYTES) as f32).clamp(0.0, MAX_RTG)
     }
 
     /// Smallest condition (bytes) under which this workload is mappable at
@@ -439,6 +450,19 @@ mod tests {
         let e64 = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 64.0);
         assert!((e16.rtg_token() - 0.25).abs() < 1e-6);
         assert!((e64.rtg_token() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rtg_token_clamps_far_out_of_range_conditions() {
+        // 16× the reference buffer is the ceiling; anything beyond encodes
+        // identically (deterministic, bounded) instead of scaling forever.
+        let at = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 1024.0);
+        let beyond = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 4096.0);
+        assert_eq!(at.rtg_token(), MAX_RTG);
+        assert_eq!(beyond.rtg_token(), MAX_RTG);
+        // Below-training-range budgets stay linear (and finite).
+        let small = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 0.25);
+        assert!(small.rtg_token() > 0.0 && small.rtg_token() < 0.01);
     }
 
     #[test]

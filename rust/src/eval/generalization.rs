@@ -1,0 +1,1115 @@
+//! Condition-generalization sweep: measure how well a trained mapper
+//! transfers to serving conditions it never saw (DESIGN.md §11).
+//!
+//! DNNFuser's headline claim is that the learned mapper "can generalize
+//! its knowledge and infer new solutions for unseen conditions" at
+//! search-beating wall-clock. Serving unseen conditions is necessary but
+//! not sufficient evidence — this harness makes the claim *measured*:
+//!
+//! - a [`GridSpec`] names the training memory conditions and derives
+//!   **held-out** points from them: interpolated budgets (interior points
+//!   of each adjacent training gap), extrapolated budgets (outside the
+//!   training range), and perturbed accelerator rate points
+//!   ([`HwPerturb`], applied to the paper config) — the two
+//!   generalization axes the paper evaluates (Tables 2–3, Fig. 4);
+//! - [`run_sweep`] runs **one-shot inference** per point, re-costs the
+//!   inferred strategy through the *condition's* cost engine (never the
+//!   training-time one — the condition defines both the constraint and
+//!   the roofline, so quality must be priced under it), and runs a
+//!   budget-boxed G-Sampler reference search on the same point
+//!   out-of-band with a content-derived seed;
+//! - the [`SweepReport`] carries per-point and aggregate **gap-to-search**
+//!   (`1 − model_speedup / search_speedup`, lower is better, negative
+//!   means the one-shot mapper beat the 2K-sample search), **feasibility
+//!   rate** (the inferred strategy fits the condition) and
+//!   **inference-vs-search wall-clock speedup** (the paper's 66×-class
+//!   number, per held-out point).
+//!
+//! Per-point error accounting reuses the serving load harness's
+//! [`Outcome`] classification ([`crate::coordinator::loadgen::classify`])
+//! so a sweep report and a load report count failures the same way.
+//!
+//! Everything except the wall-clock columns is deterministic: inference
+//! is greedy, searches are seeded from point content (not iteration
+//! order), and points run serially so timing of one point never perturbs
+//! another.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::loadgen::{classify, Outcome};
+use crate::cost::{HwConfig, MB};
+use crate::model::MapperModel;
+use crate::runtime::Runtime;
+use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use crate::util::bench::{fnv1a_mix as mix, fnv1a_str as mix_str, FNV_OFFSET};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::{Workload, WorkloadRegistry, WorkloadSpec};
+
+/// Why a grid point is held out from the training conditions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PointKind {
+    /// Memory budget strictly between two adjacent training conditions.
+    Interpolated,
+    /// Memory budget outside the training range.
+    Extrapolated,
+    /// Perturbed accelerator rates (an `HwConfig` never seen in training).
+    HwPerturbed,
+}
+
+impl PointKind {
+    /// Stable lower-case tag for reports and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PointKind::Interpolated => "interpolated",
+            PointKind::Extrapolated => "extrapolated",
+            PointKind::HwPerturbed => "hw_perturbed",
+        }
+    }
+}
+
+/// A multiplicative perturbation of the paper accelerator's rate
+/// parameters — a hardware config the mapper was never trained on.
+/// Scales default to 1.0; the buffer is not perturbed here because the
+/// per-point memory budget already owns it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwPerturb {
+    /// Human-readable tag carried into per-point reports (e.g.
+    /// `"bw_off_x0.5"`).
+    pub label: String,
+    /// Off-chip bandwidth scale.
+    pub bw_off_scale: f64,
+    /// On-chip bandwidth scale.
+    pub bw_on_scale: f64,
+    /// Clock-frequency scale.
+    pub freq_scale: f64,
+    /// Layer-switch overhead scale.
+    pub t_switch_scale: f64,
+}
+
+impl HwPerturb {
+    /// Apply the scales to a base config.
+    pub fn apply(&self, base: HwConfig) -> HwConfig {
+        let mut hw = base;
+        hw.bw_off *= self.bw_off_scale;
+        hw.bw_on *= self.bw_on_scale;
+        hw.freq_hz *= self.freq_scale;
+        hw.t_switch_s *= self.t_switch_scale;
+        hw
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("bw_off_scale", Json::num(self.bw_off_scale)),
+            ("bw_on_scale", Json::num(self.bw_on_scale)),
+            ("freq_scale", Json::num(self.freq_scale)),
+            ("t_switch_scale", Json::num(self.t_switch_scale)),
+        ])
+    }
+}
+
+/// Declarative sweep grid (the `eval --sweep grid.json` schema).
+///
+/// `train_mems` declares the memory conditions the checkpoint was
+/// trained on (declarative — the harness cannot read them out of the
+/// weights); every evaluated point is derived to be *held out* relative
+/// to them: `interpolate.points_per_gap` evenly-spaced interior budgets
+/// per adjacent training gap, `extrapolate.mems` outside the training
+/// range (validated), and each `hw_perturbs` entry at every interpolated
+/// budget. Example (also `examples/ci_grid.json`):
+///
+/// ```json
+/// {
+///   "workloads": ["vgg16"],
+///   "batch": 64,
+///   "train_mems": [16, 32],
+///   "interpolate": {"points_per_gap": 1},
+///   "extrapolate": {"mems": [14, 40]},
+///   "hw_perturbs": [{"label": "bw_off_x0.5", "bw_off_scale": 0.5}],
+///   "search_budget": 200,
+///   "seed": 17
+/// }
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridSpec {
+    /// Workload names, resolved against the sweep's registry (zoo
+    /// pre-seeded; customs registered via `--workload-file`).
+    pub workloads: Vec<String>,
+    /// Input batch size on every point.
+    pub batch: usize,
+    /// The training memory conditions (MB), strictly ascending.
+    pub train_mems: Vec<f64>,
+    /// Interior held-out budgets per adjacent training gap.
+    pub interpolate_per_gap: usize,
+    /// Held-out budgets outside the training range (MB).
+    pub extrapolate_mems: Vec<f64>,
+    /// Rate perturbations, each evaluated at every interpolated budget.
+    pub hw_perturbs: Vec<HwPerturb>,
+    /// Sampling budget of the reference G-Sampler search per point — the
+    /// box on the out-of-band search (the paper's 2K); wall time is
+    /// measured and reported alongside.
+    pub search_budget: usize,
+    /// Base seed; per-point search seeds derive from it and the point's
+    /// content, so results are independent of iteration order.
+    pub seed: u64,
+}
+
+impl GridSpec {
+    /// Parse a grid spec from JSON text (see the type-level example).
+    /// Strict about keys and types: unknown keys (outside `_`-prefixed
+    /// comments) and mistyped values are rejected rather than silently
+    /// defaulted — a typo'd knob must not silently evaluate a different
+    /// grid than the one the spec echo and config hash claim.
+    pub fn from_json(text: &str) -> Result<GridSpec> {
+        let j = Json::parse(text).context("grid spec is not valid JSON")?;
+        const TOP_KEYS: [&str; 8] = [
+            "workloads",
+            "batch",
+            "train_mems",
+            "interpolate",
+            "extrapolate",
+            "hw_perturbs",
+            "search_budget",
+            "seed",
+        ];
+        check_keys(&j, "grid", &TOP_KEYS)?;
+        let names = j
+            .req("workloads")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .context("`workloads` must be an array of names")?;
+        let mut workloads = Vec::with_capacity(names.len());
+        for n in names {
+            let Some(s) = n.as_str() else {
+                bail!("`workloads` entries must be strings");
+            };
+            workloads.push(s.to_string());
+        }
+        let train_mems = num_list(&j, "train_mems")?;
+        let interpolate_per_gap = match j.get("interpolate") {
+            None => 1,
+            Some(o) => {
+                if !matches!(o, Json::Obj(_)) {
+                    bail!("grid: `interpolate` must be an object like {{\"points_per_gap\": 1}}");
+                }
+                check_keys(o, "interpolate", &["points_per_gap"])?;
+                opt_usize(o, "points_per_gap", 1)?
+            }
+        };
+        let extrapolate_mems = match j.get("extrapolate") {
+            None => Vec::new(),
+            Some(o) => {
+                if !matches!(o, Json::Obj(_)) {
+                    bail!("grid: `extrapolate` must be an object like {{\"mems\": [14]}}");
+                }
+                check_keys(o, "extrapolate", &["mems"])?;
+                num_list(o, "mems")?
+            }
+        };
+        let mut hw_perturbs = Vec::new();
+        if let Some(v) = j.get("hw_perturbs") {
+            let Some(arr) = v.as_arr() else {
+                bail!("grid: `hw_perturbs` must be an array of objects");
+            };
+            const KEYS: [&str; 5] = [
+                "label",
+                "bw_off_scale",
+                "bw_on_scale",
+                "freq_scale",
+                "t_switch_scale",
+            ];
+            for (i, pj) in arr.iter().enumerate() {
+                let Some(label) = pj.get("label").and_then(|v| v.as_str()) else {
+                    bail!("hw_perturbs[{i}] needs a string `label`");
+                };
+                // Scales default to 1.0, so a typo'd key would silently
+                // produce a non-perturbed point tagged hw_perturbed —
+                // reject unknown keys instead.
+                check_keys(pj, &format!("hw_perturbs[{i}]"), &KEYS)?;
+                // Absent scale → 1.0; present but mistyped → error, never
+                // a silent 1.0 (the same strictness as the keys above).
+                let scale = |key: &str| -> Result<f64> {
+                    let Some(v) = pj.get(key) else {
+                        return Ok(1.0);
+                    };
+                    let Some(x) = v.as_f64() else {
+                        bail!("hw_perturbs[{i}]: `{key}` must be a number");
+                    };
+                    Ok(x)
+                };
+                hw_perturbs.push(HwPerturb {
+                    label: label.to_string(),
+                    bw_off_scale: scale("bw_off_scale")?,
+                    bw_on_scale: scale("bw_on_scale")?,
+                    freq_scale: scale("freq_scale")?,
+                    t_switch_scale: scale("t_switch_scale")?,
+                });
+            }
+        }
+        let seed = match j.get("seed") {
+            None => 17.0,
+            Some(v) => {
+                let Some(x) = v.as_f64() else {
+                    bail!("grid: `seed` must be a number");
+                };
+                x
+            }
+        };
+        // Seeds travel through the JSON number type (f64): values beyond
+        // 2^53 would silently round, breaking the spec echo round-trip
+        // and every derived point seed — reject instead of corrupting.
+        if seed < 0.0 || seed.fract() != 0.0 || seed >= (1u64 << 53) as f64 {
+            bail!("grid: `seed` must be a non-negative integer below 2^53, got {seed}");
+        }
+        let spec = GridSpec {
+            workloads,
+            batch: opt_usize(&j, "batch", 64)?,
+            train_mems,
+            interpolate_per_gap,
+            extrapolate_mems,
+            hw_perturbs,
+            search_budget: opt_usize(&j, "search_budget", 2000)?,
+            seed: seed as u64,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a grid spec from a JSON file.
+    pub fn from_file(path: &str) -> Result<GridSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading grid spec {path}"))?;
+        Self::from_json(&text)
+    }
+
+    /// Reject degenerate grids before any work: unsorted or non-positive
+    /// budgets, "extrapolation" points inside the training range,
+    /// non-positive perturbation scales, or a grid with no held-out
+    /// points at all.
+    pub fn validate(&self) -> Result<()> {
+        if self.workloads.is_empty() {
+            bail!("grid: `workloads` is empty");
+        }
+        if self.batch == 0 {
+            bail!("grid: `batch` must be >= 1");
+        }
+        if self.search_budget == 0 {
+            bail!("grid: `search_budget` must be >= 1");
+        }
+        for &m in self.train_mems.iter().chain(&self.extrapolate_mems) {
+            if !m.is_finite() || m <= 0.0 {
+                bail!("grid: memory budgets must be finite and positive, got {m}");
+            }
+        }
+        for pair in self.train_mems.windows(2) {
+            if pair[1] <= pair[0] {
+                bail!("grid: `train_mems` must be strictly ascending");
+            }
+        }
+        if self.interpolate_per_gap > 0 && self.train_mems.len() < 2 {
+            bail!("grid: interpolation needs at least two `train_mems`");
+        }
+        if let (Some(&lo), Some(&hi)) = (self.train_mems.first(), self.train_mems.last()) {
+            for &m in &self.extrapolate_mems {
+                if (lo..=hi).contains(&m) {
+                    bail!(
+                        "grid: extrapolation budget {m} MB lies inside the training \
+                         range [{lo}, {hi}] MB — it would not be held out"
+                    );
+                }
+            }
+        }
+        let base = HwConfig::paper();
+        for p in &self.hw_perturbs {
+            if p.label.is_empty() {
+                bail!("grid: hw perturbations need a non-empty label");
+            }
+            for (what, s) in [
+                ("bw_off_scale", p.bw_off_scale),
+                ("bw_on_scale", p.bw_on_scale),
+                ("freq_scale", p.freq_scale),
+                ("t_switch_scale", p.t_switch_scale),
+            ] {
+                if !s.is_finite() || s <= 0.0 {
+                    bail!("grid: perturb `{}`: {what} must be finite and positive", p.label);
+                }
+            }
+            if let Err(e) = p.apply(base).validate() {
+                bail!("grid: perturb `{}`: {e}", p.label);
+            }
+            // An identity perturbation measures nothing: its points would
+            // duplicate the interpolated budgets while being counted as
+            // the hw-generalization axis.
+            if p.apply(base) == base {
+                bail!("grid: perturb `{}` is the identity (all scales 1.0)", p.label);
+            }
+        }
+        if !self.hw_perturbs.is_empty() && self.interpolated_mems().is_empty() {
+            bail!(
+                "grid: hw perturbations ride on the interpolated budgets; set \
+                 `interpolate.points_per_gap` >= 1"
+            );
+        }
+        if self.interpolated_mems().is_empty() && self.extrapolate_mems.is_empty() {
+            bail!("grid: no held-out points (set interpolate and/or extrapolate)");
+        }
+        Ok(())
+    }
+
+    /// The interpolated held-out budgets: `interpolate_per_gap` evenly
+    /// spaced interior points of each adjacent training-condition gap
+    /// (never the training values themselves).
+    pub fn interpolated_mems(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        let n = self.interpolate_per_gap;
+        for pair in self.train_mems.windows(2) {
+            let (lo, hi) = (pair[0], pair[1]);
+            for i in 1..=n {
+                out.push(lo + (hi - lo) * i as f64 / (n + 1) as f64);
+            }
+        }
+        out
+    }
+
+    /// Enumerate the full grid: per workload, every interpolated and
+    /// extrapolated budget at the base (paper) config, plus every
+    /// perturbation at every interpolated budget. Deterministic order.
+    pub fn points(&self, registry: &WorkloadRegistry) -> Result<Vec<GridPoint>> {
+        self.validate()?;
+        let base = HwConfig::paper();
+        let interp = self.interpolated_mems();
+        let mut out = Vec::new();
+        for name in &self.workloads {
+            let ws = WorkloadSpec::named(name);
+            let (w, _) = match registry.resolve(&ws) {
+                Ok(r) => r,
+                Err(e) => bail!("grid workload `{name}`: {e:#}"),
+            };
+            let mut push = |mem: f64, hw: HwConfig, kind: PointKind, hw_label: &str| {
+                out.push(GridPoint {
+                    workload: Arc::clone(&w),
+                    workload_name: name.clone(),
+                    mem_mb: mem,
+                    hw,
+                    kind,
+                    hw_label: hw_label.to_string(),
+                });
+            };
+            for &mem in &interp {
+                push(mem, base, PointKind::Interpolated, "base");
+            }
+            for &mem in &self.extrapolate_mems {
+                push(mem, base, PointKind::Extrapolated, "base");
+            }
+            for p in &self.hw_perturbs {
+                for &mem in &interp {
+                    push(mem, p.apply(base), PointKind::HwPerturbed, &p.label);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Content identity of the grid (FNV-1a over every field) — recorded
+    /// in the report's `meta.config_hash` so trajectory JSONs are
+    /// attributable to the exact grid that produced them.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        for w in &self.workloads {
+            h = mix_str(h, w);
+        }
+        h = mix(h, self.batch as u64);
+        for &m in &self.train_mems {
+            h = mix(h, m.to_bits());
+        }
+        h = mix(h, self.interpolate_per_gap as u64);
+        for &m in &self.extrapolate_mems {
+            h = mix(h, m.to_bits());
+        }
+        for p in &self.hw_perturbs {
+            h = mix_str(h, &p.label);
+            for s in [p.bw_off_scale, p.bw_on_scale, p.freq_scale, p.t_switch_scale] {
+                h = mix(h, s.to_bits());
+            }
+        }
+        h = mix(h, self.search_budget as u64);
+        mix(h, self.seed)
+    }
+
+    /// Echo the spec into the report for reproducibility.
+    pub fn to_json(&self) -> Json {
+        let workloads = Json::arr(self.workloads.iter().map(|w| Json::str(w.clone())));
+        let train = Json::arr(self.train_mems.iter().map(|&m| Json::num(m)));
+        let extrap = Json::arr(self.extrapolate_mems.iter().map(|&m| Json::num(m)));
+        let per_gap = Json::num(self.interpolate_per_gap as f64);
+        let perturbs = Json::arr(self.hw_perturbs.iter().map(|p| p.to_json()));
+        Json::obj(vec![
+            ("workloads", workloads),
+            ("batch", Json::num(self.batch as f64)),
+            ("train_mems", train),
+            ("interpolate", Json::obj(vec![("points_per_gap", per_gap)])),
+            ("extrapolate", Json::obj(vec![("mems", extrap)])),
+            ("hw_perturbs", perturbs),
+            ("search_budget", Json::num(self.search_budget as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+/// Reject unknown keys on a spec object (keys starting with `_` are
+/// comments and always allowed). Every defaulted knob in the grid schema
+/// goes through this first, so a typo'd key errors instead of silently
+/// evaluating a different grid than the spec echo claims.
+fn check_keys(j: &Json, what: &str, allowed: &[&str]) -> Result<()> {
+    if let Json::Obj(m) = j {
+        for k in m.keys() {
+            if !k.starts_with('_') && !allowed.contains(&k.as_str()) {
+                bail!("{what}: unknown key `{k}` (one of {allowed:?})");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Optional non-negative integer field: absent → `default`; present but
+/// mistyped → error (never a silent default).
+fn opt_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    let Some(v) = j.get(key) else {
+        return Ok(default);
+    };
+    let Some(x) = v.as_usize() else {
+        bail!("grid: `{key}` must be a non-negative integer");
+    };
+    Ok(x)
+}
+
+fn num_list(j: &Json, key: &str) -> Result<Vec<f64>> {
+    let arr = j
+        .req(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_arr()
+        .with_context(|| format!("`{key}` must be an array of numbers"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for v in arr {
+        let Some(x) = v.as_f64() else {
+            bail!("`{key}` entries must be numbers");
+        };
+        out.push(x);
+    }
+    Ok(out)
+}
+
+/// One enumerated evaluation point of the grid.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    /// Resolved workload (shared with the registry).
+    pub workload: Arc<Workload>,
+    /// The name it was requested under.
+    pub workload_name: String,
+    /// Held-out memory condition (MB).
+    pub mem_mb: f64,
+    /// Accelerator config of this point (base or perturbed).
+    pub hw: HwConfig,
+    /// Which generalization axis holds this point out.
+    pub kind: PointKind,
+    /// `"base"` or the perturbation's label.
+    pub hw_label: String,
+}
+
+/// Measured result of one grid point.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    /// Workload name.
+    pub workload: String,
+    /// Held-out memory condition (MB).
+    pub mem_mb: f64,
+    /// Generalization axis.
+    pub kind: PointKind,
+    /// `"base"` or the perturbation label.
+    pub hw_label: String,
+    /// Inference outcome, classified exactly like a serving request.
+    pub outcome: Outcome,
+    /// Hard-error message when inference failed.
+    pub error: Option<String>,
+    /// Inferred strategy's speedup under the condition's engine.
+    pub model_speedup: Option<f64>,
+    /// Whether the inferred strategy fits the condition.
+    pub feasible: Option<bool>,
+    /// Inferred strategy's peak activation staging (MB).
+    pub model_act_mb: Option<f64>,
+    /// One-shot inference wall time (ms).
+    pub infer_ms: Option<f64>,
+    /// Reference-search speedup on the same point.
+    pub search_speedup: f64,
+    /// Whether the reference search found a feasible strategy.
+    pub search_valid: bool,
+    /// Reference-search wall time (ms).
+    pub search_ms: f64,
+    /// Evaluations the reference search consumed.
+    pub search_evals: usize,
+    /// `1 − model_speedup / search_speedup` — lower is better; negative
+    /// means the one-shot mapper beat the search. `None` when inference
+    /// failed, the inferred strategy does not fit the condition (an
+    /// over-budget strategy's priced latency is fictional), or the
+    /// search found nothing feasible to compare against.
+    pub gap: Option<f64>,
+    /// Wall-clock speedup of inference over the reference search.
+    pub speedup_vs_search: Option<f64>,
+}
+
+impl PointResult {
+    /// Per-point JSON row (`report.points[]` of the sweep schema).
+    pub fn to_json(&self) -> Json {
+        let opt_num = |x: Option<f64>| x.map_or(Json::Null, Json::num);
+        Json::obj(vec![
+            ("workload", Json::str(self.workload.clone())),
+            ("mem_mb", Json::num(self.mem_mb)),
+            ("kind", Json::str(self.kind.name())),
+            ("hw", Json::str(self.hw_label.clone())),
+            ("outcome", Json::str(self.outcome.name())),
+            ("error", self.error.clone().map_or(Json::Null, Json::str)),
+            ("model_speedup", opt_num(self.model_speedup)),
+            ("feasible", self.feasible.map_or(Json::Null, Json::Bool)),
+            ("model_act_mb", opt_num(self.model_act_mb)),
+            ("infer_ms", opt_num(self.infer_ms)),
+            ("search_speedup", Json::num(self.search_speedup)),
+            ("search_valid", Json::Bool(self.search_valid)),
+            ("search_ms", Json::num(self.search_ms)),
+            ("search_evals", Json::num(self.search_evals as f64)),
+            ("gap", opt_num(self.gap)),
+            ("speedup_vs_search", opt_num(self.speedup_vs_search)),
+        ])
+    }
+}
+
+/// Gap sentinel for a sweep with no comparable point (every inference
+/// failed, or no reference search found anything feasible). Real gaps
+/// are strictly below 1.0, and the CI gap gate's ceiling lies between
+/// 1.0 and this value — so a degenerate sweep *fails* the gate instead
+/// of slipping under it.
+pub const DEGENERATE_GAP: f64 = 2.0;
+
+/// Per-point results plus the aggregates CI gates on.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// All evaluated points, in grid order.
+    pub points: Vec<PointResult>,
+    /// Total grid points.
+    pub n_points: usize,
+    /// Points whose inference succeeded.
+    pub served: usize,
+    /// Points whose inference failed hard.
+    pub errors: usize,
+    /// Served points whose inferred strategy fits its condition.
+    pub feasibility_rate: f64,
+    /// Mean gap over served points with a valid search reference. A real
+    /// gap is strictly below 1.0 (both speedups are positive); when NO
+    /// point was comparable the sentinel [`DEGENERATE_GAP`] (2.0) is
+    /// reported instead, which sits above the armed gate ceiling — a
+    /// degenerate sweep fails the CI gap gate rather than passing
+    /// vacuously.
+    pub mean_gap: f64,
+    /// Median of the same gap distribution.
+    pub median_gap: f64,
+    /// Worst (largest) gap.
+    pub worst_gap: f64,
+    /// Geometric mean of per-point inference-vs-search wall speedups.
+    pub speedup_vs_search_geomean: f64,
+    /// Mean one-shot inference wall time over served points (ms).
+    pub mean_infer_ms: f64,
+    /// Mean reference-search wall time over all points (ms).
+    pub mean_search_ms: f64,
+}
+
+impl SweepReport {
+    /// Aggregate a finished sweep.
+    pub fn from_points(points: Vec<PointResult>) -> SweepReport {
+        let n_points = points.len();
+        let mut served = 0usize;
+        let mut feasible = 0usize;
+        let mut gaps: Vec<f64> = Vec::new();
+        let mut ln_speedups: Vec<f64> = Vec::new();
+        let mut infer_ms: Vec<f64> = Vec::new();
+        let mut search_ms_sum = 0.0;
+        for p in &points {
+            search_ms_sum += p.search_ms;
+            if p.outcome != Outcome::Served {
+                continue;
+            }
+            served += 1;
+            if p.feasible == Some(true) {
+                feasible += 1;
+            }
+            if let Some(g) = p.gap {
+                gaps.push(g);
+            }
+            if let Some(x) = p.speedup_vs_search {
+                if x > 0.0 {
+                    ln_speedups.push(x.ln());
+                }
+            }
+            if let Some(ms) = p.infer_ms {
+                infer_ms.push(ms);
+            }
+        }
+        let errors = n_points - served;
+        let feasibility_rate = if served == 0 {
+            0.0
+        } else {
+            feasible as f64 / served as f64
+        };
+        gaps.sort_by(|a, b| a.partial_cmp(b).expect("finite gap"));
+        let (mean_gap, median_gap, worst_gap) = if gaps.is_empty() {
+            (DEGENERATE_GAP, DEGENERATE_GAP, DEGENERATE_GAP)
+        } else {
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            (mean, gaps[gaps.len() / 2], *gaps.last().expect("non-empty"))
+        };
+        let speedup_vs_search_geomean = if ln_speedups.is_empty() {
+            0.0
+        } else {
+            let mean_ln = ln_speedups.iter().sum::<f64>() / ln_speedups.len() as f64;
+            mean_ln.exp()
+        };
+        let mean_infer_ms = if infer_ms.is_empty() {
+            0.0
+        } else {
+            infer_ms.iter().sum::<f64>() / infer_ms.len() as f64
+        };
+        let mean_search_ms = if n_points == 0 {
+            0.0
+        } else {
+            search_ms_sum / n_points as f64
+        };
+        SweepReport {
+            n_points,
+            served,
+            errors,
+            feasibility_rate,
+            mean_gap,
+            median_gap,
+            worst_gap,
+            speedup_vs_search_geomean,
+            mean_infer_ms,
+            mean_search_ms,
+            points,
+        }
+    }
+
+    /// The `report` object of the sweep schema: `points[]` + `aggregates`.
+    pub fn to_json(&self) -> Json {
+        let points = Json::arr(self.points.iter().map(|p| p.to_json()));
+        let geomean = Json::num(self.speedup_vs_search_geomean);
+        let aggregates = Json::obj(vec![
+            ("n_points", Json::num(self.n_points as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("feasibility_rate", Json::num(self.feasibility_rate)),
+            ("mean_gap", Json::num(self.mean_gap)),
+            ("median_gap", Json::num(self.median_gap)),
+            ("worst_gap", Json::num(self.worst_gap)),
+            ("speedup_vs_search_geomean", geomean),
+            ("mean_infer_ms", Json::num(self.mean_infer_ms)),
+            ("mean_search_ms", Json::num(self.mean_search_ms)),
+        ]);
+        Json::obj(vec![("points", points), ("aggregates", aggregates)])
+    }
+}
+
+/// Deterministic per-point search seed: derived from the base seed and
+/// the point's *content* (workload structure, hw, budget, axis), never
+/// from its position in the grid — reordering the grid cannot change any
+/// reference search.
+fn point_seed(base: u64, p: &GridPoint) -> u64 {
+    let mut h = mix(FNV_OFFSET, base);
+    h = mix(h, p.workload.content_hash());
+    h = mix(h, p.hw.content_hash());
+    h = mix(h, p.mem_mb.to_bits());
+    mix(h, p.kind as u64)
+}
+
+fn run_point(rt: &Runtime, model: &MapperModel, spec: &GridSpec, p: &GridPoint) -> PointResult {
+    // The problem carries BOTH the condition's cost model (hw + budget,
+    // never the training config) and the matching env — one build per
+    // point, shared by the search, the inference and the re-cost below.
+    let prob = FusionProblem::new(&p.workload, spec.batch, p.hw, p.mem_mb);
+
+    // Out-of-band reference search, budget-boxed at the spec's budget.
+    let mut rng = Rng::seed_from_u64(point_seed(spec.seed, p));
+    let t0 = Instant::now();
+    let sr = GSampler::default().run(&prob, spec.search_budget, &mut rng);
+    let search_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // One-shot inference at the same held-out condition.
+    let t1 = Instant::now();
+    let inferred = model.infer(rt, &prob.env);
+    let infer_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let (outcome, error) = classify(&inferred);
+
+    let mut out = PointResult {
+        workload: p.workload_name.clone(),
+        mem_mb: p.mem_mb,
+        kind: p.kind,
+        hw_label: p.hw_label.clone(),
+        outcome,
+        error,
+        model_speedup: None,
+        feasible: None,
+        model_act_mb: None,
+        infer_ms: None,
+        search_speedup: sr.best_eval.speedup,
+        search_valid: sr.best_eval.valid,
+        search_ms,
+        search_evals: sr.evals_used,
+        gap: None,
+        speedup_vs_search: None,
+    };
+    if let Ok(traj) = inferred {
+        // Re-cost through the CONDITION's engine, not the training one:
+        // the condition defines both the feasibility constraint and the
+        // roofline the strategy is priced against (DESIGN.md §11). One
+        // fresh engine walk over the final strategy — independent of the
+        // episode's incremental bookkeeping.
+        let c = prob.model.cost_of(&traj.strategy);
+        let speedup = prob.model.baseline_latency() / c.latency_s;
+        out.model_speedup = Some(speedup);
+        out.feasible = Some(c.valid);
+        out.model_act_mb = Some(c.peak_act_bytes as f64 / MB);
+        out.infer_ms = Some(infer_ms);
+        // Gap only compares feasible against feasible: an over-budget
+        // strategy's latency is priced as if the fusion fit, so counting
+        // it would let infeasible decodes *improve* the quality metric.
+        if c.valid && out.search_valid && out.search_speedup > 0.0 {
+            out.gap = Some(1.0 - speedup / out.search_speedup);
+        }
+        out.speedup_vs_search = Some(search_ms / infer_ms.max(1e-6));
+    }
+    out
+}
+
+/// Run the whole sweep: every grid point, serially (deterministic, and
+/// wall-clock columns are never perturbed by co-running points), one
+/// inference + one reference search each.
+pub fn run_sweep(
+    rt: &Runtime,
+    model: &MapperModel,
+    registry: &WorkloadRegistry,
+    spec: &GridSpec,
+) -> Result<SweepReport> {
+    let points = spec.points(registry)?;
+    let mut results = Vec::with_capacity(points.len());
+    for p in &points {
+        results.push(run_point(rt, model, spec, p));
+    }
+    Ok(SweepReport::from_points(results))
+}
+
+/// Assemble the gate-carrying document both front ends write
+/// (`BENCH_generalization.json`): `bench`/`gates` for
+/// `scripts/check_bench_regression.py`, `meta` for attributability
+/// (git commit, harness version, grid hash), the grid echo and the full
+/// report.
+pub fn bench_doc(report: &SweepReport, spec: &GridSpec, backend: &str, quick: bool) -> Json {
+    let meta = crate::util::bench::meta_json(spec.content_hash());
+    // error_rate is gated at an armed hard zero: feasibility_rate is
+    // computed over *served* points, so without this gate a sweep where
+    // most points fail inference could still gate green off the
+    // survivors (only a total collapse hits the gap sentinel).
+    let error_rate = report.errors as f64 / report.n_points.max(1) as f64;
+    let gates = Json::obj(vec![
+        ("aggregate_gap", Json::num(report.mean_gap)),
+        ("error_rate", Json::num(error_rate)),
+        ("feasibility_rate", Json::num(report.feasibility_rate)),
+        ("inference_vs_search_speedup", Json::num(report.speedup_vs_search_geomean)),
+    ]);
+    Json::obj(vec![
+        ("bench", Json::str("generalization")),
+        ("quick", Json::Bool(quick)),
+        ("backend", Json::str(backend)),
+        ("meta", meta),
+        ("grid", spec.to_json()),
+        ("report", report.to_json()),
+        ("gates", gates),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::native::NativeConfig;
+    use crate::model::ModelKind;
+
+    fn spec() -> GridSpec {
+        GridSpec {
+            workloads: vec!["vgg16".into()],
+            batch: 64,
+            train_mems: vec![16.0, 32.0, 48.0],
+            interpolate_per_gap: 1,
+            extrapolate_mems: vec![14.0, 72.0],
+            hw_perturbs: vec![HwPerturb {
+                label: "bw_off_x0.5".into(),
+                bw_off_scale: 0.5,
+                bw_on_scale: 1.0,
+                freq_scale: 1.0,
+                t_switch_scale: 1.0,
+            }],
+            search_budget: 50,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn grid_json_roundtrip() {
+        let text = r#"{
+            "workloads": ["vgg16", "resnet18"],
+            "batch": 32,
+            "train_mems": [16, 32],
+            "interpolate": {"points_per_gap": 2},
+            "extrapolate": {"mems": [14, 40]},
+            "hw_perturbs": [{"label": "slowdram", "bw_off_scale": 0.5}],
+            "search_budget": 100,
+            "seed": 9
+        }"#;
+        let s = GridSpec::from_json(text).unwrap();
+        assert_eq!(s.workloads, vec!["vgg16".to_string(), "resnet18".to_string()]);
+        assert_eq!(s.batch, 32);
+        assert_eq!(s.interpolate_per_gap, 2);
+        assert_eq!(s.extrapolate_mems, vec![14.0, 40.0]);
+        assert_eq!(s.hw_perturbs.len(), 1);
+        assert_eq!(s.hw_perturbs[0].bw_off_scale, 0.5);
+        assert_eq!(s.hw_perturbs[0].bw_on_scale, 1.0);
+        assert_eq!(s.search_budget, 100);
+        assert_eq!(s.seed, 9);
+        // Serialized spec parses back to the same value.
+        let again = GridSpec::from_json(&s.to_json().to_pretty()).unwrap();
+        assert_eq!(s, again);
+    }
+
+    #[test]
+    fn interpolated_mems_are_strictly_interior() {
+        let s = spec();
+        let interp = s.interpolated_mems();
+        assert_eq!(interp, vec![24.0, 40.0]);
+        for m in interp {
+            assert!(!s.train_mems.contains(&m));
+            assert!(m > s.train_mems[0] && m < *s.train_mems.last().unwrap());
+        }
+    }
+
+    fn validate_err(s: &GridSpec) -> String {
+        s.validate().unwrap_err().to_string()
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_grids() {
+        let mut s = spec();
+        s.extrapolate_mems = vec![24.0]; // inside the training range
+        assert!(validate_err(&s).contains("held out"), "{}", validate_err(&s));
+        s = spec();
+        s.train_mems = vec![32.0, 16.0];
+        assert!(validate_err(&s).contains("ascending"), "{}", validate_err(&s));
+        s = spec();
+        s.hw_perturbs[0].bw_off_scale = 0.0;
+        assert!(s.validate().is_err());
+        s = spec();
+        s.workloads.clear();
+        assert!(s.validate().is_err());
+        s = spec();
+        s.interpolate_per_gap = 0;
+        // hw perturbs need interpolated budgets to ride on
+        assert!(validate_err(&s).contains("interpolate"), "{}", validate_err(&s));
+        s = spec();
+        s.interpolate_per_gap = 0;
+        s.hw_perturbs.clear();
+        // still fine: extrapolation alone is a valid grid
+        assert!(s.validate().is_ok());
+        // An identity perturbation measures nothing — rejected.
+        s = spec();
+        s.hw_perturbs[0].bw_off_scale = 1.0;
+        assert!(validate_err(&s).contains("identity"), "{}", validate_err(&s));
+    }
+
+    #[test]
+    fn parse_rejects_typod_perturb_keys_and_lossy_seeds() {
+        // A typo'd scale key would silently default to 1.0 and fake the
+        // hw-generalization axis; unknown keys are rejected up front.
+        let typo = r#"{
+            "workloads": ["vgg16"],
+            "train_mems": [16, 32],
+            "hw_perturbs": [{"label": "x", "bw_off_scales": 0.5}]
+        }"#;
+        let err = GridSpec::from_json(typo).unwrap_err().to_string();
+        assert!(err.contains("unknown key"), "{err}");
+        // Top-level and nested typos are rejected too (never silently
+        // defaulted); `_`-prefixed comment keys stay allowed.
+        let top = r#"{
+            "workloads": ["vgg16"],
+            "train_mems": [16, 32],
+            "_comment": "fine",
+            "search_budgets": 2000
+        }"#;
+        let err = GridSpec::from_json(top).unwrap_err().to_string();
+        assert!(err.contains("unknown key `search_budgets`"), "{err}");
+        let nested = r#"{
+            "workloads": ["vgg16"],
+            "train_mems": [16, 32],
+            "interpolate": {"point_per_gap": 3}
+        }"#;
+        let err = GridSpec::from_json(nested).unwrap_err().to_string();
+        assert!(err.contains("unknown key `point_per_gap`"), "{err}");
+        // Mistyped values error instead of silently defaulting.
+        let badty = r#"{
+            "workloads": ["vgg16"],
+            "train_mems": [16, 32],
+            "batch": "sixty-four"
+        }"#;
+        let err = GridSpec::from_json(badty).unwrap_err().to_string();
+        assert!(err.contains("batch"), "{err}");
+        // A mis-shaped section (object where an array belongs, or vice
+        // versa) errors instead of silently dropping the axis.
+        let shape = r#"{
+            "workloads": ["vgg16"],
+            "train_mems": [16, 32],
+            "hw_perturbs": {"label": "slowdram", "bw_off_scale": 0.5}
+        }"#;
+        let err = GridSpec::from_json(shape).unwrap_err().to_string();
+        assert!(err.contains("hw_perturbs"), "{err}");
+        let shape = r#"{
+            "workloads": ["vgg16"],
+            "train_mems": [16, 32],
+            "interpolate": 3
+        }"#;
+        let err = GridSpec::from_json(shape).unwrap_err().to_string();
+        assert!(err.contains("interpolate"), "{err}");
+        // Known key, mistyped value: rejected, never a silent 1.0 scale.
+        let badscale = r#"{
+            "workloads": ["vgg16"],
+            "train_mems": [16, 32],
+            "hw_perturbs": [{"label": "x", "freq_scale": "1.5"}]
+        }"#;
+        let err = GridSpec::from_json(badscale).unwrap_err().to_string();
+        assert!(err.contains("freq_scale"), "{err}");
+        // Seeds travel through f64: values beyond 2^53 would round.
+        let lossy = r#"{
+            "workloads": ["vgg16"],
+            "train_mems": [16, 32],
+            "seed": 9007199254740993
+        }"#;
+        let err = GridSpec::from_json(lossy).unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+    }
+
+    #[test]
+    fn points_cover_every_axis() {
+        let reg = WorkloadRegistry::with_zoo();
+        let pts = spec().points(&reg).unwrap();
+        // 2 interpolated + 2 extrapolated + 1 perturb × 2 interpolated.
+        assert_eq!(pts.len(), 6);
+        let count = |k: PointKind| pts.iter().filter(|p| p.kind == k).count();
+        assert_eq!(count(PointKind::Interpolated), 2);
+        assert_eq!(count(PointKind::Extrapolated), 2);
+        assert_eq!(count(PointKind::HwPerturbed), 2);
+        for p in &pts {
+            match p.kind {
+                PointKind::HwPerturbed => {
+                    assert_eq!(p.hw_label, "bw_off_x0.5");
+                    assert!(p.hw.bw_off < HwConfig::paper().bw_off);
+                }
+                _ => assert_eq!(p.hw_label, "base"),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_grid_workload_is_a_clean_error() {
+        let reg = WorkloadRegistry::with_zoo();
+        let mut s = spec();
+        s.workloads = vec!["alexnet".into()];
+        let err = format!("{:#}", s.points(&reg).unwrap_err());
+        assert!(err.contains("alexnet"), "{err}");
+    }
+
+    #[test]
+    fn point_seed_depends_on_content_not_order() {
+        let reg = WorkloadRegistry::with_zoo();
+        let pts = spec().points(&reg).unwrap();
+        let seeds: Vec<u64> = pts.iter().map(|p| point_seed(1, p)).collect();
+        // Distinct points get distinct seeds…
+        for i in 0..seeds.len() {
+            for j in (i + 1)..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "points {i} and {j}");
+            }
+        }
+        // …and the same point gets the same seed regardless of grid order.
+        let again = spec().points(&reg).unwrap();
+        assert_eq!(seeds[3], point_seed(1, &again[3]));
+    }
+
+    #[test]
+    fn degenerate_sweep_reports_the_failing_gap_sentinel() {
+        // No comparable point (inference errored everywhere) must surface
+        // as a gap ABOVE the armed gate ceiling, never as a passing value.
+        let p = PointResult {
+            workload: "vgg16".into(),
+            mem_mb: 24.0,
+            kind: PointKind::Interpolated,
+            hw_label: "base".into(),
+            outcome: Outcome::Error,
+            error: Some("inference failed: boom".into()),
+            model_speedup: None,
+            feasible: None,
+            model_act_mb: None,
+            infer_ms: None,
+            search_speedup: 1.5,
+            search_valid: true,
+            search_ms: 3.0,
+            search_evals: 50,
+            gap: None,
+            speedup_vs_search: None,
+        };
+        let r = SweepReport::from_points(vec![p]);
+        assert_eq!(r.served, 0);
+        assert_eq!(r.errors, 1);
+        assert_eq!(r.mean_gap, DEGENERATE_GAP);
+        assert_eq!(r.feasibility_rate, 0.0);
+        // The baseline arms the gap gate at 0.85 with 20% tolerance and
+        // 0.1 slack → ceiling 1.12; the sentinel must exceed it while a
+        // real gap (strictly < 1.0) never can.
+        assert!(DEGENERATE_GAP > 0.85 * 1.2 + 0.1);
+        assert!(1.0 < 0.85 * 1.2 + 0.1);
+    }
+
+    #[test]
+    fn tiny_sweep_is_deterministic_and_feasible() {
+        let rt = tiny_rt();
+        let model = MapperModel::init(&rt, ModelKind::Df, 7).unwrap();
+        let reg = WorkloadRegistry::with_zoo();
+        let mut s = spec();
+        s.hw_perturbs.clear();
+        s.extrapolate_mems = vec![72.0];
+        // 2 interpolated + 1 extrapolated = 3 points, all >= vgg16's
+        // minimum representable condition, so projection guarantees fit.
+        let a = run_sweep(&rt, &model, &reg, &s).unwrap();
+        assert_eq!(a.n_points, 3);
+        assert_eq!(a.errors, 0);
+        assert_eq!(a.feasibility_rate, 1.0);
+        assert!(a.mean_gap <= 1.0, "gap {}", a.mean_gap);
+        let b = run_sweep(&rt, &model, &reg, &s).unwrap();
+        assert_eq!(a.mean_gap, b.mean_gap);
+        assert_eq!(a.median_gap, b.median_gap);
+        assert_eq!(a.feasibility_rate, b.feasibility_rate);
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.model_speedup, pb.model_speedup);
+            assert_eq!(pa.search_speedup, pb.search_speedup);
+            assert_eq!(pa.gap, pb.gap);
+        }
+    }
+
+    fn tiny_rt() -> Runtime {
+        Runtime::load_native("/nonexistent/artifacts", Some(NativeConfig::tiny())).unwrap()
+    }
+}

@@ -1,0 +1,20 @@
+//! Model-quality evaluation harnesses (L3).
+//!
+//! The serving stack answers "map this workload under this condition,
+//! now"; this tree answers "how *good* are those answers, measured".
+//! Today it holds one harness:
+//!
+//! - [`generalization`] — the condition-generalization sweep: take a
+//!   trained checkpoint, a workload set and a grid of **held-out**
+//!   conditions (interpolated and extrapolated memory budgets plus
+//!   perturbed accelerator rate points), run one-shot inference per
+//!   point, re-cost every inferred strategy through the condition's
+//!   [`crate::cost::engine`], run a budget-boxed G-Sampler reference
+//!   search on the same point out-of-band, and report per-point and
+//!   aggregate gap-to-search, feasibility rate and inference-vs-search
+//!   speedup (DESIGN.md §11). `dnnfuser eval --sweep grid.json` and
+//!   `benches/generalization.rs` are the two front ends; both emit the
+//!   `BENCH_generalization.json` schema that
+//!   `scripts/check_bench_regression.py` gates in CI.
+
+pub mod generalization;

@@ -9,8 +9,9 @@
 //!   [`cost`] model over the [`workload`] zoo, the [`fusion`] strategy
 //!   space, the [`env`] RL formulation, the [`search`] teachers/baselines,
 //!   the PJRT [`runtime`] that loads the AOT artifacts, the [`model`]
-//!   drivers (training + autoregressive inference), and the serving
-//!   [`coordinator`].
+//!   drivers (training + autoregressive inference), the serving
+//!   [`coordinator`], and the [`eval`] quality harnesses (the
+//!   condition-generalization sweep).
 //!
 //! Quick taste (no artifacts needed — the search side is pure Rust;
 //! `no_run` only because doctest binaries miss the libxla rpath):
@@ -30,6 +31,7 @@ pub mod bench_support;
 pub mod coordinator;
 pub mod cost;
 pub mod env;
+pub mod eval;
 pub mod fusion;
 pub mod model;
 pub mod runtime;

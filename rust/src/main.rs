@@ -16,7 +16,11 @@
 //!   the open-loop generator (`--load-gen <rps> --duration <s>`),
 //!   reporting per-backend router metrics plus p50/p95/p99, shed rate and
 //!   batch occupancy;
-//! - `eval`    — model vs teacher across a condition grid.
+//! - `eval`    — model vs teacher across a condition grid; `--sweep
+//!   grid.json` runs the condition-generalization harness instead
+//!   (held-out interpolated/extrapolated budgets + perturbed HW rate
+//!   points, per-point gap-to-search / feasibility / speedup, optional
+//!   `BENCH_generalization.json` output for the CI gate).
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -28,9 +32,11 @@ use dnnfuser::coordinator::service::{BackendChoice, MapperService, ServiceConfig
 use dnnfuser::coordinator::Source;
 use dnnfuser::cost::HwConfig;
 use dnnfuser::env::FusionEnv;
+use dnnfuser::eval::generalization::{self, GridSpec};
 use dnnfuser::model::native::NativeConfig;
 use dnnfuser::model::{peek_checkpoint_config, MapperModel, ModelKind};
 use dnnfuser::runtime::{LoadSet, Runtime};
+use dnnfuser::util::bench::{fnv1a_mix, fnv1a_str, meta_json, Table, FNV_OFFSET};
 use dnnfuser::util::json::Json;
 use dnnfuser::search::{
     a2c::A2c, cma::CmaEs, de::De, gsampler::GSampler, pso::Pso, random::RandomSearch,
@@ -39,7 +45,7 @@ use dnnfuser::search::{
 use dnnfuser::trajectory::ReplayBuffer;
 use dnnfuser::util::args::Command;
 use dnnfuser::util::rng::Rng;
-use dnnfuser::workload::zoo;
+use dnnfuser::workload::{zoo, WorkloadRegistry};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -84,6 +90,24 @@ fn run(args: &[String]) -> Result<()> {
         }
         other => bail!("unknown command `{other}`\n\n{}", top_usage()),
     }
+}
+
+/// Register comma-separated `--workload-file` JSONs into a registry and
+/// return the registered names, announcing each — the one onboarding
+/// path shared by `serve` (which mixes the names into its stream) and
+/// `eval --sweep` (which resolves them from the grid spec).
+fn register_workload_files(registry: &WorkloadRegistry, files: &str) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for path in files.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let w = dnnfuser::workload::custom::from_file(path)?;
+        let name = w.name.clone();
+        registry
+            .register(w)
+            .with_context(|| format!("registering workload from {path}"))?;
+        println!("registered custom workload `{name}` from {path}");
+        names.push(name);
+    }
+    Ok(names)
 }
 
 /// Resolve `--workload-file` (custom JSON net) or `--workload` (zoo name).
@@ -473,19 +497,52 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     };
     let n_requests = p.get_usize("requests")?;
     let n_clients = p.get_usize("clients")?.max(1);
+    // Attributability: `--metrics-json` carries the same `meta` block as
+    // every BENCH_*.json emitter (git commit, harness version, config
+    // hash). The hash covers the run-shaping options enumerated below —
+    // backend/model choice, checkpoint and architecture overrides,
+    // stream shape, deadlines, batching. Keep this list in sync when
+    // adding serve flags, or equal hashes stop implying equal configs.
+    let mut meta_hash = FNV_OFFSET;
+    for s in [
+        p.req("backend")?,
+        p.req("model")?,
+        p.req("artifacts")?,
+        p.get("ckpt").unwrap_or(""),
+        p.get("native-preset").unwrap_or(""),
+        p.get("d-model").unwrap_or(""),
+        p.get("n-blocks").unwrap_or(""),
+        p.get("n-heads").unwrap_or(""),
+        p.get("workload-file").unwrap_or(""),
+        p.get("timeout-ms").unwrap_or(""),
+        p.get("max-batch").unwrap_or(""),
+        p.get("load-gen").unwrap_or(""),
+        p.req("duration")?,
+        p.req("max-inflight")?,
+        p.req("compare-search")?,
+    ] {
+        meta_hash = fnv1a_str(meta_hash, s);
+    }
+    for v in [
+        p.get_u64("seed")?,
+        cfg.workers as u64,
+        cfg.queue_capacity as u64,
+        cfg.cache_capacity as u64,
+        cfg.fallback_budget as u64,
+        cfg.batch_window.as_millis() as u64,
+        cfg.search_fallback as u64,
+        n_requests as u64,
+        n_clients as u64,
+    ] {
+        meta_hash = fnv1a_mix(meta_hash, v);
+    }
 
     // Custom nets join the zoo in the request mix: registered up front so
     // named requests resolve, exactly like a tenant onboarding one.
     let mut spec = LoadSpec::zoo_mix(p.get_u64("seed")?);
     spec.timeout = timeout;
     if let Some(files) = p.get("workload-file") {
-        for path in files.split(',').map(str::trim).filter(|s| !s.is_empty()) {
-            let w = dnnfuser::workload::custom::from_file(path)?;
-            let name = w.name.clone();
-            cfg.registry
-                .register(w)
-                .with_context(|| format!("registering workload from {path}"))?;
-            println!("registered custom workload `{name}` from {path}");
+        for name in register_workload_files(&cfg.registry, files)? {
             spec.workloads.push(name);
         }
     }
@@ -577,6 +634,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             ])
         };
         let doc = Json::obj(vec![
+            ("meta", meta_json(meta_hash)),
             ("requests", Json::num(m.requests as f64)),
             ("served", Json::num(served as f64)),
             ("rejected", Json::num(m.rejected as f64)),
@@ -627,14 +685,50 @@ fn cmd_eval(raw: &[String]) -> Result<()> {
     let cmd = Command::new("eval", "model vs G-Sampler across a condition grid")
         .opt("ckpt", Some("runs/model.ckpt"), "model checkpoint")
         .opt("workload", Some("vgg16"), "zoo workload")
-        .opt("workload-file", None, "custom workload JSON (overrides --workload)")
+        .opt(
+            "workload-file",
+            None,
+            "custom workload JSON (overrides --workload; with --sweep: \
+             comma-separated files registered for the grid)",
+        )
         .opt("batch", Some("64"), "input batch size")
         .opt("mems", Some("20,25,30,35,40,45"), "conditions (MB)")
         .opt("budget", Some("2000"), "teacher budget per condition")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
         .opt("backend", Some("auto"), "auto|native|pjrt")
+        .opt(
+            "sweep",
+            None,
+            "condition-generalization sweep: held-out grid spec JSON \
+             (see examples/ci_grid.json); replaces the simple --mems table",
+        )
+        .opt(
+            "sweep-out",
+            None,
+            "write the sweep report + CI gates here (BENCH_generalization.json schema)",
+        )
         .opt("seed", Some("3"), "teacher seed");
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    if let Some(grid) = p.get("sweep") {
+        // The grid spec owns these knobs in sweep mode; silently ignoring
+        // an explicitly-passed flag (e.g. --budget boxing the reference
+        // search) would misreport the gap, so reject instead.
+        for flag in ["--workload", "--batch", "--mems", "--budget", "--seed"] {
+            // Match both spellings the arg parser accepts: `--flag value`
+            // and `--flag=value`.
+            let passed = raw.iter().any(|a| {
+                let a = a.as_str();
+                a == flag || (a.starts_with(flag) && a[flag.len()..].starts_with('='))
+            });
+            if passed {
+                bail!(
+                    "{flag} has no effect with --sweep — set it in the grid spec \
+                     ({grid}: workloads/batch/train_mems/search_budget/seed)"
+                );
+            }
+        }
+        return cmd_eval_sweep(&p, grid);
+    }
     let w = resolve_workload(&p)?;
     let batch = p.get_usize("batch")?;
     let mems = parse_list_f64(p.req("mems")?)?;
@@ -662,6 +756,90 @@ fn cmd_eval(raw: &[String]) -> Result<()> {
             "N/A".into()
         };
         println!("| {mem} | {model_cell} | {} |", r.speedup_cell());
+    }
+    Ok(())
+}
+
+/// `eval --sweep`: the condition-generalization harness (DESIGN.md §11).
+/// Enumerates the grid's held-out points, runs one-shot inference plus a
+/// budget-boxed reference search per point, prints the per-point table
+/// and aggregates, and optionally writes the gate-carrying
+/// `BENCH_generalization.json`-schema report for CI.
+fn cmd_eval_sweep(p: &dnnfuser::util::args::ParsedArgs, grid_path: &str) -> Result<()> {
+    let spec = GridSpec::from_file(grid_path)?;
+    let registry = WorkloadRegistry::with_zoo();
+    if let Some(files) = p.get("workload-file") {
+        register_workload_files(&registry, files)?;
+    }
+    let rt = load_runtime(
+        p.req("artifacts")?,
+        p.req("backend")?,
+        LoadSet::All,
+        p.get("ckpt"),
+        None,
+    )?;
+    let model = MapperModel::load(&rt, p.req("ckpt")?)?;
+    println!(
+        "generalization sweep: grid {grid_path} on the {} backend \
+         (search budget {} per point)…",
+        rt.backend().name(),
+        spec.search_budget
+    );
+    let report = generalization::run_sweep(&rt, &model, &registry, &spec)?;
+
+    let mut table = Table::new(&[
+        "workload",
+        "mem (MB)",
+        "kind",
+        "hw",
+        "model",
+        "search",
+        "gap",
+        "infer",
+        "search wall",
+        "xsearch",
+    ]);
+    for pt in &report.points {
+        let model_cell = match (pt.model_speedup, pt.feasible) {
+            (Some(s), Some(true)) => format!("{s:.2}"),
+            (Some(s), Some(false)) => format!("{s:.2} (over budget)"),
+            _ => pt.outcome.name().to_string(),
+        };
+        table.row(&[
+            pt.workload.clone(),
+            format!("{:.1}", pt.mem_mb),
+            pt.kind.name().to_string(),
+            pt.hw_label.clone(),
+            model_cell,
+            if pt.search_valid {
+                format!("{:.2}", pt.search_speedup)
+            } else {
+                "N/A".into()
+            },
+            pt.gap.map_or("-".into(), |g| format!("{g:+.3}")),
+            pt.infer_ms.map_or("-".into(), |ms| format!("{ms:.1} ms")),
+            format!("{:.1} ms", pt.search_ms),
+            pt.speedup_vs_search.map_or("-".into(), |x| format!("{x:.0}x")),
+        ]);
+    }
+    table.print();
+    println!(
+        "aggregates: points={} served={} errors={} feasibility={:.0}% mean_gap={:+.3} \
+         median_gap={:+.3} worst_gap={:+.3} inference_vs_search={:.0}x",
+        report.n_points,
+        report.served,
+        report.errors,
+        100.0 * report.feasibility_rate,
+        report.mean_gap,
+        report.median_gap,
+        report.worst_gap,
+        report.speedup_vs_search_geomean,
+    );
+    if let Some(out) = p.get("sweep-out") {
+        let doc = generalization::bench_doc(&report, &spec, rt.backend().name(), false);
+        std::fs::write(out, doc.to_pretty())
+            .with_context(|| format!("writing sweep report {out}"))?;
+        println!("wrote sweep report to {out}");
     }
     Ok(())
 }

@@ -4,6 +4,82 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
+
+/// Version of the bench-emission schema shared by every `BENCH_*.json`
+/// writer (and `serve --metrics-json`). Bump when the emitted shape
+/// changes incompatibly, so archived trajectory JSONs stay attributable.
+pub const BENCH_HARNESS_VERSION: u32 = 1;
+
+/// FNV-1a offset basis for incremental hashing via [`fnv1a_mix`].
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a mixing step — the shared primitive behind the bench
+/// emitters' `meta.config_hash` values and the generalization sweep's
+/// `GridSpec::content_hash`/point seeds, so those hashes cannot
+/// silently diverge from each other. (The serving-path content hashes —
+/// `Workload`/`HwConfig`/cache seeds — predate this helper and keep
+/// their own copies of the same constants; they are independent
+/// identity domains, not `meta` hashes.)
+pub fn fnv1a_mix(h: u64, v: u64) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// Mix a string's bytes (plus a terminator, so `"ab","c"` and
+/// `"a","bc"` hash differently) into an FNV-1a state.
+pub fn fnv1a_str(mut h: u64, s: &str) -> u64 {
+    for b in s.as_bytes() {
+        h = fnv1a_mix(h, *b as u64);
+    }
+    fnv1a_mix(h, 0xFF)
+}
+
+/// FNV-1a over a list of 64-bit parts — the config-hash helper the bench
+/// emitters use for their `meta.config_hash` field.
+pub fn fnv1a(parts: &[u64]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &v in parts {
+        for b in v.to_le_bytes() {
+            h = fnv1a_mix(h, b as u64);
+        }
+    }
+    h
+}
+
+/// The current git commit: `$GITHUB_SHA` when CI provides it, else a
+/// best-effort `git rev-parse HEAD`, else `"unknown"` — never an error
+/// (bench emission must not depend on a VCS being present).
+pub fn git_commit() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".into())
+}
+
+/// The shared `meta` block every `BENCH_*.json` emitter (and
+/// `serve --metrics-json`) attaches: git commit, harness version, and
+/// the emitter's config/grid hash — so an archived report is attributable
+/// to the exact code and configuration that produced it.
+/// `scripts/check_bench_regression.py` prints it and otherwise ignores it.
+pub fn meta_json(config_hash: u64) -> Json {
+    Json::obj(vec![
+        ("git_commit", Json::str(git_commit())),
+        ("harness_version", Json::num(BENCH_HARNESS_VERSION as f64)),
+        ("config_hash", Json::str(format!("{config_hash:016x}"))),
+    ])
+}
+
 /// Summary statistics of one measured routine.
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -211,6 +287,22 @@ mod tests {
         };
         let s = b.run("slow", || std::thread::sleep(Duration::from_millis(2)));
         assert!(s.iters >= 2);
+    }
+
+    #[test]
+    fn meta_block_is_complete_and_stable() {
+        let a = meta_json(0xBEEF);
+        assert_eq!(a.get("config_hash").and_then(|v| v.as_str()), Some("000000000000beef"));
+        assert_eq!(
+            a.get("harness_version").and_then(|v| v.as_f64()),
+            Some(BENCH_HARNESS_VERSION as f64)
+        );
+        // Never empty, never an error — "unknown" is the floor.
+        let commit = a.get("git_commit").and_then(|v| v.as_str()).unwrap();
+        assert!(!commit.is_empty());
+        // The config hash is content-stable and content-sensitive.
+        assert_eq!(fnv1a(&[1, 2, 3]), fnv1a(&[1, 2, 3]));
+        assert_ne!(fnv1a(&[1, 2, 3]), fnv1a(&[1, 2, 4]));
     }
 
     #[test]

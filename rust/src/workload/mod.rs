@@ -8,6 +8,11 @@
 //! convolutions in topological order plus the final FC expressed as a 1×1
 //! conv over a 1×1 activation; elementwise/pooling ops are folded into the
 //! activation geometry (they are not fusion decision points).
+//!
+//! This tree is the serving API surface (requests name or inline these
+//! types), so every public item is documented and the lint below keeps
+//! it that way (CI's `cargo doc --no-deps` runs with `-D warnings`).
+#![warn(missing_docs)]
 
 pub mod custom;
 pub mod registry;
@@ -19,6 +24,7 @@ pub use registry::{WorkloadRegistry, WorkloadSpec};
 /// dimensions; the input activation is `c × (y·stride) × (x·stride)`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Layer {
+    /// Cosmetic label (excluded from content identity).
     pub name: String,
     /// Output channels.
     pub k: usize,
@@ -73,7 +79,9 @@ impl Layer {
 /// A workload: an ordered chain of weighted layers.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Workload {
+    /// Registration name (an alias — content identity ignores it).
     pub name: String,
+    /// The weighted layers, in topological order.
     pub layers: Vec<Layer>,
 }
 

@@ -39,6 +39,7 @@ pub enum WorkloadSpec {
 }
 
 impl WorkloadSpec {
+    /// Spec for a registered name.
     pub fn named(name: &str) -> WorkloadSpec {
         WorkloadSpec::Named(name.to_string())
     }
@@ -239,6 +240,7 @@ impl WorkloadRegistry {
         self.inner.lock().expect("registry poisoned").by_hash.len()
     }
 
+    /// Whether no workloads are registered.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -1,0 +1,152 @@
+//! Condition-generalization tests: the condition-token encoding path at
+//! out-of-range budgets (below the smallest / above the largest training
+//! condition), and sweep report-schema stability (DESIGN.md §11).
+
+use dnnfuser::cost::HwConfig;
+use dnnfuser::env::{FusionEnv, MAX_RTG};
+use dnnfuser::eval::generalization::{bench_doc, run_sweep, GridSpec};
+use dnnfuser::model::native::NativeConfig;
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::Runtime;
+use dnnfuser::util::json::Json;
+use dnnfuser::workload::{zoo, WorkloadRegistry};
+
+fn tiny_runtime() -> Runtime {
+    Runtime::load_native("/nonexistent/artifacts", Some(NativeConfig::tiny())).unwrap()
+}
+
+#[test]
+fn condition_token_round_trips_out_of_range_budgets() {
+    // Training conditions live in [16, 64] MB; the encoding must stay
+    // finite, monotone below the range, and clamped far above it.
+    let token = |mem: f64| FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), mem).rtg_token();
+    // Below the smallest training condition: linear, positive, finite.
+    let below = token(0.5);
+    assert!(below.is_finite() && below > 0.0 && below < 0.01, "{below}");
+    assert!(token(8.0) > token(4.0));
+    // Above the largest training condition: linear up to the ceiling…
+    assert!(token(128.0) > token(64.0));
+    // …then clamped: 1 GB hits MAX_RTG exactly and beyond encodes the same.
+    assert_eq!(token(1024.0), MAX_RTG);
+    assert_eq!(token(4096.0), MAX_RTG);
+    assert_eq!(token(65536.0), MAX_RTG);
+    // Deterministic: the same budget always encodes to the same token.
+    assert_eq!(token(8192.0).to_bits(), token(8192.0).to_bits());
+}
+
+#[test]
+fn native_decode_is_deterministic_at_extreme_conditions() {
+    // The condition embedding path must clamp/encode deterministically
+    // rather than panic, even for budgets no training condition covers.
+    let rt = tiny_runtime();
+    let model = MapperModel::init(&rt, ModelKind::Df, 5).unwrap();
+    for mem in [0.5, 2.0, 14.0, 96.0, 4096.0] {
+        let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), mem);
+        let a = model.infer(&rt, &env).unwrap();
+        let b = model.infer(&rt, &env).unwrap();
+        assert_eq!(a.strategy, b.strategy, "mem {mem}");
+        assert_eq!(a.actions, b.actions, "mem {mem}");
+        for act in &a.actions {
+            assert!(act.is_finite(), "mem {mem}");
+        }
+        // Representable conditions stay feasible (serving projection);
+        // unsatisfiable ones are answered honestly as invalid.
+        if env.min_condition_bytes() <= env.mem_cond_bytes {
+            assert!(a.valid, "mem {mem} should be satisfiable");
+        } else {
+            assert!(!a.valid, "mem {mem} cannot be satisfied by any mapper");
+        }
+    }
+}
+
+#[test]
+fn two_point_sweep_report_schema_is_stable() {
+    let rt = tiny_runtime();
+    let model = MapperModel::init(&rt, ModelKind::Df, 1).unwrap();
+    let registry = WorkloadRegistry::with_zoo();
+    let spec = GridSpec {
+        workloads: vec!["vgg16".into()],
+        batch: 64,
+        train_mems: vec![16.0, 32.0],
+        interpolate_per_gap: 1,
+        extrapolate_mems: vec![40.0],
+        hw_perturbs: vec![],
+        search_budget: 60,
+        seed: 3,
+    };
+    let report = run_sweep(&rt, &model, &registry, &spec).unwrap();
+    assert_eq!(report.n_points, 2);
+    assert_eq!(report.points.len(), 2);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.feasibility_rate, 1.0);
+
+    // The emitted document must parse and carry the full gate/meta/report
+    // schema CI consumes (BENCH_generalization.json).
+    let doc = bench_doc(&report, &spec, "native", true);
+    let parsed = Json::parse(&doc.to_pretty()).expect("emitted JSON parses");
+    assert_eq!(parsed.get("bench").and_then(|v| v.as_str()), Some("generalization"));
+    assert_eq!(parsed.get("backend").and_then(|v| v.as_str()), Some("native"));
+    let gates = parsed.get("gates").expect("gates object");
+    for key in [
+        "aggregate_gap",
+        "error_rate",
+        "feasibility_rate",
+        "inference_vs_search_speedup",
+    ] {
+        assert!(gates.get(key).and_then(|v| v.as_f64()).is_some(), "gate `{key}`");
+    }
+    assert_eq!(gates.get("error_rate").and_then(|v| v.as_f64()), Some(0.0));
+    let meta = parsed.get("meta").expect("meta block");
+    for key in ["git_commit", "harness_version", "config_hash"] {
+        assert!(meta.get(key).is_some(), "meta `{key}`");
+    }
+    assert!(parsed.get("grid").and_then(|g| g.get("train_mems")).is_some());
+    let report = parsed.get("report").expect("report object");
+    let agg = report.get("aggregates").expect("aggregates object");
+    for key in [
+        "n_points",
+        "served",
+        "errors",
+        "feasibility_rate",
+        "mean_gap",
+        "median_gap",
+        "worst_gap",
+        "speedup_vs_search_geomean",
+        "mean_infer_ms",
+        "mean_search_ms",
+    ] {
+        assert!(agg.get(key).and_then(|v| v.as_f64()).is_some(), "aggregate `{key}`");
+    }
+    let points_json = report.get("points").expect("points key");
+    let points = points_json.as_arr().expect("points array");
+    assert_eq!(points.len(), 2);
+    for pt in points {
+        for key in [
+            "workload",
+            "mem_mb",
+            "kind",
+            "hw",
+            "outcome",
+            "error",
+            "model_speedup",
+            "feasible",
+            "model_act_mb",
+            "infer_ms",
+            "search_speedup",
+            "search_valid",
+            "search_ms",
+            "search_evals",
+            "gap",
+            "speedup_vs_search",
+        ] {
+            assert!(pt.get(key).is_some(), "point key `{key}`");
+        }
+        assert_eq!(pt.get("outcome").and_then(|v| v.as_str()), Some("served"));
+    }
+
+    // Grid echo round-trips through the parser (re-derivability).
+    let grid_text = parsed.get("grid").unwrap().to_pretty();
+    let again = GridSpec::from_json(&grid_text).unwrap();
+    assert_eq!(again, spec);
+    assert_eq!(again.content_hash(), spec.content_hash());
+}

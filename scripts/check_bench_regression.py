@@ -7,7 +7,9 @@ Usage:
         BENCH_baseline.json [--tolerance 0.20]
 
 The measured file carries a "bench" name and a "gates" object of
-{metric: number}. The baseline holds per-bench gate sets under
+{metric: number}, plus an optional "meta" block (git commit, harness
+version, config hash) that is printed for provenance and otherwise
+ignored. The baseline holds per-bench gate sets under
 "benches": {<bench>: {"gates": {...}}} (a legacy top-level "gates"
 object is still honored as a fallback), so one committed baseline file
 gates every bench without cross-contaminating their metric sets. A bench
@@ -77,6 +79,14 @@ def main() -> int:
         measured_doc = json.load(f)
     measured = measured_doc.get("gates", {})
     bench_name = measured_doc.get("bench")
+    # Emitters attach a shared `meta` block (git commit, harness version,
+    # config hash) for attributability; the gate tolerates and ignores it
+    # beyond printing the provenance line.
+    meta = measured_doc.get("meta")
+    if isinstance(meta, dict):
+        print(f"measured at commit {meta.get('git_commit', '?')} "
+              f"(harness v{meta.get('harness_version', '?')}, "
+              f"config {meta.get('config_hash', '?')})")
     with open(args.baseline) as f:
         baseline_doc = json.load(f)
     baseline = baseline_gates(baseline_doc, bench_name)
