@@ -7,10 +7,16 @@
 //! - batched serve throughput (`infer_batch`, pool fan-out);
 //! - KV-cache vs full-recompute (graph) decode speedup — the win the KV
 //!   cache exists for, and an absolute floor CI gates on;
-//! - an in-process matmul calibration, used to normalize throughput into
+//! - an in-process matmul calibration on the **scalar reference kernel**
+//!   (`ops::scalar::linear`), used to normalize throughput into
 //!   tokens-per-GFLOP so the committed baseline is comparable across
 //!   machines of different speeds (CI runners vary ~2x; architecture
-//!   efficiency doesn't).
+//!   efficiency doesn't). The calibration is deliberately pinned to the
+//!   scalar kernel: normalizing by the blocked production kernel would
+//!   divide any kernel speedup out of the gated metric (DESIGN.md §12);
+//! - the blocked-vs-scalar kernel speedup itself, gated so a regression
+//!   in the blocked kernels (e.g. an edit that defeats vectorization)
+//!   fails CI even if machine speed masks it in absolute throughput.
 //!
 //! Quick mode for CI: set `DNNFUSER_BENCH_QUICK=1`. The regression gate is
 //! `scripts/check_bench_regression.py` against `BENCH_baseline.json`.
@@ -31,20 +37,31 @@ fn quick_mode() -> bool {
         .is_some_and(|v| v != "0" && !v.is_empty())
 }
 
-/// Measure raw `ops::linear` throughput (GFLOP/s) as the machine-speed
-/// calibration: the decode hot loop is the same kernel, so the ratio
-/// decode-throughput / calibration is stable across machines.
-fn calibrate_matmul(b: &Bencher) -> f64 {
+/// Measure raw kernel throughput at 256×256 and return
+/// `(scalar_gflops, blocked_vs_scalar_speedup)`.
+///
+/// The machine-speed calibration is the **scalar reference**
+/// (`ops::scalar::linear`): it tracks what the machine can do with the
+/// straightforward loop, so decode-throughput / calibration stays stable
+/// across machines while still moving when the *blocked* kernels improve.
+/// Calibrating on the blocked production kernel would divide any kernel
+/// speedup out of the normalized tokens-per-GFLOP gates.
+fn calibrate(b: &Bencher) -> (f64, f64) {
     const N: usize = 256;
     let x = vec![0.5f32; N];
     let w: Vec<f32> = (0..N * N).map(|i| ((i % 17) as f32 - 8.0) * 0.01).collect();
     let mut out = vec![0.0f32; N];
-    let s = b.report("native/calibration_linear_256", || {
+    let s_scalar = b.report("native/calibration_scalar_linear_256", || {
+        ops::scalar::linear(&x, &w, None, N, N, &mut out);
+        black_box(out[0])
+    });
+    let s_blocked = b.report("native/blocked_linear_256", || {
         ops::linear(&x, &w, None, N, N, &mut out);
         black_box(out[0])
     });
     let flops = 2.0 * (N * N) as f64;
-    flops / s.mean_ns // GFLOP/s (flops per ns = GFLOP/s)
+    let scalar_gflops = flops / s_scalar.mean_ns; // flops per ns = GFLOP/s
+    (scalar_gflops, s_scalar.mean_ns / s_blocked.mean_ns)
 }
 
 fn main() {
@@ -57,8 +74,11 @@ fn main() {
     let model = MapperModel::init(&rt, ModelKind::Df, 1).expect("init");
     let eng: &NativeEngine = rt.native_engine().unwrap();
 
-    let calib_gflops = calibrate_matmul(&b);
-    println!("    → calibration: {calib_gflops:.2} GFLOP/s (ops::linear 256×256)\n");
+    let (calib_gflops, blocked_vs_scalar_speedup) = calibrate(&b);
+    println!(
+        "    → calibration: {calib_gflops:.2} GFLOP/s (scalar linear 256×256), \
+         blocked kernel {blocked_vs_scalar_speedup:.2}x over scalar\n"
+    );
 
     // Single-mapping latency per workload (KV decode).
     let workloads: &[&str] = if quick {
@@ -154,6 +174,7 @@ fn main() {
             ]),
         ),
         ("calibration_gflops", Json::num(calib_gflops)),
+        ("blocked_vs_scalar_speedup", Json::num(blocked_vs_scalar_speedup)),
         ("workloads", Json::obj(row_refs)),
         ("batch8_mappings_per_sec", Json::num(batch8_mappings_per_sec)),
         ("batch8_mappings_per_gflop", Json::num(batch8_mappings_per_gflop)),
@@ -166,6 +187,10 @@ fn main() {
                 ("vgg16_tokens_per_gflop", Json::num(vgg16_tokens_per_gflop)),
                 ("batch8_mappings_per_gflop", Json::num(batch8_mappings_per_gflop)),
                 ("kv_vs_graph_speedup", Json::num(kv_vs_graph_speedup)),
+                (
+                    "blocked_vs_scalar_speedup",
+                    Json::num(blocked_vs_scalar_speedup),
+                ),
             ]),
         ),
     ]);

@@ -176,6 +176,17 @@ pub struct Metrics {
     /// on demand: a batch larger than the current histogram extends it
     /// rather than dropping the sample.
     pub batch_occupancy: Vec<u64>,
+    /// Batched per-layer GEMMs issued by the native lock-step decode
+    /// (each weight matrix applied to every active sequence counts once).
+    /// Zero on the PJRT and search backends.
+    pub gemm_calls: u64,
+    /// Total sequence-rows those GEMMs multiplied (numerator of
+    /// [`Metrics::batch_gemm_efficiency`]).
+    pub gemm_rows: u64,
+    /// The largest batch the native decode could have packed into one
+    /// GEMM (denominator of the efficiency ratio). Workers set it from
+    /// the backend's effective max batch; merged by max, not sum.
+    pub gemm_max_batch: usize,
 }
 
 impl Metrics {
@@ -252,6 +263,27 @@ impl Metrics {
         self.batch_occupancy[used_rows] += 1;
     }
 
+    /// Account one batched decode's GEMM utilization counters: `calls`
+    /// batched per-layer GEMMs covering `rows` sequence-rows in total.
+    pub fn record_gemm(&mut self, calls: u64, rows: u64) {
+        self.gemm_calls += calls;
+        self.gemm_rows += rows;
+    }
+
+    /// Mean sequences per batched per-layer GEMM, as a fraction of the
+    /// backend's max batch — how full the native decode's GEMM panels
+    /// actually run. 1.0 means every GEMM multiplied a full panel; low
+    /// values mean the batch former is dispatching mostly-empty panels.
+    /// `None` until a native decode has run (or when the max batch was
+    /// never learned), so dashboards can tell "unused" from "empty".
+    pub fn batch_gemm_efficiency(&self) -> Option<f64> {
+        if self.gemm_calls == 0 || self.gemm_max_batch == 0 {
+            return None;
+        }
+        let mean_rows = self.gemm_rows as f64 / self.gemm_calls as f64;
+        Some(mean_rows / self.gemm_max_batch as f64)
+    }
+
     /// Mean decode-batch occupancy (0.0 before the first batch).
     pub fn mean_batch_occupancy(&self) -> f64 {
         if self.model_batches == 0 {
@@ -298,6 +330,11 @@ impl Metrics {
         for (a, b) in self.batch_occupancy.iter_mut().zip(&o.batch_occupancy) {
             *a += b;
         }
+        self.gemm_calls += o.gemm_calls;
+        self.gemm_rows += o.gemm_rows;
+        // Every worker of one service reports the same effective max
+        // batch, so max (not sum) keeps the merged denominator honest.
+        self.gemm_max_batch = self.gemm_max_batch.max(o.gemm_max_batch);
     }
 
     /// One printable summary line (counters, hit rate, percentiles, and
@@ -338,6 +375,12 @@ impl Metrics {
         }
         if let Some(x) = self.native_vs_search_speedup() {
             s.push_str(&format!(" | native_vs_search_speedup={x:.1}x"));
+        }
+        if let Some(e) = self.batch_gemm_efficiency() {
+            s.push_str(&format!(
+                " | batch_gemm_efficiency={:.2} ({} gemms)",
+                e, self.gemm_calls
+            ));
         }
         s
     }
@@ -615,6 +658,36 @@ mod tests {
         let batches: u64 = THREADS as u64 * (PER_THREAD / 8 + u64::from(PER_THREAD % 8 != 0));
         assert_eq!(snap.model_batches, batches);
         assert_eq!(snap.batch_occupancy.iter().sum::<u64>(), batches);
+    }
+
+    #[test]
+    fn gemm_efficiency_needs_calls_and_max_batch() {
+        let mut m = Metrics::new(0);
+        assert!(m.batch_gemm_efficiency().is_none(), "no decodes yet");
+        m.record_gemm(10, 40);
+        assert!(m.batch_gemm_efficiency().is_none(), "max batch unknown");
+        m.gemm_max_batch = 8;
+        // 40 rows / 10 gemms = 4 rows per gemm; 4 / 8 = 0.5.
+        let e = m.batch_gemm_efficiency().unwrap();
+        assert!((e - 0.5).abs() < 1e-9, "{e}");
+        let r = m.report();
+        assert!(r.contains("batch_gemm_efficiency=0.50"), "{r}");
+    }
+
+    #[test]
+    fn gemm_counters_merge_adds_counts_and_maxes_batch() {
+        let mut a = Metrics::new(0);
+        a.record_gemm(6, 12);
+        a.gemm_max_batch = 4;
+        let mut b = Metrics::new(0);
+        b.record_gemm(2, 16);
+        b.gemm_max_batch = 8;
+        a.merge_from(&b);
+        assert_eq!(a.gemm_calls, 8);
+        assert_eq!(a.gemm_rows, 28);
+        assert_eq!(a.gemm_max_batch, 8, "merge takes the max, not the sum");
+        let e = a.batch_gemm_efficiency().unwrap();
+        assert!((e - 28.0 / 8.0 / 8.0).abs() < 1e-9, "{e}");
     }
 
     #[test]

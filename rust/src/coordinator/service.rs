@@ -29,11 +29,14 @@
 //!    native backend is, but per-worker models keep the two paths
 //!    symmetric). A checkpoint is read from disk exactly once
 //!    ([`RawCheckpoint`]) and shared; the mapping cache and the workload
-//!    registry are shared behind their existing locks. With one worker a
-//!    batch fans per-sequence over the shared thread pool (maximum
-//!    intra-batch parallelism); with several, each worker decodes its
-//!    batch serially so parallelism comes from worker concurrency
-//!    instead of N workers contending for the same pool.
+//!    registry are shared behind their existing locks. A model batch is
+//!    always decoded in **one** backend call: PJRT runs one padded
+//!    lock-step executable call, and the native backend runs one
+//!    lock-step pass with one blocked GEMM per weight matrix per layer
+//!    across all sequences (DESIGN.md §12), chunking large batches over
+//!    the shared pool internally. The search fallback keeps the old
+//!    policy (fan per-request over the pool with one worker, serial
+//!    in-worker with several).
 //! 4. **Drain** — `shutdown` stops admission, flushes everything already
 //!    queued through the workers, and joins: an admitted request always
 //!    gets an answer (a mapping, a rejection, or a shed), never a dropped
@@ -66,7 +69,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::cost::MB;
 use crate::env::FusionEnv;
 use crate::fusion::Strategy;
-use crate::model::native::NativeConfig;
+use crate::model::native::{NativeConfig, Sampling};
 use crate::model::{MapperModel, ModelKind, RawCheckpoint};
 use crate::runtime::{BackendKind, LoadSet, Runtime};
 use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
@@ -296,6 +299,15 @@ fn build_backend(
     }
 }
 
+/// Largest batch the native backend packs into one lock-step decode
+/// call. The batched decode multiplies each weight matrix against a
+/// packed panel of all active sequences (one GEMM per matrix per layer
+/// — DESIGN.md §12), so its sweet spot is a property of the kernels and
+/// cache footprint, not of the thread pool: the decode chunks oversized
+/// panels over the pool internally. 32 rows keeps a paper-scale panel
+/// (32 × 128 f32) well inside L2 alongside the streamed weight tile.
+pub const NATIVE_GEMM_MAX_BATCH: usize = 32;
+
 impl Backend {
     /// What non-cache answers from this backend are tagged as.
     fn source(&self) -> Source {
@@ -308,17 +320,14 @@ impl Backend {
         }
     }
 
-    /// The largest batch this backend can decode in one dispatch. With
-    /// several workers the pool-backed backends report their share of the
-    /// pool, so N coalesced batches in flight don't oversubscribe cores.
+    /// The largest batch this backend can decode in one dispatch.
     fn max_batch(&self, workers: usize) -> usize {
-        let pool_share = (ThreadPool::shared().size() / workers.max(1)).max(1);
         match self {
             Backend::Model { rt, model } => match rt.backend() {
-                // Native decode has no AOT batch table: sequences fan out
-                // over the shared pool (one worker) or decode serially
-                // in-worker (several workers).
-                BackendKind::Native => pool_share,
+                // Native: one batched lock-step GEMM pass per dispatch;
+                // the cap is a kernel/cache property, independent of the
+                // worker count or pool size (see the constant's docs).
+                BackendKind::Native => NATIVE_GEMM_MAX_BATCH,
                 BackendKind::Pjrt => rt
                     .manifest
                     .infer_batches(model.kind.tag())
@@ -326,8 +335,10 @@ impl Backend {
                     .copied()
                     .unwrap_or(1),
             },
-            // Search fallback: one pool worker per in-flight search.
-            Backend::Search { .. } => pool_share,
+            // Search fallback: one pool worker per in-flight search; with
+            // several workers each reports its share of the pool, so N
+            // coalesced batches in flight don't oversubscribe cores.
+            Backend::Search { .. } => (ThreadPool::shared().size() / workers.max(1)).max(1),
         }
     }
 }
@@ -733,9 +744,16 @@ fn engine_worker(
     let max_batch = backend.max_batch(n_workers);
     let shard = hub.shard(MetricsHub::WORKER0 + idx);
     // Size this shard's occupancy histogram for the backend we actually
-    // got (spawn couldn't know); overshoot still grows on record.
+    // got (spawn couldn't know); overshoot still grows on record. The
+    // same effective cap is the denominator of the GEMM-efficiency
+    // signal: mean rows per batched GEMM vs the most the batch former
+    // could have packed.
     let effective_max = cfg.max_batch.map_or(max_batch, |c| c.min(max_batch));
-    shard.lock().expect("metrics").ensure_batch_capacity(effective_max);
+    {
+        let mut m = shard.lock().expect("metrics");
+        m.ensure_batch_capacity(effective_max);
+        m.gemm_max_batch = effective_max;
+    }
     let _ = ready.send(Ok((max_batch, backend.source())));
     // Drop the readiness sender now rather than holding it for the serve
     // loop's lifetime: if a sibling worker panics before reporting, the
@@ -743,8 +761,9 @@ fn engine_worker(
     // recv() sees the disconnect instead of blocking forever.
     drop(ready);
 
-    // One worker: fan each batch per-sequence over the shared pool.
-    // Several workers: decode serially in-worker — the workers are the
+    // Search-arm policy only (model batches are always one backend call
+    // now): one worker fans searches over the shared pool, several
+    // workers run them serially in-worker — the workers are the
     // parallelism axis, and N batches in flight already cover the cores.
     let intra_parallel = n_workers == 1;
     let registry = &cfg.registry;
@@ -839,36 +858,32 @@ fn serve_batch(
                     )
                 })
                 .collect();
-            // PJRT always decodes the whole batch in one padded lock-step
-            // executable call — its parallelism is internal to XLA, not
-            // the shared pool, so the serial-in-worker policy (which only
-            // exists to keep N workers from contending for that pool)
-            // must never apply to it.
-            let batched = intra_parallel || rt.backend() == BackendKind::Pjrt;
-            let results: Vec<Result<_, String>> = if batched {
-                // One lock-step executable call: a failure here really is
-                // batch-wide, so every co-traveller gets the error.
-                let env_refs: Vec<&FusionEnv> = envs.iter().collect();
-                match model.infer_batch(rt, &env_refs) {
-                    Ok(trajs) => trajs.into_iter().map(Ok).collect(),
+            // Both model backends decode the whole batch in one
+            // lock-step call: PJRT as one padded executable call, native
+            // as one batched per-layer GEMM pass over all sequences
+            // (chunked across the shared pool inside the model when the
+            // batch is large). A failure on either path is engine-level
+            // and batch-wide, so every co-traveller gets the error.
+            let env_refs: Vec<&FusionEnv> = envs.iter().collect();
+            let results: Vec<Result<_, String>> =
+                match model.infer_batch_with_stats(rt, &env_refs, Sampling::Greedy) {
+                    Ok((trajs, stats)) => {
+                        // Feed the decode's GEMM utilization into this
+                        // shard (zeros on PJRT — there are no native
+                        // panels to measure there).
+                        if stats.gemm_calls > 0 {
+                            shard
+                                .lock()
+                                .expect("metrics")
+                                .record_gemm(stats.gemm_calls, stats.gemm_rows);
+                        }
+                        trajs.into_iter().map(Ok).collect()
+                    }
                     Err(e) => {
                         let msg = format!("inference failed: {e:#}");
                         jobs.iter().map(|_| Err(msg.clone())).collect()
                     }
-                }
-            } else {
-                // Per-sequence serial decodes: each request succeeds or
-                // fails on its own — one bad decode must not discard the
-                // batch's already-completed trajectories.
-                envs.iter()
-                    .map(|env| {
-                        model
-                            .infer_batch(rt, &[env])
-                            .map(|mut v| v.pop().expect("one trajectory"))
-                            .map_err(|e| format!("inference failed: {e:#}"))
-                    })
-                    .collect()
-            };
+                };
             let decoded = results.iter().filter(|r| r.is_ok()).count();
             if decoded > 0 {
                 shard.lock().expect("metrics").record_batch(decoded);

@@ -27,6 +27,14 @@
 //! assert!((m.speedup_of(&baseline) - 1.0).abs() < 1e-9);
 //! ```
 
+/// Process-wide allocator: the system allocator behind a thread-local
+/// allocation counter (`util::alloc_probe`), so tests can assert hot loops
+/// — e.g. the steady-state decode loop — never touch the heap. The count
+/// is one TLS increment per allocation; the serving hot path allocates
+/// nothing, so this is free where it matters.
+#[global_allocator]
+static ALLOCATOR: util::alloc_probe::CountingAllocator = util::alloc_probe::CountingAllocator;
+
 pub mod bench_support;
 pub mod coordinator;
 pub mod cost;

@@ -647,6 +647,13 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             ("errors", Json::num(m.errors as f64)),
             ("model_batches", Json::num(m.model_batches as f64)),
             ("mean_batch_occupancy", Json::num(m.mean_batch_occupancy())),
+            // How full the native decode's batched per-layer GEMM panels
+            // ran (mean rows per GEMM / max batch); null until a native
+            // decode has happened (e.g. PJRT or search backends).
+            (
+                "batch_gemm_efficiency",
+                m.batch_gemm_efficiency().map_or(Json::Null, Json::num),
+            ),
             ("throughput_per_sec", Json::num(report.throughput)),
             ("load", report.to_json()),
             (

@@ -10,8 +10,9 @@
 //! - **Native** — the pure-Rust transformer in [`native`]: same flat
 //!   parameter layout, same train-step update, same decode loop, but the
 //!   forward pass runs in-process with a KV cache, batches have no AOT
-//!   size table (any batch decodes in one pass, sequences fanned over the
-//!   shared thread pool), and training needs no artifacts at all.
+//!   size table (any batch decodes in one lock-step pass with one blocked
+//!   GEMM per weight matrix per layer — DESIGN.md §12), and training
+//!   needs no artifacts at all.
 //!
 //! Checkpoints are interchangeable: v1 files (PJRT-era) load everywhere at
 //! paper geometry; v2 files additionally record the native architecture so
@@ -276,18 +277,33 @@ impl MapperModel {
     }
 
     /// Batched mapping with an explicit decode policy. On the native
-    /// backend each sequence runs a KV-cache decode, fanned over the
-    /// shared thread pool (one pass for a full serve batch, any batch
-    /// size); on PJRT the batch is padded to the smallest AOT inference
-    /// batch and decoded in lock-step (greedy only).
+    /// backend the whole batch decodes in lock-step, applying each weight
+    /// matrix to the packed activation panel with one blocked GEMM per
+    /// layer (`decoder::infer_env_batch`); large batches split into
+    /// contiguous chunks across the shared thread pool, each chunk still
+    /// dense enough to amortize weight streaming. On PJRT the batch is
+    /// padded to the smallest AOT inference batch and decoded in
+    /// lock-step (greedy only).
     pub fn infer_batch_with(
         &self,
         rt: &Runtime,
         envs: &[&FusionEnv],
         sampling: Sampling,
     ) -> Result<Vec<Trajectory>> {
+        Ok(self.infer_batch_with_stats(rt, envs, sampling)?.0)
+    }
+
+    /// [`Self::infer_batch_with`] plus the batched decode's GEMM
+    /// utilization counters (zeros on the PJRT backend) — the serving
+    /// workers feed these into `Metrics::batch_gemm_efficiency`.
+    pub fn infer_batch_with_stats(
+        &self,
+        rt: &Runtime,
+        envs: &[&FusionEnv],
+        sampling: Sampling,
+    ) -> Result<(Vec<Trajectory>, decoder::DecodeStats)> {
         if envs.is_empty() {
-            return Ok(Vec::new());
+            return Ok((Vec::new(), decoder::DecodeStats::default()));
         }
         if let Some(eng) = rt.native_engine() {
             return self.native_infer_batch(eng, envs, sampling);
@@ -295,7 +311,7 @@ impl MapperModel {
         if sampling != Sampling::Greedy {
             bail!("top-k sampling requires the native backend");
         }
-        self.pjrt_infer_batch(rt, envs)
+        Ok((self.pjrt_infer_batch(rt, envs)?, decoder::DecodeStats::default()))
     }
 
     fn native_infer_batch(
@@ -303,7 +319,7 @@ impl MapperModel {
         eng: &NativeEngine,
         envs: &[&FusionEnv],
         sampling: Sampling,
-    ) -> Result<Vec<Trajectory>> {
+    ) -> Result<(Vec<Trajectory>, decoder::DecodeStats)> {
         if self.theta.len() != eng.n_params() {
             bail!(
                 "model has {} params, native engine expects {} — config mismatch",
@@ -311,28 +327,42 @@ impl MapperModel {
                 eng.n_params()
             );
         }
+        // Lock-step batched GEMM decode. On multicore hosts a large batch
+        // splits into contiguous chunks across the shared pool; MIN_CHUNK
+        // keeps every chunk's per-layer GEMM dense enough to amortize
+        // weight streaming. Chunk boundaries cannot change bits —
+        // `ops::matmul` is per-row exact, so any split decodes each
+        // sequence identically (pinned by the batched-vs-solo parity
+        // tests).
+        const MIN_CHUNK: usize = 4;
         let pool = ThreadPool::shared();
-        if envs.len() < 2 || pool.size() < 2 || ThreadPool::on_pool_worker() {
-            return Ok(envs
-                .iter()
-                .map(|env| decoder::infer_env(eng, &self.theta, env, sampling))
-                .collect());
+        let chunks = pool.size().min(envs.len().div_ceil(MIN_CHUNK));
+        if chunks < 2 || ThreadPool::on_pool_worker() {
+            return Ok(decoder::infer_env_batch(eng, &self.theta, envs, sampling));
         }
-        // Per-sequence fan-out: decode and trajectory post-processing run
-        // on the same worker, so a full serve batch is one pool pass.
         let eng_arc = Arc::new(eng.clone());
         let theta = Arc::new(self.theta.clone());
-        let jobs: Vec<Box<dyn FnOnce() -> Trajectory + Send + 'static>> = envs
-            .iter()
-            .map(|env| {
+        let n = envs.len();
+        type ChunkOut = (Vec<Trajectory>, decoder::DecodeStats);
+        let jobs: Vec<Box<dyn FnOnce() -> ChunkOut + Send + 'static>> = (0..chunks)
+            .map(|c| {
+                let (lo, hi) = (c * n / chunks, (c + 1) * n / chunks);
+                let chunk: Vec<FusionEnv> = envs[lo..hi].iter().map(|e| (*e).clone()).collect();
                 let eng = Arc::clone(&eng_arc);
                 let th = Arc::clone(&theta);
-                let env = (*env).clone();
-                Box::new(move || decoder::infer_env(&eng, &th, &env, sampling))
-                    as Box<dyn FnOnce() -> Trajectory + Send + 'static>
+                Box::new(move || {
+                    let refs: Vec<&FusionEnv> = chunk.iter().collect();
+                    decoder::infer_env_batch(&eng, &th, &refs, sampling)
+                }) as Box<dyn FnOnce() -> ChunkOut + Send + 'static>
             })
             .collect();
-        Ok(pool.run_batch(jobs))
+        let mut out = Vec::with_capacity(n);
+        let mut stats = decoder::DecodeStats::default();
+        for (trajs, s) in pool.run_batch(jobs) {
+            out.extend(trajs);
+            stats.merge(&s);
+        }
+        Ok((out, stats))
     }
 
     /// The PJRT env-in-the-loop decode: pick the smallest AOT inference

@@ -1,5 +1,6 @@
 //! Autoregressive decoding for the native transformer: the KV-cache
-//! serving path and the AOT-graph reference path.
+//! serving path, the batched lock-step serving path, and the AOT-graph
+//! reference path.
 //!
 //! **KV-cache layout** (DESIGN.md §7): one session per sequence; per
 //! block, two contiguous row-major `[3·T_MAX, d_model]` buffers (keys,
@@ -9,19 +10,74 @@
 //! exactly once. A session costs `n_blocks · 2 · 3·T_MAX · d_model`
 //! floats (~600 KB at paper scale).
 //!
-//! **Why two paths.** The AOT executables recompute the full padded
-//! sequence every step (`df_infer_b{B}` takes whole `[B, T_MAX]` token
-//! arrays); the serving path appends 3 tokens per strategy slot to a live
-//! session. Causal attention makes the two produce bit-identical
-//! predictions — both accumulate softmax terms in ascending key order and
-//! the graph's masked future keys contribute exactly 0.0 — which
-//! `rust/tests/native_parity.rs` pins on every zoo workload.
+//! **Scratch arena.** Every per-token temporary (layernorm rows, the Q
+//! panel, per-head attention outputs, the MLP hidden row, attention score
+//! scratch) lives in a single per-session buffer sized once from
+//! [`super::NativeConfig`] at construction — the steady-state append/pred
+//! loop performs zero heap allocations (asserted by
+//! `steady_state_decode_is_allocation_free`).
+//!
+//! **Batched lock-step decode.** [`infer_env_batch`] advances N sequences
+//! token-by-token together: each block's weight matrices are applied to
+//! the packed `[n_active, d_model]` activation panel with one blocked GEMM
+//! per matrix ([`ops::matmul`]) instead of N per-sequence GEMVs, which
+//! amortizes weight streaming across the whole batch. Because
+//! `ops::matmul` is bit-identical to per-row `ops::linear`, a sequence
+//! decodes to exactly the same bits whether it is served solo or inside
+//! any batch — `rust/tests/native_parity.rs` pins this on mixed-depth
+//! workloads. Ragged lengths are handled by an active-row list: a
+//! sequence participates while `t < steps`, so its cache rows stay a
+//! dense prefix and the panel shrinks as short sequences finish.
+//!
+//! **Why two single-sequence paths.** The AOT executables recompute the
+//! full padded sequence every step (`df_infer_b{B}` takes whole `[B,
+//! T_MAX]` token arrays); the serving path appends 3 tokens per strategy
+//! slot to a live session. Causal attention makes the two produce
+//! bit-identical predictions — both accumulate softmax terms in ascending
+//! key order and the graph's masked future keys contribute exactly 0.0 —
+//! which `rust/tests/native_parity.rs` pins on every zoo workload.
 
 use crate::env::{FusionEnv, Trajectory, STATE_DIM, T_MAX};
 use crate::util::rng::Rng;
 
 use super::ops;
-use super::{NativeEngine, Sampling, SEQ_LEN};
+use super::{NativeConfig, NativeEngine, Sampling, SEQ_LEN};
+
+/// Per-session scratch arena: one allocation sized from the config, with
+/// every decode-step temporary carved out as a fixed disjoint slice.
+struct DecodeScratch {
+    buf: Vec<f32>,
+    d: usize,
+    ff: usize,
+}
+
+/// Disjoint mutable views into a [`DecodeScratch`] buffer for one append.
+struct ScratchViews<'s> {
+    pre: &'s mut [f32],
+    xhat: &'s mut [f32],
+    q: &'s mut [f32],
+    att: &'s mut [f32],
+    o: &'s mut [f32],
+    h1: &'s mut [f32],
+    scores: &'s mut [f32],
+}
+
+impl DecodeScratch {
+    fn new(cfg: &NativeConfig) -> DecodeScratch {
+        let (d, ff) = (cfg.d_model, cfg.d_ff);
+        DecodeScratch { buf: vec![0.0; 5 * d + ff + SEQ_LEN], d, ff }
+    }
+
+    fn views(&mut self) -> ScratchViews<'_> {
+        let (pre, rest) = self.buf.split_at_mut(self.d);
+        let (xhat, rest) = rest.split_at_mut(self.d);
+        let (q, rest) = rest.split_at_mut(self.d);
+        let (att, rest) = rest.split_at_mut(self.d);
+        let (o, rest) = rest.split_at_mut(self.d);
+        let (h1, scores) = rest.split_at_mut(self.ff);
+        ScratchViews { pre, xhat, q, att, o, h1, scores }
+    }
+}
 
 /// Incremental decode state for one sequence.
 pub struct KvSession<'a> {
@@ -34,14 +90,8 @@ pub struct KvSession<'a> {
     v: Vec<Vec<f32>>,
     /// Hidden state of the most recent token after all blocks (pre-ln_f).
     h: Vec<f32>,
-    // Scratch (reused across appends; no steady-state allocation).
-    pre: Vec<f32>,
-    xhat: Vec<f32>,
-    q: Vec<f32>,
-    att: Vec<f32>,
-    o: Vec<f32>,
-    h1: Vec<f32>,
-    scores: Vec<f32>,
+    /// All per-token temporaries (preallocated; no steady-state allocation).
+    scratch: DecodeScratch,
 }
 
 impl<'a> KvSession<'a> {
@@ -59,13 +109,7 @@ impl<'a> KvSession<'a> {
             k: (0..eng.cfg.n_blocks).map(|_| vec![0.0; SEQ_LEN * d]).collect(),
             v: (0..eng.cfg.n_blocks).map(|_| vec![0.0; SEQ_LEN * d]).collect(),
             h: vec![0.0; d],
-            pre: vec![0.0; d],
-            xhat: vec![0.0; d],
-            q: vec![0.0; d],
-            att: vec![0.0; d],
-            o: vec![0.0; d],
-            h1: vec![0.0; eng.cfg.d_ff],
-            scores: vec![0.0; SEQ_LEN],
+            scratch: DecodeScratch::new(&eng.cfg),
         }
     }
 
@@ -74,13 +118,17 @@ impl<'a> KvSession<'a> {
     }
 
     /// Append one embedded token and advance it through every block,
-    /// extending each block's KV cache by one row.
+    /// extending each block's KV cache by one row. Q/K/V come from one
+    /// fused traversal per block ([`ops::fused_qkv3`]); the MLP streams
+    /// through blocked tiles. Both are bit-identical to the unfused
+    /// per-matrix scalar reference (see `ops` module docs).
     pub fn append(&mut self, emb: &[f32]) {
         assert!(self.pos < SEQ_LEN, "KV session full ({SEQ_LEN} tokens)");
         let th = self.theta;
         let cfg = self.eng.cfg;
         let (d, ff, dh) = (cfg.d_model, cfg.d_ff, cfg.d_head());
         let row = self.pos * d;
+        let sv = self.scratch.views();
         self.h.copy_from_slice(emb);
         for (b, bo) in self.eng.layout.blocks.iter().enumerate() {
             // Pre-LN attention.
@@ -88,49 +136,45 @@ impl<'a> KvSession<'a> {
                 &self.h,
                 &th[bo.ln1_g..bo.ln1_g + d],
                 &th[bo.ln1_b..bo.ln1_b + d],
-                &mut self.xhat,
-                &mut self.pre,
+                sv.xhat,
+                sv.pre,
             );
-            ops::linear(&self.pre, &th[bo.wq..bo.wq + d * d], None, d, d, &mut self.q);
-            ops::linear(
-                &self.pre,
+            // One traversal of the input row drives all three projections;
+            // K/V land directly in this block's cache row.
+            ops::fused_qkv3(
+                sv.pre,
+                &th[bo.wq..bo.wq + d * d],
                 &th[bo.wk..bo.wk + d * d],
-                None,
-                d,
-                d,
-                &mut self.k[b][row..row + d],
-            );
-            ops::linear(
-                &self.pre,
                 &th[bo.wv..bo.wv + d * d],
-                None,
                 d,
                 d,
+                sv.q,
+                &mut self.k[b][row..row + d],
                 &mut self.v[b][row..row + d],
             );
             for head in 0..cfg.n_heads {
                 let col = head * dh;
                 ops::attend_one(
-                    &self.q[col..col + dh],
+                    &sv.q[col..col + dh],
                     &self.k[b],
                     &self.v[b],
                     self.pos + 1,
                     d,
                     col,
                     dh,
-                    &mut self.scores,
-                    &mut self.att[col..col + dh],
+                    sv.scores,
+                    &mut sv.att[col..col + dh],
                 );
             }
             ops::linear(
-                &self.att,
+                sv.att,
                 &th[bo.wo..bo.wo + d * d],
                 Some(&th[bo.bo..bo.bo + d]),
                 d,
                 d,
-                &mut self.o,
+                sv.o,
             );
-            for (hv, &ov) in self.h.iter_mut().zip(&self.o) {
+            for (hv, &ov) in self.h.iter_mut().zip(sv.o.iter()) {
                 *hv += ov;
             }
             // Pre-LN MLP.
@@ -138,29 +182,29 @@ impl<'a> KvSession<'a> {
                 &self.h,
                 &th[bo.ln2_g..bo.ln2_g + d],
                 &th[bo.ln2_b..bo.ln2_b + d],
-                &mut self.xhat,
-                &mut self.pre,
+                sv.xhat,
+                sv.pre,
             );
             ops::linear(
-                &self.pre,
+                sv.pre,
                 &th[bo.w1..bo.w1 + d * ff],
                 Some(&th[bo.b1..bo.b1 + ff]),
                 d,
                 ff,
-                &mut self.h1,
+                sv.h1,
             );
-            for x in self.h1.iter_mut() {
+            for x in sv.h1.iter_mut() {
                 *x = ops::gelu(*x);
             }
             ops::linear(
-                &self.h1,
+                sv.h1,
                 &th[bo.w2..bo.w2 + ff * d],
                 Some(&th[bo.b2..bo.b2 + d]),
                 ff,
                 d,
-                &mut self.o,
+                sv.o,
             );
-            for (hv, &ov) in self.h.iter_mut().zip(&self.o) {
+            for (hv, &ov) in self.h.iter_mut().zip(sv.o.iter()) {
                 *hv += ov;
             }
         }
@@ -173,18 +217,263 @@ impl<'a> KvSession<'a> {
         let th = self.theta;
         let l = &self.eng.layout;
         let d = self.eng.cfg.d_model;
+        let sv = self.scratch.views();
         ops::layernorm(
             &self.h,
             &th[l.ln_f_g..l.ln_f_g + d],
             &th[l.ln_f_b..l.ln_f_b + d],
-            &mut self.xhat,
-            &mut self.pre,
+            sv.xhat,
+            sv.pre,
         );
-        let mut z = th[l.head_b];
-        for (xv, wv) in self.pre.iter().zip(&th[l.head_w..l.head_w + d]) {
-            z += xv * wv;
-        }
+        let z = th[l.head_b] + ops::dot(sv.pre, &th[l.head_w..l.head_w + d]);
         z.tanh()
+    }
+}
+
+/// Utilization counters for the batched per-layer GEMM decode path: one
+/// `(call, rows)` increment per weight-matrix GEMM. `gemm_rows /
+/// gemm_calls` is the mean number of sequences each weight traversal was
+/// amortized over — the signal `Metrics::batch_gemm_efficiency` reports
+/// relative to the configured max batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DecodeStats {
+    /// Batched weight-matrix GEMM invocations (per block, per token).
+    pub gemm_calls: u64,
+    /// Total sequence-rows across those invocations.
+    pub gemm_rows: u64,
+}
+
+impl DecodeStats {
+    /// Fold another batch's counters into this one.
+    pub fn merge(&mut self, other: &DecodeStats) {
+        self.gemm_calls += other.gemm_calls;
+        self.gemm_rows += other.gemm_rows;
+    }
+
+    /// Mean sequence-rows per batched GEMM, `None` before any batched
+    /// decode has run.
+    pub fn mean_rows_per_gemm(&self) -> Option<f64> {
+        if self.gemm_calls == 0 {
+            None
+        } else {
+            Some(self.gemm_rows as f64 / self.gemm_calls as f64)
+        }
+    }
+
+    #[inline]
+    fn gemm(&mut self, rows: usize) {
+        self.gemm_calls += 1;
+        self.gemm_rows += rows as u64;
+    }
+}
+
+/// Lock-step decode state for N sequences: per-sequence KV caches plus
+/// packed activation panels (rows in active-list order) for the per-layer
+/// GEMMs. All panels are allocated once at construction.
+struct BatchedSessions<'a> {
+    eng: &'a NativeEngine,
+    theta: &'a [f32],
+    /// Tokens appended so far (identical for every active sequence).
+    pos: usize,
+    /// Per block: keys/values for all sequences, `[n, SEQ_LEN, d_model]`.
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Persistent hidden state per sequence, `[n, d_model]`.
+    h: Vec<f32>,
+    // Packed [n_active, ·] panels in active-row order.
+    pre: Vec<f32>,
+    q: Vec<f32>,
+    kp: Vec<f32>,
+    vp: Vec<f32>,
+    att: Vec<f32>,
+    proj: Vec<f32>,
+    h1: Vec<f32>,
+    xhat: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl<'a> BatchedSessions<'a> {
+    fn new(eng: &'a NativeEngine, theta: &'a [f32], n: usize) -> BatchedSessions<'a> {
+        assert_eq!(
+            theta.len(),
+            eng.layout.n_params,
+            "theta length does not match the engine layout"
+        );
+        let d = eng.cfg.d_model;
+        BatchedSessions {
+            eng,
+            theta,
+            pos: 0,
+            k: (0..eng.cfg.n_blocks).map(|_| vec![0.0; n * SEQ_LEN * d]).collect(),
+            v: (0..eng.cfg.n_blocks).map(|_| vec![0.0; n * SEQ_LEN * d]).collect(),
+            h: vec![0.0; n * d],
+            pre: vec![0.0; n * d],
+            q: vec![0.0; n * d],
+            kp: vec![0.0; n * d],
+            vp: vec![0.0; n * d],
+            att: vec![0.0; n * d],
+            proj: vec![0.0; n * d],
+            h1: vec![0.0; n * eng.cfg.d_ff],
+            xhat: vec![0.0; d],
+            scores: vec![0.0; SEQ_LEN],
+        }
+    }
+
+    /// Append one token for every sequence in `rows` (embeddings packed in
+    /// `emb: [rows.len(), d_model]` in the same order), advancing the
+    /// shared position. Per sequence this computes exactly what
+    /// [`KvSession::append`] computes, but each weight matrix is applied
+    /// to the whole packed panel with one blocked GEMM.
+    fn append_rows(&mut self, rows: &[usize], emb: &[f32], stats: &mut DecodeStats) {
+        assert!(self.pos < SEQ_LEN, "KV session full ({SEQ_LEN} tokens)");
+        let th = self.theta;
+        let cfg = self.eng.cfg;
+        let (d, ff, dh) = (cfg.d_model, cfg.d_ff, cfg.d_head());
+        let na = rows.len();
+        let row = self.pos * d;
+        for (i, &s) in rows.iter().enumerate() {
+            self.h[s * d..(s + 1) * d].copy_from_slice(&emb[i * d..(i + 1) * d]);
+        }
+        for (b, bo) in self.eng.layout.blocks.iter().enumerate() {
+            // Pre-LN attention.
+            for (i, &s) in rows.iter().enumerate() {
+                ops::layernorm(
+                    &self.h[s * d..(s + 1) * d],
+                    &th[bo.ln1_g..bo.ln1_g + d],
+                    &th[bo.ln1_b..bo.ln1_b + d],
+                    &mut self.xhat,
+                    &mut self.pre[i * d..(i + 1) * d],
+                );
+            }
+            stats.gemm(na);
+            ops::matmul(
+                &self.pre[..na * d],
+                &th[bo.wq..bo.wq + d * d],
+                None,
+                na,
+                d,
+                d,
+                &mut self.q[..na * d],
+            );
+            stats.gemm(na);
+            ops::matmul(
+                &self.pre[..na * d],
+                &th[bo.wk..bo.wk + d * d],
+                None,
+                na,
+                d,
+                d,
+                &mut self.kp[..na * d],
+            );
+            stats.gemm(na);
+            ops::matmul(
+                &self.pre[..na * d],
+                &th[bo.wv..bo.wv + d * d],
+                None,
+                na,
+                d,
+                d,
+                &mut self.vp[..na * d],
+            );
+            for (i, &s) in rows.iter().enumerate() {
+                let base = s * SEQ_LEN * d + row;
+                self.k[b][base..base + d].copy_from_slice(&self.kp[i * d..(i + 1) * d]);
+                self.v[b][base..base + d].copy_from_slice(&self.vp[i * d..(i + 1) * d]);
+            }
+            for (i, &s) in rows.iter().enumerate() {
+                let cache = s * SEQ_LEN * d..s * SEQ_LEN * d + (self.pos + 1) * d;
+                for head in 0..cfg.n_heads {
+                    let col = head * dh;
+                    ops::attend_one(
+                        &self.q[i * d + col..i * d + col + dh],
+                        &self.k[b][cache.clone()],
+                        &self.v[b][cache.clone()],
+                        self.pos + 1,
+                        d,
+                        col,
+                        dh,
+                        &mut self.scores,
+                        &mut self.att[i * d + col..i * d + col + dh],
+                    );
+                }
+            }
+            stats.gemm(na);
+            ops::matmul(
+                &self.att[..na * d],
+                &th[bo.wo..bo.wo + d * d],
+                Some(&th[bo.bo..bo.bo + d]),
+                na,
+                d,
+                d,
+                &mut self.proj[..na * d],
+            );
+            for (i, &s) in rows.iter().enumerate() {
+                let proj = &self.proj[i * d..(i + 1) * d];
+                for (hv, &pv) in self.h[s * d..(s + 1) * d].iter_mut().zip(proj) {
+                    *hv += pv;
+                }
+            }
+            // Pre-LN MLP.
+            for (i, &s) in rows.iter().enumerate() {
+                ops::layernorm(
+                    &self.h[s * d..(s + 1) * d],
+                    &th[bo.ln2_g..bo.ln2_g + d],
+                    &th[bo.ln2_b..bo.ln2_b + d],
+                    &mut self.xhat,
+                    &mut self.pre[i * d..(i + 1) * d],
+                );
+            }
+            stats.gemm(na);
+            ops::matmul(
+                &self.pre[..na * d],
+                &th[bo.w1..bo.w1 + d * ff],
+                Some(&th[bo.b1..bo.b1 + ff]),
+                na,
+                d,
+                ff,
+                &mut self.h1[..na * ff],
+            );
+            for x in self.h1[..na * ff].iter_mut() {
+                *x = ops::gelu(*x);
+            }
+            stats.gemm(na);
+            ops::matmul(
+                &self.h1[..na * ff],
+                &th[bo.w2..bo.w2 + ff * d],
+                Some(&th[bo.b2..bo.b2 + d]),
+                na,
+                ff,
+                d,
+                &mut self.proj[..na * d],
+            );
+            for (i, &s) in rows.iter().enumerate() {
+                let proj = &self.proj[i * d..(i + 1) * d];
+                for (hv, &pv) in self.h[s * d..(s + 1) * d].iter_mut().zip(proj) {
+                    *hv += pv;
+                }
+            }
+        }
+        self.pos += 1;
+    }
+
+    /// Head read-out for every sequence in `rows`, written into
+    /// `preds[..rows.len()]` — the same expression as [`KvSession::pred`].
+    fn pred_rows(&mut self, rows: &[usize], preds: &mut [f32]) {
+        let th = self.theta;
+        let l = &self.eng.layout;
+        let d = self.eng.cfg.d_model;
+        for (i, &s) in rows.iter().enumerate() {
+            ops::layernorm(
+                &self.h[s * d..(s + 1) * d],
+                &th[l.ln_f_g..l.ln_f_g + d],
+                &th[l.ln_f_b..l.ln_f_b + d],
+                &mut self.xhat,
+                &mut self.pre[i * d..(i + 1) * d],
+            );
+            let pre = &self.pre[i * d..(i + 1) * d];
+            let z = th[l.head_b] + ops::dot(pre, &th[l.head_w..l.head_w + d]);
+            preds[i] = z.tanh();
+        }
     }
 }
 
@@ -260,8 +549,15 @@ pub fn seq_preds(
 /// rounds to the nearest quantized action); top-k samples among the `k`
 /// codebook encodings nearest to the prediction. `codebook` is the
 /// pre-encoded alphabet ([`infer_env`] builds it once per decode, not per
-/// step).
-fn select_raw(codebook: Option<&[f32]>, pred: f32, sampling: Sampling, rng: &mut Rng) -> f32 {
+/// step); `best` is caller-provided reusable scratch so the decode loop
+/// stays allocation-free.
+fn select_raw(
+    codebook: Option<&[f32]>,
+    pred: f32,
+    sampling: Sampling,
+    rng: &mut Rng,
+    best: &mut Vec<(f32, f32)>,
+) -> f32 {
     match sampling {
         Sampling::Greedy => pred,
         Sampling::TopK { k, temperature, .. } => {
@@ -269,7 +565,8 @@ fn select_raw(codebook: Option<&[f32]>, pred: f32, sampling: Sampling, rng: &mut
             let k = k.max(1).min(codebook.len());
             // k nearest encodings by insertion (ties broken toward the
             // smaller encoding, matching the codec's rounding).
-            let mut best: Vec<(f32, f32)> = Vec::with_capacity(k + 1);
+            best.clear();
+            best.reserve(k + 1);
             for &e in codebook {
                 let d = (e - pred).abs();
                 let mut i = best.len();
@@ -285,7 +582,7 @@ fn select_raw(codebook: Option<&[f32]>, pred: f32, sampling: Sampling, rng: &mut
             let weight = |d: f32| (-((d / tau) as f64).powi(2)).exp();
             let total: f64 = best.iter().map(|&(_, d)| weight(d)).sum();
             let mut pick = rng.f64() * total;
-            for &(e, d) in &best {
+            for &(e, d) in best.iter() {
                 pick -= weight(d);
                 if pick <= 0.0 {
                     return e;
@@ -318,6 +615,19 @@ fn sampling_rng(sampling: Sampling, env: &FusionEnv) -> Rng {
     Rng::seed_from_u64(h)
 }
 
+fn build_codebook(env: &FusionEnv, sampling: Sampling) -> Option<Vec<f32>> {
+    match sampling {
+        Sampling::Greedy => None,
+        Sampling::TopK { .. } => Some(
+            env.codec
+                .alphabet()
+                .into_iter()
+                .map(|a| env.codec.encode(a))
+                .collect(),
+        ),
+    }
+}
+
 /// Serving decode: one persistent KV session, 3 appended tokens per
 /// strategy slot, condition-projected episode stepping
 /// (`Episode::step_raw_projected`) — the paper's §4.5.2 decode with the
@@ -330,19 +640,11 @@ pub fn infer_env(
 ) -> Trajectory {
     let d = eng.cfg.d_model;
     let mut rng = sampling_rng(sampling, env);
-    let codebook: Option<Vec<f32>> = match sampling {
-        Sampling::Greedy => None,
-        Sampling::TopK { .. } => Some(
-            env.codec
-                .alphabet()
-                .into_iter()
-                .map(|a| env.codec.encode(a))
-                .collect(),
-        ),
-    };
+    let codebook = build_codebook(env, sampling);
     let mut sess = KvSession::new(eng, theta);
     let mut ep = env.begin();
     let mut emb = vec![0.0f32; d];
+    let mut best: Vec<(f32, f32)> = Vec::new();
     for t in 0..env.steps().min(T_MAX) {
         embed_rtg(eng, theta, t, env.rtg_token(), &mut emb);
         sess.append(&emb);
@@ -350,11 +652,70 @@ pub fn infer_env(
         embed_state(eng, theta, t, &st, &mut emb);
         sess.append(&emb);
         let pred = sess.pred();
-        ep.step_raw_projected(select_raw(codebook.as_deref(), pred, sampling, &mut rng));
+        ep.step_raw_projected(select_raw(codebook.as_deref(), pred, sampling, &mut rng, &mut best));
         embed_action(eng, theta, t, ep.traj.actions[t], &mut emb);
         sess.append(&emb);
     }
     ep.into_trajectory()
+}
+
+/// Batched lock-step serving decode: all sequences advance token-by-token
+/// together, each block applying its weight matrices to the packed
+/// `[n_active, d_model]` panel with one blocked GEMM per matrix. Returns
+/// the trajectories (in input order) plus GEMM utilization counters.
+///
+/// Bit-for-bit identical to [`infer_env`] per sequence, for any batch
+/// composition: `ops::matmul` preserves per-row accumulation order, the
+/// sampling stream is derived from request content (never batch
+/// position), and ragged lengths only shrink the panel — they never
+/// reorder a sequence's own tokens.
+pub fn infer_env_batch(
+    eng: &NativeEngine,
+    theta: &[f32],
+    envs: &[&FusionEnv],
+    sampling: Sampling,
+) -> (Vec<Trajectory>, DecodeStats) {
+    let n = envs.len();
+    let mut stats = DecodeStats::default();
+    if n == 0 {
+        return (Vec::new(), stats);
+    }
+    let d = eng.cfg.d_model;
+    let mut sessions = BatchedSessions::new(eng, theta, n);
+    let mut eps: Vec<_> = envs.iter().map(|e| e.begin()).collect();
+    let mut rngs: Vec<Rng> = envs.iter().map(|&e| sampling_rng(sampling, e)).collect();
+    let codebooks: Vec<Option<Vec<f32>>> =
+        envs.iter().map(|&e| build_codebook(e, sampling)).collect();
+    let steps: Vec<usize> = envs.iter().map(|e| e.steps().min(T_MAX)).collect();
+    let max_steps = steps.iter().copied().max().unwrap_or(0);
+    let mut rows: Vec<usize> = Vec::with_capacity(n);
+    let mut emb = vec![0.0f32; n * d];
+    let mut preds = vec![0.0f32; n];
+    let mut best: Vec<(f32, f32)> = Vec::new();
+    for t in 0..max_steps {
+        rows.clear();
+        rows.extend((0..n).filter(|&i| t < steps[i]));
+        for (i, &s) in rows.iter().enumerate() {
+            embed_rtg(eng, theta, t, envs[s].rtg_token(), &mut emb[i * d..(i + 1) * d]);
+        }
+        sessions.append_rows(&rows, &emb, &mut stats);
+        for (i, &s) in rows.iter().enumerate() {
+            let st = eps[s].observe();
+            embed_state(eng, theta, t, &st, &mut emb[i * d..(i + 1) * d]);
+        }
+        sessions.append_rows(&rows, &emb, &mut stats);
+        sessions.pred_rows(&rows, &mut preds);
+        for (i, &s) in rows.iter().enumerate() {
+            let cb = codebooks[s].as_deref();
+            let raw = select_raw(cb, preds[i], sampling, &mut rngs[s], &mut best);
+            eps[s].step_raw_projected(raw);
+        }
+        for (i, &s) in rows.iter().enumerate() {
+            embed_action(eng, theta, t, eps[s].traj.actions[t], &mut emb[i * d..(i + 1) * d]);
+        }
+        sessions.append_rows(&rows, &emb, &mut stats);
+    }
+    (eps.into_iter().map(|ep| ep.into_trajectory()).collect(), stats)
 }
 
 /// Reference decode with the AOT executables' semantics: a fresh
@@ -452,6 +813,68 @@ mod tests {
         assert_eq!(a.strategy, b.strategy);
         assert_eq!(a.actions, b.actions);
         assert_eq!(a.speedup, b.speedup);
+    }
+
+    #[test]
+    fn batched_lockstep_decode_matches_solo_bitwise() {
+        // Mixed-depth workloads exercise the ragged active-row list: short
+        // nets finish and drop out of the panel while long ones continue.
+        let eng = tiny_engine();
+        let th = eng.init_theta(13);
+        let envs: Vec<FusionEnv> = zoo::all()
+            .into_iter()
+            .map(|w| FusionEnv::new(w, 64, HwConfig::paper(), 22.0))
+            .collect();
+        let refs: Vec<&FusionEnv> = envs.iter().collect();
+        let (batched, stats) = infer_env_batch(&eng, &th, &refs, Sampling::Greedy);
+        assert_eq!(batched.len(), envs.len());
+        assert!(stats.gemm_calls > 0, "batched path must count its GEMMs");
+        let mean = stats.mean_rows_per_gemm().unwrap();
+        assert!(
+            mean > 1.0 && mean <= envs.len() as f64,
+            "mean rows/GEMM {mean} out of range for {} sequences",
+            envs.len()
+        );
+        for (traj, env) in batched.iter().zip(&envs) {
+            let solo = infer_env(&eng, &th, env, Sampling::Greedy);
+            assert_eq!(traj.strategy, solo.strategy, "{}", env.workload.name);
+            assert_eq!(
+                traj.actions.iter().map(|a| a.to_bits()).collect::<Vec<_>>(),
+                solo.actions.iter().map(|a| a.to_bits()).collect::<Vec<_>>(),
+                "{}: batched decode changed action bits",
+                env.workload.name
+            );
+        }
+    }
+
+    #[test]
+    fn steady_state_decode_is_allocation_free() {
+        // The arena satellite: once a session is warm, append/pred must
+        // not touch the heap. The probe counts this thread's allocations
+        // only, so concurrently running tests cannot flake it.
+        let eng = tiny_engine();
+        let th = eng.init_theta(2);
+        let d = eng.cfg.d_model;
+        let mut sess = KvSession::new(&eng, &th);
+        let mut emb = vec![0.0f32; d];
+        let mut drive = |sess: &mut KvSession, emb: &mut Vec<f32>, t: usize| {
+            embed_rtg(&eng, &th, t, 0.4, emb);
+            sess.append(emb);
+            embed_state(&eng, &th, t, &[0.2; STATE_DIM], emb);
+            sess.append(emb);
+            let p = sess.pred();
+            embed_action(&eng, &th, t, p, emb);
+            sess.append(emb);
+        };
+        for t in 0..2 {
+            drive(&mut sess, &mut emb, t);
+        }
+        let before = crate::util::alloc_probe::thread_allocations();
+        for t in 2..10 {
+            drive(&mut sess, &mut emb, t);
+        }
+        let after = crate::util::alloc_probe::thread_allocations();
+        assert_eq!(after, before, "steady-state decode loop allocated");
     }
 
     #[test]

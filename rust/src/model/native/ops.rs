@@ -1,17 +1,90 @@
-//! Shared tensor primitives for the native transformer.
+//! Shared tensor primitives for the native transformer — blocked,
+//! lane-vectorized kernels with a fixed accumulation-order contract.
 //!
-//! Every consumer — the KV-cache serving decoder, the AOT-graph reference
-//! path and the trainer's forward pass — calls these exact functions with
-//! identical accumulation order, which is what makes the KV and
-//! full-recompute routes bit-for-bit equal (`rust/tests/native_parity.rs`)
-//! and a trained model behave identically at serve time.
+//! Every consumer — the KV-cache serving decoder, the batched lock-step
+//! decoder, the AOT-graph reference path and the trainer's forward pass —
+//! calls these exact functions with identical accumulation order, which is
+//! what makes the KV and full-recompute routes bit-for-bit equal
+//! (`rust/tests/native_parity.rs`) and a trained model behave identically
+//! at serve time.
+//!
+//! # Accumulation-order contract
+//!
+//! The kernels are register-blocked over [`LANES`]-wide `f32` chunks that
+//! the autovectorizer lifts to SIMD (no `unsafe`, no intrinsics). Blocking
+//! never reassociates a reduction; the order is fixed and documented so
+//! that every route produces the same bits:
+//!
+//! - **Matrix products** ([`linear`], [`matmul`], [`fused_qkv3`]): the
+//!   vector axis is the *output* dimension `j` — each output element owns
+//!   exactly one accumulator, initialized from the bias (or 0.0) and
+//!   updated over `k = 0..d_in` in ascending order. Tiling `j` groups
+//!   independent accumulators; it cannot change any single output's
+//!   reduction order, so all three kernels are bit-identical to the plain
+//!   scalar loop ([`scalar::linear`]) per output element, for every tile
+//!   shape and remainder.
+//! - **Dot products** ([`dot`], used by [`attend_one`] scores and the
+//!   prediction head): a reduction over one axis *is* reassociated, in one
+//!   fixed way — lane `r` of an 8-lane partial-sum array accumulates
+//!   elements `r, r+8, r+16, …` in ascending order, and the lanes are
+//!   combined by the fixed pairwise tree
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` ([`tree_reduce`]). The
+//!   straight-line reference [`scalar::dot`] implements the same order, so
+//!   blocked and reference bits agree by construction.
+//! - **Attention value mixing** ([`attend_one`]): the vector axis is the
+//!   head dimension `j`; each output accumulates probability-weighted
+//!   values over keys `s = 0..n_keys` in ascending order, exactly like the
+//!   scalar reference.
+//!
+//! The retained [`scalar`] module is the executable statement of this
+//! contract: property tests assert the blocked kernels match it bit for
+//! bit across sizes that exercise every tile remainder.
 //!
 //! All matrices are row-major `[rows, cols]` flat `f32` slices, matching
 //! the jax layout in `python/compile/model.py` (`x @ W` with `W: [in,
 //! out]`).
 
-/// `out = bias + x · W` for `W: [d_in, d_out]`. Accumulates over `d_in`
-/// in ascending order (fixed order ⇒ reproducible bits).
+/// SIMD lane width the kernels block over. 8×`f32` = one AVX register (two
+/// SSE registers); portable because it is plain array code either way.
+pub const LANES: usize = 8;
+
+/// Fixed pairwise combination of an 8-lane partial-sum array:
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`. Part of the documented
+/// reduction-order contract shared by [`dot`] and [`scalar::dot`].
+#[inline]
+pub fn tree_reduce(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]))
+}
+
+/// Lane-interleaved dot product: lane `r` sums elements `r, r+LANES, …` in
+/// ascending order; lanes combine via [`tree_reduce`]. Bit-identical to
+/// [`scalar::dot`] by construction (the remainder elements land in lanes
+/// `0..len%LANES`, exactly where `i % LANES` puts them).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let n8 = a.len() - a.len() % LANES;
+    let mut i = 0;
+    while i < n8 {
+        let ca = &a[i..i + LANES];
+        let cb = &b[i..i + LANES];
+        for ((acc, &x), &y) in lanes.iter_mut().zip(ca).zip(cb) {
+            *acc += x * y;
+        }
+        i += LANES;
+    }
+    for j in n8..a.len() {
+        lanes[j - n8] += a[j] * b[j];
+    }
+    tree_reduce(&lanes)
+}
+
+/// `out = bias + x · W` for `W: [d_in, d_out]`, register-blocked over
+/// `4×LANES`-wide output tiles. Each output element keeps a single
+/// accumulator (bias-initialized) updated over `d_in` in ascending order,
+/// so every element is bit-identical to [`scalar::linear`]; the blocking
+/// only keeps a 32-wide output tile in registers across the whole `k`
+/// loop instead of streaming `out` through memory once per `k`.
 pub fn linear(
     x: &[f32],
     w: &[f32],
@@ -23,15 +96,185 @@ pub fn linear(
     debug_assert_eq!(x.len(), d_in);
     debug_assert_eq!(w.len(), d_in * d_out);
     debug_assert_eq!(out.len(), d_out);
-    match bias {
-        Some(b) => out.copy_from_slice(b),
-        None => out.fill(0.0),
-    }
-    for (k, &xv) in x.iter().enumerate() {
-        let row = &w[k * d_out..(k + 1) * d_out];
-        for (o, &wv) in out.iter_mut().zip(row) {
-            *o += xv * wv;
+    const JCHUNKS: usize = 4;
+    const JW: usize = JCHUNKS * LANES;
+    let jt_end = d_out - d_out % JW;
+    let mut j0 = 0;
+    while j0 < jt_end {
+        let mut acc = [[0.0f32; LANES]; JCHUNKS];
+        if let Some(b) = bias {
+            for (r, a) in acc.iter_mut().enumerate() {
+                a.copy_from_slice(&b[j0 + r * LANES..j0 + (r + 1) * LANES]);
+            }
         }
+        for (k, &xv) in x.iter().enumerate() {
+            let base = k * d_out + j0;
+            for (r, a) in acc.iter_mut().enumerate() {
+                let row = &w[base + r * LANES..base + (r + 1) * LANES];
+                for (av, &wv) in a.iter_mut().zip(row) {
+                    *av += xv * wv;
+                }
+            }
+        }
+        for (r, a) in acc.iter().enumerate() {
+            out[j0 + r * LANES..j0 + (r + 1) * LANES].copy_from_slice(a);
+        }
+        j0 += JW;
+    }
+    // Remainder columns: same per-element order, plain loop.
+    for j in jt_end..d_out {
+        let mut acc = bias.map_or(0.0, |b| b[j]);
+        for (k, &xv) in x.iter().enumerate() {
+            acc += xv * w[k * d_out + j];
+        }
+        out[j] = acc;
+    }
+}
+
+/// Batched `out[r] = bias + x_row[r] · W` over `rows` row-vectors packed in
+/// `x: [rows, d_in]`, writing `out: [rows, d_out]` — the per-layer GEMM of
+/// the batched decode path and the trainer's forward pass. Row blocks of 4
+/// reuse each loaded `LANES`-wide weight vector four times, which is what
+/// turns N memory-bound GEMVs into one compute-dense GEMM; per output
+/// element the accumulation order is identical to calling [`linear`] on
+/// that row (bias init, `k` ascending), so batching never changes bits.
+pub fn matmul(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(out.len(), rows * d_out);
+    const RB: usize = 4;
+    let r_end = rows - rows % RB;
+    let jt_end = d_out - d_out % LANES;
+    let mut r0 = 0;
+    while r0 < r_end {
+        let mut j0 = 0;
+        while j0 < jt_end {
+            let mut acc = [[0.0f32; LANES]; RB];
+            if let Some(b) = bias {
+                let bt = &b[j0..j0 + LANES];
+                for a in acc.iter_mut() {
+                    a.copy_from_slice(bt);
+                }
+            }
+            for k in 0..d_in {
+                let wrow = &w[k * d_out + j0..k * d_out + j0 + LANES];
+                for (r, a) in acc.iter_mut().enumerate() {
+                    let xv = x[(r0 + r) * d_in + k];
+                    for (av, &wv) in a.iter_mut().zip(wrow) {
+                        *av += xv * wv;
+                    }
+                }
+            }
+            for (r, a) in acc.iter().enumerate() {
+                let o = (r0 + r) * d_out + j0;
+                out[o..o + LANES].copy_from_slice(a);
+            }
+            j0 += LANES;
+        }
+        for j in jt_end..d_out {
+            for r in 0..RB {
+                let xr = &x[(r0 + r) * d_in..(r0 + r + 1) * d_in];
+                let mut acc = bias.map_or(0.0, |b| b[j]);
+                for (k, &xv) in xr.iter().enumerate() {
+                    acc += xv * w[k * d_out + j];
+                }
+                out[(r0 + r) * d_out + j] = acc;
+            }
+        }
+        r0 += RB;
+    }
+    for r in r_end..rows {
+        linear(
+            &x[r * d_in..(r + 1) * d_in],
+            w,
+            bias,
+            d_in,
+            d_out,
+            &mut out[r * d_out..(r + 1) * d_out],
+        );
+    }
+}
+
+#[inline(always)]
+fn fma2(acc: &mut [[f32; LANES]; 2], w: &[f32], base: usize, xv: f32) {
+    for (r, a) in acc.iter_mut().enumerate() {
+        let row = &w[base + r * LANES..base + (r + 1) * LANES];
+        for (av, &wv) in a.iter_mut().zip(row) {
+            *av += xv * wv;
+        }
+    }
+}
+
+#[inline(always)]
+fn store2(out: &mut [f32], j0: usize, acc: &[[f32; LANES]; 2]) {
+    for (r, a) in acc.iter().enumerate() {
+        out[j0 + r * LANES..j0 + (r + 1) * LANES].copy_from_slice(a);
+    }
+}
+
+/// Fused Q/K/V projection for one decode step: one traversal of the input
+/// row drives all three (bias-free) weight matrices in lock-step, so `x`
+/// is loaded once per `k` instead of three times. Per output element the
+/// accumulation order is identical to three separate [`linear`] calls
+/// (`k` ascending, single accumulator), so fusion never changes bits.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_qkv3(
+    x: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    d_in: usize,
+    d_out: usize,
+    q_out: &mut [f32],
+    k_out: &mut [f32],
+    v_out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), d_in);
+    debug_assert_eq!(wq.len(), d_in * d_out);
+    debug_assert_eq!(wk.len(), d_in * d_out);
+    debug_assert_eq!(wv.len(), d_in * d_out);
+    debug_assert_eq!(q_out.len(), d_out);
+    debug_assert_eq!(k_out.len(), d_out);
+    debug_assert_eq!(v_out.len(), d_out);
+    // 2×LANES-wide tiles per matrix: 6 accumulator arrays in flight, a
+    // shape that stays within 16 vector registers.
+    const JW: usize = 2 * LANES;
+    let jt_end = d_out - d_out % JW;
+    let mut j0 = 0;
+    while j0 < jt_end {
+        let mut aq = [[0.0f32; LANES]; 2];
+        let mut ak = [[0.0f32; LANES]; 2];
+        let mut av = [[0.0f32; LANES]; 2];
+        for (k, &xv) in x.iter().enumerate() {
+            let base = k * d_out + j0;
+            fma2(&mut aq, wq, base, xv);
+            fma2(&mut ak, wk, base, xv);
+            fma2(&mut av, wv, base, xv);
+        }
+        store2(q_out, j0, &aq);
+        store2(k_out, j0, &ak);
+        store2(v_out, j0, &av);
+        j0 += JW;
+    }
+    for j in jt_end..d_out {
+        let (mut sq, mut sk, mut sv) = (0.0f32, 0.0f32, 0.0f32);
+        for (k, &xv) in x.iter().enumerate() {
+            let base = k * d_out + j;
+            sq += xv * wq[base];
+            sk += xv * wk[base];
+            sv += xv * wv[base];
+        }
+        q_out[j] = sq;
+        k_out[j] = sk;
+        v_out[j] = sv;
     }
 }
 
@@ -82,13 +325,16 @@ pub fn dgelu(x: f32) -> f32 {
 /// One causal attention query for one head: attend `q` (length `dh`) over
 /// the first `n_keys` rows of the cached key/value matrices (row stride
 /// `d_model`, head column offset `col`). Writes the attended value into
-/// `out` and returns nothing. `scores` is caller-provided scratch of at
-/// least `n_keys`.
+/// `out[..dh]` and leaves the softmax *probabilities* in
+/// `scores[..n_keys]` (the trainer's backward pass reads them). `scores`
+/// is caller-provided scratch of at least `n_keys`.
 ///
-/// Softmax subtracts the running max and accumulates in ascending key
-/// order — masked-out future keys simply don't exist here, which is
-/// bit-identical to the graph's `finfo.min` masking (their exp underflows
-/// to exactly 0.0).
+/// Scores use the lane-interleaved [`dot`]; softmax subtracts the running
+/// max and exponentiates in ascending key order — masked-out future keys
+/// simply don't exist here, which is bit-identical to the graph's
+/// `finfo.min` masking (their exp underflows to exactly 0.0). The value
+/// mix tiles the head dimension and accumulates keys in ascending order
+/// per output element, matching [`scalar::attend_one`] bit for bit.
 #[allow(clippy::too_many_arguments)]
 pub fn attend_one(
     q: &[f32],
@@ -105,11 +351,7 @@ pub fn attend_one(
     let mut max = f32::NEG_INFINITY;
     for s in 0..n_keys {
         let krow = &k_cache[s * d_model + col..s * d_model + col + dh];
-        let mut dot = 0.0f32;
-        for (a, b) in q.iter().zip(krow) {
-            dot += a * b;
-        }
-        let sc = dot * scale;
+        let sc = dot(q, krow) * scale;
         scores[s] = sc;
         if sc > max {
             max = sc;
@@ -121,13 +363,119 @@ pub fn attend_one(
         sum += *s;
     }
     let inv = 1.0 / sum;
-    out[..dh].fill(0.0);
-    for s in 0..n_keys {
-        let p = scores[s] * inv;
-        scores[s] = p; // leave probabilities behind for the trainer
-        let vrow = &v_cache[s * d_model + col..s * d_model + col + dh];
-        for (o, &vv) in out[..dh].iter_mut().zip(vrow) {
-            *o += p * vv;
+    for s in scores.iter_mut().take(n_keys) {
+        *s *= inv; // leave probabilities behind for the trainer
+    }
+    let jt_end = dh - dh % LANES;
+    let mut j0 = 0;
+    while j0 < jt_end {
+        let mut acc = [0.0f32; LANES];
+        for (s, &p) in scores.iter().take(n_keys).enumerate() {
+            let base = s * d_model + col + j0;
+            let vrow = &v_cache[base..base + LANES];
+            for (av, &vv) in acc.iter_mut().zip(vrow) {
+                *av += p * vv;
+            }
+        }
+        out[j0..j0 + LANES].copy_from_slice(&acc);
+        j0 += LANES;
+    }
+    for j in jt_end..dh {
+        let mut acc = 0.0f32;
+        for (s, &p) in scores.iter().take(n_keys).enumerate() {
+            acc += p * v_cache[s * d_model + col + j];
+        }
+        out[j] = acc;
+    }
+}
+
+/// Straight-line reference kernels: the executable statement of the
+/// accumulation-order contract. These are the original pre-blocking loops
+/// (with [`scalar::dot`] spelling out the lane contract the blocked [`dot`]
+/// implements), kept so property tests can assert the blocked kernels are
+/// bit-identical across tile remainders, and so the throughput-bench
+/// calibration measures the *machine*, not the kernel rework
+/// (`benches/native_infer.rs` pins its GFLOP/s probe to
+/// [`scalar::linear`]).
+pub mod scalar {
+    use super::{tree_reduce, LANES};
+
+    /// Reference dot product in the documented lane order: element `i`
+    /// accumulates into lane `i % LANES`; lanes combine via
+    /// [`tree_reduce`].
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut lanes = [0.0f32; LANES];
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            lanes[i % LANES] += x * y;
+        }
+        tree_reduce(&lanes)
+    }
+
+    /// Reference `out = bias + x · W`: one accumulator per output element,
+    /// `k` ascending — the order the blocked [`super::linear`] preserves.
+    pub fn linear(
+        x: &[f32],
+        w: &[f32],
+        bias: Option<&[f32]>,
+        d_in: usize,
+        d_out: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(x.len(), d_in);
+        debug_assert_eq!(w.len(), d_in * d_out);
+        debug_assert_eq!(out.len(), d_out);
+        match bias {
+            Some(b) => out.copy_from_slice(b),
+            None => out.fill(0.0),
+        }
+        for (k, &xv) in x.iter().enumerate() {
+            let row = &w[k * d_out..(k + 1) * d_out];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xv * wv;
+            }
+        }
+    }
+
+    /// Reference attention query: original single-pass structure with the
+    /// lane-contract [`dot`] for scores — bit-identical to
+    /// [`super::attend_one`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_one(
+        q: &[f32],
+        k_cache: &[f32],
+        v_cache: &[f32],
+        n_keys: usize,
+        d_model: usize,
+        col: usize,
+        dh: usize,
+        scores: &mut [f32],
+        out: &mut [f32],
+    ) {
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut max = f32::NEG_INFINITY;
+        for s in 0..n_keys {
+            let krow = &k_cache[s * d_model + col..s * d_model + col + dh];
+            let sc = dot(q, krow) * scale;
+            scores[s] = sc;
+            if sc > max {
+                max = sc;
+            }
+        }
+        let mut sum = 0.0f32;
+        for s in scores.iter_mut().take(n_keys) {
+            *s = (*s - max).exp();
+            sum += *s;
+        }
+        let inv = 1.0 / sum;
+        out[..dh].fill(0.0);
+        for s in 0..n_keys {
+            let p = scores[s] * inv;
+            scores[s] = p;
+            let vrow = &v_cache[s * d_model + col..s * d_model + col + dh];
+            for (o, &vv) in out[..dh].iter_mut().zip(vrow) {
+                *o += p * vv;
+            }
         }
     }
 }
@@ -135,6 +483,15 @@ pub fn attend_one(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f64(-1.5, 1.5) as f32).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
 
     #[test]
     fn linear_matches_hand_computation() {
@@ -204,5 +561,130 @@ mod tests {
         attend_one(&q, &kc, &vc, 2, 2, 0, 2, &mut scores, &mut out);
         assert!(out[0] > 9.9, "{out:?}");
         assert!((scores[0] + scores[1] - 1.0).abs() < 1e-6);
+    }
+
+    // ---- blocked vs reference bit-parity (the accumulation-order
+    // contract, exercised across tile remainders) ----
+
+    #[test]
+    fn dot_matches_scalar_reference_across_lengths() {
+        let mut rng = Rng::seed_from_u64(11);
+        for len in 0..=40 {
+            let a = randv(&mut rng, len);
+            let b = randv(&mut rng, len);
+            assert_eq!(
+                dot(&a, &b).to_bits(),
+                scalar::dot(&a, &b).to_bits(),
+                "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_linear_is_bit_identical_to_scalar_reference() {
+        // Sizes straddle the 32-wide output tile: exact multiples, LANES
+        // multiples that aren't tile multiples, and ragged remainders.
+        let sizes = [
+            (1, 1),
+            (3, 5),
+            (8, 32),
+            (13, 33),
+            (5, 8),
+            (17, 40),
+            (64, 96),
+            (31, 31),
+            (2, 100),
+        ];
+        let mut rng = Rng::seed_from_u64(23);
+        for &(d_in, d_out) in &sizes {
+            let x = randv(&mut rng, d_in);
+            let w = randv(&mut rng, d_in * d_out);
+            let b = randv(&mut rng, d_out);
+            for bias in [None, Some(&b[..])] {
+                let mut got = vec![0.0f32; d_out];
+                let mut want = vec![0.0f32; d_out];
+                linear(&x, &w, bias, d_in, d_out, &mut got);
+                scalar::linear(&x, &w, bias, d_in, d_out, &mut want);
+                assert_eq!(
+                    bits(&got),
+                    bits(&want),
+                    "d_in={d_in} d_out={d_out} bias={}",
+                    bias.is_some()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_rows_are_bit_identical_to_linear() {
+        // Row counts straddle the 4-row block; widths straddle LANES.
+        let mut rng = Rng::seed_from_u64(37);
+        for rows in 1..=9 {
+            for &(d_in, d_out) in &[(13, 19), (8, 32), (5, 11)] {
+                let x = randv(&mut rng, rows * d_in);
+                let w = randv(&mut rng, d_in * d_out);
+                let b = randv(&mut rng, d_out);
+                let mut got = vec![0.0f32; rows * d_out];
+                matmul(&x, &w, Some(&b), rows, d_in, d_out, &mut got);
+                let mut want = vec![0.0f32; rows * d_out];
+                for r in 0..rows {
+                    scalar::linear(
+                        &x[r * d_in..(r + 1) * d_in],
+                        &w,
+                        Some(&b),
+                        d_in,
+                        d_out,
+                        &mut want[r * d_out..(r + 1) * d_out],
+                    );
+                }
+                assert_eq!(bits(&got), bits(&want), "rows={rows} {d_in}x{d_out}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_qkv3_is_bit_identical_to_three_linears() {
+        let mut rng = Rng::seed_from_u64(53);
+        for &(d_in, d_out) in &[(16, 16), (13, 21), (8, 32), (7, 48), (32, 33)] {
+            let x = randv(&mut rng, d_in);
+            let wq = randv(&mut rng, d_in * d_out);
+            let wk = randv(&mut rng, d_in * d_out);
+            let wv = randv(&mut rng, d_in * d_out);
+            let (mut q, mut k, mut v) =
+                (vec![0.0f32; d_out], vec![0.0f32; d_out], vec![0.0f32; d_out]);
+            fused_qkv3(&x, &wq, &wk, &wv, d_in, d_out, &mut q, &mut k, &mut v);
+            let mut want = vec![0.0f32; d_out];
+            scalar::linear(&x, &wq, None, d_in, d_out, &mut want);
+            assert_eq!(bits(&q), bits(&want), "q {d_in}x{d_out}");
+            scalar::linear(&x, &wk, None, d_in, d_out, &mut want);
+            assert_eq!(bits(&k), bits(&want), "k {d_in}x{d_out}");
+            scalar::linear(&x, &wv, None, d_in, d_out, &mut want);
+            assert_eq!(bits(&v), bits(&want), "v {d_in}x{d_out}");
+        }
+    }
+
+    #[test]
+    fn attend_one_matches_scalar_reference() {
+        // dh values straddle the LANES tile (2, 12 are ragged); the second
+        // head (col == dh) checks strided cache addressing.
+        let mut rng = Rng::seed_from_u64(71);
+        for &dh in &[2usize, 4, 8, 12, 24, 64] {
+            for &n_keys in &[1usize, 3, 17] {
+                let d_model = dh * 2;
+                for col in [0, dh] {
+                    let q = randv(&mut rng, dh);
+                    let kc = randv(&mut rng, n_keys * d_model);
+                    let vc = randv(&mut rng, n_keys * d_model);
+                    let mut s1 = vec![0.0f32; n_keys];
+                    let mut s2 = vec![0.0f32; n_keys];
+                    let mut o1 = vec![0.0f32; dh];
+                    let mut o2 = vec![0.0f32; dh];
+                    attend_one(&q, &kc, &vc, n_keys, d_model, col, dh, &mut s1, &mut o1);
+                    scalar::attend_one(&q, &kc, &vc, n_keys, d_model, col, dh, &mut s2, &mut o2);
+                    assert_eq!(bits(&o1), bits(&o2), "dh={dh} keys={n_keys} col={col}");
+                    assert_eq!(bits(&s1), bits(&s2), "probs dh={dh} keys={n_keys}");
+                }
+            }
+        }
     }
 }

@@ -104,15 +104,15 @@ fn forward_row(
                 &mut pre[p * d..(p + 1) * d],
             );
         }
+        // One blocked GEMM per projection over all L positions — bit-identical
+        // to the per-position `linear` loop (ops::matmul preserves per-row
+        // accumulation order) but streams each weight matrix once.
         let mut q = vec![0.0f32; l * d];
         let mut k = vec![0.0f32; l * d];
         let mut v = vec![0.0f32; l * d];
-        for p in 0..l {
-            let row = &pre[p * d..(p + 1) * d];
-            ops::linear(row, &th[bo.wq..bo.wq + d * d], None, d, d, &mut q[p * d..(p + 1) * d]);
-            ops::linear(row, &th[bo.wk..bo.wk + d * d], None, d, d, &mut k[p * d..(p + 1) * d]);
-            ops::linear(row, &th[bo.wv..bo.wv + d * d], None, d, d, &mut v[p * d..(p + 1) * d]);
-        }
+        ops::matmul(&pre, &th[bo.wq..bo.wq + d * d], None, l, d, d, &mut q);
+        ops::matmul(&pre, &th[bo.wk..bo.wk + d * d], None, l, d, d, &mut k);
+        ops::matmul(&pre, &th[bo.wv..bo.wv + d * d], None, l, d, d, &mut v);
         let mut probs = vec![0.0f32; heads * l * l];
         let mut att_o = vec![0.0f32; l * d];
         for h in 0..heads {
@@ -134,19 +134,18 @@ fn forward_row(
             }
         }
         let mut x_attn = vec![0.0f32; l * d];
-        let mut ao = vec![0.0f32; d];
-        for p in 0..l {
-            ops::linear(
-                &att_o[p * d..(p + 1) * d],
-                &th[bo.wo..bo.wo + d * d],
-                Some(&th[bo.bo..bo.bo + d]),
-                d,
-                d,
-                &mut ao,
-            );
-            for j in 0..d {
-                x_attn[p * d + j] = x[p * d + j] + ao[j];
-            }
+        let mut proj = vec![0.0f32; l * d];
+        ops::matmul(
+            &att_o,
+            &th[bo.wo..bo.wo + d * d],
+            Some(&th[bo.bo..bo.bo + d]),
+            l,
+            d,
+            d,
+            &mut proj,
+        );
+        for i in 0..l * d {
+            x_attn[i] = x[i] + proj[i];
         }
         let mut pre2 = vec![0.0f32; l * d];
         let mut xh2 = vec![0.0f32; l * d];
@@ -162,31 +161,30 @@ fn forward_row(
         }
         let mut h1 = vec![0.0f32; l * ff];
         let mut a1 = vec![0.0f32; l * ff];
-        let mut mlp = vec![0.0f32; d];
         let mut x_out = vec![0.0f32; l * d];
-        for p in 0..l {
-            ops::linear(
-                &pre2[p * d..(p + 1) * d],
-                &th[bo.w1..bo.w1 + d * ff],
-                Some(&th[bo.b1..bo.b1 + ff]),
-                d,
-                ff,
-                &mut h1[p * ff..(p + 1) * ff],
-            );
-            for f in 0..ff {
-                a1[p * ff + f] = ops::gelu(h1[p * ff + f]);
-            }
-            ops::linear(
-                &a1[p * ff..(p + 1) * ff],
-                &th[bo.w2..bo.w2 + ff * d],
-                Some(&th[bo.b2..bo.b2 + d]),
-                ff,
-                d,
-                &mut mlp,
-            );
-            for j in 0..d {
-                x_out[p * d + j] = x_attn[p * d + j] + mlp[j];
-            }
+        ops::matmul(
+            &pre2,
+            &th[bo.w1..bo.w1 + d * ff],
+            Some(&th[bo.b1..bo.b1 + ff]),
+            l,
+            d,
+            ff,
+            &mut h1,
+        );
+        for (a, &h) in a1.iter_mut().zip(&h1) {
+            *a = ops::gelu(h);
+        }
+        ops::matmul(
+            &a1,
+            &th[bo.w2..bo.w2 + ff * d],
+            Some(&th[bo.b2..bo.b2 + d]),
+            l,
+            ff,
+            d,
+            &mut proj,
+        );
+        for i in 0..l * d {
+            x_out[i] = x_attn[i] + proj[i];
         }
         blocks.push(BlockCache {
             pre,
@@ -223,10 +221,9 @@ fn forward_row(
     let mut preds = vec![0.0f32; T_MAX];
     for t in 0..T_MAX {
         let p = 3 * t + 1;
-        let mut z = th[lo.head_b];
-        for j in 0..d {
-            z += xf[p * d + j] * th[lo.head_w + j];
-        }
+        // Same lane-interleaved dot as `KvSession::pred`, so trainer
+        // forward and serve-time read-out produce identical bits.
+        let z = th[lo.head_b] + ops::dot(&xf[p * d..(p + 1) * d], &th[lo.head_w..lo.head_w + d]);
         preds[t] = z.tanh();
     }
     RowCache {

@@ -1,0 +1,90 @@
+//! Thread-local allocation counting for no-alloc assertions.
+//!
+//! [`CountingAllocator`] wraps the system allocator and bumps a
+//! *thread-local* counter on every `alloc`/`realloc`/`alloc_zeroed`. The
+//! crate registers it as the `#[global_allocator]` (see `lib.rs`), so any
+//! test can bracket a hot loop with [`thread_allocations`] and assert the
+//! delta is zero — e.g. the steady-state decode loop in
+//! `model::native::decoder`.
+//!
+//! The counter is thread-local on purpose: `cargo test` runs tests
+//! concurrently in one process, so a process-global counter would pick up
+//! other tests' allocations and flake. Overhead in production builds is
+//! one const-initialized TLS access per allocation — allocations are off
+//! the serving hot path by design, so this costs nothing where it
+//! matters.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static LOCAL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Number of heap allocations performed by the *current thread* since it
+/// started. Compare two readings to bound a region's allocation count.
+pub fn thread_allocations() -> u64 {
+    LOCAL_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// System-allocator wrapper that counts per-thread allocations.
+pub struct CountingAllocator;
+
+impl CountingAllocator {
+    #[inline]
+    fn bump() {
+        // try_with: the allocator can be re-entered during TLS teardown,
+        // where the slot is already destroyed — skip counting then.
+        let _ = LOCAL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+// SAFETY: pure delegation to `System`; the counter has no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_counts_this_threads_allocations() {
+        let before = thread_allocations();
+        let v: Vec<u64> = (0..64).collect();
+        let after = thread_allocations();
+        assert!(after > before, "Vec allocation must be counted");
+        drop(v);
+        let after_drop = thread_allocations();
+        assert_eq!(after, after_drop, "dealloc must not count");
+    }
+
+    #[test]
+    fn pure_arithmetic_does_not_count() {
+        let mut acc = [0.0f32; 16];
+        let before = thread_allocations();
+        for i in 0..1000u32 {
+            acc[(i % 16) as usize] += (i as f32).sqrt();
+        }
+        let after = thread_allocations();
+        assert_eq!(before, after, "{acc:?}");
+    }
+}

@@ -13,8 +13,11 @@
 //!   seed-reporting and iteration shrinking),
 //! - [`bench`] — a measurement harness used by `cargo bench` targets
 //!   (warmup, repetitions, robust statistics),
-//! - [`pool`] — a fixed thread pool for the coordinator and searches.
+//! - [`pool`] — a fixed thread pool for the coordinator and searches,
+//! - [`alloc_probe`] — a counting global allocator backing no-alloc
+//!   assertions on hot loops.
 
+pub mod alloc_probe;
 pub mod args;
 pub mod binio;
 pub mod bench;

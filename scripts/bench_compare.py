@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Kernel-bench comparison artifact: measured gates vs committed baseline.
+
+Usage:
+    python3 scripts/bench_compare.py BENCH_native_infer.json \
+        BENCH_baseline.json --out BENCH_kernel_compare.json
+
+Reads the measured bench document and the committed baseline, prints a
+before/after table for every gated metric (plus the calibration context),
+and writes a machine-readable comparison artifact so a CI run's "what did
+the kernels do to throughput" story is one downloadable JSON instead of
+two files to diff by hand.
+
+This script is *informational* and always exits 0 — enforcement is
+`check_bench_regression.py`'s job. Keeping the two separate means the
+comparison artifact is still produced (and uploaded) on the very run
+where the gate fails, which is exactly when it is most useful.
+"""
+import argparse
+import json
+import sys
+
+
+def gate_value(raw):
+    """Baseline gate entry -> (value-or-None, direction)."""
+    if isinstance(raw, dict):
+        return raw.get("value"), raw.get("direction", "higher")
+    return raw, "higher"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("measured")
+    ap.add_argument("baseline")
+    ap.add_argument("--out", default="BENCH_kernel_compare.json",
+                    help="comparison artifact path (default %(default)s)")
+    args = ap.parse_args()
+
+    with open(args.measured) as f:
+        measured_doc = json.load(f)
+    with open(args.baseline) as f:
+        baseline_doc = json.load(f)
+
+    bench = measured_doc.get("bench", "?")
+    gates = measured_doc.get("gates", {})
+    base_gates = (baseline_doc.get("benches", {})
+                  .get(bench, {})
+                  .get("gates", baseline_doc.get("gates", {})))
+
+    rows = []
+    print(f"kernel bench comparison for `{bench}`")
+    calib = measured_doc.get("calibration_gflops")
+    if calib is not None:
+        print(f"  calibration (scalar reference): {calib:.2f} GFLOP/s")
+    header = f"  {'metric':<32} {'baseline':>12} {'measured':>12} {'ratio':>8}"
+    print(header)
+    for key in sorted(set(gates) | set(base_gates)):
+        got = gates.get(key)
+        base, direction = gate_value(base_gates.get(key))
+        ratio = None
+        if got is not None and base not in (None, 0):
+            ratio = got / base
+        rows.append({
+            "metric": key,
+            "baseline": base,
+            "measured": got,
+            "ratio": ratio,
+            "direction": direction,
+        })
+        base_s = f"{base:.3f}" if base is not None else "(bootstrap)"
+        got_s = f"{got:.3f}" if got is not None else "(missing)"
+        ratio_s = f"{ratio:.2f}x" if ratio is not None else "-"
+        print(f"  {key:<32} {base_s:>12} {got_s:>12} {ratio_s:>8}")
+
+    artifact = {
+        "bench": bench,
+        "meta": measured_doc.get("meta"),
+        "calibration_gflops": calib,
+        "blocked_vs_scalar_speedup": measured_doc.get("blocked_vs_scalar_speedup"),
+        "comparison": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
