@@ -11,11 +11,14 @@
 //!    (bit-reproducible — see DESIGN.md §7);
 //! 3. sweep a **held-out** grid — interpolated budgets between the
 //!    training conditions, extrapolated budgets outside them, and
-//!    perturbed accelerator rate points — via `eval::generalization`;
+//!    perturbed accelerator rate points — via `eval::generalization`,
+//!    once per objective (latency, energy, EDP);
 //! 4. emit per-point and aggregate gap-to-search, feasibility rate and
 //!    inference-vs-search wall speedup, with the CI gates
 //!    (`aggregate_gap` lower-is-better, `feasibility_rate` floor,
-//!    `inference_vs_search_speedup`) and the shared `meta` block.
+//!    `inference_vs_search_speedup`, plus the per-objective
+//!    `aggregate_gap_*` / `feasibility_rate_*` splits) and the shared
+//!    `meta` block.
 //!
 //! Quick mode for CI: set `DNNFUSER_BENCH_QUICK=1`. The regression gate
 //! is `scripts/check_bench_regression.py` against `BENCH_baseline.json`.
@@ -23,6 +26,7 @@
 //! checkpoint; this bench is the no-setup local/CI entry point.
 
 use dnnfuser::bench_support::{bench_budget, bench_steps, teacher_runs};
+use dnnfuser::cost::Objective;
 use dnnfuser::eval::generalization::{self, GridSpec, HwPerturb};
 use dnnfuser::model::native::NativeConfig;
 use dnnfuser::model::{MapperModel, ModelKind};
@@ -120,6 +124,11 @@ fn main() {
         ],
         search_budget: teacher_budget,
         seed: 17,
+        // Every point runs once per objective (the decode conditions on
+        // the objective token; the reference search optimizes it), so the
+        // emitted per-objective gate set matches the multi-objective CLI
+        // sweep CI gates against the same baseline entry.
+        objectives: vec![Objective::Latency, Objective::Energy, Objective::Edp],
     };
     let registry = WorkloadRegistry::with_zoo();
     let report = generalization::run_sweep(&rt, &model, &registry, &spec).expect("sweep");

@@ -12,7 +12,7 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::cost::HwConfig;
+use crate::cost::{HwConfig, Objective};
 use crate::env::Trajectory;
 use crate::model::{MapperModel, ModelKind};
 use crate::runtime::{LoadSet, Runtime};
@@ -67,11 +67,24 @@ pub fn teacher_runs(
     batch: usize,
     budget: usize,
 ) -> Vec<(Trajectory, f64)> {
+    teacher_runs_with_objective(jobs, batch, budget, Objective::Latency)
+}
+
+/// [`teacher_runs`] under an explicit objective: each search optimizes it
+/// and the produced demonstrations record it, so one dataset collection
+/// pass can target latency, energy or EDP supervision.
+pub fn teacher_runs_with_objective(
+    jobs: Vec<(Workload, f64, Rng)>,
+    batch: usize,
+    budget: usize,
+    objective: Objective,
+) -> Vec<(Trajectory, f64)> {
     let boxed: Vec<Box<dyn FnOnce() -> (Trajectory, f64) + Send + 'static>> = jobs
         .into_iter()
         .map(|(w, mem, mut job_rng)| {
             Box::new(move || {
-                let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+                let prob =
+                    FusionProblem::with_objective(&w, batch, HwConfig::paper(), mem, objective);
                 let r = GSampler::default().run(&prob, budget, &mut job_rng);
                 (prob.env.decorate(&r.best), r.wall_s)
             }) as Box<dyn FnOnce() -> (Trajectory, f64) + Send + 'static>

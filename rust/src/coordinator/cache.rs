@@ -12,6 +12,7 @@
 
 use std::collections::HashMap;
 
+use crate::cost::{CostVec, Objective};
 use crate::fusion::Strategy;
 
 /// Cache key: condition quantized to 0.25 MB so float jitter in the
@@ -36,16 +37,34 @@ pub struct Key {
     pub batch: usize,
     /// `mem_cond_mb * 4`, rounded.
     pub mem_q: u64,
+    /// The request's optimization objective. The best mapping for latency
+    /// is generally not the best for energy or EDP under the same
+    /// condition, so answers for different objectives never share an
+    /// entry (no cross-objective cache poisoning).
+    pub objective: Objective,
 }
 
 impl Key {
-    /// Build a key, quantizing the condition to 0.25 MB steps.
+    /// Build a latency-objective key, quantizing the condition to 0.25 MB
+    /// steps (the historical default — see [`Key::for_objective`]).
     pub fn new(workload_hash: u64, hw_hash: u64, batch: usize, mem_cond_mb: f64) -> Key {
+        Key::for_objective(workload_hash, hw_hash, batch, mem_cond_mb, Objective::Latency)
+    }
+
+    /// Build a key for an explicit objective.
+    pub fn for_objective(
+        workload_hash: u64,
+        hw_hash: u64,
+        batch: usize,
+        mem_cond_mb: f64,
+        objective: Objective,
+    ) -> Key {
         Key {
             workload_hash,
             hw_hash,
             batch,
             mem_q: (mem_cond_mb * 4.0).round() as u64,
+            objective,
         }
     }
 }
@@ -62,6 +81,9 @@ pub struct Entry {
     pub act_usage_mb: f64,
     /// Whether it fits the keyed condition.
     pub valid: bool,
+    /// Its absolute latency/energy under the keyed condition (what
+    /// Pareto aggregation compares across objectives).
+    pub cost: CostVec,
 }
 
 /// Bounded map with LRU eviction driven by a logical clock.
@@ -156,6 +178,10 @@ mod tests {
             speedup: 1.0,
             act_usage_mb: 1.0,
             valid: true,
+            cost: CostVec {
+                latency_s: 1.0,
+                energy_j: 1.0,
+            },
         }
     }
 
@@ -167,6 +193,29 @@ mod tests {
         assert_ne!(Key::new(7, 0, 64, 20.0), Key::new(8, 0, 64, 20.0));
         // Different hardware configs never share an entry.
         assert_ne!(Key::new(7, 1, 64, 20.0), Key::new(7, 2, 64, 20.0));
+    }
+
+    #[test]
+    fn objectives_split_cache_entries() {
+        // Same condition, different objective: distinct entries, so an
+        // energy answer can never be served to a latency request.
+        let lat = Key::new(7, 0, 64, 20.0);
+        let en = Key::for_objective(7, 0, 64, 20.0, Objective::Energy);
+        let edp = Key::for_objective(7, 0, 64, 20.0, Objective::Edp);
+        assert_ne!(lat, en);
+        assert_ne!(lat, edp);
+        assert_ne!(en, edp);
+        // The 4-arg constructor is exactly the latency form.
+        assert_eq!(
+            lat,
+            Key::for_objective(7, 0, 64, 20.0, Objective::Latency)
+        );
+        let mut c = MappingCache::new(8);
+        c.put(lat.clone(), entry(1));
+        c.put(en.clone(), entry(2));
+        assert_eq!(c.get(&lat).unwrap().strategy, Strategy::new(vec![1, -1]));
+        assert_eq!(c.get(&en).unwrap().strategy, Strategy::new(vec![2, -1]));
+        assert!(c.get(&edp).is_none());
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub mod loadgen;
 pub mod metrics;
 pub mod service;
 
-use crate::cost::HwConfig;
+use crate::cost::{CostVec, HwConfig, Objective};
 use crate::fusion::Strategy;
 use crate::workload::WorkloadSpec;
 
@@ -58,6 +58,10 @@ pub struct MapRequest {
     /// The accelerator the mapping targets (defaults to the paper config;
     /// client-supplied configs are validated before touching any state).
     pub hw: HwConfig,
+    /// What the mapping should optimize (default [`Objective::Latency`],
+    /// the paper's objective). Part of the cache key, so answers for
+    /// different objectives can never cross-poison the mapping cache.
+    pub objective: Objective,
     /// Optional deadline budget: service must *start* within this much
     /// time of the request being enqueued. The batch former dispatches a
     /// deadline-bearing request with a quarter of its budget still in
@@ -84,6 +88,7 @@ impl MapRequest {
             batch,
             mem_cond_mb,
             hw: HwConfig::paper(),
+            objective: Objective::Latency,
             timeout: None,
         }
     }
@@ -91,6 +96,12 @@ impl MapRequest {
     /// Attach a queueing deadline (builder style).
     pub fn with_timeout(mut self, timeout: std::time::Duration) -> Self {
         self.timeout = Some(timeout);
+        self
+    }
+
+    /// Select the optimization objective (builder style).
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
         self
     }
 }
@@ -129,14 +140,18 @@ impl Source {
 pub struct MapResponse {
     /// The resolved fusion strategy.
     pub strategy: Strategy,
-    /// Its speedup over the no-fusion baseline under the request's
-    /// condition.
+    /// Its gain over the no-fusion baseline under the request's condition
+    /// and objective (latency speedup for [`Objective::Latency`]).
     pub speedup: f64,
     /// Its peak activation staging (MB) under the condition.
     pub act_usage_mb: f64,
     /// Whether the strategy fits the conditioned buffer. Unsatisfiable
     /// conditions are answered honestly (`false`) rather than failed.
     pub valid: bool,
+    /// The strategy's absolute cost under the request's condition —
+    /// wall latency *and* energy together, so Pareto clients can compare
+    /// answers across objectives without re-costing anything.
+    pub cost: CostVec,
     /// Which backend (or the cache) produced this answer.
     pub source: Source,
     /// End-to-end service latency for this request.
@@ -152,5 +167,8 @@ mod tests {
         let r = MapRequest::new("vgg16", 64, 20.0);
         assert_eq!(r.hw, HwConfig::paper());
         assert_eq!(r.workload, WorkloadSpec::named("vgg16"));
+        assert_eq!(r.objective, Objective::Latency);
+        let r = r.with_objective(Objective::Edp);
+        assert_eq!(r.objective, Objective::Edp);
     }
 }

@@ -66,7 +66,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cost::MB;
+use crate::cost::{CostVec, MB, Objective};
 use crate::env::FusionEnv;
 use crate::fusion::Strategy;
 use crate::model::native::{NativeConfig, Sampling};
@@ -535,6 +535,61 @@ impl MapperClient {
         m.cache_size = cache.len();
         m
     }
+
+    /// The feasible latency/energy Pareto front for one condition.
+    ///
+    /// The request is served once per objective — latency, energy, EDP,
+    /// each through the normal admission/batching/cache path (the
+    /// argument's own `objective` field is ignored) — and the feasible
+    /// answers are reduced to the non-dominated set under
+    /// (`latency_s`, `energy_j`) via [`CostVec::dominates`]. Duplicate
+    /// strategies collapse to one point, so the front has at most three
+    /// points and often one (a single mapping that wins both axes).
+    /// Infeasible answers are dropped rather than reported: an **empty**
+    /// front means no objective produced a mapping that fits the
+    /// condition. Any transport-level failure (shed, backpressure,
+    /// backend error) on any leg fails the whole call.
+    pub fn pareto(&self, req: MapRequest) -> Result<Vec<ParetoPoint>> {
+        let mut pts: Vec<ParetoPoint> = Vec::new();
+        for obj in Objective::ALL {
+            let resp = self.map(req.clone().with_objective(obj))?;
+            if !resp.valid || pts.iter().any(|p| p.strategy == resp.strategy) {
+                continue;
+            }
+            pts.push(ParetoPoint {
+                objective: obj,
+                strategy: resp.strategy,
+                cost: resp.cost,
+                act_usage_mb: resp.act_usage_mb,
+                source: resp.source,
+            });
+        }
+        // Keep the non-dominated points. `dominates` is strict, so a
+        // point never eliminates itself, and distinct strategies with
+        // identical costs both survive.
+        let front = pts
+            .iter()
+            .filter(|p| !pts.iter().any(|q| q.cost.dominates(&p.cost)))
+            .cloned()
+            .collect();
+        Ok(front)
+    }
+}
+
+/// One point on the feasible latency/energy Pareto front returned by
+/// [`MapperClient::pareto`].
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    /// The objective whose decode produced this point.
+    pub objective: Objective,
+    /// The resolved fusion strategy.
+    pub strategy: Strategy,
+    /// Its absolute latency/energy under the request's condition.
+    pub cost: CostVec,
+    /// Its peak activation staging (MB).
+    pub act_usage_mb: f64,
+    /// Which backend (or the cache) produced it.
+    pub source: Source,
 }
 
 /// Deterministic per-request search seed, derived from the cache [`Key`]:
@@ -547,6 +602,15 @@ fn request_seed(base: u64, key: &Key) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64 ^ base.wrapping_mul(FNV_PRIME);
     for v in [key.workload_hash, key.hw_hash, key.batch as u64, key.mem_q] {
         for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    // The objective is mixed in only off the latency default, so latency
+    // seeds — and therefore latency fallback strategies — stay
+    // bit-identical to the single-objective service.
+    if key.objective != Objective::Latency {
+        for b in (key.objective.index() as u64).to_le_bytes() {
             h ^= b as u64;
             h = h.wrapping_mul(FNV_PRIME);
         }
@@ -813,11 +877,12 @@ fn serve_batch(
     // Serve cache hits immediately; keep the misses for the backend.
     let mut jobs: Vec<(Job, Arc<Workload>, Key)> = Vec::new();
     for (job, w, hash) in resolved {
-        let key = Key::new(
+        let key = Key::for_objective(
             hash,
             job.req.hw.content_hash(),
             job.req.batch,
             job.req.mem_cond_mb,
+            job.req.objective,
         );
         let hit = cache.lock().expect("cache poisoned").get(&key);
         if let Some(hit) = hit {
@@ -834,6 +899,7 @@ fn serve_batch(
                 speedup: hit.speedup,
                 act_usage_mb: hit.act_usage_mb,
                 valid: hit.valid,
+                cost: hit.cost,
                 source: Source::Cache,
                 latency,
             }));
@@ -856,6 +922,7 @@ fn serve_batch(
                         job.req.hw,
                         job.req.mem_cond_mb,
                     )
+                    .with_objective(job.req.objective)
                 })
                 .collect();
             // Both model backends decode the whole batch in one
@@ -888,11 +955,16 @@ fn serve_batch(
             if decoded > 0 {
                 shard.lock().expect("metrics").record_batch(decoded);
             }
-            for ((job, _, key), res) in jobs.into_iter().zip(results) {
+            for (((job, _, key), env), res) in jobs.into_iter().zip(envs).zip(results) {
                 match res {
                     Ok(traj) => {
                         let act_mb = traj.peak_act_bytes as f64 / MB;
-                        let result = (traj.strategy, traj.speedup, act_mb, traj.valid);
+                        // One extra engine walk re-costs the decoded
+                        // strategy so the answer carries its absolute
+                        // latency AND energy — what Pareto aggregation
+                        // compares across objectives.
+                        let cost = env.model.cost_of(&traj.strategy).cost_vec();
+                        let result = (traj.strategy, traj.speedup, act_mb, traj.valid, cost);
                         respond(shard, cache, job, key, result, model_source);
                     }
                     Err(msg) => {
@@ -914,25 +986,33 @@ fn serve_batch(
             // `move` (budget/base_seed are Copy): the closure owns its
             // captures, so the boxed pool tasks below satisfy 'static.
             let run_one = move |w: &Arc<Workload>, key: &Key, req: &MapRequest| {
-                let prob = FusionProblem::new(w, req.batch, req.hw, req.mem_cond_mb);
+                let prob = FusionProblem::with_objective(
+                    w,
+                    req.batch,
+                    req.hw,
+                    req.mem_cond_mb,
+                    req.objective,
+                );
                 let sd = request_seed(base_seed, key);
                 let r = GSampler::default().run(&prob, budget, &mut Rng::seed_from_u64(sd));
+                let cost = prob.model.cost_of(&r.best).cost_vec();
                 (
                     r.best,
                     r.best_eval.speedup,
                     r.act_usage_mb(),
                     r.best_eval.valid,
+                    cost,
                 )
             };
-            let results: Vec<(Strategy, f64, f64, bool)> = if intra_parallel {
-                let tasks: Vec<Box<dyn FnOnce() -> (Strategy, f64, f64, bool) + Send>> = jobs
+            let results: Vec<Answer> = if intra_parallel {
+                let tasks: Vec<Box<dyn FnOnce() -> Answer + Send>> = jobs
                     .iter()
                     .map(|(job, w, key)| {
                         let w = Arc::clone(w);
                         let key = key.clone();
                         let req = job.req.clone();
                         Box::new(move || run_one(&w, &key, &req))
-                            as Box<dyn FnOnce() -> (Strategy, f64, f64, bool) + Send>
+                            as Box<dyn FnOnce() -> Answer + Send>
                     })
                     .collect();
                 ThreadPool::shared().run_batch(tasks)
@@ -949,23 +1029,27 @@ fn serve_batch(
     }
 }
 
-/// Cache, meter and answer one resolved request; `result` is
-/// `(strategy, speedup, act_usage_mb, valid)` from the backend.
+/// What one backend answer carries on its way to [`respond`]:
+/// `(strategy, speedup, act_usage_mb, valid, cost)`.
+type Answer = (Strategy, f64, f64, bool, CostVec);
+
+/// Cache, meter and answer one resolved request.
 fn respond(
     shard: &Mutex<Metrics>,
     cache: &Mutex<MappingCache>,
     job: Job,
     key: Key,
-    result: (Strategy, f64, f64, bool),
+    result: Answer,
     source: Source,
 ) {
-    let (strategy, speedup, act_usage_mb, valid) = result;
+    let (strategy, speedup, act_usage_mb, valid, cost) = result;
     let latency = job.enqueued.elapsed();
     let resp = MapResponse {
         strategy: strategy.clone(),
         speedup,
         act_usage_mb,
         valid,
+        cost,
         source,
         latency,
     };
@@ -976,6 +1060,7 @@ fn respond(
             speedup,
             act_usage_mb,
             valid,
+            cost,
         },
     );
     let mut m = shard.lock().expect("metrics");

@@ -30,7 +30,7 @@ use std::sync::Arc;
 use crate::fusion::{Strategy, SYNC};
 use crate::util::pool::ThreadPool;
 
-use super::CostModel;
+use super::{CostModel, CostVec, E_DRAM_J_PER_BYTE, E_MAC_J, E_SRAM_J_PER_BYTE, Objective};
 
 /// Iterator over the fused groups of a strategy value vector: yields
 /// 1-based inclusive layer ranges `(start, end)`. A group ends at a SYNC
@@ -81,6 +81,9 @@ pub struct GroupCostTerms {
     pub mem_bytes: f64,
     pub act_bytes: f64,
     pub offchip_bytes: f64,
+    /// Group energy: DRAM traffic + SRAM traffic + MAC energy (DESIGN.md
+    /// §13). Additive over groups, like latency and off-chip traffic.
+    pub energy_j: f64,
 }
 
 /// Full-strategy evaluation in one pass — everything the search stack
@@ -92,7 +95,25 @@ pub struct StrategyCost {
     pub peak_mem_bytes: u64,
     pub peak_act_bytes: u64,
     pub offchip_bytes: u64,
+    /// Total strategy energy (sum of per-group [`GroupCostTerms::energy_j`]).
+    pub energy_j: f64,
     pub valid: bool,
+}
+
+impl StrategyCost {
+    /// The multi-objective projection of this evaluation.
+    pub fn cost_vec(&self) -> CostVec {
+        CostVec {
+            latency_s: self.latency_s,
+            energy_j: self.energy_j,
+        }
+    }
+
+    /// Scalar under `obj` (lower is better). `value(Latency)` reads the
+    /// `latency_s` field directly — no re-derivation, no parity risk.
+    pub fn value(&self, obj: Objective) -> f64 {
+        self.cost_vec().value(obj)
+    }
 }
 
 /// Borrowing facade over a [`CostModel`]: the one place group costs are
@@ -179,6 +200,10 @@ impl<'m> CostEngine<'m> {
         let latency_s = compute_s.max(off / m.hw.bw_off).max(on / m.hw.bw_on)
             + fill_s
             + invocations * m.hw.t_switch_s;
+        // Energy prices the traffic the latency roofline only races: every
+        // off-chip byte at DRAM cost, every on-chip byte at SRAM cost, every
+        // MAC at compute cost (`comp` is the MAC count, not seconds).
+        let energy_j = E_DRAM_J_PER_BYTE * off + E_SRAM_J_PER_BYTE * on + E_MAC_J * comp;
 
         GroupCostTerms {
             start: i,
@@ -189,6 +214,7 @@ impl<'m> CostEngine<'m> {
             mem_bytes: mem,
             act_bytes: act,
             offchip_bytes: off,
+            energy_j,
         }
     }
 
@@ -199,6 +225,7 @@ impl<'m> CostEngine<'m> {
         let mut peak_mem = 0.0f64;
         let mut peak_act = 0.0f64;
         let mut off = 0.0;
+        let mut energy = 0.0;
         let mut valid = true;
         for (i, j) in Groups::new(values) {
             let g = self.group_cost(values, i, j);
@@ -206,6 +233,7 @@ impl<'m> CostEngine<'m> {
             peak_mem = peak_mem.max(g.mem_bytes);
             peak_act = peak_act.max(g.act_bytes);
             off += g.offchip_bytes;
+            energy += g.energy_j;
             if g.mem_bytes > buf {
                 valid = false;
             }
@@ -215,6 +243,7 @@ impl<'m> CostEngine<'m> {
             peak_mem_bytes: peak_mem as u64,
             peak_act_bytes: peak_act as u64,
             offchip_bytes: off as u64,
+            energy_j: energy,
             valid,
         }
     }
@@ -253,6 +282,7 @@ pub struct IncrementalEval<'m> {
     peak_mem: f64,
     peak_act: f64,
     offchip: f64,
+    energy_j: f64,
     valid: bool,
 }
 
@@ -270,6 +300,7 @@ impl<'m> IncrementalEval<'m> {
             peak_mem: 0.0,
             peak_act: 0.0,
             offchip: 0.0,
+            energy_j: 0.0,
             valid: true,
         };
         inc.refresh_totals();
@@ -286,6 +317,10 @@ impl<'m> IncrementalEval<'m> {
 
     pub fn latency_s(&self) -> f64 {
         self.latency_s
+    }
+
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
     }
 
     pub fn peak_mem_bytes(&self) -> u64 {
@@ -307,6 +342,7 @@ impl<'m> IncrementalEval<'m> {
             peak_mem_bytes: self.peak_mem as u64,
             peak_act_bytes: self.peak_act as u64,
             offchip_bytes: self.offchip as u64,
+            energy_j: self.energy_j,
             valid: self.valid,
         }
     }
@@ -392,12 +428,14 @@ impl<'m> IncrementalEval<'m> {
         let mut pm = 0.0f64;
         let mut pa = 0.0f64;
         let mut off = 0.0;
+        let mut energy = 0.0;
         let mut valid = true;
         for g in &self.groups {
             lat += g.latency_s;
             pm = pm.max(g.mem_bytes);
             pa = pa.max(g.act_bytes);
             off += g.offchip_bytes;
+            energy += g.energy_j;
             if g.mem_bytes > buf {
                 valid = false;
             }
@@ -406,6 +444,7 @@ impl<'m> IncrementalEval<'m> {
         self.peak_mem = pm;
         self.peak_act = pa;
         self.offchip = off;
+        self.energy_j = energy;
         self.valid = valid;
     }
 
@@ -422,6 +461,13 @@ impl<'m> IncrementalEval<'m> {
         debug_assert_eq!(self.peak_mem_bytes(), full.peak_mem_bytes);
         debug_assert_eq!(self.peak_act_bytes(), full.peak_act_bytes);
         debug_assert_eq!(self.valid, full.valid);
+        let erel = (self.energy_j - full.energy_j).abs() / full.energy_j.max(1e-300);
+        debug_assert!(
+            erel < 1e-9,
+            "incremental energy {} vs full {} (rel {erel})",
+            self.energy_j,
+            full.energy_j
+        );
     }
 }
 
@@ -623,6 +669,7 @@ pub mod reference {
                 offchip_bytes: (b * m.in_b[i] + b * m.out_b[j] + weights) as u64,
                 compute_s: comp / peak_macs,
                 fill_s: if multi { fill / peak_macs } else { 0.0 },
+                energy_j: 0.0,
             });
         }
         std::hint::black_box(&groups);

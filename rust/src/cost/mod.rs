@@ -39,6 +39,104 @@ use crate::workload::Workload;
 
 use engine::{CostEngine, Groups, StrategyCost};
 
+/// What a mapping request (and therefore every search, env episode and
+/// decode conditioned on it) optimizes. `Latency` is the paper's original
+/// objective and the default everywhere; under it the whole stack is
+/// bit-identical to the pre-multi-objective code (enforced by
+/// `rust/tests/objective_parity.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Objective {
+    /// End-to-end latency (the paper's headline metric).
+    #[default]
+    Latency,
+    /// Total energy: DRAM traffic + SRAM traffic + MAC energy.
+    Energy,
+    /// Energy-delay product (`latency_s * energy_j`).
+    Edp,
+}
+
+impl Objective {
+    /// All objectives, in stable token/encoding order.
+    pub const ALL: [Objective; 3] = [Objective::Latency, Objective::Energy, Objective::Edp];
+
+    /// Stable index used for the env's objective token offset and binary
+    /// trajectory encoding: Latency = 0 (so the offset vanishes and the
+    /// legacy encoding is reproduced exactly), Energy = 1, Edp = 2.
+    pub fn index(self) -> usize {
+        match self {
+            Objective::Latency => 0,
+            Objective::Energy => 1,
+            Objective::Edp => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+        }
+    }
+
+    pub fn by_name(s: &str) -> Option<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "latency" => Some(Objective::Latency),
+            "energy" => Some(Objective::Energy),
+            "edp" => Some(Objective::Edp),
+            _ => None,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Option<Objective> {
+        Objective::ALL.get(i).copied()
+    }
+}
+
+/// Energy coefficients (joules). Module constants rather than [`HwConfig`]
+/// fields on purpose: `HwConfig::content_hash` feeds serving cache keys and
+/// per-request sampler seeds, so growing the config would shift every seed
+/// and break the Objective::Latency bit-parity contract. Values are
+/// Eyeriss/TPU-class 45nm figures: DRAM ~160 pJ/byte (≈640 pJ per 32-bit
+/// word), global-buffer SRAM ~6 pJ/byte, ~1 pJ per 16-bit MAC.
+pub const E_DRAM_J_PER_BYTE: f64 = 160e-12;
+/// On-chip (global buffer ⇄ PE) access energy, J/byte.
+pub const E_SRAM_J_PER_BYTE: f64 = 6e-12;
+/// Compute energy per MAC, J.
+pub const E_MAC_J: f64 = 1e-12;
+
+/// A multi-objective cost point: the engine's per-strategy result projected
+/// onto the objective axes. `edp()` is derived, not stored, so the two
+/// primary terms stay the single source of truth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostVec {
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+impl CostVec {
+    /// Energy-delay product, J·s.
+    pub fn edp(&self) -> f64 {
+        self.latency_s * self.energy_j
+    }
+
+    /// The scalar this vector contributes under `obj` (lower is better).
+    pub fn value(&self, obj: Objective) -> f64 {
+        match obj {
+            Objective::Latency => self.latency_s,
+            Objective::Energy => self.energy_j,
+            Objective::Edp => self.edp(),
+        }
+    }
+
+    /// Pareto dominance on the (latency, energy) plane: `self` dominates
+    /// `other` iff it is no worse on both axes and strictly better on one.
+    pub fn dominates(&self, other: &CostVec) -> bool {
+        self.latency_s <= other.latency_s
+            && self.energy_j <= other.energy_j
+            && (self.latency_s < other.latency_s || self.energy_j < other.energy_j)
+    }
+}
+
 /// Accelerator configuration (paper §5.1 defaults via [`HwConfig::paper`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct HwConfig {
@@ -163,6 +261,7 @@ pub struct GroupCost {
     pub offchip_bytes: u64,
     pub compute_s: f64,
     pub fill_s: f64,
+    pub energy_j: f64,
 }
 
 /// Full evaluation of one strategy.
@@ -173,6 +272,8 @@ pub struct CostReport {
     /// Human-readable reason when invalid.
     pub invalid_reason: Option<String>,
     pub latency_s: f64,
+    /// Total energy over groups (J); infinite when shape-invalid.
+    pub energy_j: f64,
     /// max over groups of mem_g.
     pub peak_mem_bytes: u64,
     /// max over groups of activation staging (paper's "Act. Usage (MB)").
@@ -210,6 +311,7 @@ pub struct CostModel {
     p_w: Vec<f64>,
     n: usize,
     baseline_s: f64,
+    baseline_e: f64,
 }
 
 impl CostModel {
@@ -246,8 +348,11 @@ impl CostModel {
             p_w,
             n,
             baseline_s: 0.0,
+            baseline_e: 0.0,
         };
-        m.baseline_s = m.latency_of(&Strategy::no_fusion(n)).0;
+        let baseline = m.cost_of(&Strategy::no_fusion(n));
+        m.baseline_s = baseline.latency_s;
+        m.baseline_e = baseline.energy_j;
         m
     }
 
@@ -276,6 +381,22 @@ impl CostModel {
     /// Latency of the ideal no-fusion mapping (the paper's baseline).
     pub fn baseline_latency(&self) -> f64 {
         self.baseline_s
+    }
+
+    /// Energy of the no-fusion mapping (the multi-objective baseline).
+    pub fn baseline_energy(&self) -> f64 {
+        self.baseline_e
+    }
+
+    /// The no-fusion baseline's value under `obj` — the denominator-free
+    /// reference every objective-relative gain is measured against.
+    /// `baseline_value(Latency)` is exactly [`CostModel::baseline_latency`].
+    pub fn baseline_value(&self, obj: Objective) -> f64 {
+        match obj {
+            Objective::Latency => self.baseline_s,
+            Objective::Energy => self.baseline_e,
+            Objective::Edp => self.baseline_s * self.baseline_e,
+        }
     }
 
     /// Hot-path evaluation: returns `(latency_s, peak_mem_bytes, valid)`
@@ -315,6 +436,7 @@ impl CostModel {
                 valid: false,
                 invalid_reason: Some(e),
                 latency_s: f64::INFINITY,
+                energy_j: f64::INFINITY,
                 peak_mem_bytes: u64::MAX,
                 peak_act_bytes: u64::MAX,
                 offchip_bytes: 0,
@@ -324,6 +446,7 @@ impl CostModel {
 
         let engine = self.engine();
         let mut total = 0.0;
+        let mut energy_total = 0.0;
         let mut peak_mem = 0.0f64;
         let mut peak_act = 0.0f64;
         let mut off_total = 0.0;
@@ -337,8 +460,10 @@ impl CostModel {
                 offchip_bytes: g.offchip_bytes as u64,
                 compute_s: g.compute_s,
                 fill_s: g.fill_s,
+                energy_j: g.energy_j,
             });
             total += g.latency_s;
+            energy_total += g.energy_j;
             off_total += g.offchip_bytes;
             peak_mem = peak_mem.max(g.mem_bytes);
             peak_act = peak_act.max(g.act_bytes);
@@ -354,6 +479,7 @@ impl CostModel {
             valid: invalid_reason.is_none(),
             invalid_reason,
             latency_s: total,
+            energy_j: energy_total,
             peak_mem_bytes: peak_mem as u64,
             peak_act_bytes: peak_act as u64,
             offchip_bytes: off_total as u64,

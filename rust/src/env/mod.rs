@@ -8,7 +8,7 @@
 //! model, which is the same object the paper's Fig. 3 "environment" wraps.
 
 use crate::cost::engine::IncrementalEval;
-use crate::cost::{CostModel, HwConfig, MB};
+use crate::cost::{CostModel, HwConfig, MB, Objective};
 use crate::fusion::{ActionCodec, Strategy, SYNC};
 use crate::workload::Workload;
 
@@ -45,12 +45,15 @@ pub struct Trajectory {
     pub actions: Vec<f32>,
     /// The decoded strategy.
     pub strategy: Strategy,
-    /// Achieved speedup over the no-fusion baseline.
+    /// Achieved gain over the no-fusion baseline under `objective`
+    /// (latency speedup for [`Objective::Latency`], the paper's metric).
     pub speedup: f64,
     /// Peak activation staging of the strategy (bytes).
     pub peak_act_bytes: u64,
     /// Whether the strategy fit the conditioned buffer.
     pub valid: bool,
+    /// The objective this trajectory was collected/decoded under.
+    pub objective: Objective,
 }
 
 impl Trajectory {
@@ -68,6 +71,10 @@ pub struct FusionEnv {
     pub batch: usize,
     /// Conditioned available on-chip memory (the paper's HW condition).
     pub mem_cond_bytes: f64,
+    /// Objective the episode optimizes/records; conditions the model via
+    /// the banded [`FusionEnv::rtg_token`] and makes the performance
+    /// feature objective-relative. Default [`Objective::Latency`].
+    pub objective: Objective,
     // Pre-computed per-layer log-normalized shape features.
     shape_feats: Vec<[f32; 6]>,
 }
@@ -116,10 +123,18 @@ impl FusionEnv {
             codec: ActionCodec::new(batch),
             batch,
             mem_cond_bytes: mem_cond_mb * MB,
+            objective: Objective::Latency,
             workload,
             model,
             shape_feats,
         }
+    }
+
+    /// Condition the env on a different objective (builder-style; the
+    /// default-constructed env is the legacy latency env).
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
     }
 
     /// Episode length = N + 1 slots.
@@ -129,9 +144,18 @@ impl FusionEnv {
 
     /// The constant conditioning-reward token (requested memory,
     /// normalized by [`MEM_REF_BYTES`] and clamped to `[0, MAX_RTG]` so
-    /// out-of-range budgets encode deterministically).
+    /// out-of-range budgets encode deterministically), shifted into a
+    /// per-objective band: Latency sits at `[0, MAX_RTG]` (the legacy
+    /// token, bit for bit — no offset is applied at all), Energy at
+    /// `+2·MAX_RTG` and EDP at `+4·MAX_RTG`. The bands cannot overlap,
+    /// so one trained model distinguishes the three conditioning regimes
+    /// from this single scalar.
     pub fn rtg_token(&self) -> f32 {
-        ((self.mem_cond_bytes / MEM_REF_BYTES) as f32).clamp(0.0, MAX_RTG)
+        let base = ((self.mem_cond_bytes / MEM_REF_BYTES) as f32).clamp(0.0, MAX_RTG);
+        match self.objective.index() {
+            0 => base,
+            k => base + (k as f32) * (2.0 * MAX_RTG),
+        }
     }
 
     /// Smallest condition (bytes) under which this workload is mappable at
@@ -172,8 +196,9 @@ impl FusionEnv {
         ]
     }
 
-    /// Speedup-so-far of the prefix (suffix defaulted to SYNC) — the
-    /// paper's `P_{a_0..a_{t-1}}`, normalized by the no-fusion baseline.
+    /// Objective-relative gain-so-far of the prefix (suffix defaulted to
+    /// SYNC) — the paper's `P_{a_0..a_{t-1}}`, normalized by the no-fusion
+    /// baseline (latency speedup under [`Objective::Latency`]).
     fn perf_of_prefix(&self, values: &[i32], t: usize) -> f32 {
         let n = self.workload.n_layers();
         let mut v = vec![SYNC; n + 1];
@@ -183,7 +208,8 @@ impl FusionEnv {
             v[0] = 1;
         }
         let s = Strategy::new(v);
-        (self.model.baseline_latency() / self.model.latency_of(&s).0) as f32
+        let c = self.model.cost_of(&s);
+        (self.model.baseline_value(self.objective) / c.value(self.objective)) as f32
     }
 
     /// Begin an episode.
@@ -204,6 +230,7 @@ impl FusionEnv {
                 speedup: 0.0,
                 peak_act_bytes: 0,
                 valid: false,
+                objective: self.objective,
             },
             inc,
         }
@@ -214,7 +241,7 @@ impl FusionEnv {
     fn finish(&self, values: Vec<i32>, traj: &mut Trajectory) {
         let s = Strategy::new(values);
         let c = self.model.cost_of(&s);
-        traj.speedup = self.model.baseline_latency() / c.latency_s;
+        traj.speedup = self.model.baseline_value(self.objective) / c.value(self.objective);
         traj.peak_act_bytes = c.peak_act_bytes;
         traj.valid = c.valid;
         traj.strategy = s;
@@ -255,8 +282,8 @@ impl<'e> Episode<'e> {
     /// Current state features. The performance feature P comes straight
     /// from the incremental evaluation of the prefix (no chain re-walk).
     pub fn observe(&self) -> [f32; STATE_DIM] {
-        let perf =
-            (self.env.model.baseline_latency() / self.inc.latency_s()) as f32;
+        let perf = (self.env.model.baseline_value(self.env.objective)
+            / self.inc.cost().value(self.env.objective)) as f32;
         self.env.state_from_perf(self.t, perf)
     }
 
@@ -463,6 +490,35 @@ mod tests {
         // Below-training-range budgets stay linear (and finite).
         let small = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 0.25);
         assert!(small.rtg_token() > 0.0 && small.rtg_token() < 0.01);
+    }
+
+    #[test]
+    fn objective_token_bands_are_disjoint_and_latency_unshifted() {
+        let base = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 16.0);
+        let lat = base.clone().with_objective(Objective::Latency);
+        // Latency is the legacy token — no offset at all.
+        assert_eq!(base.rtg_token().to_bits(), lat.rtg_token().to_bits());
+        let en = base.clone().with_objective(Objective::Energy);
+        let edp = base.clone().with_objective(Objective::Edp);
+        assert!((en.rtg_token() - (0.25 + 2.0 * MAX_RTG)).abs() < 1e-5);
+        assert!((edp.rtg_token() - (0.25 + 4.0 * MAX_RTG)).abs() < 1e-5);
+        // Even a ceiling-clamped latency token stays below the energy band.
+        let huge = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 4096.0);
+        assert!(huge.rtg_token() < en.rtg_token());
+    }
+
+    #[test]
+    fn objective_episode_records_objective_gain() {
+        let e = env().with_objective(Objective::Energy);
+        let traj = e.rollout(|_, _| -1.0); // no fusion
+        assert_eq!(traj.objective, Objective::Energy);
+        assert!((traj.speedup - 1.0).abs() < 1e-9, "{}", traj.speedup);
+        // A fusing strategy cuts boundary DRAM traffic → energy gain > 1.
+        let s = Strategy::new(vec![
+            8, 8, SYNC, 4, 4, 2, SYNC, 2, 1, 1, SYNC, 1, 1, SYNC, SYNC,
+        ]);
+        let traj = e.decorate(&s);
+        assert!(traj.speedup > 1.0, "energy gain {}", traj.speedup);
     }
 
     #[test]

@@ -40,7 +40,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::loadgen::{classify, Outcome};
-use crate::cost::{HwConfig, MB};
+use crate::cost::{HwConfig, MB, Objective};
 use crate::model::MapperModel;
 use crate::runtime::Runtime;
 use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
@@ -156,6 +156,13 @@ pub struct GridSpec {
     /// Base seed; per-point search seeds derive from it and the point's
     /// content, so results are independent of iteration order.
     pub seed: u64,
+    /// Objectives to sweep (default: [`Objective::Latency`] only — the
+    /// paper's setting). Every held-out point is evaluated once per
+    /// objective: the decode is conditioned on it (objective token) and
+    /// the reference search optimizes it, so the report answers "does
+    /// ONE trained model generalize across objectives", not just across
+    /// conditions.
+    pub objectives: Vec<Objective>,
 }
 
 impl GridSpec {
@@ -166,7 +173,7 @@ impl GridSpec {
     /// grid than the one the spec echo and config hash claim.
     pub fn from_json(text: &str) -> Result<GridSpec> {
         let j = Json::parse(text).context("grid spec is not valid JSON")?;
-        const TOP_KEYS: [&str; 8] = [
+        const TOP_KEYS: [&str; 9] = [
             "workloads",
             "batch",
             "train_mems",
@@ -175,6 +182,7 @@ impl GridSpec {
             "hw_perturbs",
             "search_budget",
             "seed",
+            "objectives",
         ];
         check_keys(&j, "grid", &TOP_KEYS)?;
         let names = j
@@ -265,6 +273,25 @@ impl GridSpec {
         if seed < 0.0 || seed.fract() != 0.0 || seed >= (1u64 << 53) as f64 {
             bail!("grid: `seed` must be a non-negative integer below 2^53, got {seed}");
         }
+        let objectives = match j.get("objectives") {
+            None => vec![Objective::Latency],
+            Some(v) => {
+                let Some(arr) = v.as_arr() else {
+                    bail!("grid: `objectives` must be an array of names");
+                };
+                let mut out = Vec::with_capacity(arr.len());
+                for o in arr {
+                    let Some(s) = o.as_str() else {
+                        bail!("grid: `objectives` entries must be strings");
+                    };
+                    let Some(obj) = Objective::by_name(s) else {
+                        bail!("grid: unknown objective `{s}` (one of latency|energy|edp)");
+                    };
+                    out.push(obj);
+                }
+                out
+            }
+        };
         let spec = GridSpec {
             workloads,
             batch: opt_usize(&j, "batch", 64)?,
@@ -274,6 +301,7 @@ impl GridSpec {
             hw_perturbs,
             search_budget: opt_usize(&j, "search_budget", 2000)?,
             seed: seed as u64,
+            objectives,
         };
         spec.validate()?;
         Ok(spec)
@@ -299,6 +327,14 @@ impl GridSpec {
         }
         if self.search_budget == 0 {
             bail!("grid: `search_budget` must be >= 1");
+        }
+        if self.objectives.is_empty() {
+            bail!("grid: `objectives` is empty");
+        }
+        for (i, o) in self.objectives.iter().enumerate() {
+            if self.objectives[..i].contains(o) {
+                bail!("grid: duplicate objective `{}`", o.name());
+            }
         }
         for &m in self.train_mems.iter().chain(&self.extrapolate_mems) {
             if !m.is_finite() || m <= 0.0 {
@@ -389,25 +425,28 @@ impl GridSpec {
                 Ok(r) => r,
                 Err(e) => bail!("grid workload `{name}`: {e:#}"),
             };
-            let mut push = |mem: f64, hw: HwConfig, kind: PointKind, hw_label: &str| {
-                out.push(GridPoint {
-                    workload: Arc::clone(&w),
-                    workload_name: name.clone(),
-                    mem_mb: mem,
-                    hw,
-                    kind,
-                    hw_label: hw_label.to_string(),
-                });
-            };
-            for &mem in &interp {
-                push(mem, base, PointKind::Interpolated, "base");
-            }
-            for &mem in &self.extrapolate_mems {
-                push(mem, base, PointKind::Extrapolated, "base");
-            }
-            for p in &self.hw_perturbs {
+            for &objective in &self.objectives {
+                let mut push = |mem: f64, hw: HwConfig, kind: PointKind, hw_label: &str| {
+                    out.push(GridPoint {
+                        workload: Arc::clone(&w),
+                        workload_name: name.clone(),
+                        mem_mb: mem,
+                        hw,
+                        kind,
+                        hw_label: hw_label.to_string(),
+                        objective,
+                    });
+                };
                 for &mem in &interp {
-                    push(mem, p.apply(base), PointKind::HwPerturbed, &p.label);
+                    push(mem, base, PointKind::Interpolated, "base");
+                }
+                for &mem in &self.extrapolate_mems {
+                    push(mem, base, PointKind::Extrapolated, "base");
+                }
+                for p in &self.hw_perturbs {
+                    for &mem in &interp {
+                        push(mem, p.apply(base), PointKind::HwPerturbed, &p.label);
+                    }
                 }
             }
         }
@@ -437,6 +476,13 @@ impl GridSpec {
             }
         }
         h = mix(h, self.search_budget as u64);
+        // Objectives are mixed only off the latency-only default, so a
+        // pre-multi-objective grid file keeps its recorded config hash.
+        if self.objectives != [Objective::Latency] {
+            for o in &self.objectives {
+                h = mix(h, o.index() as u64);
+            }
+        }
         mix(h, self.seed)
     }
 
@@ -447,6 +493,7 @@ impl GridSpec {
         let extrap = Json::arr(self.extrapolate_mems.iter().map(|&m| Json::num(m)));
         let per_gap = Json::num(self.interpolate_per_gap as f64);
         let perturbs = Json::arr(self.hw_perturbs.iter().map(|p| p.to_json()));
+        let objectives = Json::arr(self.objectives.iter().map(|o| Json::str(o.name())));
         Json::obj(vec![
             ("workloads", workloads),
             ("batch", Json::num(self.batch as f64)),
@@ -456,6 +503,7 @@ impl GridSpec {
             ("hw_perturbs", perturbs),
             ("search_budget", Json::num(self.search_budget as f64)),
             ("seed", Json::num(self.seed as f64)),
+            ("objectives", objectives),
         ])
     }
 }
@@ -518,6 +566,8 @@ pub struct GridPoint {
     pub kind: PointKind,
     /// `"base"` or the perturbation's label.
     pub hw_label: String,
+    /// The objective this point is decoded and searched under.
+    pub objective: Objective,
 }
 
 /// Measured result of one grid point.
@@ -531,6 +581,9 @@ pub struct PointResult {
     pub kind: PointKind,
     /// `"base"` or the perturbation label.
     pub hw_label: String,
+    /// The objective the point was decoded and searched under. Both
+    /// `model_speedup` and `search_speedup` are gains under it.
+    pub objective: Objective,
     /// Inference outcome, classified exactly like a serving request.
     pub outcome: Outcome,
     /// Hard-error message when inference failed.
@@ -570,6 +623,7 @@ impl PointResult {
             ("mem_mb", Json::num(self.mem_mb)),
             ("kind", Json::str(self.kind.name())),
             ("hw", Json::str(self.hw_label.clone())),
+            ("objective", Json::str(self.objective.name())),
             ("outcome", Json::str(self.outcome.name())),
             ("error", self.error.clone().map_or(Json::Null, Json::str)),
             ("model_speedup", opt_num(self.model_speedup)),
@@ -700,11 +754,33 @@ impl SweepReport {
         }
     }
 
-    /// The `report` object of the sweep schema: `points[]` + `aggregates`.
-    pub fn to_json(&self) -> Json {
-        let points = Json::arr(self.points.iter().map(|p| p.to_json()));
+    /// The same aggregation restricted to each objective's points, in
+    /// [`Objective::ALL`] order. Objectives absent from the grid are
+    /// absent here; with the default latency-only grid this is exactly
+    /// one entry whose numbers equal the global aggregates.
+    pub fn per_objective(&self) -> Vec<(Objective, SweepReport)> {
+        Objective::ALL
+            .iter()
+            .filter_map(|&obj| {
+                let pts: Vec<PointResult> = self
+                    .points
+                    .iter()
+                    .filter(|p| p.objective == obj)
+                    .cloned()
+                    .collect();
+                if pts.is_empty() {
+                    None
+                } else {
+                    Some((obj, SweepReport::from_points(pts)))
+                }
+            })
+            .collect()
+    }
+
+    /// The `aggregates` object of the sweep schema.
+    fn aggregates_json(&self) -> Json {
         let geomean = Json::num(self.speedup_vs_search_geomean);
-        let aggregates = Json::obj(vec![
+        Json::obj(vec![
             ("n_points", Json::num(self.n_points as f64)),
             ("served", Json::num(self.served as f64)),
             ("errors", Json::num(self.errors as f64)),
@@ -715,8 +791,23 @@ impl SweepReport {
             ("speedup_vs_search_geomean", geomean),
             ("mean_infer_ms", Json::num(self.mean_infer_ms)),
             ("mean_search_ms", Json::num(self.mean_search_ms)),
-        ]);
-        Json::obj(vec![("points", points), ("aggregates", aggregates)])
+        ])
+    }
+
+    /// The `report` object of the sweep schema: `points[]` + global
+    /// `aggregates` + the same aggregate block `per_objective`.
+    pub fn to_json(&self) -> Json {
+        let points = Json::arr(self.points.iter().map(|p| p.to_json()));
+        let per_obj = self
+            .per_objective()
+            .into_iter()
+            .map(|(o, r)| (o.name().to_string(), r.aggregates_json()))
+            .collect();
+        Json::obj(vec![
+            ("points", points),
+            ("aggregates", self.aggregates_json()),
+            ("per_objective", Json::Obj(per_obj)),
+        ])
     }
 }
 
@@ -729,6 +820,11 @@ fn point_seed(base: u64, p: &GridPoint) -> u64 {
     h = mix(h, p.workload.content_hash());
     h = mix(h, p.hw.content_hash());
     h = mix(h, p.mem_mb.to_bits());
+    // Mixed only off the latency default: latency reference searches stay
+    // bit-identical to the single-objective harness.
+    if p.objective != Objective::Latency {
+        h = mix(h, p.objective.index() as u64);
+    }
     mix(h, p.kind as u64)
 }
 
@@ -736,7 +832,9 @@ fn run_point(rt: &Runtime, model: &MapperModel, spec: &GridSpec, p: &GridPoint) 
     // The problem carries BOTH the condition's cost model (hw + budget,
     // never the training config) and the matching env — one build per
     // point, shared by the search, the inference and the re-cost below.
-    let prob = FusionProblem::new(&p.workload, spec.batch, p.hw, p.mem_mb);
+    // The objective conditions the env (decode token) and scalarizes the
+    // reference search.
+    let prob = FusionProblem::with_objective(&p.workload, spec.batch, p.hw, p.mem_mb, p.objective);
 
     // Out-of-band reference search, budget-boxed at the spec's budget.
     let mut rng = Rng::seed_from_u64(point_seed(spec.seed, p));
@@ -755,6 +853,7 @@ fn run_point(rt: &Runtime, model: &MapperModel, spec: &GridSpec, p: &GridPoint) 
         mem_mb: p.mem_mb,
         kind: p.kind,
         hw_label: p.hw_label.clone(),
+        objective: p.objective,
         outcome,
         error,
         model_speedup: None,
@@ -775,7 +874,7 @@ fn run_point(rt: &Runtime, model: &MapperModel, spec: &GridSpec, p: &GridPoint) 
         // fresh engine walk over the final strategy — independent of the
         // episode's incremental bookkeeping.
         let c = prob.model.cost_of(&traj.strategy);
-        let speedup = prob.model.baseline_latency() / c.latency_s;
+        let speedup = prob.model.baseline_value(p.objective) / c.value(p.objective);
         out.model_speedup = Some(speedup);
         out.feasible = Some(c.valid);
         out.model_act_mb = Some(c.peak_act_bytes as f64 / MB);
@@ -820,12 +919,27 @@ pub fn bench_doc(report: &SweepReport, spec: &GridSpec, backend: &str, quick: bo
     // most points fail inference could still gate green off the
     // survivors (only a total collapse hits the gap sentinel).
     let error_rate = report.errors as f64 / report.n_points.max(1) as f64;
-    let gates = Json::obj(vec![
-        ("aggregate_gap", Json::num(report.mean_gap)),
-        ("error_rate", Json::num(error_rate)),
-        ("feasibility_rate", Json::num(report.feasibility_rate)),
-        ("inference_vs_search_speedup", Json::num(report.speedup_vs_search_geomean)),
-    ]);
+    // Global gates first (unchanged names — a latency-only sweep emits
+    // bit-identical values to the single-objective harness), then one
+    // gap/feasibility gate pair per objective present in the grid, so a
+    // regression on ONE objective cannot hide inside a global mean.
+    let mut gate_pairs: Vec<(String, Json)> = vec![
+        ("aggregate_gap".into(), Json::num(report.mean_gap)),
+        ("error_rate".into(), Json::num(error_rate)),
+        ("feasibility_rate".into(), Json::num(report.feasibility_rate)),
+        (
+            "inference_vs_search_speedup".into(),
+            Json::num(report.speedup_vs_search_geomean),
+        ),
+    ];
+    for (obj, r) in report.per_objective() {
+        gate_pairs.push((format!("aggregate_gap_{}", obj.name()), Json::num(r.mean_gap)));
+        gate_pairs.push((
+            format!("feasibility_rate_{}", obj.name()),
+            Json::num(r.feasibility_rate),
+        ));
+    }
+    let gates = Json::Obj(gate_pairs.into_iter().collect());
     Json::obj(vec![
         ("bench", Json::str("generalization")),
         ("quick", Json::Bool(quick)),
@@ -859,6 +973,7 @@ mod tests {
             }],
             search_budget: 50,
             seed: 1,
+            objectives: vec![Objective::Latency],
         }
     }
 
@@ -876,6 +991,8 @@ mod tests {
         }"#;
         let s = GridSpec::from_json(text).unwrap();
         assert_eq!(s.workloads, vec!["vgg16".to_string(), "resnet18".to_string()]);
+        // Absent `objectives` defaults to the paper's latency-only sweep.
+        assert_eq!(s.objectives, vec![Objective::Latency]);
         assert_eq!(s.batch, 32);
         assert_eq!(s.interpolate_per_gap, 2);
         assert_eq!(s.extrapolate_mems, vec![14.0, 40.0]);
@@ -1025,6 +1142,94 @@ mod tests {
     }
 
     #[test]
+    fn objective_axis_multiplies_points_and_splits_gates() {
+        let reg = WorkloadRegistry::with_zoo();
+        let mut s = spec();
+        s.objectives = Objective::ALL.to_vec();
+        // The latency-only grid had 6 points; three objectives triple it.
+        let pts = s.points(&reg).unwrap();
+        assert_eq!(pts.len(), 18);
+        for obj in Objective::ALL {
+            assert_eq!(pts.iter().filter(|p| p.objective == obj).count(), 6);
+        }
+        // Energy/EDP reference searches are seeded apart from latency's;
+        // the latency seed is bit-identical to the pre-objective harness
+        // (no objective mixed in on the default).
+        let lat = pts.iter().find(|p| p.objective == Objective::Latency).unwrap();
+        let en = pts
+            .iter()
+            .find(|p| p.objective == Objective::Energy && p.mem_mb == lat.mem_mb)
+            .unwrap();
+        assert_ne!(point_seed(1, lat), point_seed(1, en));
+        // Parsing round-trips the objective axis…
+        let again = GridSpec::from_json(&s.to_json().to_pretty()).unwrap();
+        assert_eq!(s, again);
+        // …and the config hash distinguishes it from the default grid.
+        assert_ne!(s.content_hash(), spec().content_hash());
+        // Unknown or duplicate objectives are rejected up front.
+        let bad = r#"{
+            "workloads": ["vgg16"],
+            "train_mems": [16, 32],
+            "objectives": ["latency", "power"]
+        }"#;
+        let err = GridSpec::from_json(bad).unwrap_err().to_string();
+        assert!(err.contains("power"), "{err}");
+        let mut dup = spec();
+        dup.objectives = vec![Objective::Edp, Objective::Edp];
+        assert!(validate_err(&dup).contains("duplicate"), "{}", validate_err(&dup));
+    }
+
+    #[test]
+    fn per_objective_gates_split_the_sweep() {
+        let mk = |obj: Objective, gap: f64, feasible: bool| PointResult {
+            workload: "vgg16".into(),
+            mem_mb: 24.0,
+            kind: PointKind::Interpolated,
+            hw_label: "base".into(),
+            objective: obj,
+            outcome: Outcome::Served,
+            error: None,
+            model_speedup: Some(1.0),
+            feasible: Some(feasible),
+            model_act_mb: Some(1.0),
+            infer_ms: Some(1.0),
+            search_speedup: 1.5,
+            search_valid: true,
+            search_ms: 3.0,
+            search_evals: 50,
+            gap: feasible.then_some(gap),
+            speedup_vs_search: Some(3.0),
+        };
+        let r = SweepReport::from_points(vec![
+            mk(Objective::Latency, 0.1, true),
+            mk(Objective::Energy, 0.4, true),
+            mk(Objective::Edp, 0.0, false),
+        ]);
+        let per = r.per_objective();
+        assert_eq!(per.len(), 3);
+        assert_eq!(per[0].0, Objective::Latency);
+        assert!((per[0].1.mean_gap - 0.1).abs() < 1e-12);
+        assert!((per[1].1.mean_gap - 0.4).abs() < 1e-12);
+        assert_eq!(per[1].1.feasibility_rate, 1.0);
+        // The infeasible EDP point: feasibility 0, gap degenerate.
+        assert_eq!(per[2].1.feasibility_rate, 0.0);
+        assert_eq!(per[2].1.mean_gap, DEGENERATE_GAP);
+        // bench_doc splits the same numbers into per-objective gates.
+        let sp = spec();
+        let doc = bench_doc(&r, &sp, "native", true);
+        let gates = doc.get("gates").unwrap();
+        let gate = |k: &str| gates.get(k).and_then(|v| v.as_f64()).unwrap();
+        assert!((gate("aggregate_gap_latency") - 0.1).abs() < 1e-12);
+        assert!((gate("aggregate_gap_energy") - 0.4).abs() < 1e-12);
+        assert_eq!(gate("aggregate_gap_edp"), DEGENERATE_GAP);
+        assert_eq!(gate("feasibility_rate_latency"), 1.0);
+        assert_eq!(gate("feasibility_rate_edp"), 0.0);
+        // Global gates are still present and aggregate all objectives.
+        assert!((gate("aggregate_gap") - 0.25).abs() < 1e-12);
+        assert!((gate("feasibility_rate") - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn unknown_grid_workload_is_a_clean_error() {
         let reg = WorkloadRegistry::with_zoo();
         let mut s = spec();
@@ -1058,6 +1263,7 @@ mod tests {
             mem_mb: 24.0,
             kind: PointKind::Interpolated,
             hw_label: "base".into(),
+            objective: Objective::Latency,
             outcome: Outcome::Error,
             error: Some("inference failed: boom".into()),
             model_speedup: None,

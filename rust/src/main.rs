@@ -29,8 +29,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use dnnfuser::coordinator::loadgen::{self, LoadSpec};
 use dnnfuser::coordinator::service::{BackendChoice, MapperService, ServiceConfig};
-use dnnfuser::coordinator::Source;
-use dnnfuser::cost::HwConfig;
+use dnnfuser::coordinator::{MapRequest, Source};
+use dnnfuser::cost::{HwConfig, Objective};
 use dnnfuser::env::FusionEnv;
 use dnnfuser::eval::generalization::{self, GridSpec};
 use dnnfuser::model::native::NativeConfig;
@@ -116,6 +116,13 @@ fn resolve_workload(p: &dnnfuser::util::args::ParsedArgs) -> Result<dnnfuser::wo
         return dnnfuser::workload::custom::from_file(path);
     }
     zoo::by_name(p.req("workload")?).context("unknown workload (see rust/src/workload/zoo.rs)")
+}
+
+/// Parse the shared `--objective` option (default `latency`).
+fn parse_objective(p: &dnnfuser::util::args::ParsedArgs) -> Result<Objective> {
+    let name = p.req("objective")?;
+    Objective::by_name(name)
+        .ok_or_else(|| anyhow!("unknown --objective `{name}` (latency|energy|edp)"))
 }
 
 fn parse_list_f64(s: &str) -> Result<Vec<f64>> {
@@ -211,9 +218,11 @@ fn cmd_collect(raw: &[String]) -> Result<()> {
         .opt("batch", Some("64"), "input batch size")
         .opt("budget", Some("2000"), "teacher sampling budget per search")
         .opt("runs", Some("4"), "teacher searches per condition (paper: 4-10)")
+        .opt("objective", Some("latency"), "optimize latency|energy|edp (recorded in demos)")
         .opt("seed", Some("42"), "experiment seed")
         .opt("out", Some("runs/dataset.bin"), "output dataset path");
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let objective = parse_objective(&p)?;
     let budget = p.get_usize("budget")?;
     let runs = p.get_usize("runs")?;
     let batch = p.get_usize("batch")?;
@@ -238,10 +247,9 @@ fn cmd_collect(raw: &[String]) -> Result<()> {
         }
     }
     let mut buffer = ReplayBuffer::new(4096);
-    for ((wname, mem, run), (traj, wall_s)) in labels
-        .into_iter()
-        .zip(dnnfuser::bench_support::teacher_runs(jobs, batch, budget))
-    {
+    for ((wname, mem, run), (traj, wall_s)) in labels.into_iter().zip(
+        dnnfuser::bench_support::teacher_runs_with_objective(jobs, batch, budget, objective),
+    ) {
         println!(
             "{wname:>14} mem={mem:>5.1}MB run={run} speedup={:.2} act={:.2}MB valid={} ({:.2}s)",
             traj.speedup,
@@ -332,6 +340,7 @@ fn cmd_infer(raw: &[String]) -> Result<()> {
         .opt("workload-file", None, "custom workload JSON (overrides --workload)")
         .opt("batch", Some("64"), "input batch size")
         .opt("mem", Some("20"), "memory condition (MB)")
+        .opt("objective", Some("latency"), "condition on latency|energy|edp")
         .opt("artifacts", Some("artifacts"), "artifacts directory")
         .opt("backend", Some("auto"), "auto|native|pjrt")
         .opt("top-k", None, "sample among the k nearest actions (native backend)")
@@ -342,6 +351,7 @@ fn cmd_infer(raw: &[String]) -> Result<()> {
     let w = resolve_workload(&p)?;
     let batch = p.get_usize("batch")?;
     let mem = p.get_f64("mem")?;
+    let objective = parse_objective(&p)?;
 
     let rt = load_runtime(
         p.req("artifacts")?,
@@ -359,7 +369,7 @@ fn cmd_infer(raw: &[String]) -> Result<()> {
         },
         None => dnnfuser::model::native::Sampling::Greedy,
     };
-    let env = FusionEnv::new(w.clone(), batch, HwConfig::paper(), mem);
+    let env = FusionEnv::new(w.clone(), batch, HwConfig::paper(), mem).with_objective(objective);
     let t0 = std::time::Instant::now();
     let traj = model
         .infer_batch_with(&rt, &[&env], sampling)?
@@ -379,7 +389,7 @@ fn cmd_infer(raw: &[String]) -> Result<()> {
     println!("mapped in {dt:?} (one inference pass)");
 
     if p.flag("compare-teacher") {
-        let prob = FusionProblem::new(&w, batch, HwConfig::paper(), mem);
+        let prob = FusionProblem::with_objective(&w, batch, HwConfig::paper(), mem, objective);
         let t1 = std::time::Instant::now();
         let r = GSampler::default().run(&prob, 2000, &mut Rng::seed_from_u64(1));
         let ts = t1.elapsed();
@@ -404,12 +414,19 @@ fn cmd_search(raw: &[String]) -> Result<()> {
         .opt("workload-file", None, "custom workload JSON (overrides --workload)")
         .opt("batch", Some("64"), "input batch size")
         .opt("mem", Some("20"), "memory condition (MB)")
+        .opt("objective", Some("latency"), "optimize latency|energy|edp")
         .opt("budget", Some("2000"), "sampling budget")
         .opt("seed", Some("42"), "seed");
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let w = resolve_workload(&p)?;
     let opt = optimizer_by_name(p.req("algo")?)?;
-    let prob = FusionProblem::new(&w, p.get_usize("batch")?, HwConfig::paper(), p.get_f64("mem")?);
+    let prob = FusionProblem::with_objective(
+        &w,
+        p.get_usize("batch")?,
+        HwConfig::paper(),
+        p.get_f64("mem")?,
+        parse_objective(&p)?,
+    );
     let r = opt.run(&prob, p.get_usize("budget")?, &mut Rng::seed_from_u64(p.get_u64("seed")?));
     println!("algo     : {}", r.algo);
     println!("strategy : {}", r.best.display());
@@ -459,6 +476,13 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             Some("4"),
             "after the stream, time N reference G-Sampler searches and report the \
              model-vs-search speedup (0 disables)",
+        )
+        .opt(
+            "pareto",
+            Some("0"),
+            "after the stream, request the latency/energy Pareto front for N sampled \
+             conditions (one decode per objective) and fail unless each front is \
+             non-empty and non-dominated (0 disables)",
         )
         .opt(
             "workload-file",
@@ -520,6 +544,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         p.req("duration")?,
         p.req("max-inflight")?,
         p.req("compare-search")?,
+        p.req("pareto")?,
     ] {
         meta_hash = fnv1a_str(meta_hash, s);
     }
@@ -619,6 +644,58 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
                 src.name()
             );
             search_baseline = Some((search_p50, speedup));
+        }
+    }
+
+    // Pareto probe: ask the live service for the feasible latency/energy
+    // front of a few sampled conditions — one decode per objective through
+    // the normal admission/batching/cache path. This is a hard check, not
+    // a report: an empty front (no objective produced a feasible mapping)
+    // or a dominated point (the client's non-dominated filter broke) fails
+    // the run, so CI can smoke the multi-objective serving path.
+    let pareto_n = p.get_usize("pareto")?;
+    if pareto_n > 0 {
+        let mut rng = Rng::seed_from_u64(p.get_u64("seed")?.wrapping_add(0xFACE));
+        for i in 0..pareto_n {
+            let name = &spec.workloads[rng.index(spec.workloads.len())];
+            let mem = spec.mems[rng.index(spec.mems.len())];
+            let front = client
+                .pareto(MapRequest::new(name, spec.batch, mem))
+                .with_context(|| format!("pareto request {i} ({name} @ {mem} MB)"))?;
+            if front.is_empty() {
+                bail!(
+                    "pareto front {i} ({name} @ {mem} MB) is empty — no objective \
+                     produced a feasible mapping"
+                );
+            }
+            for pt in &front {
+                if front.iter().any(|q| q.cost.dominates(&pt.cost)) {
+                    bail!(
+                        "pareto front {i} ({name} @ {mem} MB) contains a dominated \
+                         point ({} at {:.3e}s/{:.3e}J)",
+                        pt.objective.name(),
+                        pt.cost.latency_s,
+                        pt.cost.energy_j
+                    );
+                }
+            }
+            let cells: Vec<String> = front
+                .iter()
+                .map(|pt| {
+                    format!(
+                        "{}: {:.3}ms/{:.2}mJ via {}",
+                        pt.objective.name(),
+                        pt.cost.latency_s * 1e3,
+                        pt.cost.energy_j * 1e3,
+                        pt.source.name()
+                    )
+                })
+                .collect();
+            println!(
+                "  pareto {name} @ {mem:.1} MB: {} point(s) [{}]",
+                front.len(),
+                cells.join("; ")
+            );
         }
     }
 

@@ -23,19 +23,23 @@ pub mod tbpsa;
 use std::time::Instant;
 
 use crate::cost::engine::{BatchEval, StrategyCost};
-use crate::cost::{CostModel, HwConfig};
+use crate::cost::{CostModel, HwConfig, Objective};
 use crate::env::FusionEnv;
 use crate::fusion::{ActionCodec, Strategy, SYNC};
 use crate::util::rng::Rng;
 use crate::workload::Workload;
 
-/// The optimization problem: maximize fusion speedup subject to the
-/// conditioned buffer capacity.
+/// The optimization problem: maximize the objective-relative gain over the
+/// no-fusion baseline subject to the conditioned buffer capacity. The
+/// default objective is [`Objective::Latency`] (the paper's problem);
+/// energy and EDP share every operator and only change the scalarization.
 pub struct FusionProblem {
     pub model: CostModel,
     pub codec: ActionCodec,
     pub n_slots: usize,
     pub mem_cond_bytes: f64,
+    /// What the search minimizes (as a maximized baseline-relative gain).
+    pub objective: Objective,
     /// The RL view of the same problem (state featurization for A2C and
     /// for trajectory decoration).
     pub env: FusionEnv,
@@ -55,13 +59,27 @@ pub struct Eval {
 
 impl FusionProblem {
     pub fn new(w: &Workload, batch: usize, hw: HwConfig, mem_cond_mb: f64) -> Self {
+        Self::with_objective(w, batch, hw, mem_cond_mb, Objective::Latency)
+    }
+
+    /// Build the problem for a specific objective; the env is conditioned
+    /// on the same objective so A2C/trajectory decoration stays coherent
+    /// with the scalarization.
+    pub fn with_objective(
+        w: &Workload,
+        batch: usize,
+        hw: HwConfig,
+        mem_cond_mb: f64,
+        objective: Objective,
+    ) -> Self {
         let hw = hw.with_buffer_mb(mem_cond_mb);
         FusionProblem {
             model: CostModel::new(w, batch, hw),
             codec: ActionCodec::new(batch),
             n_slots: w.n_layers() + 1,
             mem_cond_bytes: mem_cond_mb * 1024.0 * 1024.0,
-            env: FusionEnv::new(w.clone(), batch, hw, mem_cond_mb),
+            objective,
+            env: FusionEnv::new(w.clone(), batch, hw, mem_cond_mb).with_objective(objective),
         }
     }
 
@@ -79,12 +97,15 @@ impl FusionProblem {
         Strategy::new(values)
     }
 
-    /// Scalarize an engine evaluation: speedup when valid, negative
-    /// overflow when not — every valid strategy dominates every invalid
-    /// one, and infeasible strategies keep a slope toward feasibility.
+    /// Scalarize an engine evaluation: objective-relative gain over the
+    /// no-fusion baseline when valid, negative overflow when not — every
+    /// valid strategy dominates every invalid one, and infeasible
+    /// strategies keep a slope toward feasibility. Under
+    /// [`Objective::Latency`] this is exactly the pre-multi-objective
+    /// `baseline_latency / latency_s` speedup, bit for bit.
     pub fn scalarize(&self, c: &StrategyCost) -> f64 {
         if c.valid {
-            self.model.baseline_latency() / c.latency_s
+            self.model.baseline_value(self.objective) / c.value(self.objective)
         } else {
             -(c.peak_mem_bytes as f64 / self.model.hw.buffer_bytes as f64)
         }
@@ -97,7 +118,7 @@ impl FusionProblem {
         let c = self.model.cost_of(s);
         Eval {
             score: self.scalarize(&c),
-            speedup: self.model.baseline_latency() / c.latency_s,
+            speedup: self.model.baseline_value(self.objective) / c.value(self.objective),
             peak_act_bytes: c.peak_act_bytes,
             valid: c.valid,
         }

@@ -12,13 +12,18 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cost::Objective;
 use crate::env::{Trajectory, STATE_DIM, T_MAX};
 use crate::fusion::Strategy;
 use crate::util::binio::{BinReader, BinWriter};
 use crate::util::rng::Rng;
 
 const MAGIC: &[u8; 4] = b"DNFT";
-const VERSION: u32 = 2;
+/// v3 appends the objective index per trajectory; v2 (pre-multi-objective)
+/// datasets load with every trajectory marked [`Objective::Latency`],
+/// which is exactly what they were collected under.
+const VERSION: u32 = 3;
+const V2: u32 = 2;
 
 /// A flattened, padded batch matching the train artifact signature:
 /// rtg [B,T], states [B,T,S], actions [B,T], mask [B,T] (row-major).
@@ -144,6 +149,7 @@ impl ReplayBuffer {
             w.f64(t.speedup)?;
             w.u64(t.peak_act_bytes)?;
             w.u32(t.valid as u32)?;
+            w.u32(t.objective.index() as u32)?;
         }
         w.finish()
     }
@@ -152,7 +158,8 @@ impl ReplayBuffer {
     pub fn load(path: impl AsRef<Path>) -> Result<ReplayBuffer> {
         let f = File::open(path.as_ref())
             .with_context(|| format!("opening {}", path.as_ref().display()))?;
-        let mut r = BinReader::new(BufReader::new(f), MAGIC, VERSION)?;
+        let (mut r, version) =
+            BinReader::new_versioned(BufReader::new(f), MAGIC, &[V2, VERSION])?;
         let n = r.u64()? as usize;
         let capacity = r.u64()? as usize;
         let mut buf = ReplayBuffer::new(capacity);
@@ -165,6 +172,13 @@ impl ReplayBuffer {
             let speedup = r.f64()?;
             let peak_act_bytes = r.u64()?;
             let valid = r.u32()? != 0;
+            let objective = if version >= VERSION {
+                let idx = r.u32()? as usize;
+                Objective::from_index(idx)
+                    .with_context(|| format!("corrupt dataset: objective index {idx}"))?
+            } else {
+                Objective::Latency
+            };
             if rtg.len() != steps || actions.len() != steps {
                 bail!("corrupt dataset: step-count mismatch");
             }
@@ -187,6 +201,7 @@ impl ReplayBuffer {
                 speedup,
                 peak_act_bytes,
                 valid,
+                objective,
             });
         }
         Ok(buf)
@@ -265,6 +280,56 @@ mod tests {
             assert_eq!(a.speedup, b.speedup);
             assert_eq!(a.valid, b.valid);
         }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_load_roundtrips_objective() {
+        let env = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 20.0)
+            .with_objective(Objective::Edp);
+        let mut buf = ReplayBuffer::new(16);
+        buf.push(env.rollout(|_, _| -1.0));
+        for t in some_trajectories(2) {
+            buf.push(t);
+        }
+        let path = std::env::temp_dir().join("dnnfuser_test_dataset_obj.bin");
+        buf.save(&path).unwrap();
+        let loaded = ReplayBuffer::load(&path).unwrap();
+        let objs: Vec<Objective> = loaded.iter().map(|t| t.objective).collect();
+        assert_eq!(
+            objs,
+            vec![Objective::Edp, Objective::Latency, Objective::Latency]
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn loads_v2_datasets_as_latency() {
+        // Hand-write a v2-layout file (no objective field) and load it.
+        let path = std::env::temp_dir().join("dnnfuser_test_dataset_v2.bin");
+        let traj = &some_trajectories(1)[0];
+        {
+            let f = std::fs::File::create(&path).unwrap();
+            let mut w =
+                BinWriter::new(std::io::BufWriter::new(f), MAGIC, V2).unwrap();
+            w.u64(1).unwrap();
+            w.u64(16).unwrap();
+            w.u32(traj.steps() as u32).unwrap();
+            w.f32_slice(&traj.rtg).unwrap();
+            let flat: Vec<f32> = traj.states.iter().flatten().copied().collect();
+            w.f32_slice(&flat).unwrap();
+            w.f32_slice(&traj.actions).unwrap();
+            w.i32_slice(&traj.strategy.values).unwrap();
+            w.f64(traj.speedup).unwrap();
+            w.u64(traj.peak_act_bytes).unwrap();
+            w.u32(traj.valid as u32).unwrap();
+            w.finish().unwrap();
+        }
+        let loaded = ReplayBuffer::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        let t = loaded.iter().next().unwrap();
+        assert_eq!(t.objective, Objective::Latency);
+        assert_eq!(t.strategy, traj.strategy);
         std::fs::remove_file(path).ok();
     }
 

@@ -6,7 +6,9 @@
 //! the micro-batch pipeline literally, so agreement here means the closed
 //! forms summarize the semantics they claim to.
 
-use dnnfuser::cost::{simref, CostModel, HwConfig};
+use dnnfuser::cost::{
+    simref, CostModel, HwConfig, E_DRAM_J_PER_BYTE, E_MAC_J, E_SRAM_J_PER_BYTE,
+};
 use dnnfuser::fusion::{ActionCodec, Strategy, SYNC};
 use dnnfuser::util::ptest::{self, Gen};
 use dnnfuser::util::rng::Rng;
@@ -199,6 +201,66 @@ fn splitting_a_group_never_reduces_offchip_traffic() {
         }
         Ok(())
     });
+}
+
+/// Multi-objective pin (ISSUE 7 satellite): the engine's closed-form group
+/// energy against a fully hand-computed 2-layer example. Every byte/MAC
+/// count below is derived from the layer shapes by hand, so this test
+/// breaks if any energy term (DRAM, SRAM, MAC) silently changes meaning.
+#[test]
+fn energy_closed_form_matches_hand_computed_two_layer_example() {
+    // Layer A: conv k=8 c=3 16x16 3x3 stride 1 →
+    //   macs  = 8·3·16·16·3·3        = 55 296 /sample
+    //   in_b  = 2·3·16·16            =  1 536 B/sample
+    //   out_b = 2·8·16·16            =  4 096 B/sample
+    //   w_b   = 2·8·3·3·3            =    432 B
+    // Layer B: conv k=4 c=8 16x16 3x3 stride 1 →
+    //   macs  = 4·8·16·16·3·3        = 73 728 /sample
+    //   in_b  = 2·8·16·16            =  4 096 B/sample
+    //   out_b = 2·4·16·16            =  2 048 B/sample
+    //   w_b   = 2·4·8·3·3            =    576 B
+    let w = Workload {
+        name: "pair".into(),
+        layers: vec![conv("a", 8, 3, 16, 16, 3, 3, 1), conv("b", 4, 8, 16, 16, 3, 3, 1)],
+    };
+    let b = 4.0; // batch
+    let m = CostModel::new(&w, 4, HwConfig::paper());
+    // Per-group closed form (DESIGN.md §13), with the group's off-chip
+    // traffic = B·in_head + B·out_tail + weights, on-chip traffic =
+    // B·Σ(in+out), and compute = B·Σ macs; none depend on micro-batches.
+    let group_e = |off: f64, on: f64, comp: f64| {
+        E_DRAM_J_PER_BYTE * off + E_SRAM_J_PER_BYTE * on + E_MAC_J * comp
+    };
+    // Split (no-fusion): one group per layer.
+    //   G1: off = 4·1536 + 4·4096 + 432 = 22 960, on = 4·5632, comp = 4·55296
+    //   G2: off = 4·4096 + 4·2048 + 576 = 25 152, on = 4·6144, comp = 4·73728
+    let e1 = group_e(22_960.0, b * 5_632.0, b * 55_296.0);
+    let e2 = group_e(25_152.0, b * 6_144.0, b * 73_728.0);
+    let split = m.evaluate(&Strategy::no_fusion(2));
+    assert_eq!(split.groups.len(), 2);
+    assert_eq!(split.groups[0].energy_j, e1);
+    assert_eq!(split.groups[1].energy_j, e2);
+    assert_eq!(split.energy_j, e1 + e2);
+    // Fused [2,2,2]: one group over both layers.
+    //   off = 4·1536 + 4·2048 + (432+576) = 15 344
+    //   on  = 4·(5632+6144), comp = 4·(55296+73728)
+    let ef = group_e(15_344.0, b * 11_776.0, b * 129_024.0);
+    let fused = m.evaluate(&Strategy::new(vec![2, 2, 2]));
+    assert_eq!(fused.groups.len(), 1);
+    assert_eq!(fused.energy_j, ef);
+    // Fusing removes exactly the boundary's DRAM round-trip,
+    // B·(out_A + in_B) = 4·(4096+4096) = 32 768 bytes — SRAM and MAC
+    // terms are fusion-invariant, so the whole delta is DRAM-priced.
+    let delta = split.energy_j - fused.energy_j;
+    let expect = E_DRAM_J_PER_BYTE * 32_768.0;
+    assert!(
+        (delta - expect).abs() < 1e-18,
+        "energy delta {delta:.6e} != boundary DRAM term {expect:.6e}"
+    );
+    // And the engine agrees with `evaluate` (one walk, same numbers).
+    let c = m.engine().cost_of(&Strategy::no_fusion(2).values);
+    assert_eq!(c.energy_j, split.energy_j);
+    assert_eq!(c.cost_vec().edp(), c.latency_s * c.energy_j);
 }
 
 #[test]

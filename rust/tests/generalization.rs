@@ -2,7 +2,7 @@
 //! out-of-range budgets (below the smallest / above the largest training
 //! condition), and sweep report-schema stability (DESIGN.md §11).
 
-use dnnfuser::cost::HwConfig;
+use dnnfuser::cost::{HwConfig, Objective};
 use dnnfuser::env::{FusionEnv, MAX_RTG};
 use dnnfuser::eval::generalization::{bench_doc, run_sweep, GridSpec};
 use dnnfuser::model::native::NativeConfig;
@@ -73,6 +73,7 @@ fn two_point_sweep_report_schema_is_stable() {
         hw_perturbs: vec![],
         search_budget: 60,
         seed: 3,
+        objectives: vec![Objective::Latency],
     };
     let report = run_sweep(&rt, &model, &registry, &spec).unwrap();
     assert_eq!(report.n_points, 2);
@@ -92,6 +93,10 @@ fn two_point_sweep_report_schema_is_stable() {
         "error_rate",
         "feasibility_rate",
         "inference_vs_search_speedup",
+        // Per-objective splits: a latency-only sweep still emits its own
+        // objective's pair, so the CI gate set stays schema-stable.
+        "aggregate_gap_latency",
+        "feasibility_rate_latency",
     ] {
         assert!(gates.get(key).and_then(|v| v.as_f64()).is_some(), "gate `{key}`");
     }
@@ -126,6 +131,7 @@ fn two_point_sweep_report_schema_is_stable() {
             "mem_mb",
             "kind",
             "hw",
+            "objective",
             "outcome",
             "error",
             "model_speedup",

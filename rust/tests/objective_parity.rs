@@ -1,0 +1,164 @@
+//! Latency bit-parity (ISSUE 7 safety rail): `Objective::Latency` is the
+//! default everywhere, and under it every search result, condition token,
+//! episode feature and grid hash must be **bit-identical** to what the
+//! pre-refactor latency-only code produced. The refactor guarantees this
+//! structurally (the latency arms read the original fields and apply no
+//! arithmetic; objective bytes only enter seeds/hashes for non-default
+//! objectives) — this test is the CI tripwire that keeps it true: it
+//! pins the untagged constructors against their `with_objective(Latency)`
+//! forms across all eight optimizers, the env encoding, and the sweep
+//! grid hash, failing on the first bit of drift.
+
+use dnnfuser::cost::{HwConfig, Objective};
+use dnnfuser::env::{FusionEnv, MAX_RTG};
+use dnnfuser::eval::generalization::GridSpec;
+use dnnfuser::search::{
+    all_baselines, gsampler::GSampler, random::RandomSearch, FusionProblem, Optimizer,
+};
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::{zoo, WorkloadRegistry};
+
+/// Every optimizer, same seed, untagged problem vs explicit
+/// `Objective::Latency`: identical best strategy, identical score bits,
+/// identical budget consumption, identical history checkpoints.
+#[test]
+fn every_optimizer_is_bit_identical_under_explicit_latency() {
+    let w = zoo::vgg16();
+    let legacy = FusionProblem::new(&w, 64, HwConfig::paper(), 20.0);
+    let tagged =
+        FusionProblem::with_objective(&w, 64, HwConfig::paper(), 20.0, Objective::Latency);
+    let mut opts = all_baselines();
+    opts.push(Box::new(GSampler::default()));
+    opts.push(Box::new(RandomSearch));
+    for opt in &opts {
+        let a = opt.run(&legacy, 400, &mut Rng::seed_from_u64(9));
+        let b = opt.run(&tagged, 400, &mut Rng::seed_from_u64(9));
+        assert_eq!(a.best, b.best, "{}: best strategy drifted", opt.name());
+        assert_eq!(
+            a.best_eval.score.to_bits(),
+            b.best_eval.score.to_bits(),
+            "{}: score bits drifted",
+            opt.name()
+        );
+        assert_eq!(a.evals_used, b.evals_used, "{}", opt.name());
+        assert_eq!(a.history.len(), b.history.len(), "{}", opt.name());
+        for (ha, hb) in a.history.iter().zip(&b.history) {
+            assert_eq!(ha.0, hb.0, "{}", opt.name());
+            assert_eq!(ha.1.to_bits(), hb.1.to_bits(), "{}", opt.name());
+        }
+    }
+}
+
+/// The latency condition token is the untagged token bit for bit; the
+/// non-default objectives band-shift by exactly `k·2·MAX_RTG` above it,
+/// so the bands can never overlap the legacy `[0, MAX_RTG]` range.
+#[test]
+fn latency_condition_token_is_the_untagged_token() {
+    for mem in [0.5, 4.0, 14.0, 20.0, 40.0, 512.0, 4096.0] {
+        let env = |obj: Option<Objective>| {
+            let e = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), mem);
+            match obj {
+                Some(o) => e.with_objective(o),
+                None => e,
+            }
+        };
+        let base = env(None).rtg_token();
+        assert_eq!(
+            base.to_bits(),
+            env(Some(Objective::Latency)).rtg_token().to_bits(),
+            "mem {mem}"
+        );
+        assert_eq!(
+            env(Some(Objective::Energy)).rtg_token().to_bits(),
+            (base + 2.0 * MAX_RTG).to_bits(),
+            "mem {mem}"
+        );
+        assert_eq!(
+            env(Some(Objective::Edp)).rtg_token().to_bits(),
+            (base + 4.0 * MAX_RTG).to_bits(),
+            "mem {mem}"
+        );
+    }
+}
+
+/// Decorating a teacher strategy through the untagged env and through the
+/// explicit-latency env yields bit-identical trajectories: states, rtg
+/// tokens, encoded actions, speedup — the whole imitation dataset.
+#[test]
+fn decorated_trajectories_are_bit_identical_under_explicit_latency() {
+    let w = zoo::resnet18();
+    let prob = FusionProblem::new(&w, 64, HwConfig::paper(), 32.0);
+    let r = GSampler::default().run(&prob, 300, &mut Rng::seed_from_u64(4));
+    let legacy = FusionEnv::new(w.clone(), 64, HwConfig::paper(), 32.0);
+    let tagged =
+        FusionEnv::new(w.clone(), 64, HwConfig::paper(), 32.0).with_objective(Objective::Latency);
+    let (a, b) = (legacy.decorate(&r.best), tagged.decorate(&r.best));
+    assert_eq!(a.strategy, b.strategy);
+    assert_eq!(a.actions, b.actions);
+    assert_eq!(a.valid, b.valid);
+    assert_eq!(a.speedup.to_bits(), b.speedup.to_bits());
+    assert_eq!(a.peak_act_bytes, b.peak_act_bytes);
+    assert_eq!(a.objective, Objective::Latency);
+    assert_eq!(b.objective, Objective::Latency);
+    for (sa, sb) in a.states.iter().zip(&b.states) {
+        for (fa, fb) in sa.iter().zip(sb) {
+            assert_eq!(fa.to_bits(), fb.to_bits());
+        }
+    }
+    for (ra, rb) in a.rtg.iter().zip(&b.rtg) {
+        assert_eq!(ra.to_bits(), rb.to_bits());
+    }
+}
+
+/// A grid spec with no `objectives` key and one with an explicit
+/// `["latency"]` are the same spec: equal, same content hash (so every
+/// pre-refactor grid file keeps its derived point seeds), same points.
+#[test]
+fn default_grid_hash_survives_an_explicit_latency_objective() {
+    let grid = |objectives: &str| {
+        GridSpec::from_json(&format!(
+            r#"{{"workloads": ["vgg16"], "batch": 64, "train_mems": [16, 32],
+                 "interpolate": {{"points_per_gap": 1}},
+                 "extrapolate": {{"mems": [40]}},
+                 "search_budget": 60, "seed": 3{objectives}}}"#
+        ))
+        .unwrap()
+    };
+    let implicit = grid("");
+    let explicit = grid(r#", "objectives": ["latency"]"#);
+    assert_eq!(implicit, explicit);
+    assert_eq!(implicit.content_hash(), explicit.content_hash());
+    let reg = WorkloadRegistry::with_zoo();
+    let (pi, pe) = (implicit.points(&reg).unwrap(), explicit.points(&reg).unwrap());
+    assert_eq!(pi.len(), pe.len());
+    for (a, b) in pi.iter().zip(&pe) {
+        assert_eq!(a.workload_name, b.workload_name);
+        assert_eq!(a.mem_mb.to_bits(), b.mem_mb.to_bits());
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.hw_label, b.hw_label);
+        assert_eq!(a.objective, Objective::Latency);
+        assert_eq!(b.objective, Objective::Latency);
+    }
+}
+
+/// Non-default objectives genuinely change the optimum sometimes — the
+/// multi-objective machinery is live, not a relabeled latency path. EDP
+/// scalarization must also differ from latency scalarization on a
+/// strategy whose energy gain and latency gain diverge.
+#[test]
+fn objectives_are_live_not_relabeled_latency() {
+    let w = zoo::vgg16();
+    let lat = FusionProblem::new(&w, 64, HwConfig::paper(), 20.0);
+    let en = FusionProblem::with_objective(&w, 64, HwConfig::paper(), 20.0, Objective::Energy);
+    let s = GSampler::default()
+        .run(&lat, 400, &mut Rng::seed_from_u64(12))
+        .best;
+    let (cl, ce) = (lat.eval_strategy(&s), en.eval_strategy(&s));
+    assert!(cl.score.is_finite() && ce.score.is_finite());
+    assert_ne!(
+        cl.score.to_bits(),
+        ce.score.to_bits(),
+        "energy scalarization identical to latency on {}",
+        s.display()
+    );
+}

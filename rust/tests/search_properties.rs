@@ -4,7 +4,7 @@
 //! and beat the generic baselines on the paper's setup.
 
 use dnnfuser::cost::engine::{reference, BatchEval, StrategyCost};
-use dnnfuser::cost::{CostModel, HwConfig};
+use dnnfuser::cost::{CostModel, HwConfig, Objective};
 use dnnfuser::fusion::{Strategy, SYNC};
 use dnnfuser::search::{
     all_baselines, gsampler::GSampler, random::RandomSearch, FusionProblem, Optimizer,
@@ -171,6 +171,22 @@ fn incremental_eval_matches_full_reeval_on_every_zoo_workload() {
                 assert_eq!(full.peak_mem_bytes, ref_mem, "{}", w.name);
                 assert_eq!(full.peak_act_bytes, ref_act, "{}", w.name);
                 assert_eq!(full.valid, ref_valid, "{}", w.name);
+                // Multi-objective (ISSUE 7): the incremental walk must
+                // agree with the full re-cost on every objective axis —
+                // latency, energy AND the derived EDP — not just on the
+                // latency scalar the pre-refactor engine carried.
+                let (iv, fv) = (inc.cost().cost_vec(), full.cost_vec());
+                assert!(fv.energy_j > 0.0, "{}: energy never zero", w.name);
+                for obj in Objective::ALL {
+                    assert_eq!(
+                        iv.value(obj),
+                        fv.value(obj),
+                        "{}: incremental {} diverged on {}",
+                        w.name,
+                        obj.name(),
+                        mutated.display()
+                    );
+                }
             }
         }
     }

@@ -11,10 +11,14 @@ and writes a machine-readable comparison artifact so a CI run's "what did
 the kernels do to throughput" story is one downloadable JSON instead of
 two files to diff by hand.
 
-This script is *informational* and always exits 0 — enforcement is
-`check_bench_regression.py`'s job. Keeping the two separate means the
-comparison artifact is still produced (and uploaded) on the very run
-where the gate fails, which is exactly when it is most useful.
+This script is *informational* about gate values and never enforces
+thresholds — enforcement is `check_bench_regression.py`'s job. Keeping
+the two separate means the comparison artifact is still produced (and
+uploaded) on the very run where the gate fails, which is exactly when it
+is most useful. Broken *inputs* are a different matter: a missing or
+malformed bench document exits 2 (and an input with no gated metrics at
+all exits 2 as well) instead of printing an empty, green-looking table —
+a silent empty comparison once masked a bench that never ran.
 """
 import argparse
 import json
@@ -28,6 +32,24 @@ def gate_value(raw):
     return raw, "higher"
 
 
+def load_doc(path):
+    """Read a bench JSON document, or None (with a stderr diagnosis) when
+    the file is absent, unreadable, or not a JSON object."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"bench_compare: cannot read {path}: {e}", file=sys.stderr)
+        return None
+    except json.JSONDecodeError as e:
+        print(f"bench_compare: {path} is not valid JSON: {e}", file=sys.stderr)
+        return None
+    if not isinstance(doc, dict):
+        print(f"bench_compare: {path} is not a JSON object", file=sys.stderr)
+        return None
+    return doc
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("measured")
@@ -36,16 +58,26 @@ def main() -> int:
                     help="comparison artifact path (default %(default)s)")
     args = ap.parse_args()
 
-    with open(args.measured) as f:
-        measured_doc = json.load(f)
-    with open(args.baseline) as f:
-        baseline_doc = json.load(f)
+    measured_doc = load_doc(args.measured)
+    baseline_doc = load_doc(args.baseline)
+    if measured_doc is None or baseline_doc is None:
+        return 2
 
     bench = measured_doc.get("bench", "?")
     gates = measured_doc.get("gates", {})
     base_gates = (baseline_doc.get("benches", {})
                   .get(bench, {})
                   .get("gates", baseline_doc.get("gates", {})))
+    if not isinstance(gates, dict) or not isinstance(base_gates, dict):
+        print(f"bench_compare: `gates` must be an object in both inputs "
+              f"({args.measured}: {type(gates).__name__}, "
+              f"{args.baseline}: {type(base_gates).__name__})", file=sys.stderr)
+        return 2
+    if not gates and not base_gates:
+        print(f"bench_compare: no gated metrics for bench {bench!r} in either "
+              f"{args.measured} or {args.baseline} — refusing to emit an "
+              "empty comparison (did the bench actually run?)", file=sys.stderr)
+        return 2
 
     rows = []
     print(f"kernel bench comparison for `{bench}`")

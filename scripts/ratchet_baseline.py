@@ -1,0 +1,145 @@
+#!/usr/bin/env python3
+"""Baseline ratchet: fold a CI run's measured gate values into the
+committed baseline and emit the result as a ready-to-commit artifact.
+
+Usage:
+    python3 scripts/ratchet_baseline.py BENCH_native_infer.json \
+        [BENCH_serve_load.json ...] --baseline BENCH_baseline.json \
+        --out BENCH_baseline_ratcheted.json
+
+For every measured document (matched to its `benches.<bench>` entry by
+the `bench` name, exactly like check_bench_regression.py):
+
+  - a bootstrap gate (null value) is ARMED with the measured value — the
+    dict form keeps its direction/slack, the plain-number form stays a
+    plain number;
+  - an armed gate is TIGHTENED only in the improving direction
+    (higher-is-better: max(baseline, measured); lower-is-better:
+    min(baseline, measured)) — a ratchet never loosens, so committing
+    the artifact can only raise the bar;
+  - a gate missing from the measured doc is left untouched (the
+    regression gate already hard-fails that case; silently dropping it
+    here would launder the miss into a green artifact).
+
+Values are rounded to 4 significant digits before comparison so the
+committed file stays readable and a committed ratchet is not re-ratcheted
+by measurement noise the gate tolerance already absorbs. The output
+preserves everything else in the baseline (comments, benches the run did
+not measure), so `cp BENCH_baseline_ratcheted.json BENCH_baseline.json`
+is the entire arm-the-gates flow described in the baseline's _comment
+blocks. Broken inputs (missing file, malformed JSON, measured doc with
+no bench name or no gates) exit 2 — an empty ratchet artifact must never
+upload green.
+"""
+import argparse
+import json
+import sys
+
+
+def load_doc(path):
+    """Read a bench JSON document, or None (with a stderr diagnosis) when
+    the file is absent, unreadable, or not a JSON object."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        print(f"ratchet_baseline: cannot read {path}: {e}", file=sys.stderr)
+        return None
+    except json.JSONDecodeError as e:
+        print(f"ratchet_baseline: {path} is not valid JSON: {e}", file=sys.stderr)
+        return None
+    if not isinstance(doc, dict):
+        print(f"ratchet_baseline: {path} is not a JSON object", file=sys.stderr)
+        return None
+    return doc
+
+
+def round4(v):
+    """4 significant digits — enough for every gated ratio/throughput."""
+    return float(f"{v:.4g}")
+
+
+def ratchet_gate(raw, got):
+    """(new-gate-entry, change-description-or-None) for one baseline gate
+    entry `raw` given the measured value `got`."""
+    if isinstance(raw, dict):
+        base = raw.get("value")
+        direction = raw.get("direction", "higher")
+    else:
+        base, direction = raw, "higher"
+    got = round4(float(got))
+    if base is None:
+        change = f"armed at {got} ({direction}-is-better)"
+        new_value = got
+    else:
+        better = got > base if direction == "higher" else got < base
+        if not better:
+            return raw, None
+        change = f"tightened {base} -> {got}"
+        new_value = got
+    if isinstance(raw, dict):
+        new = dict(raw)
+        new["value"] = new_value
+        return new, change
+    return new_value, change
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("measured", nargs="+",
+                    help="measured BENCH_*.json documents from this run")
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--out", default="BENCH_baseline_ratcheted.json",
+                    help="ratcheted baseline path (default %(default)s)")
+    args = ap.parse_args()
+
+    baseline = load_doc(args.baseline)
+    if baseline is None:
+        return 2
+    benches = baseline.get("benches")
+    if not isinstance(benches, dict):
+        print(f"ratchet_baseline: {args.baseline} has no `benches` object "
+              "— only the per-bench layout can be ratcheted", file=sys.stderr)
+        return 2
+
+    changes = []
+    for path in args.measured:
+        doc = load_doc(path)
+        if doc is None:
+            return 2
+        bench = doc.get("bench")
+        gates = doc.get("gates")
+        if not isinstance(bench, str) or not isinstance(gates, dict) or not gates:
+            print(f"ratchet_baseline: {path} has no bench name or no gates "
+                  "(did the bench actually run?)", file=sys.stderr)
+            return 2
+        entry = benches.get(bench)
+        if entry is None:
+            # A brand-new bench needs a reviewed baseline entry, not one
+            # synthesized from its own first run (it would gate on itself).
+            print(f"note: {path}: bench {bench!r} has no baseline entry — "
+                  "skipped (add one by hand, null values bootstrap)")
+            continue
+        base_gates = entry.get("gates", {})
+        for key in sorted(base_gates):
+            if key not in gates or gates[key] is None:
+                continue
+            new, change = ratchet_gate(base_gates[key], gates[key])
+            if change is not None:
+                base_gates[key] = new
+                changes.append(f"{bench}.{key}: {change}")
+
+    for line in changes:
+        print(f"  {line}")
+    if not changes:
+        print("no gates armed or tightened — baseline already at/above "
+              "this run's measurements")
+    with open(args.out, "w") as f:
+        json.dump(baseline, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(changes)} change(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
