@@ -16,7 +16,7 @@ use crate::cost::{HwConfig, Objective};
 use crate::env::Trajectory;
 use crate::model::{MapperModel, ModelKind};
 use crate::runtime::{LoadSet, Runtime};
-use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use crate::search::{gsampler::GSampler, optimal::OptimalDp, FusionProblem, Optimizer};
 use crate::trajectory::ReplayBuffer;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
@@ -79,13 +79,52 @@ pub fn teacher_runs_with_objective(
     budget: usize,
     objective: Objective,
 ) -> Vec<(Trajectory, f64)> {
+    teacher_runs_with(jobs, batch, budget, objective, Teacher::GSampler)
+}
+
+/// Which optimizer generates teacher demonstrations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Teacher {
+    /// The paper's stochastic G-Sampler (the default teacher).
+    GSampler,
+    /// The certified-optimal interval DP (`search::optimal`) — slower per
+    /// condition but provably optimal supervision wherever it certifies.
+    Optimal,
+}
+
+impl Teacher {
+    /// Parse a `--teacher` CLI value.
+    pub fn by_name(s: &str) -> Option<Teacher> {
+        match s.to_ascii_lowercase().as_str() {
+            "gsampler" | "g-sampler" => Some(Teacher::GSampler),
+            "optimal" | "optimal-dp" => Some(Teacher::Optimal),
+            _ => None,
+        }
+    }
+}
+
+/// [`teacher_runs_with_objective`] under an explicit [`Teacher`]: the
+/// `collect --teacher optimal` path rides on this to produce
+/// certified-optimal demonstration datasets. The job fan-out, seed
+/// forking and result ordering are identical for every teacher (the DP
+/// ignores its rng; forking keeps dataset layouts comparable).
+pub fn teacher_runs_with(
+    jobs: Vec<(Workload, f64, Rng)>,
+    batch: usize,
+    budget: usize,
+    objective: Objective,
+    teacher: Teacher,
+) -> Vec<(Trajectory, f64)> {
     let boxed: Vec<Box<dyn FnOnce() -> (Trajectory, f64) + Send + 'static>> = jobs
         .into_iter()
         .map(|(w, mem, mut job_rng)| {
             Box::new(move || {
                 let prob =
                     FusionProblem::with_objective(&w, batch, HwConfig::paper(), mem, objective);
-                let r = GSampler::default().run(&prob, budget, &mut job_rng);
+                let r = match teacher {
+                    Teacher::GSampler => GSampler::default().run(&prob, budget, &mut job_rng),
+                    Teacher::Optimal => OptimalDp::default().run(&prob, budget, &mut job_rng),
+                };
                 (prob.env.decorate(&r.best), r.wall_s)
             }) as Box<dyn FnOnce() -> (Trajectory, f64) + Send + 'static>
         })

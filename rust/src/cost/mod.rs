@@ -378,6 +378,18 @@ impl CostModel {
         self.out_b[l]
     }
 
+    /// Per-sample input bytes of layer `l` (1-based) — the head-slot
+    /// memory coefficient in `search::optimal`'s per-group knapsack.
+    pub fn in_bytes_of(&self, l: usize) -> f64 {
+        self.in_b[l]
+    }
+
+    /// MAC count of layer `l` (1-based) — prices the per-slot pipeline
+    /// fill term `mb * macs / peak` in `search::optimal`.
+    pub fn macs_of(&self, l: usize) -> f64 {
+        self.macs[l]
+    }
+
     /// Latency of the ideal no-fusion mapping (the paper's baseline).
     pub fn baseline_latency(&self) -> f64 {
         self.baseline_s

@@ -23,7 +23,15 @@
 //!   means the one-shot mapper beat the 2K-sample search), **feasibility
 //!   rate** (the inferred strategy fits the condition) and
 //!   **inference-vs-search wall-clock speedup** (the paper's 66×-class
-//!   number, per held-out point).
+//!   number, per held-out point);
+//! - every point additionally runs the exact solver
+//!   ([`crate::search::optimal`]) and anchors both the model and the
+//!   reference search to the **certified optimum** (`gap_to_optimal`,
+//!   `search_gap_to_optimal`) — gap-to-search inherits the search's own
+//!   suboptimality; these gates do not. Per-point tractability is
+//!   reported (`optimal_certified`) and an uncertified sweep fails the
+//!   gate through the [`DEGENERATE_GAP`] sentinel instead of passing
+//!   vacuously.
 //!
 //! Per-point error accounting reuses the serving load harness's
 //! [`Outcome`] classification ([`crate::coordinator::loadgen::classify`])
@@ -43,7 +51,7 @@ use crate::coordinator::loadgen::{classify, Outcome};
 use crate::cost::{HwConfig, MB, Objective};
 use crate::model::MapperModel;
 use crate::runtime::Runtime;
-use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use crate::search::{gsampler::GSampler, optimal::OptimalDp, FusionProblem, Optimizer};
 use crate::util::bench::{fnv1a_mix as mix, fnv1a_str as mix_str, FNV_OFFSET};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -612,6 +620,27 @@ pub struct PointResult {
     pub gap: Option<f64>,
     /// Wall-clock speedup of inference over the reference search.
     pub speedup_vs_search: Option<f64>,
+    /// Certified-optimal speedup from `search::optimal` on the same
+    /// condition. `None` when the condition admits no feasible strategy
+    /// at all or the solver's node budget ran out before certifying (the
+    /// point is then *intractable* and excluded from optimal gaps).
+    pub optimal_speedup: Option<f64>,
+    /// Whether the exact solver certified optimality within its node
+    /// budget (per-point tractability indicator).
+    pub optimal_certified: bool,
+    /// Exact-solver wall time (ms).
+    pub optimal_ms: f64,
+    /// DP / branch-and-bound nodes the exact solver explored.
+    pub optimal_nodes: usize,
+    /// `1 − model_speedup / optimal_speedup` — the model's distance from
+    /// the certified optimum, free of the reference search's own
+    /// suboptimality. Same exclusion rules as `gap`, plus `None` when no
+    /// certified feasible optimum exists.
+    pub gap_to_optimal: Option<f64>,
+    /// `1 − search_speedup / optimal_speedup` — how far the budget-boxed
+    /// reference search itself lands from the certified optimum
+    /// (non-negative up to float noise).
+    pub search_gap_to_optimal: Option<f64>,
 }
 
 impl PointResult {
@@ -636,6 +665,12 @@ impl PointResult {
             ("search_evals", Json::num(self.search_evals as f64)),
             ("gap", opt_num(self.gap)),
             ("speedup_vs_search", opt_num(self.speedup_vs_search)),
+            ("optimal_speedup", opt_num(self.optimal_speedup)),
+            ("optimal_certified", Json::Bool(self.optimal_certified)),
+            ("optimal_ms", Json::num(self.optimal_ms)),
+            ("optimal_nodes", Json::num(self.optimal_nodes as f64)),
+            ("gap_to_optimal", opt_num(self.gap_to_optimal)),
+            ("search_gap_to_optimal", opt_num(self.search_gap_to_optimal)),
         ])
     }
 }
@@ -677,6 +712,16 @@ pub struct SweepReport {
     pub mean_infer_ms: f64,
     /// Mean reference-search wall time over all points (ms).
     pub mean_search_ms: f64,
+    /// Fraction of points whose exact solve certified optimality within
+    /// its node budget (the sweep's tractability rate).
+    pub optimal_certified_rate: f64,
+    /// Mean model gap to the certified optimum. Same sentinel contract as
+    /// `mean_gap`: [`DEGENERATE_GAP`] when NO point was comparable, so a
+    /// sweep with zero tractable points *fails* the CI gate.
+    pub mean_gap_to_optimal: f64,
+    /// Mean reference-search gap to the certified optimum (how much
+    /// suboptimality the plain gap-to-search metric was hiding).
+    pub mean_search_gap_to_optimal: f64,
 }
 
 impl SweepReport {
@@ -689,8 +734,19 @@ impl SweepReport {
         let mut ln_speedups: Vec<f64> = Vec::new();
         let mut infer_ms: Vec<f64> = Vec::new();
         let mut search_ms_sum = 0.0;
+        let mut certified = 0usize;
+        let mut gaps_opt: Vec<f64> = Vec::new();
+        let mut gaps_search_opt: Vec<f64> = Vec::new();
         for p in &points {
             search_ms_sum += p.search_ms;
+            if p.optimal_certified {
+                certified += 1;
+            }
+            // The search-vs-optimal gap needs no served inference — the
+            // reference search runs on every point.
+            if let Some(g) = p.search_gap_to_optimal {
+                gaps_search_opt.push(g);
+            }
             if p.outcome != Outcome::Served {
                 continue;
             }
@@ -700,6 +756,9 @@ impl SweepReport {
             }
             if let Some(g) = p.gap {
                 gaps.push(g);
+            }
+            if let Some(g) = p.gap_to_optimal {
+                gaps_opt.push(g);
             }
             if let Some(x) = p.speedup_vs_search {
                 if x > 0.0 {
@@ -739,6 +798,20 @@ impl SweepReport {
         } else {
             search_ms_sum / n_points as f64
         };
+        let optimal_certified_rate = if n_points == 0 {
+            0.0
+        } else {
+            certified as f64 / n_points as f64
+        };
+        let mean_or_sentinel = |v: &[f64]| {
+            if v.is_empty() {
+                DEGENERATE_GAP
+            } else {
+                v.iter().sum::<f64>() / v.len() as f64
+            }
+        };
+        let mean_gap_to_optimal = mean_or_sentinel(&gaps_opt);
+        let mean_search_gap_to_optimal = mean_or_sentinel(&gaps_search_opt);
         SweepReport {
             n_points,
             served,
@@ -750,6 +823,9 @@ impl SweepReport {
             speedup_vs_search_geomean,
             mean_infer_ms,
             mean_search_ms,
+            optimal_certified_rate,
+            mean_gap_to_optimal,
+            mean_search_gap_to_optimal,
             points,
         }
     }
@@ -791,6 +867,12 @@ impl SweepReport {
             ("speedup_vs_search_geomean", geomean),
             ("mean_infer_ms", Json::num(self.mean_infer_ms)),
             ("mean_search_ms", Json::num(self.mean_search_ms)),
+            ("optimal_certified_rate", Json::num(self.optimal_certified_rate)),
+            ("mean_gap_to_optimal", Json::num(self.mean_gap_to_optimal)),
+            (
+                "mean_search_gap_to_optimal",
+                Json::num(self.mean_search_gap_to_optimal),
+            ),
         ])
     }
 
@@ -842,6 +924,16 @@ fn run_point(rt: &Runtime, model: &MapperModel, spec: &GridSpec, p: &GridPoint) 
     let sr = GSampler::default().run(&prob, spec.search_budget, &mut rng);
     let search_ms = t0.elapsed().as_secs_f64() * 1e3;
 
+    // Exact reference (`search::optimal`): certifies the true optimum of
+    // the same condition, so both the model's and the search's quality
+    // can be anchored to it instead of to the search's own suboptimality.
+    // Skipped gaps (uncertified / infeasible condition) surface through
+    // `optimal_certified` and the aggregate sentinel, never silently.
+    let t_opt = Instant::now();
+    let opt = OptimalDp::default().solve(&prob);
+    let optimal_ms = t_opt.elapsed().as_secs_f64() * 1e3;
+    let optimal_speedup = (opt.feasible && opt.certified).then_some(opt.score);
+
     // One-shot inference at the same held-out condition.
     let t1 = Instant::now();
     let inferred = model.infer(rt, &prob.env);
@@ -866,7 +958,18 @@ fn run_point(rt: &Runtime, model: &MapperModel, spec: &GridSpec, p: &GridPoint) 
         search_evals: sr.evals_used,
         gap: None,
         speedup_vs_search: None,
+        optimal_speedup,
+        optimal_certified: opt.certified,
+        optimal_ms,
+        optimal_nodes: opt.explored,
+        gap_to_optimal: None,
+        search_gap_to_optimal: None,
     };
+    if let Some(o) = optimal_speedup {
+        if out.search_valid && o > 0.0 {
+            out.search_gap_to_optimal = Some(1.0 - out.search_speedup / o);
+        }
+    }
     if let Ok(traj) = inferred {
         // Re-cost through the CONDITION's engine, not the training one:
         // the condition defines both the feasibility constraint and the
@@ -884,6 +987,12 @@ fn run_point(rt: &Runtime, model: &MapperModel, spec: &GridSpec, p: &GridPoint) 
         // it would let infeasible decodes *improve* the quality metric.
         if c.valid && out.search_valid && out.search_speedup > 0.0 {
             out.gap = Some(1.0 - speedup / out.search_speedup);
+        }
+        // Same feasible-vs-feasible rule against the certified optimum.
+        if let Some(o) = optimal_speedup {
+            if c.valid && o > 0.0 {
+                out.gap_to_optimal = Some(1.0 - speedup / o);
+            }
         }
         out.speedup_vs_search = Some(search_ms / infer_ms.max(1e-6));
     }
@@ -931,12 +1040,28 @@ pub fn bench_doc(report: &SweepReport, spec: &GridSpec, backend: &str, quick: bo
             "inference_vs_search_speedup".into(),
             Json::num(report.speedup_vs_search_geomean),
         ),
+        // Optimal-anchored gates: model and reference-search distance
+        // from the certified optimum, plus the tractability rate that
+        // keeps "no point certified" from passing vacuously.
+        ("gap_to_optimal".into(), Json::num(report.mean_gap_to_optimal)),
+        (
+            "search_gap_to_optimal".into(),
+            Json::num(report.mean_search_gap_to_optimal),
+        ),
+        (
+            "optimal_certified_rate".into(),
+            Json::num(report.optimal_certified_rate),
+        ),
     ];
     for (obj, r) in report.per_objective() {
         gate_pairs.push((format!("aggregate_gap_{}", obj.name()), Json::num(r.mean_gap)));
         gate_pairs.push((
             format!("feasibility_rate_{}", obj.name()),
             Json::num(r.feasibility_rate),
+        ));
+        gate_pairs.push((
+            format!("gap_to_optimal_{}", obj.name()),
+            Json::num(r.mean_gap_to_optimal),
         ));
     }
     let gates = Json::Obj(gate_pairs.into_iter().collect());
@@ -1199,6 +1324,12 @@ mod tests {
             search_evals: 50,
             gap: feasible.then_some(gap),
             speedup_vs_search: Some(3.0),
+            optimal_speedup: Some(2.0),
+            optimal_certified: true,
+            optimal_ms: 1.0,
+            optimal_nodes: 10,
+            gap_to_optimal: feasible.then_some(1.0 - 1.0 / 2.0),
+            search_gap_to_optimal: Some(1.0 - 1.5 / 2.0),
         };
         let r = SweepReport::from_points(vec![
             mk(Objective::Latency, 0.1, true),
@@ -1227,6 +1358,14 @@ mod tests {
         // Global gates are still present and aggregate all objectives.
         assert!((gate("aggregate_gap") - 0.25).abs() < 1e-12);
         assert!((gate("feasibility_rate") - 2.0 / 3.0).abs() < 1e-12);
+        // Optimal-anchored gates: model gap only over feasible served
+        // points, search gap over all points, tractability over all.
+        assert!((gate("gap_to_optimal") - 0.5).abs() < 1e-12);
+        assert!((gate("search_gap_to_optimal") - 0.25).abs() < 1e-12);
+        assert_eq!(gate("optimal_certified_rate"), 1.0);
+        assert!((gate("gap_to_optimal_latency") - 0.5).abs() < 1e-12);
+        // The infeasible EDP point has no comparable model-vs-optimal gap.
+        assert_eq!(gate("gap_to_optimal_edp"), DEGENERATE_GAP);
     }
 
     #[test]
@@ -1276,12 +1415,23 @@ mod tests {
             search_evals: 50,
             gap: None,
             speedup_vs_search: None,
+            optimal_speedup: None,
+            optimal_certified: false,
+            optimal_ms: 1.0,
+            optimal_nodes: 0,
+            gap_to_optimal: None,
+            search_gap_to_optimal: None,
         };
         let r = SweepReport::from_points(vec![p]);
         assert_eq!(r.served, 0);
         assert_eq!(r.errors, 1);
         assert_eq!(r.mean_gap, DEGENERATE_GAP);
         assert_eq!(r.feasibility_rate, 0.0);
+        // No certified point: every optimal-anchored aggregate reports
+        // the failing sentinel / zero rate, never a vacuous pass.
+        assert_eq!(r.mean_gap_to_optimal, DEGENERATE_GAP);
+        assert_eq!(r.mean_search_gap_to_optimal, DEGENERATE_GAP);
+        assert_eq!(r.optimal_certified_rate, 0.0);
         // The baseline arms the gap gate at 0.85 with 20% tolerance and
         // 0.1 slack → ceiling 1.12; the sentinel must exceed it while a
         // real gap (strictly < 1.0) never can.
@@ -1304,6 +1454,21 @@ mod tests {
         assert_eq!(a.errors, 0);
         assert_eq!(a.feasibility_rate, 1.0);
         assert!(a.mean_gap <= 1.0, "gap {}", a.mean_gap);
+        // vgg16 at these conditions is well inside the DP's tractability
+        // envelope: every point certifies, every gap is real (< 1.0) and
+        // the search can never beat the certified optimum.
+        assert_eq!(a.optimal_certified_rate, 1.0);
+        assert!(a.mean_gap_to_optimal < 1.0, "gap* {}", a.mean_gap_to_optimal);
+        assert!(
+            a.mean_search_gap_to_optimal >= -1e-9,
+            "search beat the certified optimum: {}",
+            a.mean_search_gap_to_optimal
+        );
+        for pt in &a.points {
+            assert!(pt.optimal_certified);
+            let o = pt.optimal_speedup.expect("feasible condition certifies");
+            assert!(o + 1e-9 >= pt.search_speedup, "optimal {o} < search {}", pt.search_speedup);
+        }
         let b = run_sweep(&rt, &model, &reg, &s).unwrap();
         assert_eq!(a.mean_gap, b.mean_gap);
         assert_eq!(a.median_gap, b.median_gap);

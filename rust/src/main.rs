@@ -2,8 +2,10 @@
 //!
 //! Subcommands mirror the paper's workflow (Fig. 3):
 //!
-//! - `collect` — run the G-Sampler teacher over (workload × memory
-//!   condition) and write the demonstration dataset (§4.5.1 steps 1–2);
+//! - `collect` — run the teacher over (workload × memory condition) and
+//!   write the demonstration dataset (§4.5.1 steps 1–2); `--teacher
+//!   optimal` swaps the G-Sampler for the certified-optimal DP so the
+//!   supervision itself is provably optimal;
 //! - `train`   — imitation-learn a sequence model from a dataset
 //!   (§4.5.1 step 3) — natively in-process (`--backend native`,
 //!   artifact-free) or through the AOT `train_step` executable;
@@ -20,7 +22,12 @@
 //!   grid.json` runs the condition-generalization harness instead
 //!   (held-out interpolated/extrapolated budgets + perturbed HW rate
 //!   points, per-point gap-to-search / feasibility / speedup, optional
-//!   `BENCH_generalization.json` output for the CI gate).
+//!   `BENCH_generalization.json` output for the CI gate);
+//! - `optimal` — certified-optimal sweep (`search::optimal`, DESIGN.md
+//!   §14) over the same grid schema: solves every point exactly, asserts
+//!   the optimality invariant against the search backends, and writes
+//!   the gate-carrying `BENCH_optimal.json` report for the CI `optimal`
+//!   job.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -36,14 +43,14 @@ use dnnfuser::eval::generalization::{self, GridSpec};
 use dnnfuser::model::native::NativeConfig;
 use dnnfuser::model::{peek_checkpoint_config, MapperModel, ModelKind};
 use dnnfuser::runtime::{LoadSet, Runtime};
-use dnnfuser::util::bench::{fnv1a_mix, fnv1a_str, meta_json, Table, FNV_OFFSET};
-use dnnfuser::util::json::Json;
 use dnnfuser::search::{
-    a2c::A2c, cma::CmaEs, de::De, gsampler::GSampler, pso::Pso, random::RandomSearch,
-    stdga::StdGa, tbpsa::Tbpsa, FusionProblem, Optimizer,
+    a2c::A2c, cma::CmaEs, de::De, gsampler::GSampler, optimal::OptimalDp, pso::Pso,
+    random::RandomSearch, stdga::StdGa, tbpsa::Tbpsa, FusionProblem, Optimizer,
 };
 use dnnfuser::trajectory::ReplayBuffer;
 use dnnfuser::util::args::Command;
+use dnnfuser::util::bench::{fnv1a_mix, fnv1a_str, meta_json, Table, FNV_OFFSET};
+use dnnfuser::util::json::Json;
 use dnnfuser::util::rng::Rng;
 use dnnfuser::workload::{zoo, WorkloadRegistry};
 
@@ -66,7 +73,8 @@ fn top_usage() -> String {
      infer     map a workload with a trained model\n  \
      search    run a search-based mapper\n  \
      serve     run the mapper service on a synthetic request stream\n  \
-     eval      model vs G-Sampler across a condition grid\n\n\
+     eval      model vs G-Sampler across a condition grid\n  \
+     optimal   certified-optimal sweep + optimality invariant check\n\n\
      run `dnnfuser <command> --help` for options"
         .to_string()
 }
@@ -84,6 +92,7 @@ fn run(args: &[String]) -> Result<()> {
         "search" => cmd_search(rest),
         "serve" => cmd_serve(rest),
         "eval" => cmd_eval(rest),
+        "optimal" => cmd_optimal(rest),
         "--help" | "-h" | "help" => {
             println!("{}", top_usage());
             Ok(())
@@ -207,22 +216,31 @@ fn optimizer_by_name(name: &str) -> Result<Box<dyn Optimizer>> {
         "stdga" => Box::new(StdGa::default()),
         "a2c" => Box::new(A2c::default()),
         "random" => Box::new(RandomSearch),
+        "optimal" | "optimal-dp" => Box::new(OptimalDp::default()),
         other => bail!("unknown algorithm `{other}`"),
     })
 }
 
 fn cmd_collect(raw: &[String]) -> Result<()> {
-    let cmd = Command::new("collect", "generate teacher demonstrations with G-Sampler")
+    let cmd = Command::new("collect", "generate teacher demonstrations")
         .opt("workloads", Some("vgg16,resnet18"), "comma-separated zoo workloads")
         .opt("mems", Some("16,32,48,64"), "memory conditions (MB)")
         .opt("batch", Some("64"), "input batch size")
         .opt("budget", Some("2000"), "teacher sampling budget per search")
         .opt("runs", Some("4"), "teacher searches per condition (paper: 4-10)")
         .opt("objective", Some("latency"), "optimize latency|energy|edp (recorded in demos)")
+        .opt(
+            "teacher",
+            Some("gsampler"),
+            "gsampler (paper teacher) or optimal (certified-optimal DP demonstrations)",
+        )
         .opt("seed", Some("42"), "experiment seed")
         .opt("out", Some("runs/dataset.bin"), "output dataset path");
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let objective = parse_objective(&p)?;
+    let teacher_name = p.req("teacher")?;
+    let teacher = dnnfuser::bench_support::Teacher::by_name(teacher_name)
+        .ok_or_else(|| anyhow!("unknown --teacher `{teacher_name}` (gsampler|optimal)"))?;
     let budget = p.get_usize("budget")?;
     let runs = p.get_usize("runs")?;
     let batch = p.get_usize("batch")?;
@@ -248,7 +266,7 @@ fn cmd_collect(raw: &[String]) -> Result<()> {
     }
     let mut buffer = ReplayBuffer::new(4096);
     for ((wname, mem, run), (traj, wall_s)) in labels.into_iter().zip(
-        dnnfuser::bench_support::teacher_runs_with_objective(jobs, batch, budget, objective),
+        dnnfuser::bench_support::teacher_runs_with(jobs, batch, budget, objective, teacher),
     ) {
         println!(
             "{wname:>14} mem={mem:>5.1}MB run={run} speedup={:.2} act={:.2}MB valid={} ({:.2}s)",
@@ -409,7 +427,7 @@ fn cmd_infer(raw: &[String]) -> Result<()> {
 
 fn cmd_search(raw: &[String]) -> Result<()> {
     let cmd = Command::new("search", "run a search-based mapper")
-        .opt("algo", Some("gsampler"), "gsampler|pso|cma|de|tbpsa|stdga|a2c|random")
+        .opt("algo", Some("gsampler"), "gsampler|pso|cma|de|tbpsa|stdga|a2c|random|optimal")
         .opt("workload", Some("vgg16"), "zoo workload")
         .opt("workload-file", None, "custom workload JSON (overrides --workload)")
         .opt("batch", Some("64"), "input batch size")
@@ -879,6 +897,8 @@ fn cmd_eval_sweep(p: &dnnfuser::util::args::ParsedArgs, grid_path: &str) -> Resu
         "model",
         "search",
         "gap",
+        "optimal",
+        "gap*",
         "infer",
         "search wall",
         "xsearch",
@@ -901,6 +921,8 @@ fn cmd_eval_sweep(p: &dnnfuser::util::args::ParsedArgs, grid_path: &str) -> Resu
                 "N/A".into()
             },
             pt.gap.map_or("-".into(), |g| format!("{g:+.3}")),
+            pt.optimal_speedup.map_or("-".into(), |o| format!("{o:.2}")),
+            pt.gap_to_optimal.map_or("-".into(), |g| format!("{g:+.3}")),
             pt.infer_ms.map_or("-".into(), |ms| format!("{ms:.1} ms")),
             format!("{:.1} ms", pt.search_ms),
             pt.speedup_vs_search.map_or("-".into(), |x| format!("{x:.0}x")),
@@ -919,11 +941,217 @@ fn cmd_eval_sweep(p: &dnnfuser::util::args::ParsedArgs, grid_path: &str) -> Resu
         report.worst_gap,
         report.speedup_vs_search_geomean,
     );
+    println!(
+        "optimal   : certified={:.0}% gap_to_optimal={:+.3} search_gap_to_optimal={:+.3} \
+         (gap* anchors to the certified optimum; gap inherits the search's suboptimality)",
+        100.0 * report.optimal_certified_rate,
+        report.mean_gap_to_optimal,
+        report.mean_search_gap_to_optimal,
+    );
     if let Some(out) = p.get("sweep-out") {
         let doc = generalization::bench_doc(&report, &spec, rt.backend().name(), false);
         std::fs::write(out, doc.to_pretty())
             .with_context(|| format!("writing sweep report {out}"))?;
         println!("wrote sweep report to {out}");
+    }
+    Ok(())
+}
+
+/// `optimal`: certified-optimal sweep over a grid spec — the CI `optimal`
+/// job's entry point (DESIGN.md §14). Solves every grid point exactly via
+/// `search::optimal`, asserts the optimality invariant (no search backend
+/// may beat a certified optimum — a violation is a solver bug, not a
+/// flaky measurement, so it hard-fails), and optionally writes the
+/// gate-carrying `BENCH_optimal.json`-schema report.
+fn cmd_optimal(raw: &[String]) -> Result<()> {
+    let cmd = Command::new("optimal", "certified-optimal sweep + optimality invariant check")
+        .opt(
+            "grid",
+            Some("examples/ci_grid.json"),
+            "grid spec JSON (same schema as eval --sweep)",
+        )
+        .opt(
+            "budget",
+            None,
+            "search budget for the invariant backends (default: the grid's search_budget)",
+        )
+        .opt(
+            "check-invariant",
+            Some("true"),
+            "run every search backend per point and hard-fail if any beats a certified \
+             optimum (true|false; G-Sampler always runs for the gap gates)",
+        )
+        .opt("out", None, "write the gate-carrying report here (BENCH_optimal.json)");
+    let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
+    let spec = GridSpec::from_file(p.req("grid")?)?;
+    let registry = WorkloadRegistry::with_zoo();
+    let check = match p.req("check-invariant")? {
+        "true" => true,
+        "false" => false,
+        other => bail!("--check-invariant must be true|false, got `{other}`"),
+    };
+    let budget = match p.get("budget") {
+        Some(s) => s.parse::<usize>().map_err(|e| anyhow!("bad --budget: {e}"))?,
+        None => spec.search_budget,
+    };
+    let points = spec.points(&registry)?;
+    println!(
+        "optimal sweep: {} grid points, invariant backends {} at budget {budget}…",
+        points.len(),
+        if check { "on" } else { "off (G-Sampler only)" },
+    );
+
+    let mut rng = Rng::seed_from_u64(spec.seed);
+    let mut table = Table::new(&[
+        "workload",
+        "mem (MB)",
+        "kind",
+        "hw",
+        "objective",
+        "optimal",
+        "certified",
+        "nodes",
+        "wall",
+        "gsampler gap",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut violations: Vec<String> = Vec::new();
+    let mut certified = 0usize;
+    let mut invariant_ok = 0usize;
+    let mut gaps: Vec<f64> = Vec::new();
+    let mut per_obj: Vec<Vec<f64>> = vec![Vec::new(); Objective::ALL.len()];
+    for gp in &points {
+        let prob = FusionProblem::with_objective(
+            &gp.workload,
+            spec.batch,
+            gp.hw,
+            gp.mem_mb,
+            gp.objective,
+        );
+        let t0 = std::time::Instant::now();
+        let out = OptimalDp::default().solve(&prob);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        if out.certified {
+            certified += 1;
+        }
+
+        // G-Sampler always runs (it anchors the gap gates); the other
+        // backends join under --check-invariant.
+        let mut backends: Vec<Box<dyn Optimizer>> = vec![Box::new(GSampler::default())];
+        if check {
+            backends.extend(dnnfuser::search::all_baselines());
+            backends.push(Box::new(RandomSearch));
+        }
+        let mut point_ok = true;
+        let mut gs_gap: Option<f64> = None;
+        for (bi, b) in backends.iter().enumerate() {
+            let r = b.run(&prob, budget, &mut rng.fork());
+            if out.certified && out.score < r.best_eval.score - 1e-9 {
+                point_ok = false;
+                violations.push(format!(
+                    "{} mem={}MB hw={} obj={}: {} scored {:.6} above the certified optimum {:.6}",
+                    gp.workload_name,
+                    gp.mem_mb,
+                    gp.hw_label,
+                    gp.objective.name(),
+                    r.algo,
+                    r.best_eval.score,
+                    out.score
+                ));
+            }
+            if bi == 0 && out.feasible && out.certified && r.best_eval.valid && out.score > 0.0 {
+                let g = 1.0 - r.best_eval.score / out.score;
+                gs_gap = Some(g);
+                gaps.push(g);
+                per_obj[gp.objective.index()].push(g);
+            }
+        }
+        if point_ok {
+            invariant_ok += 1;
+        }
+        table.row(&[
+            gp.workload_name.clone(),
+            format!("{:.1}", gp.mem_mb),
+            gp.kind.name().to_string(),
+            gp.hw_label.clone(),
+            gp.objective.name().to_string(),
+            if out.feasible {
+                format!("{:.3}", out.score)
+            } else {
+                "infeasible".into()
+            },
+            out.certified.to_string(),
+            out.explored.to_string(),
+            format!("{wall_ms:.1} ms"),
+            gs_gap.map_or("-".into(), |g| format!("{g:+.4}")),
+        ]);
+        rows.push(Json::obj(vec![
+            ("workload", Json::str(gp.workload_name.clone())),
+            ("mem_mb", Json::num(gp.mem_mb)),
+            ("kind", Json::str(gp.kind.name())),
+            ("hw", Json::str(gp.hw_label.clone())),
+            ("objective", Json::str(gp.objective.name())),
+            (
+                "optimal_speedup",
+                if out.feasible { Json::num(out.score) } else { Json::Null },
+            ),
+            ("feasible", Json::Bool(out.feasible)),
+            ("certified", Json::Bool(out.certified)),
+            ("explored", Json::num(out.explored as f64)),
+            ("pruned", Json::num(out.pruned as f64)),
+            ("wall_ms", Json::num(wall_ms)),
+            ("invariant_ok", Json::Bool(point_ok)),
+            ("gsampler_gap", gs_gap.map_or(Json::Null, Json::num)),
+        ]));
+    }
+    table.print();
+
+    let n = points.len();
+    let mean_or_sentinel = |v: &[f64]| {
+        if v.is_empty() {
+            generalization::DEGENERATE_GAP
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    let certified_rate = certified as f64 / n.max(1) as f64;
+    let invariant_rate = invariant_ok as f64 / n.max(1) as f64;
+    let gap = mean_or_sentinel(&gaps);
+    println!(
+        "aggregates: points={n} certified_rate={certified_rate:.2} \
+         invariant_rate={invariant_rate:.2} gsampler_gap_to_optimal={gap:+.4}"
+    );
+    if let Some(outp) = p.get("out") {
+        let mut gate_pairs: Vec<(String, Json)> = vec![
+            ("invariant_rate".into(), Json::num(invariant_rate)),
+            ("certified_rate".into(), Json::num(certified_rate)),
+            ("gap_to_optimal".into(), Json::num(gap)),
+        ];
+        for obj in Objective::ALL {
+            if points.iter().any(|gp| gp.objective == obj) {
+                gate_pairs.push((
+                    format!("gap_to_optimal_{}", obj.name()),
+                    Json::num(mean_or_sentinel(&per_obj[obj.index()])),
+                ));
+            }
+        }
+        let doc = Json::obj(vec![
+            ("bench", Json::str("optimal")),
+            ("meta", meta_json(spec.content_hash())),
+            ("grid", spec.to_json()),
+            ("points", Json::arr(rows)),
+            ("gates", Json::Obj(gate_pairs.into_iter().collect())),
+        ]);
+        std::fs::write(outp, doc.to_pretty())
+            .with_context(|| format!("writing optimal report {outp}"))?;
+        println!("wrote optimal report to {outp}");
+    }
+    if !violations.is_empty() {
+        bail!(
+            "optimality invariant violated on {} point(s):\n  {}",
+            violations.len(),
+            violations.join("\n  ")
+        );
     }
     Ok(())
 }

@@ -15,6 +15,7 @@ pub mod a2c;
 pub mod cma;
 pub mod de;
 pub mod gsampler;
+pub mod optimal;
 pub mod pso;
 pub mod random;
 pub mod stdga;

@@ -1,0 +1,706 @@
+//! Certified-optimal fusion mapper: interval DP over cut points with a
+//! branch-and-bound inner solver for the micro-batch assignment.
+//!
+//! The fusion map-space factors through its SYNC placement: a strategy is
+//! a decomposition of layers `1..=n` into contiguous groups plus a
+//! micro-batch per slot, and [`crate::cost::engine::CostEngine::group_cost`]
+//! prices each group independently of every other group. That separability
+//! is what "Fast and Fusiest"-style provably-optimal mappers exploit, and
+//! it gives an exact solver in three tiers (DESIGN.md §14):
+//!
+//! 1. **Outer interval DP** — `dp[j]` = best cost of mapping layers
+//!    `1..=j`; the transition tries every feasible last group `(i..=j)`,
+//!    priced in O(1) amortized via the per-pair group table. Group
+//!    feasibility (`min-mem <= buffer`) is monotone in the group's right
+//!    edge, so the table builder prunes whole `(i, j..)` ranges.
+//! 2. **Inner branch-and-bound** — within a multi-layer group the latency
+//!    splits as `roofline(i,j) + sum_g f_g(mb_g)` with
+//!    `f_g(mb) = mb*macs_g/peak + ceil(B/mb)*t_switch`, while group memory
+//!    is linear in the micro-batches. Minimizing latency under the buffer
+//!    is a multiple-choice knapsack: each slot's options are Pareto-pruned
+//!    (keep a larger `mb` only when it strictly lowers `f_g`) and DFS uses
+//!    the admissible bound `current + sum of remaining per-slot minima`.
+//! 3. **Objective closure** — energy is micro-batch independent (it prices
+//!    traffic volumes, not waves), so the energy DP only needs the
+//!    feasibility table. EDP is not additive over groups; the solver runs
+//!    a Pareto-label DP over `(latency, energy)` prefix labels with a
+//!    suffix-minima product bound against a DP-seeded incumbent.
+//!
+//! When no decomposition fits the buffer at all, a minimax DP minimizes
+//! the peak group memory, which is exactly what
+//! [`FusionProblem::scalarize`] maximizes for invalid strategies — so the
+//! returned strategy's score dominates every other optimizer's score
+//! universally, feasible or not.
+//!
+//! Tractability: the solver is exact-polynomial except the inner knapsack.
+//! A global node budget bounds the B&B; on exhaustion the incumbent is
+//! kept and the result is flagged `certified: false` (still feasible and
+//! typically near-optimal, no longer a proof).
+
+use std::time::Instant;
+
+use crate::cost::engine::StrategyCost;
+use crate::cost::Objective;
+use crate::fusion::{Strategy, SYNC};
+use crate::util::rng::Rng;
+
+use super::{FusionProblem, Optimizer, SearchResult};
+
+/// Exact optimal mapper (interval DP + branch-and-bound). The 9th
+/// optimizer behind [`FusionProblem`]: unlike the stochastic lineup it
+/// ignores the seed, and `run`'s budget argument is interpreted as a
+/// *node* budget floor (`node_budget.max(budget)`), not an evaluation
+/// count — the DP prices groups analytically instead of sampling.
+#[derive(Debug, Clone)]
+pub struct OptimalDp {
+    /// Global explored-node ceiling across every inner branch-and-bound
+    /// and EDP label expansion. The default certifies every zoo workload
+    /// with orders of magnitude to spare.
+    pub node_budget: usize,
+}
+
+impl Default for OptimalDp {
+    fn default() -> Self {
+        OptimalDp {
+            node_budget: 5_000_000,
+        }
+    }
+}
+
+/// Outcome of one exact solve, with the certification evidence the
+/// gap-to-optimal harness reports per point.
+#[derive(Debug, Clone)]
+pub struct OptimalOutcome {
+    /// The optimal (or best-found, see `certified`) strategy.
+    pub strategy: Strategy,
+    /// Engine evaluation of `strategy` (the same walk every optimizer's
+    /// result is scored with).
+    pub cost: StrategyCost,
+    /// [`FusionProblem::scalarize`] of `cost`.
+    pub score: f64,
+    /// Whether any decomposition fits the conditioned buffer. When false,
+    /// `strategy` minimizes the peak group memory instead (the invalid
+    /// scalarization's maximizer).
+    pub feasible: bool,
+    /// True when every bound search ran to completion within the node
+    /// budget — the strategy is then provably optimal over the full
+    /// shape-legal map-space for the problem's objective.
+    pub certified: bool,
+    /// Branch-and-bound option nodes + EDP label expansions visited.
+    pub explored: usize,
+    /// Bound/dominance/feasibility prunes taken.
+    pub pruned: usize,
+    /// Wall-clock of the solve.
+    pub wall_s: f64,
+}
+
+/// Per-group entry of the pair table: everything the outer DPs need,
+/// priced once.
+struct GroupEntry {
+    /// Least on-chip memory any micro-batch assignment needs (all-ones).
+    min_mem: f64,
+    /// `min_mem <= buffer` — per-group feasibility is independent of
+    /// every other group.
+    feasible: bool,
+    /// Group energy — micro-batch independent, exact for any assignment.
+    energy: f64,
+    /// Least group latency over feasible assignments (engine-evaluated),
+    /// `f64::INFINITY` when infeasible.
+    min_lat: f64,
+    /// Slot values `i..=j` realizing `min_lat` (SYNC where forced).
+    lat_mbs: Vec<i32>,
+}
+
+impl GroupEntry {
+    fn infeasible() -> GroupEntry {
+        GroupEntry {
+            min_mem: f64::INFINITY,
+            feasible: false,
+            energy: f64::INFINITY,
+            min_lat: f64::INFINITY,
+            lat_mbs: Vec::new(),
+        }
+    }
+}
+
+/// Shared node accounting across every bound search of one solve.
+struct Nodes {
+    explored: usize,
+    pruned: usize,
+    budget: usize,
+    exhausted: bool,
+}
+
+impl Nodes {
+    fn tick(&mut self) -> bool {
+        self.explored += 1;
+        if self.explored > self.budget {
+            self.exhausted = true;
+        }
+        !self.exhausted
+    }
+}
+
+/// One decision slot of the inner knapsack: memory coefficient and the
+/// Pareto frontier of `(mb, f)` options, best `f` first.
+struct KnapSlot {
+    slot: usize,
+    coeff: f64,
+    options: Vec<(i32, f64)>,
+}
+
+impl OptimalDp {
+    /// Solve `p` exactly under its objective. See [`OptimalOutcome`].
+    pub fn solve(&self, p: &FusionProblem) -> OptimalOutcome {
+        self.solve_with_budget(p, self.node_budget)
+    }
+
+    fn solve_with_budget(&self, p: &FusionProblem, node_budget: usize) -> OptimalOutcome {
+        let t0 = Instant::now();
+        let n = p.model.n_layers();
+        let buffer = p.model.hw.buffer_bytes as f64;
+        let mut nodes = Nodes {
+            explored: 0,
+            pruned: 0,
+            budget: node_budget.max(1),
+            exhausted: false,
+        };
+
+        // Pair table over every group (i, j), 1-based inclusive.
+        let table = self.build_table(p, n, buffer, &mut nodes);
+        let at = |i: usize, j: usize| &table[(i - 1) * n + (j - 1)];
+
+        // Outer DP per objective; the cut list reconstructs the strategy.
+        let plan: Option<Vec<(usize, usize)>> = match p.objective {
+            Objective::Latency => dp_additive(n, |i, j| at(i, j).min_lat),
+            Objective::Energy => dp_additive(n, |i, j| feasible_energy(at(i, j))),
+            Objective::Edp => edp_label_dp(n, &at, &mut nodes),
+        };
+
+        let (values, feasible) = match plan {
+            Some(cuts) => (splat(n, &cuts, &at), true),
+            // Nothing fits: minimize the peak group memory instead — the
+            // exact maximizer of the invalid scalarization.
+            None => {
+                let cuts = dp_minimax(n, |i, j| at(i, j).min_mem)
+                    .expect("minimax DP always has a plan");
+                (splat_min_mem(n, &cuts), false)
+            }
+        };
+
+        let strategy = Strategy::new(values);
+        let cost = p.model.cost_of(&strategy);
+        debug_assert_eq!(cost.valid, feasible);
+        OptimalOutcome {
+            score: p.scalarize(&cost),
+            cost,
+            strategy,
+            feasible,
+            certified: !nodes.exhausted,
+            explored: nodes.explored,
+            pruned: nodes.pruned,
+            wall_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Price every group `(i, j)`: probe the engine once for the
+    /// micro-batch independent terms, then bound-search the assignment.
+    fn build_table(
+        &self,
+        p: &FusionProblem,
+        n: usize,
+        buffer: f64,
+        nodes: &mut Nodes,
+    ) -> Vec<GroupEntry> {
+        let engine = p.model.engine();
+        // Scratch strategy: mB_0 = 1 (it only adds first-group memory, so
+        // 1 is optimal), every slot SYNC — per probe we set the group's
+        // interior to the assignment under test.
+        let mut scratch = vec![SYNC; n + 1];
+        scratch[0] = 1;
+
+        let mut table = Vec::with_capacity(n * n);
+        for i in 1..=n {
+            // Pad the row's j < i cells so (i, j) indexing is rectangular.
+            for _ in 0..i - 1 {
+                table.push(GroupEntry::infeasible());
+            }
+            let mut right_infeasible = false;
+            for j in i..=n {
+                // Min-mem probe: all decision slots at 1 (SYNC tail == 1).
+                scratch[i..j].fill(1);
+                scratch[j] = SYNC;
+                let probe = engine.group_cost(&scratch, i, j);
+                let feasible = probe.mem_bytes <= buffer && !right_infeasible;
+                let mut entry = GroupEntry {
+                    min_mem: probe.mem_bytes,
+                    feasible,
+                    energy: probe.energy_j,
+                    min_lat: f64::INFINITY,
+                    lat_mbs: Vec::new(),
+                };
+                if !feasible {
+                    // Min-mem grows with the right edge (weights and
+                    // staged slots only accumulate), so every (i, j' > j)
+                    // is infeasible too: skip their bound searches.
+                    if !right_infeasible {
+                        nodes.pruned += n - j;
+                    }
+                    right_infeasible = true;
+                } else if j == i {
+                    // Single-layer group: latency is micro-batch
+                    // independent (no fill, one invocation) — the probe
+                    // is exact and minimal.
+                    entry.min_lat = probe.latency_s;
+                    entry.lat_mbs = vec![SYNC];
+                } else {
+                    let slack = buffer - probe.mem_bytes;
+                    let assign = self.min_latency_assignment(p, i, j, n, slack, nodes);
+                    scratch[i..=j].copy_from_slice(&assign);
+                    entry.min_lat = engine.group_cost(&scratch, i, j).latency_s;
+                    entry.lat_mbs = assign;
+                }
+                // Restore the scratch to all-SYNC for the next probe.
+                scratch[i..=j].fill(SYNC);
+                table.push(entry);
+            }
+        }
+        table
+    }
+
+    /// Exact min-`sum f_g` assignment for multi-layer group `(i..=j)`
+    /// under the memory slack: multiple-choice knapsack by DFS with
+    /// Pareto frontiers per slot and the per-slot-minima admissible
+    /// bound. Returns the slot values for `i..=j` (tail SYNC if `j < n`).
+    fn min_latency_assignment(
+        &self,
+        p: &FusionProblem,
+        i: usize,
+        j: usize,
+        n: usize,
+        slack: f64,
+        nodes: &mut Nodes,
+    ) -> Vec<i32> {
+        let m = &p.model;
+        let b = m.batch as f64;
+        let peak = m.hw.peak_macs();
+        let t_switch = m.hw.t_switch_s;
+        let f_of = |g: usize, v: i32| -> f64 {
+            v as f64 * m.macs_of(g) / peak + (b / v as f64).ceil() * t_switch
+        };
+
+        // Decision slots: interior slots i..j always; the tail only when
+        // it is the last layer (otherwise SYNC is forced, mb_eff = 1).
+        // Per slot, the Pareto frontier over mb: keep a larger mb only
+        // when its f strictly improves (memory is monotone in mb),
+        // reversed so DFS tries strong (low-f) options first.
+        let mut slots: Vec<KnapSlot> = Vec::new();
+        let mut decision = |g: usize, coeff: f64| {
+            let mut opts: Vec<(i32, f64)> = Vec::new();
+            let mut best = f64::INFINITY;
+            for v in 1..=m.batch as i32 {
+                let f = f_of(g, v);
+                if f < best {
+                    best = f;
+                    opts.push((v, f));
+                }
+            }
+            opts.reverse();
+            slots.push(KnapSlot {
+                slot: g,
+                coeff,
+                options: opts,
+            });
+        };
+        for g in i..j {
+            let head_in = if g == i && i > 1 { m.in_bytes_of(i) } else { 0.0 };
+            decision(g, m.out_bytes_of(g) + head_in);
+        }
+        if j == n {
+            decision(j, m.out_bytes_of(j));
+        }
+        // Big memory coefficients first: infeasible branches die high.
+        slots.sort_by(|a, b| b.coeff.partial_cmp(&a.coeff).unwrap());
+
+        // Admissible bound: sum of per-slot unconstrained minima past t.
+        let k = slots.len();
+        let mut suffix_min = vec![0.0; k + 1];
+        for t in (0..k).rev() {
+            suffix_min[t] = suffix_min[t + 1] + slots[t].options[0].1;
+        }
+
+        // Greedy incumbent: cheapest-f option that still fits.
+        let mut inc_choice = vec![0usize; k];
+        let mut inc_f = 0.0;
+        let mut used = 0.0;
+        for (t, s) in slots.iter().enumerate() {
+            let pick = s
+                .options
+                .iter()
+                .position(|&(v, _)| used + s.coeff * (v - 1) as f64 <= slack)
+                .expect("mb=1 always fits: slack >= 0 by feasibility");
+            inc_choice[t] = pick;
+            used += s.coeff * (s.options[pick].0 - 1) as f64;
+            inc_f += s.options[pick].1;
+        }
+
+        // DFS with the admissible bound.
+        struct Dfs<'a> {
+            slots: &'a [KnapSlot],
+            suffix_min: &'a [f64],
+            slack: f64,
+            best_f: f64,
+            best_choice: Vec<usize>,
+            choice: Vec<usize>,
+        }
+        fn descend(d: &mut Dfs<'_>, t: usize, used: f64, f: f64, nodes: &mut Nodes) {
+            let slots = d.slots;
+            if t == slots.len() {
+                if f < d.best_f {
+                    d.best_f = f;
+                    d.best_choice.copy_from_slice(&d.choice);
+                }
+                return;
+            }
+            let coeff = slots[t].coeff;
+            let tail_min = d.suffix_min[t + 1];
+            for (o, &(v, fv)) in slots[t].options.iter().enumerate() {
+                if !nodes.tick() {
+                    return;
+                }
+                let used_here = used + coeff * (v - 1) as f64;
+                if used_here > d.slack {
+                    // Options are mb-descending: smaller ones may fit.
+                    continue;
+                }
+                if f + fv + tail_min >= d.best_f {
+                    // Options are f-ascending: no later option does
+                    // better than this bound.
+                    nodes.pruned += slots[t].options.len() - o;
+                    return;
+                }
+                d.choice[t] = o;
+                descend(d, t + 1, used_here, f + fv, nodes);
+            }
+        }
+        let mut d = Dfs {
+            slots: &slots,
+            suffix_min: &suffix_min,
+            slack,
+            best_f: inc_f,
+            best_choice: inc_choice,
+            choice: vec![0usize; k],
+        };
+        descend(&mut d, 0, 0.0, 0.0, nodes);
+
+        // Materialize the slot values i..=j.
+        let mut assign = vec![SYNC; j - i + 1];
+        for (t, s) in slots.iter().enumerate() {
+            assign[s.slot - i] = s.options[d.best_choice[t]].0;
+        }
+        assign
+    }
+}
+
+/// Group energy when feasible, else infinity (the energy DP's edge cost).
+fn feasible_energy(e: &GroupEntry) -> f64 {
+    if e.feasible {
+        e.energy
+    } else {
+        f64::INFINITY
+    }
+}
+
+/// Interval DP for an additive per-group cost; returns the optimal cut
+/// list `[(i, j); ...]` or `None` when no feasible decomposition exists.
+fn dp_additive(n: usize, cost: impl Fn(usize, usize) -> f64) -> Option<Vec<(usize, usize)>> {
+    let mut dp = vec![f64::INFINITY; n + 1];
+    let mut arg = vec![0usize; n + 1];
+    dp[0] = 0.0;
+    for j in 1..=n {
+        for i in 1..=j {
+            let c = dp[i - 1] + cost(i, j);
+            if c < dp[j] {
+                dp[j] = c;
+                arg[j] = i;
+            }
+        }
+    }
+    if !dp[n].is_finite() {
+        return None;
+    }
+    Some(backtrack(n, &arg))
+}
+
+/// Minimax variant: minimize the worst per-group value (peak memory).
+/// Always has a plan — singleton groups are within the map-space.
+fn dp_minimax(n: usize, cost: impl Fn(usize, usize) -> f64) -> Option<Vec<(usize, usize)>> {
+    let mut dp = vec![f64::INFINITY; n + 1];
+    let mut arg = vec![0usize; n + 1];
+    dp[0] = 0.0;
+    for j in 1..=n {
+        for i in 1..=j {
+            let c = dp[i - 1].max(cost(i, j));
+            if c < dp[j] {
+                dp[j] = c;
+                arg[j] = i;
+            }
+        }
+    }
+    if !dp[n].is_finite() {
+        return None;
+    }
+    Some(backtrack(n, &arg))
+}
+
+fn backtrack(n: usize, arg: &[usize]) -> Vec<(usize, usize)> {
+    let mut cuts = Vec::new();
+    let mut j = n;
+    while j > 0 {
+        let i = arg[j];
+        cuts.push((i, j));
+        j = i - 1;
+    }
+    cuts.reverse();
+    cuts
+}
+
+/// EDP is `latency * energy` — not additive over groups. Pareto-label DP:
+/// each prefix keeps its non-dominated `(latency, energy)` labels; a
+/// label is expanded with every feasible last group and pruned against
+/// the product bound `(L + minRemLat) * (E + minRemE) >= incumbent`,
+/// where the suffix minima come from backward additive DPs and the
+/// incumbent seeds from the latency- and energy-optimal decompositions.
+fn edp_label_dp<'t>(
+    n: usize,
+    at: &impl Fn(usize, usize) -> &'t GroupEntry,
+    nodes: &mut Nodes,
+) -> Option<Vec<(usize, usize)>> {
+    let lat = |i: usize, j: usize| at(i, j).min_lat;
+    let en = |i: usize, j: usize| feasible_energy(at(i, j));
+
+    // Suffix minima: best additive completion of layers t+1..=n.
+    let mut rem_lat = vec![f64::INFINITY; n + 1];
+    let mut rem_en = vec![f64::INFINITY; n + 1];
+    rem_lat[n] = 0.0;
+    rem_en[n] = 0.0;
+    for t in (0..n).rev() {
+        for j in t + 1..=n {
+            rem_lat[t] = rem_lat[t].min(lat(t + 1, j) + rem_lat[j]);
+            rem_en[t] = rem_en[t].min(en(t + 1, j) + rem_en[j]);
+        }
+    }
+    if !rem_lat[0].is_finite() {
+        return None; // no feasible decomposition at all
+    }
+
+    // Incumbent: the better EDP of the two single-objective optima.
+    let seed_edp = |cuts: &[(usize, usize)]| -> f64 {
+        let (mut l, mut e) = (0.0, 0.0);
+        for &(i, j) in cuts {
+            l += lat(i, j);
+            e += en(i, j);
+        }
+        l * e
+    };
+    let lat_cuts = dp_additive(n, &lat)?;
+    let en_cuts = dp_additive(n, &en)?;
+    let (mut inc_cuts, mut inc_val) = (lat_cuts.clone(), seed_edp(&lat_cuts));
+    let en_val = seed_edp(&en_cuts);
+    if en_val < inc_val {
+        inc_cuts = en_cuts;
+        inc_val = en_val;
+    }
+
+    // Forward label expansion; labels[t] is finalized (Pareto-pruned)
+    // before any later prefix reads it, so parent indexes stay stable.
+    #[derive(Clone)]
+    struct Label {
+        l: f64,
+        e: f64,
+        group: (usize, usize),
+        parent: usize,
+    }
+    let mut labels: Vec<Vec<Label>> = vec![Vec::new(); n + 1];
+    labels[0].push(Label {
+        l: 0.0,
+        e: 0.0,
+        group: (0, 0),
+        parent: 0,
+    });
+    for j in 1..=n {
+        let mut cand: Vec<Label> = Vec::new();
+        for i in 1..=j {
+            if !at(i, j).feasible {
+                continue;
+            }
+            let (gl, ge) = (lat(i, j), en(i, j));
+            for (pi, parent) in labels[i - 1].iter().enumerate() {
+                if !nodes.tick() {
+                    return Some(inc_cuts); // budget out: incumbent stands
+                }
+                let (l, e) = (parent.l + gl, parent.e + ge);
+                if (l + rem_lat[j]) * (e + rem_en[j]) >= inc_val {
+                    nodes.pruned += 1;
+                    continue;
+                }
+                cand.push(Label {
+                    l,
+                    e,
+                    group: (i, j),
+                    parent: pi,
+                });
+            }
+        }
+        // Pareto prune: sort by (l, e); keep strictly-improving energy.
+        cand.sort_by(|a, b| (a.l, a.e).partial_cmp(&(b.l, b.e)).unwrap());
+        let mut kept: Vec<Label> = Vec::new();
+        for c in cand {
+            if kept.last().is_some_and(|k| c.e >= k.e) {
+                nodes.pruned += 1;
+            } else {
+                kept.push(c);
+            }
+        }
+        labels[j] = kept;
+    }
+
+    // Best complete label vs the incumbent.
+    let mut best: Option<(f64, usize)> = None;
+    for (li, lab) in labels[n].iter().enumerate() {
+        let v = lab.l * lab.e;
+        if v < inc_val && v < best.map_or(f64::INFINITY, |(bv, _)| bv) {
+            best = Some((v, li));
+        }
+    }
+    match best {
+        None => Some(inc_cuts),
+        Some((_, mut li)) => {
+            let mut cuts = Vec::new();
+            let mut j = n;
+            while j > 0 {
+                let lab = &labels[j][li];
+                cuts.push(lab.group);
+                li = lab.parent;
+                j = lab.group.0 - 1;
+            }
+            cuts.reverse();
+            Some(cuts)
+        }
+    }
+}
+
+/// Materialize a cut list into slot values using each group's min-latency
+/// assignment (exact for latency/EDP; for energy any feasible assignment
+/// prices identically, and min-lat is feasible by construction).
+fn splat<'t>(
+    n: usize,
+    cuts: &[(usize, usize)],
+    at: &impl Fn(usize, usize) -> &'t GroupEntry,
+) -> Vec<i32> {
+    let mut values = vec![SYNC; n + 1];
+    values[0] = 1;
+    for &(i, j) in cuts {
+        values[i..=j].copy_from_slice(&at(i, j).lat_mbs);
+    }
+    values
+}
+
+/// Min-memory materialization (infeasible fallback): all-ones interiors.
+fn splat_min_mem(n: usize, cuts: &[(usize, usize)]) -> Vec<i32> {
+    let mut values = vec![SYNC; n + 1];
+    values[0] = 1;
+    for &(i, j) in cuts {
+        values[i..j].fill(1);
+        values[j] = SYNC;
+    }
+    values
+}
+
+impl Optimizer for OptimalDp {
+    fn name(&self) -> &'static str {
+        "Optimal-DP"
+    }
+
+    /// `budget` acts as a node-budget floor (the DP does not sample);
+    /// `evals_used` reports explored bound-search nodes. The seed is
+    /// unused — the solve is deterministic.
+    fn run(&self, p: &FusionProblem, budget: usize, _rng: &mut Rng) -> SearchResult {
+        let out = self.solve_with_budget(p, self.node_budget.max(budget));
+        SearchResult {
+            algo: self.name().to_string(),
+            best_eval: p.eval_strategy(&out.strategy),
+            best: out.strategy,
+            evals_used: out.explored.max(1),
+            wall_s: out.wall_s,
+            history: vec![(out.explored.max(1), out.score)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::HwConfig;
+    use crate::workload::zoo;
+
+    fn problem(mem_mb: f64, obj: Objective) -> FusionProblem {
+        FusionProblem::with_objective(&zoo::vgg16(), 64, HwConfig::paper(), mem_mb, obj)
+    }
+
+    #[test]
+    fn solves_feasible_and_certifies() {
+        for obj in Objective::ALL {
+            let p = problem(20.0, obj);
+            let out = OptimalDp::default().solve(&p);
+            assert!(out.feasible, "{obj:?}");
+            assert!(out.certified, "{obj:?}");
+            assert!(out.cost.valid, "{obj:?}");
+            assert!(out.score >= 1.0, "{obj:?}: optimum at least matches no-fusion");
+            out.strategy.check_shape(&zoo::vgg16(), 64).unwrap();
+        }
+    }
+
+    #[test]
+    fn infeasible_condition_minimizes_peak_memory() {
+        // A condition far below the min-condition envelope: nothing fits.
+        let p = problem(0.25, Objective::Latency);
+        let out = OptimalDp::default().solve(&p);
+        assert!(!out.feasible);
+        assert!(!out.cost.valid);
+        assert!(out.certified);
+        // The minimax solution scores at least as well as no-fusion (the
+        // least-memory strategy any optimizer can emit).
+        let nofuse = p.score(&Strategy::no_fusion(p.n_slots - 1));
+        assert!(out.score >= nofuse);
+    }
+
+    #[test]
+    fn node_budget_exhaustion_degrades_gracefully() {
+        let p = problem(20.0, Objective::Latency);
+        let out = OptimalDp { node_budget: 1 }.solve(&p);
+        assert!(!out.certified);
+        assert!(out.feasible);
+        assert!(out.cost.valid, "incumbent still feasible");
+    }
+
+    #[test]
+    fn beats_or_matches_a_dense_stochastic_probe() {
+        // Cheap in-module sanity (the full 8-optimizer invariant lives in
+        // tests/optimal_properties.rs): random shape-legal strategies
+        // never beat the certified optimum.
+        for obj in Objective::ALL {
+            let p = problem(24.0, obj);
+            let out = OptimalDp::default().solve(&p);
+            let mut rng = Rng::seed_from_u64(7);
+            for _ in 0..500 {
+                let x: Vec<f64> = (0..p.n_slots).map(|_| rng.range_f64(-1.2, 1.2)).collect();
+                let s = p.decode(&x);
+                assert!(
+                    out.score >= p.score(&s) - 1e-9,
+                    "{obj:?}: random strategy beat the optimum"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Property tests for the exact solver (`search::optimal`, ISSUE 8):
+//!
+//! 1. **Dominance invariant** — a certified `OptimalDp` score is an upper
+//!    bound on what every search backend can reach, on every zoo workload,
+//!    under all three objectives. This is the same invariant the CI
+//!    `optimal` job asserts over `examples/ci_grid.json`.
+//! 2. **Exactness** — on an engineered 3-layer workload small enough to
+//!    enumerate the whole shape-legal map-space, the DP score equals the
+//!    brute-force optimum for every objective and buffer condition,
+//!    including a fully-infeasible condition (minimax fallback).
+//! 3. **Closed form** — the 3-layer workload is engineered so that at a
+//!    6 MB buffer the only feasible decompositions are no-fusion and
+//!    `[(1,2),(3,3)]`, and fusing (1,2) wins by a hand-computed ~15%
+//!    margin (off-chip saving 16.78 MB·2/bw_off vs. 6 extra PE-array
+//!    switches). The optimal cut set must match exactly.
+
+use dnnfuser::cost::{HwConfig, Objective};
+use dnnfuser::fusion::{Strategy, SYNC};
+use dnnfuser::search::{
+    all_baselines, gsampler::GSampler, optimal::OptimalDp, random::RandomSearch, FusionProblem,
+    Optimizer,
+};
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::{zoo, Layer, Workload};
+
+/// Score tolerance: scores are ratios of sums of f64 terms, so exact
+/// equality is too strict across different summation orders.
+const EPS: f64 = 1e-9;
+
+#[test]
+fn optimal_dominates_every_search_backend_on_zoo() {
+    for w in zoo::all() {
+        for obj in Objective::ALL {
+            let p = FusionProblem::with_objective(&w, 64, HwConfig::paper(), 24.0, obj);
+            let out = OptimalDp::default().solve(&p);
+            assert!(
+                out.certified,
+                "{} [{}]: solver did not certify within its node budget",
+                w.name,
+                obj.name()
+            );
+            // Re-evaluation agrees with the reported score (no stale cost).
+            let re = p.score(&out.strategy);
+            assert!(
+                (re - out.score).abs() <= EPS * out.score.abs().max(1.0),
+                "{} [{}]: reported {} vs recomputed {re}",
+                w.name,
+                obj.name(),
+                out.score
+            );
+
+            let mut opts = all_baselines();
+            opts.push(Box::new(GSampler::default()));
+            opts.push(Box::new(RandomSearch));
+            let mut rng = Rng::seed_from_u64(0x0_0917 ^ w.n_layers() as u64);
+            for opt in &opts {
+                let r = opt.run(&p, 200, &mut rng.fork());
+                assert!(
+                    out.score >= r.best_eval.score - EPS,
+                    "{} [{}]: {} found {} > certified optimum {}",
+                    w.name,
+                    obj.name(),
+                    opt.name(),
+                    r.best_eval.score,
+                    out.score
+                );
+            }
+        }
+    }
+}
+
+/// The engineered 3-layer chain (see module doc). Byte volumes at 2 B per
+/// element:
+///   l1: in 256 KiB, out 2 MiB, w 9216 B,    75.5 MMACs
+///   l2: in 2 MiB,   out 2 MiB, w 73728 B,  604.0 MMACs
+///   l3: in 2 MiB,   out 256 KiB, w 3.06 MiB, 411.0 MMACs
+/// At batch 4 and a 6 MB buffer, (1,2) only fits at mb=1 (4.33 MiB) while
+/// (2,3) needs 7.38 MiB and (1,3) needs 7.64 MiB — so the map space
+/// collapses to no-fusion vs. [(1,2),(3,3)], and the off-chip saving of
+/// fusing (1,2) beats its switch overhead in closed form.
+fn tri() -> Workload {
+    let layer = |name: &str, k: usize, c: usize, y: usize, r: usize, stride: usize| Layer {
+        name: name.into(),
+        k,
+        c,
+        y,
+        x: y,
+        r,
+        s: r,
+        stride,
+        depthwise: false,
+    };
+    let w = Workload {
+        name: "tri3".into(),
+        layers: vec![
+            layer("l1", 64, 8, 128, 3, 1),
+            layer("l2", 64, 64, 128, 3, 1),
+            layer("l3", 512, 64, 16, 7, 8),
+        ],
+    };
+    w.validate().expect("tri3 is a valid chain");
+    w
+}
+
+const TRI_BATCH: usize = 4;
+
+/// Exhaustively score every shape-legal strategy (slot 0 in `1..=B`,
+/// slots 1..=3 in `{SYNC} ∪ 1..=B`): 4·5³ = 500 points. Returns the best
+/// score and the group decompositions of every argmax strategy.
+fn brute_force(p: &FusionProblem) -> (f64, Vec<Vec<(usize, usize)>>) {
+    let b = TRI_BATCH as i32;
+    let mut slot: Vec<i32> = vec![SYNC];
+    slot.extend(1..=b);
+    let mut best = f64::NEG_INFINITY;
+    let mut arg: Vec<Vec<(usize, usize)>> = Vec::new();
+    for mb0 in 1..=b {
+        for &v1 in &slot {
+            for &v2 in &slot {
+                for &v3 in &slot {
+                    let s = Strategy::new(vec![mb0, v1, v2, v3]);
+                    let score = p.score(&s);
+                    if score > best + EPS {
+                        best = score;
+                        arg = vec![s.groups()];
+                    } else if (score - best).abs() <= EPS && !arg.contains(&s.groups()) {
+                        arg.push(s.groups());
+                    }
+                }
+            }
+        }
+    }
+    (best, arg)
+}
+
+#[test]
+fn optimal_matches_brute_force_on_engineered_tri_layer() {
+    let w = tri();
+    // 6 MB: closed-form regime. 2 MB: nothing fits (even the smallest
+    // single-layer group needs 2.26 MB) — exercises the minimax fallback.
+    // 8 MB: (2,3) and (1,3) become feasible at mb=1 — exercises the DP's
+    // choice among all four decompositions.
+    for mem_mb in [6.0, 2.0, 8.0] {
+        for obj in Objective::ALL {
+            let p = FusionProblem::with_objective(&w, TRI_BATCH, HwConfig::paper(), mem_mb, obj);
+            let (best, arg_groups) = brute_force(&p);
+            let out = OptimalDp::default().solve(&p);
+            assert!(out.certified, "tri3@{mem_mb} [{}]", obj.name());
+            assert!(
+                (out.score - best).abs() <= EPS * best.abs().max(1.0),
+                "tri3@{mem_mb} [{}]: DP {} vs brute force {best}",
+                obj.name(),
+                out.score
+            );
+            assert_eq!(
+                out.feasible,
+                best > 0.0,
+                "tri3@{mem_mb} [{}]: feasibility disagrees with brute force",
+                obj.name()
+            );
+            assert!(
+                arg_groups.contains(&out.strategy.groups()),
+                "tri3@{mem_mb} [{}]: DP groups {:?} not among brute-force argmax {arg_groups:?}",
+                obj.name(),
+                out.strategy.groups()
+            );
+        }
+    }
+}
+
+#[test]
+fn closed_form_cut_set_at_six_mb() {
+    let w = tri();
+    let p = FusionProblem::new(&w, TRI_BATCH, HwConfig::paper(), 6.0);
+    let out = OptimalDp::default().solve(&p);
+    assert!(out.certified && out.feasible && out.cost.valid);
+    // The unique optimal decomposition, known in closed form.
+    assert_eq!(out.strategy.groups(), vec![(1, 2), (3, 3)]);
+    // Every brute-force argmax shares it (ties only vary slot values:
+    // mB_0 and the (3,3) tail are latency-neutral under this condition).
+    let (best, arg_groups) = brute_force(&p);
+    assert_eq!(arg_groups, vec![vec![(1, 2), (3, 3)]]);
+    // Fusing (1,2) strictly beats no-fusion...
+    let nofuse = p.score(&Strategy::no_fusion(w.n_layers()));
+    assert!(
+        best > nofuse * 1.05,
+        "fusion gain collapsed: best {best} vs no-fusion {nofuse}"
+    );
+    // ...by the hand-computed margin: baseline 49.273 µs vs 42.956 µs
+    // (off-chip 26.30 MB -> 9.52 MB on the fused pair, +6 switches).
+    assert!(
+        (out.score - 1.1471).abs() < 0.01,
+        "hand-computed speedup drifted: {}",
+        out.score
+    );
+}
+
+#[test]
+fn optimal_is_deterministic_and_counts_work() {
+    let p = FusionProblem::new(&zoo::vgg16(), 64, HwConfig::paper(), 20.0);
+    let a = OptimalDp::default().solve(&p);
+    let b = OptimalDp::default().solve(&p);
+    assert_eq!(a.strategy.values, b.strategy.values);
+    assert_eq!(a.score, b.score);
+    assert_eq!(a.explored, b.explored);
+    assert_eq!(a.pruned, b.pruned);
+    assert!(a.explored > 0, "a non-trivial solve must expand nodes");
+    assert!(a.wall_s >= 0.0);
+    // The Optimizer facade reports the same solution.
+    let r = OptimalDp::default().run(&p, 200, &mut Rng::seed_from_u64(3));
+    assert_eq!(r.best.values, a.strategy.values);
+    assert!((r.best_eval.score - a.score).abs() <= EPS);
+}

@@ -104,7 +104,14 @@ def main() -> int:
         base, direction, slack = gate_spec(raw)
         got = measured.get(key)
         if got is None:
-            failures.append(f"{key}: missing from measured gates")
+            # Name the bench and the key: a missing gate key is how a
+            # silently-dropped metric (e.g. an objective removed from the
+            # sweep) would otherwise slip past CI, so the failure must say
+            # exactly what disappeared and from where.
+            failures.append(
+                f"{key}: missing from measured gates of bench "
+                f"{bench_name or '<unnamed>'!r} — the emitter stopped "
+                "reporting a baselined metric")
             continue
         if base is None:
             print(f"BOOTSTRAP {key}: measured {got:.3f} — commit this into "

@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Self-test for scripts/check_bench_regression.py (stdlib only).
+
+Runs the gate checker as a subprocess against synthetic measured/baseline
+pairs and asserts exit codes and message content for every behaviour the
+CI jobs rely on: pass, higher-direction regression, lower-direction slack,
+missing bench entry, missing gate key (must name the key AND the bench),
+null bootstrap, and the legacy flat-gates layout.
+
+Usage:  python3 scripts/test_check_bench_regression.py
+Exits nonzero on the first failing case.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+CHECKER = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "check_bench_regression.py")
+
+
+def run_case(name, measured, baseline, expect_rc, expect_substrings=()):
+    with tempfile.TemporaryDirectory() as td:
+        mpath = os.path.join(td, "measured.json")
+        bpath = os.path.join(td, "baseline.json")
+        with open(mpath, "w") as f:
+            json.dump(measured, f)
+        with open(bpath, "w") as f:
+            json.dump(baseline, f)
+        proc = subprocess.run(
+            [sys.executable, CHECKER, mpath, bpath],
+            capture_output=True, text=True)
+    output = proc.stdout + proc.stderr
+    if proc.returncode != expect_rc:
+        print(f"FAIL [{name}]: exit {proc.returncode}, expected {expect_rc}\n"
+              f"{output}", file=sys.stderr)
+        return False
+    for sub in expect_substrings:
+        if sub not in output:
+            print(f"FAIL [{name}]: output missing {sub!r}\n{output}",
+                  file=sys.stderr)
+            return False
+    print(f"ok   [{name}]")
+    return True
+
+
+def baseline_for(bench, gates):
+    return {"benches": {bench: {"gates": gates}}}
+
+
+def main() -> int:
+    cases = [
+        # Higher-is-better gate, measured within tolerance: passes.
+        ("pass-higher",
+         {"bench": "b", "gates": {"speedup": 9.0}},
+         baseline_for("b", {"speedup": 10.0}),
+         0, ["perf gate passed"]),
+        # Measured below the 20%-tolerance floor: fails and says so.
+        ("fail-higher-regression",
+         {"bench": "b", "gates": {"speedup": 7.0}},
+         baseline_for("b", {"speedup": 10.0}),
+         1, ["PERF GATE FAILED", "speedup"]),
+        # Lower-is-better gate armed at 0.0: slack is what lets the first
+        # small nonzero sample through.
+        ("pass-lower-with-slack",
+         {"bench": "b", "gates": {"shed": 0.03}},
+         baseline_for("b", {"shed": {"value": 0.0, "direction": "lower",
+                                     "slack": 0.05}}),
+         0, ["perf gate passed"]),
+        ("fail-lower-beyond-slack",
+         {"bench": "b", "gates": {"shed": 0.2}},
+         baseline_for("b", {"shed": {"value": 0.0, "direction": "lower",
+                                     "slack": 0.05}}),
+         1, ["PERF GATE FAILED", "shed"]),
+        # A bench with no baseline entry must hard-fail, not pass with
+        # zero gates.
+        ("fail-missing-bench-entry",
+         {"bench": "brand_new", "gates": {"x": 1.0}},
+         baseline_for("other", {"x": 1.0}),
+         1, ["no gate set", "brand_new"]),
+        # A baselined key the emitter stopped reporting must hard-fail,
+        # and the failure must name both the key and the bench.
+        ("fail-missing-gate-key-names-key-and-bench",
+         {"bench": "generalization", "gates": {"aggregate_gap": 0.4}},
+         baseline_for("generalization",
+                      {"aggregate_gap": {"value": 0.7, "direction": "lower",
+                                         "slack": 0.1},
+                       "gap_to_optimal_edp": {"value": 0.3,
+                                              "direction": "lower",
+                                              "slack": 0.1}}),
+         1, ["PERF GATE FAILED", "gap_to_optimal_edp",
+             "missing from measured gates", "'generalization'"]),
+        # Null gates bootstrap: print the measured value, pass.
+        ("pass-null-bootstrap",
+         {"bench": "b", "gates": {"gap_to_optimal": 0.12}},
+         baseline_for("b", {"gap_to_optimal": {"value": None,
+                                               "direction": "lower",
+                                               "slack": 0.1}}),
+         0, ["BOOTSTRAP gap_to_optimal", "perf gate passed"]),
+        # Legacy flat layout (top-level gates) still honored.
+        ("pass-legacy-flat-layout",
+         {"bench": "anything", "gates": {"speedup": 10.0}},
+         {"gates": {"speedup": 10.0}},
+         0, ["perf gate passed"]),
+        # Extra measured keys are reported but never gate.
+        ("pass-extra-measured-keys-unchecked",
+         {"bench": "b", "gates": {"speedup": 10.0, "new_metric": 1.0}},
+         baseline_for("b", {"speedup": 10.0}),
+         0, ["unchecked", "new_metric", "perf gate passed"]),
+    ]
+    ok = all(run_case(*c) for c in cases)
+    if not ok:
+        return 1
+    print(f"\nall {len(cases)} checker self-test cases passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
