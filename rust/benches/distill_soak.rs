@@ -1,0 +1,197 @@
+//! Online-distillation soak bench → `BENCH_distill_soak.json`.
+//!
+//! Soaks the full self-improving serving loop (DESIGN.md §15) end to
+//! end, artifact-free: a fresh-init tiny native model serves an
+//! open-loop stream while the background trainer distills from the
+//! stream's own search/teacher answers and hot-swaps shadow-gated
+//! candidates into the live slot. The bench measures the two claims the
+//! loop makes:
+//!
+//! - **self-improvement** — the shadow-sweep gap-to-search after the
+//!   soak is *strictly below* where the boot model started
+//!   (`gap_improved`, gated at 1), with ≥1 gated promotion
+//!   (`promotions`);
+//! - **zero downtime** — across every hot-swap the open-loop stream
+//!   loses nothing: `dropped` and `errors` are gated at a hard zero.
+//!
+//! Quick mode for CI: `DNNFUSER_BENCH_QUICK=1`. The regression gate is
+//! `scripts/check_bench_regression.py` against `BENCH_baseline.json`.
+
+use std::time::{Duration, Instant};
+
+use dnnfuser::coordinator::distill::{DistillConfig, SwapGate};
+use dnnfuser::coordinator::loadgen::{self, LoadSpec};
+use dnnfuser::coordinator::service::{BackendChoice, MapperService, ServiceConfig};
+use dnnfuser::eval::generalization::GridSpec;
+use dnnfuser::model::native::NativeConfig;
+use dnnfuser::util::bench::{fnv1a, meta_json};
+use dnnfuser::util::json::Json;
+use dnnfuser::util::pool::ThreadPool;
+
+fn quick_mode() -> bool {
+    std::env::var("DNNFUSER_BENCH_QUICK")
+        .ok()
+        .is_some_and(|v| v != "0" && !v.is_empty())
+}
+
+fn distill_cfg(quick: bool) -> DistillConfig {
+    let mut d = DistillConfig::new(42);
+    d.min_replay = 2;
+    d.train_batch = 4;
+    d.steps_per_round = 8;
+    d.rounds_per_swap = 1;
+    d.research_budget = if quick { 120 } else { 300 };
+    d.research_per_round = 1;
+    d.shadow = GridSpec::shadow_default(if quick { 80 } else { 120 }, 42);
+    d.gate = SwapGate::Shadow;
+    d.round_wait = Duration::from_millis(10);
+    d
+}
+
+fn service(quick: bool) -> MapperService {
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Native;
+    cfg.native_config = Some(NativeConfig::tiny());
+    cfg.workers = 2;
+    cfg.batch_window = Duration::from_millis(2);
+    cfg.distill = Some(distill_cfg(quick));
+    MapperService::spawn(cfg).expect("native distill service spawn")
+}
+
+fn main() {
+    println!("=== online-distillation soak bench ===\n");
+    let quick = quick_mode();
+    let (soak_secs, rps, min_swaps, hard_cap_secs) = if quick {
+        (6.0_f64, 120.0_f64, 1_u64, 90.0_f64)
+    } else {
+        (20.0, 200.0, 3, 240.0)
+    };
+
+    let svc = service(quick);
+    let client = svc.client.clone();
+    let spec = LoadSpec::zoo_mix(9);
+
+    // Soak in waves so swap progress is visible between them; keep
+    // soaking past the nominal duration (up to the hard cap) until the
+    // minimum number of gated promotions has landed — a soak that never
+    // swapped would measure nothing.
+    let t0 = Instant::now();
+    let mut reports: Vec<loadgen::LoadReport> = Vec::new();
+    let mut wave = 0u64;
+    loop {
+        let elapsed = t0.elapsed().as_secs_f64();
+        let swaps = client.metrics().swaps;
+        if (elapsed >= soak_secs && swaps >= min_swaps) || elapsed >= hard_cap_secs {
+            break;
+        }
+        let mut wave_spec = spec.clone();
+        wave_spec.seed = spec.seed.wrapping_add(wave);
+        let r = loadgen::open_loop(&client, &wave_spec, rps, Duration::from_secs_f64(2.0), 256);
+        let m = client.metrics();
+        println!(
+            "    → wave {wave} ({elapsed:.0}s): {} | epoch={} swaps={} rejected={} \
+             steps={} replay={}",
+            r.summary(),
+            m.model_epoch,
+            m.swaps,
+            m.swap_rejected,
+            m.distill_steps,
+            m.replay_len
+        );
+        reports.push(r);
+        wave += 1;
+    }
+
+    let m = client.metrics();
+    svc.shutdown();
+
+    let offered: usize = reports.iter().map(|r| r.offered).sum();
+    let served: usize = reports.iter().map(|r| r.served).sum();
+    let dropped: usize = reports.iter().map(|r| r.dropped).sum();
+    let errors: usize = reports.iter().map(|r| r.errors).sum();
+    let shed: usize = reports.iter().map(|r| r.shed).sum();
+    let queue_full: usize = reports.iter().map(|r| r.queue_full).sum();
+
+    // Strict improvement: the gap after the last promotion must be below
+    // the boot model's gap on the *same* fixed shadow grid. Both sides
+    // come from the trainer's own gate sweeps, so this is the like-for-
+    // like series the gate itself promoted on.
+    let gap_improved = match (m.shadow_gap_start, m.shadow_gap_live) {
+        (Some(start), Some(live)) => f64::from(live < start),
+        _ => 0.0,
+    };
+    println!(
+        "\n    soak total: offered={offered} served={served} dropped={dropped} \
+         errors={errors} | swaps={} rejected={} epoch={} | gap {:?} -> {:?}\n",
+        m.swaps, m.swap_rejected, m.model_epoch, m.shadow_gap_start, m.shadow_gap_live
+    );
+
+    let meta_hash = fnv1a(&[
+        soak_secs.to_bits(),
+        rps.to_bits(),
+        min_swaps,
+        quick as u64,
+    ]);
+    let doc = Json::obj(vec![
+        ("bench", Json::str("distill_soak")),
+        ("meta", meta_json(meta_hash)),
+        ("quick", Json::Bool(quick)),
+        ("threads", Json::num(ThreadPool::shared().size() as f64)),
+        ("soak_secs", Json::num(t0.elapsed().as_secs_f64())),
+        ("offered_rps", Json::num(rps)),
+        ("waves", Json::num(reports.len() as f64)),
+        (
+            "load",
+            Json::obj(vec![
+                ("offered", Json::num(offered as f64)),
+                ("served", Json::num(served as f64)),
+                ("shed", Json::num(shed as f64)),
+                ("queue_full", Json::num(queue_full as f64)),
+                ("dropped", Json::num(dropped as f64)),
+                ("errors", Json::num(errors as f64)),
+            ]),
+        ),
+        (
+            "distill",
+            Json::obj(vec![
+                ("model_epoch", Json::num(m.model_epoch as f64)),
+                ("swaps", Json::num(m.swaps as f64)),
+                ("swap_rejected", Json::num(m.swap_rejected as f64)),
+                ("distill_steps", Json::num(m.distill_steps as f64)),
+                ("distill_research", Json::num(m.distill_research as f64)),
+                ("replay_len", Json::num(m.replay_len as f64)),
+                (
+                    "shadow_gap_start",
+                    m.shadow_gap_start.map_or(Json::Null, Json::num),
+                ),
+                (
+                    "shadow_gap_live",
+                    m.shadow_gap_live.map_or(Json::Null, Json::num),
+                ),
+            ]),
+        ),
+        (
+            "gates",
+            Json::obj(vec![
+                // ≥1 gated promotion must land during the soak.
+                ("promotions", Json::num(m.swaps as f64)),
+                // Zero-downtime: nothing lost across the swaps (hard
+                // zeros in the baseline).
+                ("dropped", Json::num(dropped as f64)),
+                ("errors", Json::num(errors as f64)),
+                // 1.0 iff the shadow gap ended strictly below its start.
+                ("gap_improved", Json::num(gap_improved)),
+                // Absolute end gap (bootstrap until CI-measured).
+                (
+                    "shadow_gap_end",
+                    m.shadow_gap_live.map_or(Json::Null, Json::num),
+                ),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_distill_soak.json");
+    match std::fs::write(path, doc.to_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -12,6 +12,7 @@
 
 use std::collections::HashMap;
 
+use super::Source;
 use crate::cost::{CostVec, Objective};
 use crate::fusion::Strategy;
 
@@ -84,6 +85,11 @@ pub struct Entry {
     /// Its absolute latency/energy under the keyed condition (what
     /// Pareto aggregation compares across objectives).
     pub cost: CostVec,
+    /// The backend that produced this mapping. Search answers survive a
+    /// model hot-swap (they were never a function of the weights);
+    /// model-produced answers are invalidated on promotion
+    /// ([`MappingCache::invalidate_model_sourced`]).
+    pub source: Source,
 }
 
 /// Bounded map with LRU eviction driven by a logical clock.
@@ -156,6 +162,22 @@ impl MappingCache {
         self.map.insert(key, (entry, self.clock));
     }
 
+    /// Drop every entry whose answer came out of the model
+    /// ([`Source::Native`] / [`Source::Model`]) and return how many were
+    /// dropped. Called by the distillation loop when a new checkpoint is
+    /// promoted: stale-epoch model answers must not outlive the weights
+    /// that produced them, while search-sourced entries (including the
+    /// fallback rescues that fed the trainer) stay valid — they never
+    /// depended on the weights. `Source::Cache` never appears here: the
+    /// cache stores producers, and serving a hit does not re-tag the
+    /// entry.
+    pub fn invalidate_model_sourced(&mut self) -> usize {
+        let before = self.map.len();
+        self.map
+            .retain(|_, (e, _)| !matches!(e.source, Source::Native | Source::Model));
+        before - self.map.len()
+    }
+
     /// Hit rate over all lookups (0.0 before the first lookup).
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
@@ -173,6 +195,10 @@ mod tests {
     use crate::fusion::Strategy;
 
     fn entry(tag: i32) -> Entry {
+        entry_from(tag, Source::Native)
+    }
+
+    fn entry_from(tag: i32, source: Source) -> Entry {
         Entry {
             strategy: Strategy::new(vec![tag, -1]),
             speedup: 1.0,
@@ -182,6 +208,7 @@ mod tests {
                 latency_s: 1.0,
                 energy_j: 1.0,
             },
+            source,
         }
     }
 
@@ -254,6 +281,25 @@ mod tests {
         assert!(c.get(&k2).is_none());
         assert!(c.get(&k3).is_some());
         assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn invalidation_is_source_selective() {
+        let mut c = MappingCache::new(8);
+        let kn = Key::new(1, 0, 1, 1.0);
+        let kp = Key::new(2, 0, 1, 1.0);
+        let ks = Key::new(3, 0, 1, 1.0);
+        c.put(kn.clone(), entry_from(1, Source::Native));
+        c.put(kp.clone(), entry_from(2, Source::Model));
+        c.put(ks.clone(), entry_from(3, Source::Search));
+        assert_eq!(c.invalidate_model_sourced(), 2);
+        assert!(c.get(&kn).is_none());
+        assert!(c.get(&kp).is_none());
+        // The search answer survives: it was never a function of the
+        // swapped-out weights.
+        assert!(c.get(&ks).is_some());
+        // Idempotent once clean.
+        assert_eq!(c.invalidate_model_sourced(), 0);
     }
 
     #[test]

@@ -1,0 +1,916 @@
+//! Online distillation: the serving stack's closed learning loop
+//! (DESIGN.md §15).
+//!
+//! Every [`Source::Search`](super::Source::Search) answer the service
+//! produces is provably-good teacher data (a full G-Sampler search under
+//! the exact condition a client just asked about), and PR 8's
+//! certified-optimal DP can label hot conditions with the true optimum.
+//! The paper trains its mapper once and freezes it; this module instead
+//! keeps training the live model on exactly the traffic distribution it
+//! serves:
+//!
+//! 1. **Capture** — engine workers forward an [`Observation`] for every
+//!    non-rejected request (never blocking: the channel drops on
+//!    overflow). Search-produced answers carry their decoded teacher
+//!    [`Trajectory`]; model answers and cache hits carry condition
+//!    identity only, feeding the hotness ranking.
+//! 2. **Replay** — [`ReplayByCondition`] holds at most one trajectory per
+//!    condition (the cache [`Key`]: registry content hash + hardware hash
+//!    + batch + quantized budget + objective). Re-observed conditions
+//!    *replace* their entry; capacity eviction is oldest-first.
+//! 3. **Re-search** — between train rounds the trainer re-searches the
+//!    hottest conditions it has seen (same seed derivation as the serving
+//!    fallback, so results are exactly what the fallback would have
+//!    served) and feeds the trajectories back into the buffer — so a
+//!    service whose model answers everything still accumulates teachers.
+//! 4. **Train** — incremental [`MapperModel::train_step`] rounds run on
+//!    the trainer thread over immutable buffer snapshots; serving threads
+//!    never block on training.
+//! 5. **Gate + swap** — a candidate snapshot is promoted only if it beats
+//!    the live model on an out-of-band shadow sweep
+//!    ([`run_sweep`] over a fixed [`GridSpec`]); promotion is an
+//!    epoch-tagged atomic handoff through [`LiveModel`] (workers load the
+//!    `Arc` once per batch — no drain, no torn weights, no dropped
+//!    deadlines) and invalidates only model-sourced cache entries.
+//!
+//! The loop is deterministic given its seed and the observation stream:
+//! re-search seeds derive from condition content, training is the
+//! bit-reproducible native path, and the shadow grid is fixed per
+//! service instance.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::cache::{Key, MappingCache};
+use super::metrics::{Metrics, MetricsHub};
+use crate::cost::{HwConfig, Objective};
+use crate::env::Trajectory;
+use crate::eval::generalization::{run_sweep, GridSpec};
+use crate::model::MapperModel;
+use crate::runtime::Runtime;
+use crate::search::{gsampler::GSampler, FusionProblem, Optimizer};
+use crate::trajectory::TokenBatch;
+use crate::util::rng::Rng;
+use crate::workload::{Workload, WorkloadRegistry};
+
+/// Seed salt separating trainer re-searches from serving-path fallback
+/// searches (both derive per-condition seeds with
+/// `service::request_seed`).
+const RESEARCH_SALT: u64 = 0x5EED_D157_111A_7E5C;
+
+/// Rounds a condition must rest after a re-search before it is eligible
+/// again — so one eternally-hot condition cannot starve the rest of the
+/// ranking.
+const RESEARCH_COOLDOWN: u64 = 8;
+
+// ---------------------------------------------------------------------------
+// Live model slot
+
+/// One immutable published model: the weights plus the epoch that
+/// promoted them. Workers hold the `Arc` for the duration of exactly one
+/// batch, so every response of a batch reports the same epoch and decode
+/// never reads half-swapped weights.
+pub struct ModelEpoch {
+    /// 0 for the boot checkpoint; +1 per promotion.
+    pub epoch: u64,
+    /// The published inference model (optimizer state stays with the
+    /// trainer; see [`MapperModel::to_raw_inference`]).
+    pub model: MapperModel,
+}
+
+/// The epoch-tagged atomic model slot shared by every engine worker of a
+/// model-backend service.
+///
+/// Hand-rolled `ArcSwap` on std only: a mutex guarding an
+/// `Arc<ModelEpoch>`. `load` clones the `Arc` under the lock (a refcount
+/// bump, nanoseconds) and `swap` replaces it; readers holding a previous
+/// `Arc` keep decoding the old epoch untouched while new batches pick up
+/// the new one — zero drain, zero torn reads. The lock is held for no
+/// heap work on either side, so workers loading once per *batch* never
+/// contend measurably.
+pub struct LiveModel {
+    slot: Mutex<Option<Arc<ModelEpoch>>>,
+}
+
+impl Default for LiveModel {
+    fn default() -> Self {
+        LiveModel::empty()
+    }
+}
+
+impl LiveModel {
+    /// An unpopulated slot (the service spawns workers before any backend
+    /// has finished loading a model).
+    pub fn empty() -> LiveModel {
+        LiveModel {
+            slot: Mutex::new(None),
+        }
+    }
+
+    /// Publish the boot model at epoch 0. First caller wins: with N
+    /// workers each validating its own copy of the same checkpoint, one
+    /// copy becomes the shared live model and the rest are dropped (a
+    /// params-sized memory saving per extra worker). Returns the live
+    /// published model.
+    pub fn init(&self, model: MapperModel) -> Arc<ModelEpoch> {
+        let mut slot = self.slot.lock().expect("live slot poisoned");
+        if let Some(cur) = slot.as_ref() {
+            return Arc::clone(cur);
+        }
+        let arc = Arc::new(ModelEpoch { epoch: 0, model });
+        *slot = Some(Arc::clone(&arc));
+        arc
+    }
+
+    /// The current live model, or `None` before [`LiveModel::init`].
+    pub fn load(&self) -> Option<Arc<ModelEpoch>> {
+        self.slot.lock().expect("live slot poisoned").as_ref().map(Arc::clone)
+    }
+
+    /// Atomically publish a new model at the next epoch; returns that
+    /// epoch. In-flight batches keep their `Arc` to the previous epoch.
+    pub fn swap(&self, model: MapperModel) -> u64 {
+        let mut slot = self.slot.lock().expect("live slot poisoned");
+        let epoch = slot.as_ref().map(|e| e.epoch + 1).unwrap_or(0);
+        *slot = Some(Arc::new(ModelEpoch { epoch, model }));
+        epoch
+    }
+
+    /// The current epoch (0 when the slot is empty or holds the boot
+    /// model).
+    pub fn epoch(&self) -> u64 {
+        self.slot
+            .lock()
+            .expect("live slot poisoned")
+            .as_ref()
+            .map(|e| e.epoch)
+            .unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observations
+
+/// One served request as seen by the trainer: the condition identity
+/// (everything needed to re-search it later) plus, for search-produced
+/// answers, the decoded teacher trajectory.
+pub struct Observation {
+    /// The condition's cache key — the dedup identity in the replay
+    /// buffer and hotness ranking.
+    pub key: Key,
+    /// The resolved workload (shared with the registry — no copy).
+    pub workload: Arc<Workload>,
+    /// Requested input batch size.
+    pub batch: usize,
+    /// Requested buffer condition (MB), unquantized.
+    pub mem_cond_mb: f64,
+    /// Requested hardware config (buffer-free base; the condition carries
+    /// the budget).
+    pub hw: HwConfig,
+    /// Requested objective.
+    pub objective: Objective,
+    /// The search-produced teacher trajectory, when the answer came from
+    /// the search path (fallback backend or infeasible-answer rescue).
+    /// `None` for model answers and cache hits, which only feed hotness.
+    pub teacher: Option<Trajectory>,
+}
+
+// ---------------------------------------------------------------------------
+// Replay buffer
+
+/// Bounded dedup-by-condition replay buffer.
+///
+/// Unlike [`crate::trajectory::ReplayBuffer`] (a plain ring over
+/// trajectories, used for offline datasets), this buffer holds **at most
+/// one trajectory per condition**: serving the same hot condition a
+/// thousand times must not produce a thousand replay entries that skew
+/// training toward it. Re-observing a condition replaces its entry (the
+/// newest teacher wins) and refreshes its age; when full, inserting a new
+/// condition evicts the oldest (least-recently-refreshed) one.
+pub struct ReplayByCondition {
+    capacity: usize,
+    seq: u64,
+    map: HashMap<Key, (Trajectory, u64)>,
+}
+
+impl ReplayByCondition {
+    /// An empty buffer bounded at `capacity` conditions (floored at 1).
+    pub fn new(capacity: usize) -> ReplayByCondition {
+        ReplayByCondition {
+            capacity: capacity.max(1),
+            seq: 0,
+            map: HashMap::new(),
+        }
+    }
+
+    /// Number of distinct conditions held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether the buffer holds no trajectories.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Insert or replace the trajectory for `key`; returns `true` when an
+    /// existing entry was replaced. Inserting a new condition at capacity
+    /// evicts the oldest entry first.
+    pub fn observe(&mut self, key: Key, traj: Trajectory) -> bool {
+        self.seq += 1;
+        let replaced = self.map.contains_key(&key);
+        if !replaced && self.map.len() >= self.capacity {
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, seq))| *seq)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&victim);
+            }
+        }
+        self.map.insert(key, (traj, self.seq));
+        replaced
+    }
+
+    /// An immutable snapshot of the held trajectories for the trainer,
+    /// ordered oldest-first by refresh age (deterministic regardless of
+    /// hash-map iteration order). The snapshot owns its data: serving and
+    /// further observations never mutate it.
+    pub fn snapshot(&self) -> Vec<Trajectory> {
+        let mut items: Vec<(&u64, &Trajectory)> =
+            self.map.values().map(|(t, seq)| (seq, t)).collect();
+        items.sort_by_key(|(seq, _)| **seq);
+        items.into_iter().map(|(_, t)| t.clone()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Config
+
+/// How a candidate earns promotion into the live slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwapGate {
+    /// Production rule: the candidate must **strictly beat** the live
+    /// model's mean gap-to-search on the configured shadow sweep — ties
+    /// and regressions are rejected (`swap_rejected`), leaving the live
+    /// epoch untouched.
+    Shadow,
+    /// Promote every trained candidate without sweeping. Test/bench-only:
+    /// lets the hot-swap race test force many swaps per second
+    /// deterministically. Never the serve default.
+    AlwaysPromote,
+}
+
+/// Tuning of the distillation loop (see module docs for the loop itself).
+#[derive(Debug, Clone)]
+pub struct DistillConfig {
+    /// Max distinct conditions in the replay buffer.
+    pub replay_capacity: usize,
+    /// Minimum buffered conditions before training starts.
+    pub min_replay: usize,
+    /// Rows per incremental train step.
+    pub train_batch: usize,
+    /// Train steps per trainer round.
+    pub steps_per_round: usize,
+    /// A promotion is attempted every this many rounds (that trained).
+    pub rounds_per_swap: usize,
+    /// G-Sampler budget of each scheduled re-search.
+    pub research_budget: usize,
+    /// Re-searches per round (0 disables scheduled re-search).
+    pub research_per_round: usize,
+    /// The fixed out-of-band shadow grid the gate sweeps.
+    pub shadow: GridSpec,
+    /// The promotion rule.
+    pub gate: SwapGate,
+    /// Base seed: training-batch sampling and re-search seeds derive from
+    /// it.
+    pub seed: u64,
+    /// How long the trainer waits for observations before running a
+    /// round anyway (paces rounds under zero traffic).
+    pub round_wait: Duration,
+}
+
+impl DistillConfig {
+    /// Production-shaped defaults under `seed`: shadow-gated, small
+    /// buffer, one re-search per round.
+    pub fn new(seed: u64) -> DistillConfig {
+        DistillConfig {
+            replay_capacity: 256,
+            min_replay: 2,
+            train_batch: 8,
+            steps_per_round: 16,
+            rounds_per_swap: 2,
+            research_budget: 300,
+            research_per_round: 1,
+            shadow: GridSpec::shadow_default(120, seed),
+            gate: SwapGate::Shadow,
+            seed,
+            round_wait: Duration::from_millis(50),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The trainer
+
+/// A condition the trainer has seen, with everything needed to re-search
+/// it and how hot it is.
+struct Cond {
+    workload: Arc<Workload>,
+    batch: usize,
+    mem_cond_mb: f64,
+    hw: HwConfig,
+    objective: Objective,
+    hits: u64,
+    /// Round of the last scheduled re-search (0 = never).
+    last_research: u64,
+}
+
+/// The distillation trainer: owns the full training state (theta + Adam
+/// moments), the replay buffer, and the promotion gate. Runs on its own
+/// thread in the service ([`run_trainer`]); every public method is also
+/// directly drivable for tests and benches.
+pub struct Distiller {
+    cfg: DistillConfig,
+    rt: Runtime,
+    model: MapperModel,
+    buffer: ReplayByCondition,
+    seen: HashMap<Key, Cond>,
+    live: Arc<LiveModel>,
+    cache: Arc<Mutex<MappingCache>>,
+    registry: Arc<WorkloadRegistry>,
+    hub: Arc<MetricsHub>,
+    rng: Rng,
+    rounds: u64,
+    trained_since_swap: usize,
+    /// Shadow gap of the current live model (computed lazily on the first
+    /// gated promotion attempt, updated on every promotion).
+    live_gap: Option<f64>,
+}
+
+impl Distiller {
+    /// Build a trainer over its own native runtime. `model` is the full
+    /// training state — the boot checkpoint with optimizer moments when
+    /// the service loaded one, or a fresh init bit-identical to the
+    /// workers' boot model otherwise.
+    pub fn new(
+        cfg: DistillConfig,
+        rt: Runtime,
+        model: MapperModel,
+        live: Arc<LiveModel>,
+        cache: Arc<Mutex<MappingCache>>,
+        registry: Arc<WorkloadRegistry>,
+        hub: Arc<MetricsHub>,
+    ) -> Result<Distiller> {
+        if rt.native_engine().is_none() {
+            bail!("online distillation trains through the native backend only");
+        }
+        cfg.shadow.validate().context("distill shadow grid")?;
+        if cfg.train_batch == 0 || cfg.steps_per_round == 0 {
+            bail!("distill: train_batch and steps_per_round must be >= 1");
+        }
+        let rng = Rng::seed_from_u64(cfg.seed);
+        let buffer = ReplayByCondition::new(cfg.replay_capacity);
+        Ok(Distiller {
+            cfg,
+            rt,
+            model,
+            buffer,
+            seen: HashMap::new(),
+            live,
+            cache,
+            registry,
+            hub,
+            rng,
+            rounds: 0,
+            trained_since_swap: 0,
+            live_gap: None,
+        })
+    }
+
+    /// Number of distinct conditions currently buffered.
+    pub fn replay_len(&self) -> usize {
+        self.buffer.len()
+    }
+
+    fn meter<R>(&self, f: impl FnOnce(&mut Metrics) -> R) -> R {
+        f(&mut self.hub.trainer().lock().expect("trainer shard poisoned"))
+    }
+
+    /// Ingest one served-request observation: track condition hotness,
+    /// and (for search answers) buffer the teacher trajectory. Invalid
+    /// teachers are dropped — an infeasible strategy teaches the decode
+    /// nothing a client wants reproduced.
+    pub fn observe(&mut self, obs: Observation) {
+        // Bound the hotness map: evict the coldest condition when a new
+        // one would overflow (deterministic tie-break on key content).
+        let seen_cap = self.cfg.replay_capacity.saturating_mul(4).max(16);
+        if !self.seen.contains_key(&obs.key) && self.seen.len() >= seen_cap {
+            if let Some(victim) = self
+                .seen
+                .iter()
+                .min_by_key(|(k, c)| (c.hits, c.last_research, cond_order(k)))
+                .map(|(k, _)| k.clone())
+            {
+                self.seen.remove(&victim);
+            }
+        }
+        let cond = self.seen.entry(obs.key.clone()).or_insert_with(|| Cond {
+            workload: Arc::clone(&obs.workload),
+            batch: obs.batch,
+            mem_cond_mb: obs.mem_cond_mb,
+            hw: obs.hw,
+            objective: obs.objective,
+            hits: 0,
+            last_research: 0,
+        });
+        cond.hits += 1;
+        if let Some(traj) = obs.teacher {
+            if traj.valid {
+                self.buffer.observe(obs.key, traj);
+                let len = self.buffer.len() as u64;
+                self.meter(|m| m.replay_len = len);
+            }
+        }
+    }
+
+    /// One scheduled re-search: pick the hottest eligible condition, run
+    /// the same G-Sampler the serving fallback would (same per-condition
+    /// seed derivation, salted), and buffer the result. No-op when
+    /// nothing is eligible.
+    pub fn research(&mut self) {
+        let round = self.rounds;
+        let Some(key) = self
+            .seen
+            .iter()
+            .filter(|(_, c)| {
+                c.last_research == 0 || round.saturating_sub(c.last_research) >= RESEARCH_COOLDOWN
+            })
+            .max_by_key(|(k, c)| (c.hits, cond_order(k)))
+            .map(|(k, _)| k.clone())
+        else {
+            return;
+        };
+        let c = self.seen.get_mut(&key).expect("condition vanished");
+        c.last_research = round.max(1);
+        let (w, batch, mem, hw, obj) = (
+            Arc::clone(&c.workload),
+            c.batch,
+            c.mem_cond_mb,
+            c.hw,
+            c.objective,
+        );
+        let prob = FusionProblem::with_objective(&w, batch, hw, mem, obj);
+        let seed = super::service::request_seed(self.cfg.seed ^ RESEARCH_SALT, &key);
+        let mut rng = Rng::seed_from_u64(seed);
+        let r = GSampler::default().run(&prob, self.cfg.research_budget, &mut rng);
+        let traj = prob.env.decorate(&r.best);
+        self.meter(|m| m.distill_research += 1);
+        if traj.valid {
+            self.buffer.observe(key, traj);
+            let len = self.buffer.len() as u64;
+            self.meter(|m| m.replay_len = len);
+        }
+    }
+
+    /// One round of incremental train steps over an immutable buffer
+    /// snapshot. Returns the number of steps run (0 when the buffer is
+    /// below `min_replay`).
+    pub fn train_round(&mut self) -> Result<usize> {
+        if self.buffer.len() < self.cfg.min_replay.max(1) {
+            return Ok(0);
+        }
+        let snap = self.buffer.snapshot();
+        let rows = self.cfg.train_batch;
+        for _ in 0..self.cfg.steps_per_round {
+            let mut tb = TokenBatch::zeros(rows);
+            for row in 0..rows {
+                let i = self.rng.below(snap.len() as u64) as usize;
+                tb.fill_row(row, &snap[i]);
+            }
+            self.model.train_step(&self.rt, &tb)?;
+        }
+        let steps = self.cfg.steps_per_round;
+        self.trained_since_swap += steps;
+        self.meter(|m| m.distill_steps += steps as u64);
+        Ok(steps)
+    }
+
+    /// Gate `candidate` and, if it wins, hot-swap it into the live slot:
+    /// epoch += 1, model-sourced cache entries invalidated, metrics
+    /// updated. Returns whether the candidate was promoted.
+    ///
+    /// The shadow rule is strict: the candidate must *beat* the live
+    /// model's mean gap-to-search on the fixed shadow sweep — a tie is a
+    /// rejection, so churn can never be promoted as progress.
+    pub fn offer(&mut self, candidate: MapperModel) -> Result<bool> {
+        let promoted_gap = match self.cfg.gate {
+            SwapGate::AlwaysPromote => None,
+            SwapGate::Shadow => {
+                let live_gap = match self.live_gap {
+                    Some(g) => g,
+                    None => {
+                        let live = self
+                            .live
+                            .load()
+                            .context("live slot empty — gate before backend init")?;
+                        let r = run_sweep(&self.rt, &live.model, &self.registry, &self.cfg.shadow)?;
+                        self.meter(|m| {
+                            m.shadow_gap_start = Some(r.mean_gap);
+                            m.shadow_gap_live = Some(r.mean_gap);
+                        });
+                        self.live_gap = Some(r.mean_gap);
+                        r.mean_gap
+                    }
+                };
+                let cand = run_sweep(&self.rt, &candidate, &self.registry, &self.cfg.shadow)?;
+                if cand.mean_gap >= live_gap {
+                    self.meter(|m| m.swap_rejected += 1);
+                    return Ok(false);
+                }
+                Some(cand.mean_gap)
+            }
+        };
+        let epoch = self.live.swap(candidate);
+        let invalidated = self
+            .cache
+            .lock()
+            .expect("cache poisoned")
+            .invalidate_model_sourced();
+        if let Some(g) = promoted_gap {
+            self.live_gap = Some(g);
+        }
+        self.meter(|m| {
+            m.swaps += 1;
+            m.model_epoch = epoch;
+            if let Some(g) = promoted_gap {
+                m.shadow_gap_live = Some(g);
+            }
+        });
+        let _ = invalidated;
+        Ok(true)
+    }
+
+    /// Snapshot the training weights as an inference candidate and
+    /// [`Distiller::offer`] it.
+    pub fn try_swap(&mut self) -> Result<bool> {
+        let candidate = MapperModel::from_raw(&self.rt, self.model.to_raw_inference())?;
+        self.trained_since_swap = 0;
+        self.offer(candidate)
+    }
+
+    /// One full trainer round: scheduled re-searches, a train round, and
+    /// (on the configured cadence, when training has progressed since the
+    /// last attempt) a gated promotion attempt. Returns whether a
+    /// promotion happened.
+    pub fn round(&mut self) -> Result<bool> {
+        self.rounds += 1;
+        for _ in 0..self.cfg.research_per_round {
+            self.research();
+        }
+        self.train_round()?;
+        let cadence = self.cfg.rounds_per_swap.max(1) as u64;
+        if self.trained_since_swap > 0 && self.rounds % cadence == 0 {
+            return self.try_swap();
+        }
+        Ok(false)
+    }
+}
+
+/// Deterministic total order over key content, used for tie-breaks where
+/// hash-map iteration order must not leak into behavior.
+fn cond_order(k: &Key) -> (u64, u64, u64, u64, usize) {
+    (k.workload_hash, k.hw_hash, k.batch as u64, k.mem_q, k.objective.index())
+}
+
+/// The trainer thread body: drain observations, run rounds, exit when the
+/// service drops the observation channel (shutdown) or raises `stop`.
+/// Errors are reported and absorbed — a failing train round must degrade
+/// to "no further improvement", never take serving down.
+pub fn run_trainer(mut d: Distiller, rx: Receiver<Observation>, stop: Arc<AtomicBool>) {
+    loop {
+        match rx.recv_timeout(d.cfg.round_wait) {
+            Ok(o) => {
+                d.observe(o);
+                while let Ok(o) = rx.try_recv() {
+                    d.observe(o);
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if let Err(e) = d.round() {
+            eprintln!("distill trainer: round failed: {e:#}");
+            std::thread::sleep(d.cfg.round_wait);
+        }
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostVec;
+    use crate::coordinator::cache::Entry;
+    use crate::coordinator::Source;
+    use crate::env::STATE_DIM;
+    use crate::fusion::Strategy;
+    use crate::model::{native::NativeConfig, MapperModel, ModelKind};
+    use crate::workload::WorkloadSpec;
+
+    fn native_rt() -> Runtime {
+        Runtime::load_native("/nonexistent/artifacts", Some(NativeConfig::tiny())).unwrap()
+    }
+
+    fn traj(tag: u64) -> Trajectory {
+        Trajectory {
+            rtg: vec![0.5; 3],
+            states: vec![[0.0; STATE_DIM]; 3],
+            actions: vec![0.1; 3],
+            strategy: Strategy::new(vec![1, -1]),
+            speedup: tag as f64,
+            peak_act_bytes: tag,
+            valid: true,
+            objective: Objective::Latency,
+        }
+    }
+
+    fn key(tag: u64) -> Key {
+        Key::new(tag, 0, 64, 20.0)
+    }
+
+    // -- Replay buffer property tests (ISSUE 9 satellite 2) ---------------
+
+    #[test]
+    fn replay_eviction_is_oldest_first() {
+        let mut b = ReplayByCondition::new(3);
+        for t in 1..=3 {
+            assert!(!b.observe(key(t), traj(t)));
+        }
+        assert_eq!(b.len(), 3);
+        // Inserting a 4th condition evicts the oldest (k1).
+        b.observe(key(4), traj(4));
+        assert_eq!(b.len(), 3);
+        let held: Vec<u64> = b.snapshot().iter().map(|t| t.peak_act_bytes).collect();
+        assert_eq!(held, vec![2, 3, 4], "oldest-first eviction, age-ordered snapshot");
+    }
+
+    #[test]
+    fn replay_reobservation_replaces_and_refreshes() {
+        let mut b = ReplayByCondition::new(3);
+        b.observe(key(1), traj(1));
+        b.observe(key(2), traj(2));
+        b.observe(key(3), traj(3));
+        // Re-observe k1 with fresher data: replaced, not duplicated...
+        assert!(b.observe(key(1), traj(10)));
+        assert_eq!(b.len(), 3);
+        // ...and refreshed: the next eviction takes k2, not k1.
+        b.observe(key(4), traj(4));
+        let mut held: Vec<u64> = b.snapshot().iter().map(|t| t.peak_act_bytes).collect();
+        held.sort_unstable();
+        assert_eq!(held, vec![3, 4, 10]);
+    }
+
+    #[test]
+    fn replay_dedup_key_includes_objective() {
+        // Same condition under different objectives = different entries
+        // (the key carries the objective, exactly like the cache).
+        let mut b = ReplayByCondition::new(8);
+        let k_lat = Key::for_objective(7, 0, 64, 20.0, Objective::Latency);
+        let k_edp = Key::for_objective(7, 0, 64, 20.0, Objective::Edp);
+        b.observe(k_lat.clone(), traj(1));
+        b.observe(k_edp, traj(2));
+        assert_eq!(b.len(), 2);
+        b.observe(k_lat, traj(3));
+        assert_eq!(b.len(), 2, "re-observation deduped per (condition, objective)");
+    }
+
+    #[test]
+    fn replay_snapshot_is_immutable_while_buffer_evolves() {
+        let mut b = ReplayByCondition::new(4);
+        b.observe(key(1), traj(1));
+        b.observe(key(2), traj(2));
+        let snap = b.snapshot();
+        assert_eq!(snap.len(), 2);
+        // Serving continues: replacements and evictions churn the buffer.
+        b.observe(key(1), traj(100));
+        for t in 3..=9 {
+            b.observe(key(t), traj(t));
+        }
+        // The trainer's snapshot still holds exactly what it captured.
+        let tags: Vec<u64> = snap.iter().map(|t| t.peak_act_bytes).collect();
+        assert_eq!(tags, vec![1, 2]);
+    }
+
+    // -- Live slot ---------------------------------------------------------
+
+    #[test]
+    fn live_slot_init_first_wins_and_swap_increments_epoch() {
+        let rt = native_rt();
+        let slot = LiveModel::empty();
+        assert!(slot.load().is_none());
+        assert_eq!(slot.epoch(), 0);
+        let a = MapperModel::init(&rt, ModelKind::Df, 1).unwrap();
+        let b = MapperModel::init(&rt, ModelKind::Df, 2).unwrap();
+        let b_theta0 = b.theta[0];
+        let published = slot.init(a);
+        assert_eq!(published.epoch, 0);
+        // Second worker's init is a no-op: the first model stays live.
+        let again = slot.init(b);
+        assert_eq!(again.epoch, 0);
+        assert!(Arc::ptr_eq(&published, &slot.load().unwrap()));
+        // A swap publishes epoch 1; holders of the old Arc are untouched.
+        let c = MapperModel::init(&rt, ModelKind::Df, 2).unwrap();
+        assert_eq!(slot.swap(c), 1);
+        assert_eq!(slot.epoch(), 1);
+        assert_eq!(published.epoch, 0, "in-flight batch keeps its epoch");
+        assert_eq!(slot.load().unwrap().model.theta[0], b_theta0);
+    }
+
+    // -- Trainer -----------------------------------------------------------
+
+    type DistillerParts = (Distiller, Arc<LiveModel>, Arc<Mutex<MappingCache>>, Arc<MetricsHub>);
+
+    fn distiller(cfg: DistillConfig, live_seed: i32) -> DistillerParts {
+        let rt = native_rt();
+        let live = Arc::new(LiveModel::empty());
+        live.init(MapperModel::init(&rt, ModelKind::Df, live_seed).unwrap());
+        let cache = Arc::new(Mutex::new(MappingCache::new(64)));
+        let registry = Arc::new(WorkloadRegistry::with_zoo());
+        let hub = Arc::new(MetricsHub::for_workers(1));
+        let model = MapperModel::init(&rt, ModelKind::Df, live_seed).unwrap();
+        let d = Distiller::new(
+            cfg,
+            native_rt(),
+            model,
+            Arc::clone(&live),
+            Arc::clone(&cache),
+            registry,
+            Arc::clone(&hub),
+        )
+        .unwrap();
+        (d, live, cache, hub)
+    }
+
+    fn quick_cfg(gate: SwapGate) -> DistillConfig {
+        DistillConfig {
+            replay_capacity: 16,
+            min_replay: 1,
+            train_batch: 2,
+            steps_per_round: 2,
+            rounds_per_swap: 1,
+            research_budget: 30,
+            research_per_round: 0,
+            shadow: GridSpec::shadow_default(30, 7),
+            gate,
+            seed: 7,
+            round_wait: Duration::from_millis(1),
+        }
+    }
+
+    fn observation(registry: &WorkloadRegistry, teacher: Option<Trajectory>) -> Observation {
+        let (w, hash) = registry.resolve(&WorkloadSpec::named("vgg16")).unwrap();
+        let hw = HwConfig::paper();
+        Observation {
+            key: Key::for_objective(hash, hw.content_hash(), 64, 20.0, Objective::Latency),
+            workload: w,
+            batch: 64,
+            mem_cond_mb: 20.0,
+            hw,
+            objective: Objective::Latency,
+            teacher,
+        }
+    }
+
+    #[test]
+    fn invalid_teachers_are_not_buffered() {
+        let (mut d, _, _, _) = distiller(quick_cfg(SwapGate::AlwaysPromote), 1);
+        let registry = WorkloadRegistry::with_zoo();
+        let mut bad = traj(1);
+        bad.valid = false;
+        d.observe(observation(&registry, Some(bad)));
+        assert_eq!(d.replay_len(), 0);
+        d.observe(observation(&registry, Some(traj(1))));
+        assert_eq!(d.replay_len(), 1);
+    }
+
+    #[test]
+    fn promotion_bumps_epoch_and_invalidates_model_sourced_cache_only() {
+        let (mut d, live, cache, hub) = distiller(quick_cfg(SwapGate::AlwaysPromote), 1);
+        let registry = WorkloadRegistry::with_zoo();
+        d.observe(observation(&registry, Some(traj(3))));
+        // Pre-load the cache with one model answer and one search answer.
+        let entry = |source| Entry {
+            strategy: Strategy::new(vec![1, -1]),
+            speedup: 1.0,
+            act_usage_mb: 1.0,
+            valid: true,
+            cost: CostVec { latency_s: 1.0, energy_j: 1.0 },
+            source,
+        };
+        cache.lock().unwrap().put(key(1), entry(Source::Native));
+        cache.lock().unwrap().put(key(2), entry(Source::Search));
+        assert!(d.round().unwrap(), "AlwaysPromote round with replay data promotes");
+        assert_eq!(live.epoch(), 1);
+        let mut c = cache.lock().unwrap();
+        assert!(c.get(&key(1)).is_none(), "model-sourced entry invalidated");
+        assert!(c.get(&key(2)).is_some(), "search-sourced entry survives");
+        drop(c);
+        let snap = hub.snapshot();
+        assert_eq!(snap.swaps, 1);
+        assert_eq!(snap.model_epoch, 1);
+        assert!(snap.distill_steps >= 2, "{}", snap.distill_steps);
+        assert_eq!(snap.replay_len, 1);
+    }
+
+    #[test]
+    fn research_feeds_buffer_for_hot_conditions() {
+        let mut cfg = quick_cfg(SwapGate::AlwaysPromote);
+        cfg.research_per_round = 1;
+        cfg.min_replay = 1;
+        let (mut d, _, _, hub) = distiller(cfg, 1);
+        let registry = WorkloadRegistry::with_zoo();
+        // Only hotness observations (cache hits / model answers) — no
+        // teacher. A scheduled re-search must produce one.
+        d.observe(observation(&registry, None));
+        d.observe(observation(&registry, None));
+        assert_eq!(d.replay_len(), 0);
+        d.research();
+        assert_eq!(d.replay_len(), 1, "re-search produced a teacher trajectory");
+        assert_eq!(hub.snapshot().distill_research, 1);
+    }
+
+    // -- Shadow gate regression (ISSUE 9 satellite 3) ----------------------
+
+    #[test]
+    fn shadow_gate_rejects_non_improving_candidates_all_objectives() {
+        for &objective in Objective::ALL.iter() {
+            let mut cfg = quick_cfg(SwapGate::Shadow);
+            // One small workload, one held-out point, per-objective grid —
+            // keeps the two sweeps per gate call fast.
+            cfg.shadow = GridSpec {
+                workloads: vec!["mobilenet_v2".into()],
+                batch: 64,
+                train_mems: vec![16.0, 32.0],
+                interpolate_per_gap: 1,
+                extrapolate_mems: Vec::new(),
+                hw_perturbs: Vec::new(),
+                search_budget: 30,
+                seed: 11,
+                objectives: vec![objective],
+            };
+            let (mut d, live, _, hub) = distiller(cfg, 3);
+            let rt = native_rt();
+            // A zeroed-out candidate decodes a constant policy — it cannot
+            // strictly beat the live model (at best it ties; a tie is a
+            // rejection by the strict gate rule).
+            let mut broken = MapperModel::init(&rt, ModelKind::Df, 3).unwrap();
+            for w in broken.theta.iter_mut() {
+                *w = 0.0;
+            }
+            let promoted = d.offer(broken).unwrap();
+            assert!(!promoted, "non-improving candidate promoted under {objective:?}");
+            assert_eq!(live.epoch(), 0, "live epoch changed under {objective:?}");
+            let snap = hub.snapshot();
+            assert_eq!(snap.swap_rejected, 1, "objective {objective:?}");
+            assert_eq!(snap.swaps, 0, "objective {objective:?}");
+            assert!(snap.shadow_gap_start.is_some(), "gate recorded the live gap");
+        }
+    }
+
+    #[test]
+    fn shadow_gate_rejects_identical_candidate_tie() {
+        // The strict rule pinned exactly: a candidate with the live
+        // model's own weights sweeps to the identical gap and must be
+        // rejected, not promoted as fake progress.
+        let mut cfg = quick_cfg(SwapGate::Shadow);
+        cfg.shadow = GridSpec {
+            workloads: vec!["mobilenet_v2".into()],
+            batch: 64,
+            train_mems: vec![16.0, 32.0],
+            interpolate_per_gap: 1,
+            extrapolate_mems: Vec::new(),
+            hw_perturbs: Vec::new(),
+            search_budget: 30,
+            seed: 11,
+            objectives: vec![Objective::Latency],
+        };
+        let (mut d, live, _, hub) = distiller(cfg, 5);
+        let rt = native_rt();
+        let twin = MapperModel::init(&rt, ModelKind::Df, 5).unwrap();
+        assert!(!d.offer(twin).unwrap());
+        assert_eq!(live.epoch(), 0);
+        assert_eq!(hub.snapshot().swap_rejected, 1);
+    }
+}

@@ -28,7 +28,15 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::service::{MapperClient, ERR_DEADLINE, ERR_QUEUE_FULL};
-use super::MapRequest;
+use super::{MapRequest, MapResponse};
+
+/// Per-reply hook for the open-loop generator: sender threads call it
+/// with every reply (served or failed) as it arrives, before
+/// aggregation. The distillation race test uses it to audit each
+/// response's source / epoch / batch-id coherence while swaps are in
+/// flight; keep implementations cheap — the hook runs on the reply
+/// path and slow observers would smear the measured latencies.
+pub type ReplyObserver = Arc<dyn Fn(&anyhow::Result<MapResponse>) + Send + Sync>;
 
 /// The request mix one load run draws from.
 #[derive(Debug, Clone)]
@@ -335,6 +343,21 @@ pub fn open_loop(
     duration: Duration,
     max_inflight: usize,
 ) -> LoadReport {
+    open_loop_observed(client, spec, rps, duration, max_inflight, None)
+}
+
+/// [`open_loop`] with an optional per-reply [`ReplyObserver`]. The
+/// observer sees exactly the replies the report aggregates (generator
+/// drops never reach it — those requests were never offered to the
+/// service, so there is no reply to observe).
+pub fn open_loop_observed(
+    client: &MapperClient,
+    spec: &LoadSpec,
+    rps: f64,
+    duration: Duration,
+    max_inflight: usize,
+    observer: Option<ReplyObserver>,
+) -> LoadReport {
     let rps = rps.max(0.1);
     let max_inflight = max_inflight.max(1);
     let total = ((rps * duration.as_secs_f64()).round() as usize).max(1);
@@ -367,6 +390,7 @@ pub fn open_loop(
             let inflight = Arc::clone(&inflight);
             let res_tx = res_tx.clone();
             let ticket_rx = Arc::clone(&ticket_rx);
+            let observer = observer.clone();
             senders.push(std::thread::spawn(move || {
                 loop {
                     let ticket = {
@@ -376,6 +400,9 @@ pub fn open_loop(
                     let Ok((scheduled, req)) = ticket else { return };
                     let result = client.map(req);
                     let ms = scheduled.elapsed().as_secs_f64() * 1e3;
+                    if let Some(obs) = &observer {
+                        obs(&result);
+                    }
                     let (o, err) = classify(&result);
                     let _ = res_tx.send((o, ms, err));
                     inflight.fetch_sub(1, Ordering::AcqRel);

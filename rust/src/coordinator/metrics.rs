@@ -187,6 +187,34 @@ pub struct Metrics {
     /// GEMM (denominator of the efficiency ratio). Workers set it from
     /// the backend's effective max batch; merged by max, not sum.
     pub gemm_max_batch: usize,
+    /// Candidate checkpoints the distillation trainer promoted into the
+    /// live slot (each one is a zero-downtime hot-swap).
+    pub swaps: u64,
+    /// Candidate checkpoints the shadow gate rejected (the live epoch was
+    /// left untouched).
+    pub swap_rejected: u64,
+    /// Incremental train steps the background trainer has run.
+    pub distill_steps: u64,
+    /// Trainer-scheduled re-searches of cache-hot conditions (each one
+    /// refreshes a teacher trajectory in the replay buffer).
+    pub distill_research: u64,
+    /// Distinct conditions currently held in the distillation replay
+    /// buffer. Gauge, not a counter: only the trainer shard writes it, and
+    /// merging takes the max so the snapshot reports the trainer's value.
+    pub replay_len: u64,
+    /// Epoch of the live model (0 = the checkpoint the service booted
+    /// with; each promotion increments it). Written by the trainer on
+    /// swap and by workers per batch; epochs are monotonic, so merging by
+    /// max reports the newest epoch any thread has observed.
+    pub model_epoch: u64,
+    /// Shadow-sweep mean gap-to-search of the model the service booted
+    /// with — the fixed start of the gap trend. Set once by the trainer;
+    /// merged by first-set (every other shard leaves it `None`).
+    pub shadow_gap_start: Option<f64>,
+    /// Shadow-sweep mean gap-to-search of the current live model — the
+    /// moving end of the gap trend. Trainer-owned gauge, merged like
+    /// [`Metrics::shadow_gap_start`].
+    pub shadow_gap_live: Option<f64>,
 }
 
 impl Metrics {
@@ -335,6 +363,20 @@ impl Metrics {
         // Every worker of one service reports the same effective max
         // batch, so max (not sum) keeps the merged denominator honest.
         self.gemm_max_batch = self.gemm_max_batch.max(o.gemm_max_batch);
+        self.swaps += o.swaps;
+        self.swap_rejected += o.swap_rejected;
+        self.distill_steps += o.distill_steps;
+        self.distill_research += o.distill_research;
+        // Gauges: replay length is trainer-owned (max picks it out of the
+        // zeroed shards); the epoch is monotonic, so max is "newest seen".
+        self.replay_len = self.replay_len.max(o.replay_len);
+        self.model_epoch = self.model_epoch.max(o.model_epoch);
+        if self.shadow_gap_start.is_none() {
+            self.shadow_gap_start = o.shadow_gap_start;
+        }
+        if self.shadow_gap_live.is_none() {
+            self.shadow_gap_live = o.shadow_gap_live;
+        }
     }
 
     /// One printable summary line (counters, hit rate, percentiles, and
@@ -382,6 +424,20 @@ impl Metrics {
                 e, self.gemm_calls
             ));
         }
+        if self.model_epoch > 0 || self.distill_steps > 0 || self.swaps + self.swap_rejected > 0 {
+            s.push_str(&format!(
+                " | distill: epoch={} swaps={} rejected={} steps={} replay={} research={}",
+                self.model_epoch,
+                self.swaps,
+                self.swap_rejected,
+                self.distill_steps,
+                self.replay_len,
+                self.distill_research,
+            ));
+            if let (Some(g0), Some(g)) = (self.shadow_gap_start, self.shadow_gap_live) {
+                s.push_str(&format!(" gap_to_search {g0:.4}->{g:.4}"));
+            }
+        }
         s
     }
 }
@@ -408,17 +464,29 @@ impl MetricsHub {
     /// First engine-worker shard; worker `i` owns `WORKER0 + i`.
     pub const WORKER0: usize = 2;
 
-    /// A hub with shards for admission, dispatch, and `workers` workers.
+    /// A hub with shards for admission, dispatch, `workers` workers, and
+    /// the distillation trainer (the trailing shard — see
+    /// [`MetricsHub::trainer`]). The trainer shard exists even when
+    /// distillation is off: it stays zeroed, merges as a no-op, and keeps
+    /// shard indexing independent of the serve configuration.
     pub fn for_workers(workers: usize) -> MetricsHub {
-        let n = Self::WORKER0 + workers.max(1);
+        let n = Self::WORKER0 + workers.max(1) + 1;
         MetricsHub {
             shards: (0..n).map(|_| Mutex::new(Metrics::default())).collect(),
         }
     }
 
-    /// Number of shards (admission + dispatch + one per worker).
+    /// Number of shards (admission + dispatch + one per worker + trainer).
     pub fn shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The distillation trainer's shard (the trailing one) — the only
+    /// writer of `swaps`/`swap_rejected`/`distill_steps`/`replay_len` and
+    /// the shadow-gap gauges, so those merge exactly like the worker
+    /// counters do.
+    pub fn trainer(&self) -> &Mutex<Metrics> {
+        &self.shards[self.shards.len() - 1]
     }
 
     /// Borrow one shard's mutex. Indexes beyond the shard count wrap, so
@@ -693,14 +761,63 @@ mod tests {
     #[test]
     fn hub_shard_roles_are_distinct_and_snapshot_merges() {
         let hub = MetricsHub::for_workers(2);
-        assert_eq!(hub.shards(), 4);
+        // admission + dispatch + 2 workers + trainer.
+        assert_eq!(hub.shards(), 5);
         hub.shard(MetricsHub::ADMISSION).lock().unwrap().queue_full = 2;
         hub.shard(MetricsHub::DISPATCH).lock().unwrap().shed = 3;
         hub.shard(MetricsHub::WORKER0).lock().unwrap().requests = 5;
         hub.shard(MetricsHub::WORKER0 + 1).lock().unwrap().requests = 7;
+        hub.trainer().lock().unwrap().swaps = 1;
         let snap = hub.snapshot();
         assert_eq!(snap.queue_full, 2);
         assert_eq!(snap.shed, 3);
         assert_eq!(snap.requests, 12);
+        assert_eq!(snap.swaps, 1);
+    }
+
+    #[test]
+    fn trainer_shard_is_not_a_worker_shard() {
+        // The trainer owns the trailing shard; a service with W workers
+        // must never hand a worker the trainer's shard (the trainer's
+        // gauges would be clobbered by per-batch writes).
+        for workers in 1..4 {
+            let hub = MetricsHub::for_workers(workers);
+            for i in 0..workers {
+                assert!(
+                    !std::ptr::eq(hub.shard(MetricsHub::WORKER0 + i), hub.trainer()),
+                    "worker {i} of {workers} aliases the trainer shard"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn distill_counters_merge_and_gauges_take_trainer_value() {
+        let mut a = Metrics::new(0);
+        a.model_epoch = 2; // a worker observed epoch 2 mid-batch
+        let mut b = Metrics::new(0);
+        b.swaps = 3;
+        b.swap_rejected = 1;
+        b.distill_steps = 40;
+        b.distill_research = 5;
+        b.replay_len = 12;
+        b.model_epoch = 3;
+        b.shadow_gap_start = Some(0.5);
+        b.shadow_gap_live = Some(0.2);
+        a.merge_from(&b);
+        assert_eq!(a.swaps, 3);
+        assert_eq!(a.swap_rejected, 1);
+        assert_eq!(a.distill_steps, 40);
+        assert_eq!(a.distill_research, 5);
+        assert_eq!(a.replay_len, 12, "gauge merges by max, not sum");
+        assert_eq!(a.model_epoch, 3, "epoch merges to the newest seen");
+        assert_eq!(a.shadow_gap_start, Some(0.5));
+        assert_eq!(a.shadow_gap_live, Some(0.2));
+        let r = a.report();
+        assert!(r.contains("distill: epoch=3 swaps=3 rejected=1"), "{r}");
+        assert!(r.contains("gap_to_search 0.5000->0.2000"), "{r}");
+        // A distill-off snapshot stays silent about the loop.
+        let quiet = Metrics::new(0).report();
+        assert!(!quiet.contains("distill:"), "{quiet}");
     }
 }

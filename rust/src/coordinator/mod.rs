@@ -24,7 +24,13 @@
 //!   reporting thread and merged at read time;
 //! - [`loadgen`] — the closed- and open-loop load generator the `serve`
 //!   CLI and `benches/serve_load.rs` share to measure the core under
-//!   traffic.
+//!   traffic;
+//! - [`distill`] — the online-distillation loop (DESIGN.md §15): served
+//!   search answers and scheduled re-searches feed a dedup-by-condition
+//!   replay buffer, a background trainer runs incremental native train
+//!   steps off the serving threads, and candidates that beat the live
+//!   model on an out-of-band shadow sweep are hot-swapped into the
+//!   workers with no drain (epoch-tagged atomic handoff).
 //!
 //! Python never runs here; the service threads are self-contained after
 //! `Runtime::load`.
@@ -35,6 +41,7 @@
 #![warn(missing_docs)]
 
 pub mod cache;
+pub mod distill;
 pub mod loadgen;
 pub mod metrics;
 pub mod service;
@@ -154,6 +161,17 @@ pub struct MapResponse {
     pub cost: CostVec,
     /// Which backend (or the cache) produced this answer.
     pub source: Source,
+    /// Epoch of the live model when this answer was produced: 0 for the
+    /// boot checkpoint (and for search-backend services, which have no
+    /// model), incremented by each distillation promotion. A worker reads
+    /// the live model exactly once per batch, so every response of one
+    /// batch carries the same epoch — the coherence the race test in
+    /// `tests/distill_swap.rs` pins (no torn weight reads mid-batch).
+    pub epoch: u64,
+    /// Identity of the dispatched batch that served this answer (a
+    /// process-wide monotonic counter), letting clients group responses
+    /// by batch and verify the per-batch epoch invariant externally.
+    pub batch_id: u64,
     /// End-to-end service latency for this request.
     pub latency: std::time::Duration,
 }

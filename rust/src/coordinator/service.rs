@@ -57,6 +57,7 @@
 //!   up, and repeat conditions still hit the mapping cache.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{
     channel, Receiver, RecvTimeoutError, Sender, sync_channel, SyncSender, TrySendError,
 };
@@ -67,7 +68,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cost::{CostVec, MB, Objective};
-use crate::env::FusionEnv;
+use crate::env::{FusionEnv, Trajectory};
 use crate::fusion::Strategy;
 use crate::model::native::{NativeConfig, Sampling};
 use crate::model::{MapperModel, ModelKind, RawCheckpoint};
@@ -78,6 +79,7 @@ use crate::util::rng::Rng;
 use crate::workload::{Workload, WorkloadRegistry};
 
 use super::cache::{Entry, Key, MappingCache};
+use super::distill::{self, DistillConfig, Distiller, LiveModel, ModelEpoch, Observation};
 use super::metrics::{Metrics, MetricsHub};
 use super::{MapRequest, MapResponse, Source};
 
@@ -177,6 +179,18 @@ pub struct ServiceConfig {
     /// `--workload-file`) before or after spawn, or let inline request
     /// specs register themselves on first use.
     pub registry: Arc<WorkloadRegistry>,
+    /// Online-distillation loop (`coordinator::distill`, DESIGN.md §15):
+    /// a background trainer accumulates served search/optimal teacher
+    /// trajectories (plus scheduled re-searches of cache-hot conditions),
+    /// runs incremental native train steps off the serving threads, and
+    /// hot-swaps shadow-gated candidates into the workers' live model
+    /// slot with no drain. Requires the native model backend. With
+    /// distillation on, a model answer that does not fit its condition is
+    /// also *rescued* by an in-band search (budget
+    /// [`DistillConfig::research_budget`]) — the client gets a feasible
+    /// [`Source::Search`] answer when one exists, and the trainer gets
+    /// its teacher trajectory. `None` (the default) changes nothing.
+    pub distill: Option<DistillConfig>,
 }
 
 impl ServiceConfig {
@@ -200,6 +214,7 @@ impl ServiceConfig {
             fallback_budget: 2000,
             fallback_seed: 0x5EED,
             registry: Arc::new(WorkloadRegistry::with_zoo()),
+            distill: None,
         }
     }
 }
@@ -225,15 +240,24 @@ struct Batch {
     jobs: Vec<Job>,
 }
 
-/// What answers the requests (one per worker).
+/// What answers the requests (one per worker). Model backends do not own
+/// their weights: every worker shares the service's [`LiveModel`] slot
+/// and loads the current epoch's `Arc` once per batch, which is what
+/// makes the distillation hot-swap (DESIGN.md §15) drain-free — a swap
+/// lands between batches, never inside one.
 enum Backend {
-    Model { rt: Runtime, model: MapperModel },
+    Model { rt: Runtime, live: Arc<LiveModel> },
     Search { budget: usize, seed: u64 },
 }
 
 /// Load the PJRT model backend (strict: real artifacts + a real PJRT
-/// client or an error).
-fn build_pjrt(cfg: &ServiceConfig, raw: Option<&RawCheckpoint>) -> Result<Backend> {
+/// client or an error). Publishes the boot model into the shared live
+/// slot; first worker wins, later workers drop their identical copy.
+fn build_pjrt(
+    cfg: &ServiceConfig,
+    raw: Option<&RawCheckpoint>,
+    live: &Arc<LiveModel>,
+) -> Result<Backend> {
     let set = if raw.is_some() {
         LoadSet::InferOnly
     } else {
@@ -246,15 +270,24 @@ fn build_pjrt(cfg: &ServiceConfig, raw: Option<&RawCheckpoint>) -> Result<Backen
         Some(raw) => MapperModel::from_raw(&rt, raw.clone_for_inference())?,
         None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
     };
-    Ok(Backend::Model { rt, model })
+    live.init(model);
+    Ok(Backend::Model {
+        rt,
+        live: Arc::clone(live),
+    })
 }
 
 /// Load the native model backend. Architecture: explicit config override,
 /// else whatever the checkpoint records, else manifest constants / paper
 /// geometry (resolved by `Runtime::load_native`). The checkpoint file was
 /// read exactly once at spawn; every worker builds its model from the
-/// shared raw bytes.
-fn build_native(cfg: &ServiceConfig, raw: Option<&RawCheckpoint>) -> Result<Backend> {
+/// shared raw bytes, and the first to finish publishes it into the live
+/// slot (the copies are bit-identical, so first-wins is arbitrary-safe).
+fn build_native(
+    cfg: &ServiceConfig,
+    raw: Option<&RawCheckpoint>,
+    live: &Arc<LiveModel>,
+) -> Result<Backend> {
     let native_cfg = cfg.native_config.or_else(|| raw.and_then(|r| r.config));
     let rt = Runtime::load_native(&cfg.artifacts_dir, native_cfg)?;
     let model = match raw {
@@ -262,12 +295,17 @@ fn build_native(cfg: &ServiceConfig, raw: Option<&RawCheckpoint>) -> Result<Back
         Some(raw) => MapperModel::from_raw(&rt, raw.clone_for_inference())?,
         None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
     };
-    Ok(Backend::Model { rt, model })
+    live.init(model);
+    Ok(Backend::Model {
+        rt,
+        live: Arc::clone(live),
+    })
 }
 
 fn build_backend(
     cfg: &ServiceConfig,
     raw: Option<&RawCheckpoint>,
+    live: &Arc<LiveModel>,
     announce: bool,
 ) -> Result<Backend> {
     let search = || Backend::Search {
@@ -276,10 +314,10 @@ fn build_backend(
     };
     let primary = match cfg.backend {
         BackendChoice::Search => return Ok(search()),
-        BackendChoice::Pjrt => build_pjrt(cfg, raw),
-        BackendChoice::Native => build_native(cfg, raw),
-        BackendChoice::Auto => build_pjrt(cfg, raw).or_else(|pjrt_err| {
-            build_native(cfg, raw).map_err(|native_err| {
+        BackendChoice::Pjrt => build_pjrt(cfg, raw, live),
+        BackendChoice::Native => build_native(cfg, raw, live),
+        BackendChoice::Auto => build_pjrt(cfg, raw, live).or_else(|pjrt_err| {
+            build_native(cfg, raw, live).map_err(|native_err| {
                 anyhow!("pjrt backend: {pjrt_err:#}; native backend: {native_err:#}")
             })
         }),
@@ -323,17 +361,21 @@ impl Backend {
     /// The largest batch this backend can decode in one dispatch.
     fn max_batch(&self, workers: usize) -> usize {
         match self {
-            Backend::Model { rt, model } => match rt.backend() {
+            Backend::Model { rt, live } => match rt.backend() {
                 // Native: one batched lock-step GEMM pass per dispatch;
                 // the cap is a kernel/cache property, independent of the
                 // worker count or pool size (see the constant's docs).
                 BackendKind::Native => NATIVE_GEMM_MAX_BATCH,
-                BackendKind::Pjrt => rt
-                    .manifest
-                    .infer_batches(model.kind.tag())
-                    .last()
-                    .copied()
-                    .unwrap_or(1),
+                BackendKind::Pjrt => {
+                    // The builder published the boot model before this is
+                    // called, so the slot is never empty here.
+                    let kind = live.load().map(|e| e.model.kind).unwrap_or(ModelKind::Df);
+                    rt.manifest
+                        .infer_batches(kind.tag())
+                        .last()
+                        .copied()
+                        .unwrap_or(1)
+                }
             },
             // Search fallback: one pool worker per in-flight search; with
             // several workers each reports its share of the pool, so N
@@ -351,13 +393,36 @@ pub struct MapperClient {
     cache: Arc<Mutex<MappingCache>>,
 }
 
-/// The running service: client handle + the dispatcher and worker joins.
+/// The running service: client handle + the dispatcher and worker joins
+/// (plus the background distillation trainer when configured).
 pub struct MapperService {
     /// Handle for submitting requests and reading metrics (cheap to
     /// clone; clones stay valid until `shutdown`).
     pub client: MapperClient,
     dispatcher: JoinHandle<()>,
     workers: Vec<JoinHandle<()>>,
+    trainer: Option<JoinHandle<()>>,
+    trainer_stop: Arc<AtomicBool>,
+}
+
+/// Everything one engine worker shares with the service, bundled so the
+/// spawn site stays readable.
+struct WorkerCtx {
+    cfg: Arc<ServiceConfig>,
+    raw: Option<Arc<RawCheckpoint>>,
+    work: Arc<Mutex<Receiver<Batch>>>,
+    hub: Arc<MetricsHub>,
+    cache: Arc<Mutex<MappingCache>>,
+    /// Shared live-model slot all model-backend workers serve from.
+    live: Arc<LiveModel>,
+    /// Served-traffic observations for the distillation trainer
+    /// (`None` when distillation is off). Send is `try_send`: a slow
+    /// trainer drops observations, it never blocks serving.
+    obs_tx: Option<SyncSender<Observation>>,
+    /// Service-wide monotonic batch-id counter (one id per served batch,
+    /// across all workers) — lets external tests group responses by the
+    /// exact decode batch that produced them.
+    batch_seq: Arc<AtomicU64>,
 }
 
 impl MapperService {
@@ -384,22 +449,42 @@ impl MapperService {
         let (work_tx, work_rx) = sync_channel::<Batch>(n_workers);
         let work_rx = Arc::new(Mutex::new(work_rx));
         let (ready_tx, ready_rx) = channel::<Result<(usize, Source), String>>();
+        let live = Arc::new(LiveModel::empty());
+        let batch_seq = Arc::new(AtomicU64::new(0));
+        // Bounded observation stream to the trainer: deep enough that a
+        // trainer busy in a train round or shadow sweep doesn't shed a
+        // normal serving burst, shallow enough to bound memory.
+        let (obs_tx, mut obs_rx) = if cfg.distill.is_some() {
+            let (tx, rx) = sync_channel::<Observation>(4096);
+            (Some(tx), Some(rx))
+        } else {
+            (None, None)
+        };
 
         let mut workers = Vec::with_capacity(n_workers);
         for i in 0..n_workers {
-            let cfg = Arc::clone(&cfg);
-            let raw = raw.clone();
-            let work_rx = Arc::clone(&work_rx);
-            let hub = Arc::clone(&hub);
-            let cache = Arc::clone(&cache);
+            let ctx = WorkerCtx {
+                cfg: Arc::clone(&cfg),
+                raw: raw.clone(),
+                work: Arc::clone(&work_rx),
+                hub: Arc::clone(&hub),
+                cache: Arc::clone(&cache),
+                live: Arc::clone(&live),
+                obs_tx: obs_tx.clone(),
+                batch_seq: Arc::clone(&batch_seq),
+            };
             let ready_tx = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("dnnfuser-mapper-{i}"))
-                .spawn(move || engine_worker(i, cfg, raw, work_rx, hub, cache, ready_tx))
+                .spawn(move || engine_worker(i, ctx, ready_tx))
                 .context("spawning engine worker")?;
             workers.push(handle);
         }
         drop(ready_tx);
+        // The spawn-scope sender must die with spawn: the trainer exits
+        // on channel disconnect, which must track the *workers* dropping
+        // their clones, not this function returning.
+        drop(obs_tx);
 
         // Collect every worker's load result; the smallest reported max
         // batch caps the batch former. All workers must land on the SAME
@@ -438,6 +523,56 @@ impl MapperService {
                 }
             }
         }
+        // Bring the distillation trainer up before the dispatcher (so a
+        // trainer construction error can still tear the workers down via
+        // `work_tx`). Native backend only: incremental training runs on
+        // the native runtime, and a candidate must be swappable into the
+        // exact runtime the workers serve from.
+        let trainer_stop = Arc::new(AtomicBool::new(false));
+        let mut trainer = None;
+        if let (Some(dcfg), true) = (cfg.distill.clone(), first_err.is_none()) {
+            let built = (|| -> Result<Distiller> {
+                if kind != Some(Source::Native) {
+                    bail!(
+                        "online distillation requires the native model backend \
+                         (resolved backend: {})",
+                        kind.map(|k| k.name()).unwrap_or("none")
+                    );
+                }
+                let native_cfg = cfg
+                    .native_config
+                    .or_else(|| raw.as_ref().and_then(|r| r.config));
+                let rt = Runtime::load_native(&cfg.artifacts_dir, native_cfg)?;
+                // Full checkpoint (with Adam moments) when one exists so
+                // incremental training resumes the optimizer state;
+                // otherwise the same seeded init the workers booted from.
+                let model = match raw.as_deref() {
+                    Some(r) => MapperModel::from_raw(&rt, r.clone())?,
+                    None => MapperModel::init(&rt, cfg.model, cfg.init_seed)?,
+                };
+                Distiller::new(
+                    dcfg,
+                    rt,
+                    model,
+                    Arc::clone(&live),
+                    Arc::clone(&cache),
+                    Arc::clone(&cfg.registry),
+                    Arc::clone(&hub),
+                )
+            })();
+            match built {
+                Ok(d) => {
+                    let rx = obs_rx.take().expect("distill implies obs channel");
+                    let stop = Arc::clone(&trainer_stop);
+                    let handle = std::thread::Builder::new()
+                        .name("dnnfuser-distill".into())
+                        .spawn(move || distill::run_trainer(d, rx, stop))
+                        .context("spawning distillation trainer")?;
+                    trainer = Some(handle);
+                }
+                Err(e) => first_err = Some(format!("{e:#}")),
+            }
+        }
         if let Some(e) = first_err {
             drop(work_tx); // lets already-loaded workers exit their loops
             for w in workers {
@@ -460,6 +595,8 @@ impl MapperService {
             client: MapperClient { tx, hub, cache },
             dispatcher,
             workers,
+            trainer,
+            trainer_stop,
         })
     }
 
@@ -476,12 +613,22 @@ impl MapperService {
             client,
             dispatcher,
             workers,
+            trainer,
+            trainer_stop,
         } = self;
         let _ = client.tx.send(Msg::Stop);
         drop(client);
         let _ = dispatcher.join();
         for w in workers {
             let _ = w.join();
+        }
+        // Workers joining dropped their observation senders, so the
+        // trainer's channel is now disconnected; the stop flag bounds how
+        // much of a train round it finishes first. Joined last so a swap
+        // in flight completes against a still-consistent cache.
+        trainer_stop.store(true, Ordering::Relaxed);
+        if let Some(t) = trainer {
+            let _ = t.join();
         }
     }
 }
@@ -597,7 +744,7 @@ pub struct ParetoPoint {
 /// batch, quantized condition) decides the search, so repeat requests —
 /// and the same net posted under different names, and the same request
 /// served by different workers — get identical strategies.
-fn request_seed(base: u64, key: &Key) -> u64 {
+pub(crate) fn request_seed(base: u64, key: &Key) -> u64 {
     const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h = 0xcbf2_9ce4_8422_2325u64 ^ base.wrapping_mul(FNV_PRIME);
     for v in [key.workload_hash, key.hw_hash, key.batch as u64, key.mem_q] {
@@ -783,16 +930,18 @@ fn dispatch_loop(
 
 /// One engine worker: builds its own backend, reports readiness (and its
 /// max batch), then serves formed batches until the dispatcher goes away.
-fn engine_worker(
-    idx: usize,
-    cfg: Arc<ServiceConfig>,
-    raw: Option<Arc<RawCheckpoint>>,
-    work: Arc<Mutex<Receiver<Batch>>>,
-    hub: Arc<MetricsHub>,
-    cache: Arc<Mutex<MappingCache>>,
-    ready: Sender<Result<(usize, Source), String>>,
-) {
-    let backend = match build_backend(&cfg, raw.as_deref(), idx == 0) {
+fn engine_worker(idx: usize, ctx: WorkerCtx, ready: Sender<Result<(usize, Source), String>>) {
+    let WorkerCtx {
+        cfg,
+        raw,
+        work,
+        hub,
+        cache,
+        live,
+        obs_tx,
+        batch_seq,
+    } = ctx;
+    let backend = match build_backend(&cfg, raw.as_deref(), &live, idx == 0) {
         Ok(b) => b,
         Err(e) => {
             let _ = ready.send(Err(format!("{e:#}")));
@@ -830,29 +979,91 @@ fn engine_worker(
     // workers run them serially in-worker — the workers are the
     // parallelism axis, and N batches in flight already cover the cores.
     let intra_parallel = n_workers == 1;
-    let registry = &cfg.registry;
+    // With distillation on, an infeasible model answer is rescued by an
+    // in-band search at the trainer's re-search budget (cheap enough to
+    // stay inside serving deadlines, strong enough to usually find a
+    // feasible mapping) — and that search doubles as teacher data.
+    let rescue = cfg
+        .distill
+        .as_ref()
+        .map(|d| (d.research_budget.max(1), cfg.fallback_seed));
+    let sctx = ServeCtx {
+        backend: &backend,
+        intra_parallel,
+        registry: &cfg.registry,
+        cache: &cache,
+        shard,
+        obs_tx: obs_tx.as_ref(),
+        batch_seq: &batch_seq,
+        rescue,
+    };
     loop {
         let batch = {
             let rx = work.lock().expect("work queue poisoned");
             rx.recv()
         };
         let Ok(batch) = batch else { return };
-        serve_batch(batch, &backend, intra_parallel, registry, &cache, shard);
+        serve_batch(batch, &sctx);
+    }
+}
+
+/// Everything [`serve_batch`] needs beyond the batch itself — fixed for
+/// the worker's lifetime.
+struct ServeCtx<'a> {
+    backend: &'a Backend,
+    intra_parallel: bool,
+    registry: &'a WorkloadRegistry,
+    cache: &'a Mutex<MappingCache>,
+    shard: &'a Mutex<Metrics>,
+    obs_tx: Option<&'a SyncSender<Observation>>,
+    batch_seq: &'a AtomicU64,
+    /// `(budget, base_seed)` for the infeasible-answer search rescue;
+    /// `Some` exactly when distillation is on and this is a model worker.
+    rescue: Option<(usize, u64)>,
+}
+
+impl ServeCtx<'_> {
+    /// Tell the trainer about one served condition (non-blocking; a full
+    /// channel drops the observation — serving never waits on training).
+    fn observe(&self, key: &Key, w: &Arc<Workload>, req: &MapRequest, teacher: Option<Trajectory>) {
+        if let Some(tx) = self.obs_tx {
+            let _ = tx.try_send(Observation {
+                key: key.clone(),
+                workload: Arc::clone(w),
+                batch: req.batch,
+                mem_cond_mb: req.mem_cond_mb,
+                hw: req.hw,
+                objective: req.objective,
+                teacher,
+            });
+        }
     }
 }
 
 /// Serve one formed batch on this worker's backend: validate + resolve
 /// (per-request rejects don't poison the batch), answer cache hits,
-/// decode/search the misses, cache and answer them.
-fn serve_batch(
-    batch: Batch,
-    backend: &Backend,
-    intra_parallel: bool,
-    registry: &WorkloadRegistry,
-    cache: &Mutex<MappingCache>,
-    shard: &Mutex<Metrics>,
-) {
+/// decode/search the misses, cache and answer them. The live model `Arc`
+/// is loaded ONCE per batch, so every answer in a batch — hits and
+/// misses alike — carries the same model epoch: a hot-swap lands between
+/// batches, never inside one (the race test's coherence invariant).
+fn serve_batch(batch: Batch, ctx: &ServeCtx) {
+    let ServeCtx {
+        backend,
+        intra_parallel,
+        registry,
+        cache,
+        shard,
+        ..
+    } = *ctx;
     let model_source = backend.source();
+    let batch_id = ctx.batch_seq.fetch_add(1, Ordering::Relaxed);
+    // Pin this batch's model epoch. Search backends have no live model:
+    // epoch stays 0 for the service's lifetime.
+    let pinned: Option<Arc<ModelEpoch>> = match backend {
+        Backend::Model { live, .. } => live.load(),
+        Backend::Search { .. } => None,
+    };
+    let epoch = pinned.as_ref().map(|e| e.epoch).unwrap_or(0);
 
     let mut resolved: Vec<(Job, Arc<Workload>, u64)> = Vec::new();
     for job in batch.jobs {
@@ -894,6 +1105,10 @@ fn serve_batch(
                 m.invalid_responses += 1;
             }
             drop(m);
+            // Hits feed the trainer's hotness ranking (no teacher): a
+            // condition the cache answers a thousand times is exactly the
+            // one worth a scheduled re-search.
+            ctx.observe(&key, &w, &job.req, None);
             let _ = job.reply.send(Ok(MapResponse {
                 strategy: hit.strategy,
                 speedup: hit.speedup,
@@ -902,6 +1117,8 @@ fn serve_batch(
                 cost: hit.cost,
                 source: Source::Cache,
                 latency,
+                epoch,
+                batch_id,
             }));
         } else {
             jobs.push((job, w, key));
@@ -912,7 +1129,8 @@ fn serve_batch(
     }
 
     match backend {
-        Backend::Model { rt, model } => {
+        Backend::Model { rt, .. } => {
+            let model = &pinned.as_ref().expect("model backend has a live model").model;
             let envs: Vec<FusionEnv> = jobs
                 .iter()
                 .map(|(job, w, _)| {
@@ -953,9 +1171,13 @@ fn serve_batch(
                 };
             let decoded = results.iter().filter(|r| r.is_ok()).count();
             if decoded > 0 {
-                shard.lock().expect("metrics").record_batch(decoded);
+                let mut m = shard.lock().expect("metrics");
+                m.record_batch(decoded);
+                // Per-batch epoch gauge (max-merged): external readers see
+                // the newest epoch any worker has served from.
+                m.model_epoch = m.model_epoch.max(epoch);
             }
-            for (((job, _, key), env), res) in jobs.into_iter().zip(envs).zip(results) {
+            for (((job, w, key), env), res) in jobs.into_iter().zip(envs).zip(results) {
                 match res {
                     Ok(traj) => {
                         let act_mb = traj.peak_act_bytes as f64 / MB;
@@ -964,8 +1186,42 @@ fn serve_batch(
                         // latency AND energy — what Pareto aggregation
                         // compares across objectives.
                         let cost = env.model.cost_of(&traj.strategy).cost_vec();
-                        let result = (traj.strategy, traj.speedup, act_mb, traj.valid, cost);
-                        respond(shard, cache, job, key, result, model_source);
+                        let mut result = (traj.strategy, traj.speedup, act_mb, traj.valid, cost);
+                        let mut tag = RespTag {
+                            source: model_source,
+                            epoch,
+                            batch_id,
+                        };
+                        let mut teacher = None;
+                        if !traj.valid {
+                            if let Some((budget, base_seed)) = ctx.rescue {
+                                // The model's answer doesn't fit the
+                                // condition — search for one that does.
+                                // Kept only when feasible: a condition no
+                                // mapping satisfies keeps the honest
+                                // invalid model answer.
+                                let prob = FusionProblem::with_objective(
+                                    &w,
+                                    job.req.batch,
+                                    job.req.hw,
+                                    job.req.mem_cond_mb,
+                                    job.req.objective,
+                                );
+                                let sd = request_seed(base_seed, &key);
+                                let r = GSampler::default()
+                                    .run(&prob, budget, &mut Rng::seed_from_u64(sd));
+                                let t = prob.env.decorate(&r.best);
+                                if t.valid {
+                                    let cost = prob.model.cost_of(&r.best).cost_vec();
+                                    let act = r.act_usage_mb();
+                                    result = (r.best, r.best_eval.speedup, act, true, cost);
+                                    tag.source = Source::Search;
+                                    teacher = Some(t);
+                                }
+                            }
+                        }
+                        ctx.observe(&key, &w, &job.req, teacher);
+                        respond(shard, cache, job, key, result, tag);
                     }
                     Err(msg) => {
                         let mut m = shard.lock().expect("metrics");
@@ -983,8 +1239,12 @@ fn serve_batch(
             // searches themselves stay deterministic either way — seeds
             // derive from request content, not execution order).
             let (budget, base_seed) = (*budget, *seed);
-            // `move` (budget/base_seed are Copy): the closure owns its
-            // captures, so the boxed pool tasks below satisfy 'static.
+            // Decode the winning strategy into a full teacher trajectory
+            // only when a trainer is listening — the extra env walk is
+            // pure overhead otherwise.
+            let capture = ctx.obs_tx.is_some();
+            // `move` (budget/base_seed/capture are Copy): the closure owns
+            // its captures, so the boxed pool tasks below satisfy 'static.
             let run_one = move |w: &Arc<Workload>, key: &Key, req: &MapRequest| {
                 let prob = FusionProblem::with_objective(
                     w,
@@ -996,23 +1256,20 @@ fn serve_batch(
                 let sd = request_seed(base_seed, key);
                 let r = GSampler::default().run(&prob, budget, &mut Rng::seed_from_u64(sd));
                 let cost = prob.model.cost_of(&r.best).cost_vec();
-                (
-                    r.best,
-                    r.best_eval.speedup,
-                    r.act_usage_mb(),
-                    r.best_eval.valid,
-                    cost,
-                )
+                let teacher = capture.then(|| prob.env.decorate(&r.best));
+                let act = r.act_usage_mb();
+                ((r.best, r.best_eval.speedup, act, r.best_eval.valid, cost), teacher)
             };
-            let results: Vec<Answer> = if intra_parallel {
-                let tasks: Vec<Box<dyn FnOnce() -> Answer + Send>> = jobs
+            type SearchOut = (Answer, Option<Trajectory>);
+            let results: Vec<SearchOut> = if intra_parallel {
+                let tasks: Vec<Box<dyn FnOnce() -> SearchOut + Send>> = jobs
                     .iter()
                     .map(|(job, w, key)| {
                         let w = Arc::clone(w);
                         let key = key.clone();
                         let req = job.req.clone();
                         Box::new(move || run_one(&w, &key, &req))
-                            as Box<dyn FnOnce() -> Answer + Send>
+                            as Box<dyn FnOnce() -> SearchOut + Send>
                     })
                     .collect();
                 ThreadPool::shared().run_batch(tasks)
@@ -1022,8 +1279,14 @@ fn serve_batch(
                     .collect()
             };
             shard.lock().expect("metrics").record_batch(jobs.len());
-            for ((job, _, key), result) in jobs.into_iter().zip(results) {
-                respond(shard, cache, job, key, result, Source::Search);
+            for ((job, w, key), (result, teacher)) in jobs.into_iter().zip(results) {
+                ctx.observe(&key, &w, &job.req, teacher.filter(|t| t.valid));
+                let tag = RespTag {
+                    source: Source::Search,
+                    epoch,
+                    batch_id,
+                };
+                respond(shard, cache, job, key, result, tag);
             }
         }
     }
@@ -1033,6 +1296,15 @@ fn serve_batch(
 /// `(strategy, speedup, act_usage_mb, valid, cost)`.
 type Answer = (Strategy, f64, f64, bool, CostVec);
 
+/// Provenance stamped onto one response: its source, the model epoch the
+/// serving batch was pinned to, and the batch id.
+#[derive(Clone, Copy)]
+struct RespTag {
+    source: Source,
+    epoch: u64,
+    batch_id: u64,
+}
+
 /// Cache, meter and answer one resolved request.
 fn respond(
     shard: &Mutex<Metrics>,
@@ -1040,9 +1312,14 @@ fn respond(
     job: Job,
     key: Key,
     result: Answer,
-    source: Source,
+    tag: RespTag,
 ) {
     let (strategy, speedup, act_usage_mb, valid, cost) = result;
+    let RespTag {
+        source,
+        epoch,
+        batch_id,
+    } = tag;
     let latency = job.enqueued.elapsed();
     let resp = MapResponse {
         strategy: strategy.clone(),
@@ -1052,6 +1329,8 @@ fn respond(
         cost,
         source,
         latency,
+        epoch,
+        batch_id,
     };
     cache.lock().expect("cache poisoned").put(
         key,
@@ -1061,6 +1340,7 @@ fn respond(
             act_usage_mb,
             valid,
             cost,
+            source,
         },
     );
     let mut m = shard.lock().expect("metrics");

@@ -322,6 +322,28 @@ impl GridSpec {
         Self::from_json(&text)
     }
 
+    /// The distillation loop's default shadow grid: a small fixed set of
+    /// held-out conditions (two zoo nets, interpolated budgets) that the
+    /// swap gate sweeps out-of-band before every promotion
+    /// (`coordinator::distill`). Deliberately tiny — the gate runs on the
+    /// trainer thread between train rounds, so a sweep must cost seconds,
+    /// not minutes — and deliberately *fixed* per service instance: the
+    /// live model and every candidate are compared on identical points,
+    /// making the gap trend a like-for-like series.
+    pub fn shadow_default(search_budget: usize, seed: u64) -> GridSpec {
+        GridSpec {
+            workloads: vec!["vgg16".into(), "mobilenet_v2".into()],
+            batch: 64,
+            train_mems: vec![16.0, 32.0],
+            interpolate_per_gap: 1,
+            extrapolate_mems: Vec::new(),
+            hw_perturbs: Vec::new(),
+            search_budget: search_budget.max(1),
+            seed,
+            objectives: vec![Objective::Latency],
+        }
+    }
+
     /// Reject degenerate grids before any work: unsorted or non-positive
     /// budgets, "extrapolation" points inside the training range,
     /// non-positive perturbation scales, or a grid with no held-out

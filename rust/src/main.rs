@@ -17,7 +17,8 @@
 //!   `--queue-capacity`) and drive it with a closed-loop client swarm or
 //!   the open-loop generator (`--load-gen <rps> --duration <s>`),
 //!   reporting per-backend router metrics plus p50/p95/p99, shed rate and
-//!   batch occupancy;
+//!   batch occupancy; `--distill` adds the online-distillation loop
+//!   (replay buffer, background trainer, shadow-gated hot-swaps);
 //! - `eval`    — model vs teacher across a condition grid; `--sweep
 //!   grid.json` runs the condition-generalization harness instead
 //!   (held-out interpolated/extrapolated budgets + perturbed HW rate
@@ -34,6 +35,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use dnnfuser::coordinator::distill::DistillConfig;
 use dnnfuser::coordinator::loadgen::{self, LoadSpec};
 use dnnfuser::coordinator::service::{BackendChoice, MapperService, ServiceConfig};
 use dnnfuser::coordinator::{MapRequest, Source};
@@ -509,9 +511,36 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         )
         .opt("metrics-json", None, "write a machine-readable metrics report to this path")
         .opt("seed", Some("7"), "request stream seed")
+        .opt(
+            "distill-replay",
+            Some("256"),
+            "online distillation: replay buffer capacity (distinct conditions)",
+        )
+        .opt(
+            "distill-steps",
+            Some("16"),
+            "online distillation: incremental train steps per trainer round",
+        )
+        .opt(
+            "distill-swap-every",
+            Some("2"),
+            "online distillation: attempt a gated hot-swap every N trainer rounds",
+        )
+        .opt(
+            "distill-budget",
+            Some("300"),
+            "online distillation: G-Sampler budget per scheduled re-search (and per \
+             infeasible-answer rescue search)",
+        )
         .switch(
             "search-fallback",
             "serve via G-Sampler search when no model backend is available",
+        )
+        .switch(
+            "distill",
+            "online distillation: buffer served search/teacher answers, train a candidate \
+             in the background, and hot-swap it in when it beats the live model on the \
+             shadow sweep (native backend only)",
         );
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let mut cfg = ServiceConfig::new(p.req("artifacts")?);
@@ -530,6 +559,14 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         Some(s) => Some(s.parse().map_err(|e| anyhow!("bad --max-batch: {e}"))?),
         None => None,
     };
+    if p.flag("distill") {
+        let mut d = DistillConfig::new(p.get_u64("seed")?);
+        d.replay_capacity = p.get_usize("distill-replay")?.max(1);
+        d.steps_per_round = p.get_usize("distill-steps")?.max(1);
+        d.rounds_per_swap = p.get_usize("distill-swap-every")?.max(1);
+        d.research_budget = p.get_usize("distill-budget")?.max(1);
+        cfg.distill = Some(d);
+    }
     let timeout = match p.get("timeout-ms") {
         Some(s) => {
             let ms: u64 = s.parse().map_err(|e| anyhow!("bad --timeout-ms: {e}"))?;
@@ -563,6 +600,10 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         p.req("max-inflight")?,
         p.req("compare-search")?,
         p.req("pareto")?,
+        p.req("distill-replay")?,
+        p.req("distill-steps")?,
+        p.req("distill-swap-every")?,
+        p.req("distill-budget")?,
     ] {
         meta_hash = fnv1a_str(meta_hash, s);
     }
@@ -574,6 +615,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         cfg.fallback_budget as u64,
         cfg.batch_window.as_millis() as u64,
         cfg.search_fallback as u64,
+        cfg.distill.is_some() as u64,
         n_requests as u64,
         n_clients as u64,
     ] {
@@ -597,6 +639,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         if cfg.workers == 1 { "" } else { "s" },
         cfg.queue_capacity
     );
+    let distill_enabled = cfg.distill.is_some();
     let svc = MapperService::spawn(cfg)?;
     let client = svc.client.clone();
 
@@ -758,6 +801,29 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
                     ("pjrt", source_obj(Source::Model)),
                     ("search", source_obj(Source::Search)),
                     ("cache", source_obj(Source::Cache)),
+                ]),
+            ),
+            // Online-distillation health: live epoch, (rejected) swaps,
+            // trainer progress, and the shadow-sweep gap trend (start vs
+            // after the latest promotion; null until the gate first runs).
+            (
+                "distill",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(distill_enabled)),
+                    ("model_epoch", Json::num(m.model_epoch as f64)),
+                    ("swaps", Json::num(m.swaps as f64)),
+                    ("swap_rejected", Json::num(m.swap_rejected as f64)),
+                    ("distill_steps", Json::num(m.distill_steps as f64)),
+                    ("distill_research", Json::num(m.distill_research as f64)),
+                    ("replay_len", Json::num(m.replay_len as f64)),
+                    (
+                        "shadow_gap_start",
+                        m.shadow_gap_start.map_or(Json::Null, Json::num),
+                    ),
+                    (
+                        "shadow_gap_live",
+                        m.shadow_gap_live.map_or(Json::Null, Json::num),
+                    ),
                 ]),
             ),
             (

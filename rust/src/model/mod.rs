@@ -211,6 +211,24 @@ impl MapperModel {
         self.theta.len()
     }
 
+    /// Snapshot this model as an in-memory checkpoint *without* optimizer
+    /// state — the distillation trainer's promotion handoff: the trainer
+    /// keeps training its own full (theta, m, v) state and publishes
+    /// inference-only snapshots into the serving workers' live slot
+    /// (`coordinator::distill::LiveModel`). Like
+    /// [`RawCheckpoint::clone_for_inference`], the snapshot must not be
+    /// trained or saved.
+    pub fn to_raw_inference(&self) -> RawCheckpoint {
+        RawCheckpoint {
+            kind: self.kind,
+            step: self.step,
+            theta: self.theta.clone(),
+            m: Vec::new(),
+            v: Vec::new(),
+            config: self.native_cfg,
+        }
+    }
+
     /// One Adam step on a token batch; returns the loss.
     pub fn train_step(&mut self, rt: &Runtime, batch: &TokenBatch) -> Result<f32> {
         if let Some(eng) = rt.native_engine() {

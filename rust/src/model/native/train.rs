@@ -27,7 +27,13 @@ use super::decoder::{embed_action, embed_rtg, embed_state};
 use super::{ops, NativeEngine, SEQ_LEN};
 
 // Adam hyper-parameters — mirror python/compile/common.py.
-const LR: f32 = 3e-4;
+/// Fixed Adam learning rate (no schedule). Public because the online
+/// distillation loop (`coordinator::distill`) documents its incremental
+/// steps in terms of it: every caller of [`train_step`] — offline
+/// `dnnfuser train`, the bench harness, and the background trainer —
+/// updates with the same rate, so checkpoints are comparable across all
+/// three paths.
+pub const LR: f32 = 3e-4;
 const ADAM_B1: f32 = 0.9;
 const ADAM_B2: f32 = 0.999;
 const ADAM_EPS: f32 = 1e-8;

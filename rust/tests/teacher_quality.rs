@@ -1,0 +1,110 @@
+//! Teacher-quality property (DESIGN.md §14/§15): with the architecture,
+//! seeds, conditions, steps and decode policy all held fixed, a student
+//! imitation-trained on *certified-optimal* demonstrations must end up
+//! at least as close to optimal as a twin trained on stochastic
+//! G-Sampler demonstrations — supervision quality is the only varying
+//! input, so it must not make the student worse.
+//!
+//! The bound is tolerance-padded: tiny students on tiny budgets are
+//! noisy, and "at least as good" means "not worse than the noise
+//! floor", not bit-equality. Artifact-free (native tiny runtime);
+//! deterministic per the fixed seeds below.
+
+use dnnfuser::bench_support::{teacher_runs_with, Teacher};
+use dnnfuser::cost::{HwConfig, Objective};
+use dnnfuser::model::native::NativeConfig;
+use dnnfuser::model::{MapperModel, ModelKind};
+use dnnfuser::runtime::Runtime;
+use dnnfuser::search::{optimal::OptimalDp, FusionProblem, Optimizer};
+use dnnfuser::trajectory::ReplayBuffer;
+use dnnfuser::util::rng::Rng;
+use dnnfuser::workload::zoo;
+
+const WORKLOADS: [&str; 2] = ["vgg16", "resnet18"];
+const MEMS: [f64; 2] = [20.0, 32.0];
+const BATCH: usize = 64;
+const BUDGET: usize = 300;
+const STEPS: usize = 60;
+const SEED: u64 = 1234;
+
+/// Collect one demonstration dataset over the fixed grid. The rng fork
+/// order is identical for both teachers (and the DP ignores its rng), so
+/// the two datasets differ *only* in who produced the demonstrations.
+fn dataset(teacher: Teacher) -> ReplayBuffer {
+    let mut rng = Rng::seed_from_u64(SEED);
+    let mut jobs = Vec::new();
+    for name in WORKLOADS {
+        let w = zoo::by_name(name).expect("zoo workload");
+        for mem in MEMS {
+            for _ in 0..2 {
+                jobs.push((w.clone(), mem, rng.fork()));
+            }
+        }
+    }
+    let mut buf = ReplayBuffer::new(256);
+    for (traj, _wall_s) in teacher_runs_with(jobs, BATCH, BUDGET, Objective::Latency, teacher) {
+        buf.push(traj);
+    }
+    buf
+}
+
+/// Train one tiny student from scratch on `data` — same init seed, same
+/// sampling stream, same step count for both teachers.
+fn student(rt: &Runtime, data: &ReplayBuffer) -> MapperModel {
+    let mut model = MapperModel::init(rt, ModelKind::Df, 5).expect("init");
+    let mut rng = Rng::seed_from_u64(SEED ^ 1);
+    model.train(rt, data, STEPS, &mut rng, |_, _| {}).expect("train");
+    model
+}
+
+/// Mean relative gap-to-optimal of the model's greedy decodes over the
+/// training grid. An infeasible decode pays the full penalty of 1.0 —
+/// "infeasible" must never score better than "feasible but slow".
+fn mean_gap_to_optimal(rt: &Runtime, model: &MapperModel) -> f64 {
+    let mut gaps = Vec::new();
+    let mut rng = Rng::seed_from_u64(SEED ^ 2);
+    for name in WORKLOADS {
+        let w = zoo::by_name(name).expect("zoo workload");
+        for mem in MEMS {
+            let prob = FusionProblem::new(&w, BATCH, HwConfig::paper(), mem);
+            let opt = OptimalDp::default().run(&prob, BUDGET, &mut rng);
+            let t = model
+                .infer_batch(rt, &[&prob.env])
+                .expect("decode")
+                .remove(0);
+            let gap = if t.valid && opt.best_eval.speedup > 0.0 {
+                ((opt.best_eval.speedup - t.speedup) / opt.best_eval.speedup).max(0.0)
+            } else {
+                1.0
+            };
+            gaps.push(gap);
+        }
+    }
+    gaps.iter().sum::<f64>() / gaps.len() as f64
+}
+
+#[test]
+fn optimal_teacher_student_is_at_least_as_good_as_gsampler_student() {
+    let rt = Runtime::load_native("/nonexistent/artifacts", Some(NativeConfig::tiny()))
+        .expect("native runtime");
+
+    let opt_data = dataset(Teacher::Optimal);
+    let gs_data = dataset(Teacher::GSampler);
+    assert_eq!(opt_data.len(), gs_data.len(), "datasets must be twins");
+    assert!(!opt_data.is_empty());
+
+    let opt_student = student(&rt, &opt_data);
+    let gs_student = student(&rt, &gs_data);
+
+    let gap_opt = mean_gap_to_optimal(&rt, &opt_student);
+    let gap_gs = mean_gap_to_optimal(&rt, &gs_student);
+    assert!(
+        (0.0..=1.0).contains(&gap_opt) && (0.0..=1.0).contains(&gap_gs),
+        "gaps out of range: optimal-taught {gap_opt}, gsampler-taught {gap_gs}"
+    );
+    assert!(
+        gap_opt <= gap_gs + 0.05,
+        "optimal-taught student ({gap_opt:.4}) is worse than the gsampler-taught \
+         twin ({gap_gs:.4}) beyond tolerance — supervision quality regressed"
+    );
+}

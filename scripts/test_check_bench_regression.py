@@ -91,6 +91,23 @@ def main() -> int:
                                               "slack": 0.1}}),
          1, ["PERF GATE FAILED", "gap_to_optimal_edp",
              "missing from measured gates", "'generalization'"]),
+        # A formerly-bootstrapped gap gate, now armed: a healthy sweep
+        # passes under the ceiling…
+        ("pass-armed-gap-gate",
+         {"bench": "generalization", "gates": {"gap_to_optimal": 0.45}},
+         baseline_for("generalization",
+                      {"gap_to_optimal": {"value": 0.7, "direction": "lower",
+                                          "slack": 0.1}}),
+         0, ["perf gate passed"]),
+        # …while a regressed one (here the degenerate-sweep 2.0 sentinel,
+        # the exact value a no-comparable-points sweep reports) fails —
+        # arming the gate is what gives the sentinel teeth.
+        ("fail-armed-gap-gate-regression",
+         {"bench": "generalization", "gates": {"gap_to_optimal": 2.0}},
+         baseline_for("generalization",
+                      {"gap_to_optimal": {"value": 0.7, "direction": "lower",
+                                          "slack": 0.1}}),
+         1, ["PERF GATE FAILED", "gap_to_optimal"]),
         # Null gates bootstrap: print the measured value, pass.
         ("pass-null-bootstrap",
          {"bench": "b", "gates": {"gap_to_optimal": 0.12}},
