@@ -102,6 +102,7 @@ fn main() {
     // representable condition), and two rate perturbations.
     let spec = GridSpec {
         workloads: workloads.iter().map(|s| s.to_string()).collect(),
+        graphs: Vec::new(),
         batch: 64,
         train_mems: train_mems.to_vec(),
         interpolate_per_gap: 1,

@@ -861,6 +861,7 @@ mod tests {
             // keeps the two sweeps per gate call fast.
             cfg.shadow = GridSpec {
                 workloads: vec!["mobilenet_v2".into()],
+                graphs: Vec::new(),
                 batch: 64,
                 train_mems: vec![16.0, 32.0],
                 interpolate_per_gap: 1,
@@ -897,6 +898,7 @@ mod tests {
         let mut cfg = quick_cfg(SwapGate::Shadow);
         cfg.shadow = GridSpec {
             workloads: vec!["mobilenet_v2".into()],
+            graphs: Vec::new(),
             batch: 64,
             train_mems: vec![16.0, 32.0],
             interpolate_per_gap: 1,

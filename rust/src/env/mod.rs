@@ -33,6 +33,16 @@ pub const MEM_REF_BYTES: f64 = 64.0 * MB;
 /// generalization sweep's extrapolation axis relies on this).
 pub const MAX_RTG: f32 = 16.0;
 
+/// Ceiling on each log-normalized shape feature. The zoo's dimensions
+/// all normalize into ≈[0, 1]; graph imports can carry wider layers
+/// (BERT's 3072-wide FFN encodes at ~0.965, still in range), but a
+/// pathological import (say a 10⁶-channel Gemm) must clamp at a fixed
+/// ceiling rather than push the state embedding arbitrarily far off
+/// the training manifold — the same rationale as [`MAX_RTG`]. 1.25
+/// leaves headroom over every real network dimension (K,C up to
+/// 2^15 = 32768 before the clamp binds) while staying bounded.
+pub const SHAPE_FEAT_MAX: f32 = 1.25;
+
 /// A complete (reward, state, action) trajectory in encoded (model-side)
 /// form plus the decoded strategy it produced.
 #[derive(Debug, Clone)]
@@ -108,14 +118,16 @@ impl FusionEnv {
             .iter()
             .map(|l| {
                 // log2 normalization: K,C ∈ [1, 4096] → /12; Y,X ∈ [1,224]
-                // → /8; R,S ∈ [1,11] → /4. Keeps features in ≈[0, 1].
+                // → /8; R,S ∈ [1,11] → /4. Keeps features in ≈[0, 1];
+                // graph-imported layers beyond those ranges clamp at
+                // SHAPE_FEAT_MAX instead of scaling without bound.
                 [
-                    (l.k as f32).log2() / 12.0,
-                    (l.c as f32).log2() / 12.0,
-                    (l.y as f32).log2() / 8.0,
-                    (l.x as f32).log2() / 8.0,
-                    (l.r as f32).log2() / 4.0,
-                    (l.s as f32).log2() / 4.0,
+                    ((l.k as f32).log2() / 12.0).min(SHAPE_FEAT_MAX),
+                    ((l.c as f32).log2() / 12.0).min(SHAPE_FEAT_MAX),
+                    ((l.y as f32).log2() / 8.0).min(SHAPE_FEAT_MAX),
+                    ((l.x as f32).log2() / 8.0).min(SHAPE_FEAT_MAX),
+                    ((l.r as f32).log2() / 4.0).min(SHAPE_FEAT_MAX),
+                    ((l.s as f32).log2() / 4.0).min(SHAPE_FEAT_MAX),
                 ]
             })
             .collect();
@@ -490,6 +502,40 @@ mod tests {
         // Below-training-range budgets stay linear (and finite).
         let small = FusionEnv::new(zoo::vgg16(), 64, HwConfig::paper(), 0.25);
         assert!(small.rtg_token() > 0.0 && small.rtg_token() < 0.01);
+    }
+
+    #[test]
+    fn shape_features_clamp_for_out_of_zoo_dims() {
+        use crate::workload::{conv, Workload};
+        // A graph import can carry layers far wider than the zoo (a
+        // 10⁶-channel Gemm, say); the shape features must saturate at
+        // SHAPE_FEAT_MAX instead of growing with log2(dim).
+        let huge = Workload {
+            name: "huge".into(),
+            layers: vec![conv("g", 1_000_000, 1_000_000, 224, 224, 3, 3, 1)],
+        };
+        let e = FusionEnv::new(huge, 1, HwConfig::paper(), 16.0);
+        let traj = e.rollout(|_, _| 0.1);
+        for st in &traj.states {
+            for (d, f) in st[..6].iter().enumerate() {
+                assert!(f.is_finite() && *f <= SHAPE_FEAT_MAX, "dim {d} = {f}");
+            }
+            // log2(1e6)/12 ≈ 1.66 would exceed the ceiling — the K/C
+            // features must sit exactly at it.
+            assert_eq!(st[0], SHAPE_FEAT_MAX);
+            assert_eq!(st[1], SHAPE_FEAT_MAX);
+        }
+        // In-range dims (everything the zoo or a BERT-class import
+        // carries) are below the ceiling, so their encoding is
+        // bit-identical to the unclamped form: 3072 → ~0.965.
+        let wide = Workload {
+            name: "ffn".into(),
+            layers: vec![conv("fc", 3072, 768, 128, 1, 1, 1, 1)],
+        };
+        let e = FusionEnv::new(wide, 1, HwConfig::paper(), 16.0);
+        let traj = e.rollout(|_, _| 0.1);
+        assert_eq!(traj.states[1][0], (3072f32).log2() / 12.0);
+        assert!(traj.states[1][0] < SHAPE_FEAT_MAX);
     }
 
     #[test]

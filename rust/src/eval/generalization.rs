@@ -145,8 +145,14 @@ impl HwPerturb {
 #[derive(Debug, Clone, PartialEq)]
 pub struct GridSpec {
     /// Workload names, resolved against the sweep's registry (zoo
-    /// pre-seeded; customs registered via `--workload-file`).
+    /// pre-seeded; customs registered via `--workload-file`, graph
+    /// chains via `graphs` below or `--graph-file`).
     pub workloads: Vec<String>,
+    /// Graph fixture paths ([`crate::workload::graph`] schema) imported
+    /// into the registry before the sweep — their `{graph}.{head}`
+    /// chain names become resolvable `workloads` entries. Paths in a
+    /// grid *file* are resolved relative to the file's directory.
+    pub graphs: Vec<String>,
     /// Input batch size on every point.
     pub batch: usize,
     /// The training memory conditions (MB), strictly ascending.
@@ -181,8 +187,9 @@ impl GridSpec {
     /// grid than the one the spec echo and config hash claim.
     pub fn from_json(text: &str) -> Result<GridSpec> {
         let j = Json::parse(text).context("grid spec is not valid JSON")?;
-        const TOP_KEYS: [&str; 9] = [
+        const TOP_KEYS: [&str; 10] = [
             "workloads",
+            "graphs",
             "batch",
             "train_mems",
             "interpolate",
@@ -205,6 +212,25 @@ impl GridSpec {
             };
             workloads.push(s.to_string());
         }
+        let graphs = match j.get("graphs") {
+            None => Vec::new(),
+            Some(v) => {
+                let Some(arr) = v.as_arr() else {
+                    bail!("grid: `graphs` must be an array of file paths");
+                };
+                let mut out = Vec::with_capacity(arr.len());
+                for g in arr {
+                    let Some(s) = g.as_str() else {
+                        bail!("grid: `graphs` entries must be strings");
+                    };
+                    if s.is_empty() {
+                        bail!("grid: `graphs` entries must be non-empty paths");
+                    }
+                    out.push(s.to_string());
+                }
+                out
+            }
+        };
         let train_mems = num_list(&j, "train_mems")?;
         let interpolate_per_gap = match j.get("interpolate") {
             None => 1,
@@ -302,6 +328,7 @@ impl GridSpec {
         };
         let spec = GridSpec {
             workloads,
+            graphs,
             batch: opt_usize(&j, "batch", 64)?,
             train_mems,
             interpolate_per_gap,
@@ -315,11 +342,35 @@ impl GridSpec {
         Ok(spec)
     }
 
-    /// Load a grid spec from a JSON file.
+    /// Load a grid spec from a JSON file. Relative `graphs` paths are
+    /// resolved against the grid file's directory, so a grid and its
+    /// fixtures travel together (CI invokes from the repo root, the
+    /// benches from `rust/` — both must find the same files).
     pub fn from_file(path: &str) -> Result<GridSpec> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading grid spec {path}"))?;
-        Self::from_json(&text)
+        let mut spec = Self::from_json(&text)?;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            for g in &mut spec.graphs {
+                let p = std::path::Path::new(g.as_str());
+                if p.is_relative() {
+                    *g = dir.join(p).to_string_lossy().into_owned();
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Import every `graphs` fixture into `reg` so the chains it names
+    /// resolve as `workloads` entries; returns how many chains were
+    /// registered. Call before [`GridSpec::points`].
+    pub fn register_graphs(&self, reg: &WorkloadRegistry) -> Result<usize> {
+        let mut n = 0;
+        for path in &self.graphs {
+            let import = crate::workload::graph::GraphImport::from_file(path)?;
+            n += import.register(reg)?.len();
+        }
+        Ok(n)
     }
 
     /// The distillation loop's default shadow grid: a small fixed set of
@@ -333,6 +384,7 @@ impl GridSpec {
     pub fn shadow_default(search_budget: usize, seed: u64) -> GridSpec {
         GridSpec {
             workloads: vec!["vgg16".into(), "mobilenet_v2".into()],
+            graphs: Vec::new(),
             batch: 64,
             train_mems: vec![16.0, 32.0],
             interpolate_per_gap: 1,
@@ -491,6 +543,12 @@ impl GridSpec {
         for w in &self.workloads {
             h = mix_str(h, w);
         }
+        // Graph paths are mixed only when present, so pre-graph grid
+        // files keep their recorded config hash (same rule as the
+        // objectives default below).
+        for g in &self.graphs {
+            h = mix_str(h, g);
+        }
         h = mix(h, self.batch as u64);
         for &m in &self.train_mems {
             h = mix(h, m.to_bits());
@@ -524,7 +582,7 @@ impl GridSpec {
         let per_gap = Json::num(self.interpolate_per_gap as f64);
         let perturbs = Json::arr(self.hw_perturbs.iter().map(|p| p.to_json()));
         let objectives = Json::arr(self.objectives.iter().map(|o| Json::str(o.name())));
-        Json::obj(vec![
+        let mut fields = vec![
             ("workloads", workloads),
             ("batch", Json::num(self.batch as f64)),
             ("train_mems", train),
@@ -534,7 +592,15 @@ impl GridSpec {
             ("search_budget", Json::num(self.search_budget as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("objectives", objectives),
-        ])
+        ];
+        // Echoed only when set, so pre-graph report echoes are unchanged.
+        if !self.graphs.is_empty() {
+            fields.push((
+                "graphs",
+                Json::arr(self.graphs.iter().map(|g| Json::str(g.clone()))),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -1107,6 +1173,7 @@ mod tests {
     fn spec() -> GridSpec {
         GridSpec {
             workloads: vec!["vgg16".into()],
+            graphs: Vec::new(),
             batch: 64,
             train_mems: vec![16.0, 32.0, 48.0],
             interpolate_per_gap: 1,
@@ -1151,6 +1218,30 @@ mod tests {
         // Serialized spec parses back to the same value.
         let again = GridSpec::from_json(&s.to_json().to_pretty()).unwrap();
         assert_eq!(s, again);
+    }
+
+    #[test]
+    fn grid_graphs_parse_roundtrip_and_hash_compat() {
+        // Absent `graphs` defaults empty and keeps the pre-graph config
+        // hash, so committed report hashes stay attributable.
+        let plain = r#"{"workloads": ["vgg16"], "train_mems": [16, 32]}"#;
+        let s0 = GridSpec::from_json(plain).unwrap();
+        assert!(s0.graphs.is_empty());
+        let with = r#"{
+            "workloads": ["vgg16", "resnet18.conv1"],
+            "graphs": ["examples/graphs/resnet18.json"],
+            "train_mems": [16, 32]
+        }"#;
+        let s1 = GridSpec::from_json(with).unwrap();
+        assert_eq!(s1.graphs, vec!["examples/graphs/resnet18.json".to_string()]);
+        assert_ne!(s0.content_hash(), s1.content_hash());
+        // from_json leaves paths as-is (only from_file re-roots them), so
+        // the echo round-trips exactly.
+        let again = GridSpec::from_json(&s1.to_json().to_pretty()).unwrap();
+        assert_eq!(s1, again);
+        // Mistyped `graphs` is rejected, never silently dropped.
+        let bad = r#"{"workloads": ["vgg16"], "graphs": [3], "train_mems": [16, 32]}"#;
+        assert!(GridSpec::from_json(bad).is_err());
     }
 
     #[test]

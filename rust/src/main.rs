@@ -121,6 +121,27 @@ fn register_workload_files(registry: &WorkloadRegistry, files: &str) -> Result<V
     Ok(names)
 }
 
+/// Register comma-separated `--graph-file` ONNX-style graph JSONs into a
+/// registry and return every lowered chain name — the graph analogue of
+/// [`register_workload_files`]: one import announces each fusable
+/// segment the frontend split out of the model.
+fn register_graph_files(registry: &WorkloadRegistry, files: &str) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for path in files.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let import = dnnfuser::workload::graph::GraphImport::from_file(path)?;
+        let registered = import.register(registry)?;
+        println!(
+            "imported graph `{}` from {path}: {} nodes -> {} chains ({} weighted layers)",
+            import.name,
+            import.n_nodes,
+            registered.len(),
+            import.weighted_layers()
+        );
+        names.extend(registered);
+    }
+    Ok(names)
+}
+
 /// Resolve `--workload-file` (custom JSON net) or `--workload` (zoo name).
 fn resolve_workload(p: &dnnfuser::util::args::ParsedArgs) -> Result<dnnfuser::workload::Workload> {
     if let Some(path) = p.get("workload-file") {
@@ -225,7 +246,17 @@ fn optimizer_by_name(name: &str) -> Result<Box<dyn Optimizer>> {
 
 fn cmd_collect(raw: &[String]) -> Result<()> {
     let cmd = Command::new("collect", "generate teacher demonstrations")
-        .opt("workloads", Some("vgg16,resnet18"), "comma-separated zoo workloads")
+        .opt(
+            "workloads",
+            Some("vgg16,resnet18"),
+            "comma-separated workload names (zoo or graph chains)",
+        )
+        .opt(
+            "graph-file",
+            None,
+            "ONNX-style graph JSON file(s), comma-separated; their lowered chains \
+             become valid --workloads names",
+        )
         .opt("mems", Some("16,32,48,64"), "memory conditions (MB)")
         .opt("batch", Some("64"), "input batch size")
         .opt("budget", Some("2000"), "teacher sampling budget per search")
@@ -254,11 +285,19 @@ fn cmd_collect(raw: &[String]) -> Result<()> {
     // thread pool via bench_support::teacher_runs (one job per (workload,
     // condition, run); seeds forked in enumeration order, results in
     // input order, so the dataset matches the serial loop exactly).
+    // Names resolve through a registry (zoo pre-seeded) so graph-imported
+    // chains collect demonstrations exactly like zoo nets.
+    let registry = WorkloadRegistry::with_zoo();
+    if let Some(files) = p.get("graph-file") {
+        register_graph_files(&registry, files)?;
+    }
     let mut jobs: Vec<(dnnfuser::workload::Workload, f64, Rng)> = Vec::new();
     let mut labels: Vec<(String, f64, usize)> = Vec::new();
     for wname in p.req("workloads")?.split(',') {
-        let w = zoo::by_name(wname.trim())
-            .with_context(|| format!("unknown workload `{wname}`"))?;
+        let (w, _) = registry.get(wname.trim()).ok_or_else(|| {
+            anyhow!("unknown workload `{}` (zoo name or imported graph chain)", wname.trim())
+        })?;
+        let w = (*w).clone();
         for &mem in &mems {
             for run in 0..runs {
                 jobs.push((w.clone(), mem, rng.fork()));
@@ -509,6 +548,12 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             None,
             "custom workload JSON file(s), comma-separated; registered and mixed into the stream",
         )
+        .opt(
+            "graph-file",
+            None,
+            "ONNX-style graph JSON file(s), comma-separated; segmented into fusable \
+             chains, registered and mixed into the stream",
+        )
         .opt("metrics-json", None, "write a machine-readable metrics report to this path")
         .opt("seed", Some("7"), "request stream seed")
         .opt(
@@ -593,6 +638,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         p.get("n-blocks").unwrap_or(""),
         p.get("n-heads").unwrap_or(""),
         p.get("workload-file").unwrap_or(""),
+        p.get("graph-file").unwrap_or(""),
         p.get("timeout-ms").unwrap_or(""),
         p.get("max-batch").unwrap_or(""),
         p.get("load-gen").unwrap_or(""),
@@ -628,6 +674,13 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
     spec.timeout = timeout;
     if let Some(files) = p.get("workload-file") {
         for name in register_workload_files(&cfg.registry, files)? {
+            spec.workloads.push(name);
+        }
+    }
+    // Graph imports onboard the same way: every lowered chain joins the
+    // request mix as a named workload.
+    if let Some(files) = p.get("graph-file") {
+        for name in register_graph_files(&cfg.registry, files)? {
             spec.workloads.push(name);
         }
     }
@@ -859,6 +912,12 @@ fn cmd_eval(raw: &[String]) -> Result<()> {
             "custom workload JSON (overrides --workload; with --sweep: \
              comma-separated files registered for the grid)",
         )
+        .opt(
+            "graph-file",
+            None,
+            "with --sweep: ONNX-style graph JSON file(s), comma-separated, \
+             registered for the grid (the grid's `graphs` key does the same)",
+        )
         .opt("batch", Some("64"), "input batch size")
         .opt("mems", Some("20,25,30,35,40,45"), "conditions (MB)")
         .opt("budget", Some("2000"), "teacher budget per condition")
@@ -938,6 +997,15 @@ fn cmd_eval_sweep(p: &dnnfuser::util::args::ParsedArgs, grid_path: &str) -> Resu
     let registry = WorkloadRegistry::with_zoo();
     if let Some(files) = p.get("workload-file") {
         register_workload_files(&registry, files)?;
+    }
+    if let Some(files) = p.get("graph-file") {
+        register_graph_files(&registry, files)?;
+    }
+    // Grids can also carry their graph fixtures inline (`graphs` key) so
+    // CI sweeps need no extra flags.
+    let n_chains = spec.register_graphs(&registry)?;
+    if n_chains > 0 {
+        println!("registered {n_chains} graph chains from the grid's `graphs` key");
     }
     let rt = load_runtime(
         p.req("artifacts")?,
@@ -1051,6 +1119,7 @@ fn cmd_optimal(raw: &[String]) -> Result<()> {
     let p = cmd.parse(raw).map_err(|e| anyhow!("{e}"))?;
     let spec = GridSpec::from_file(p.req("grid")?)?;
     let registry = WorkloadRegistry::with_zoo();
+    spec.register_graphs(&registry)?;
     let check = match p.req("check-invariant")? {
         "true" => true,
         "false" => false,

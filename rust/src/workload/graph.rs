@@ -1,0 +1,914 @@
+//! Graph frontend: ONNX-style model import.
+//!
+//! The zoo and the [`super::custom`] loader both take *hand-listed layer
+//! chains* — somebody already decided where the fusable segments are.
+//! Real models arrive as graphs: nodes, edges, initializer shapes,
+//! residual branches and attention joins. This module closes that gap
+//! with a small exported-JSON graph schema (the shape an ONNX shim
+//! emits: named tensors, single-output nodes, initializer shape table),
+//! shape inference over it, and an automatic segmentation pass that
+//! splits the graph into linear chains at every branch and join — each
+//! chain a [`Workload`] the mapper can fuse, registered through the
+//! content-addressed [`super::WorkloadRegistry`].
+//!
+//! # Schema
+//!
+//! ```json
+//! {
+//!   "name": "resnet18",
+//!   "inputs":       [{"name": "data",    "shape": [1, 3, 224, 224]}],
+//!   "initializers": [{"name": "conv1.w", "shape": [64, 3, 7, 7]}],
+//!   "nodes": [
+//!     {"name": "conv1", "op": "Conv", "inputs": ["data", "conv1.w"],
+//!      "output": "conv1.out", "attrs": {"stride": 2, "pad": 3}}
+//!   ]
+//! }
+//! ```
+//!
+//! Tensor names connect nodes; every node produces exactly one tensor.
+//! Activation shapes are `[N, C, H, W]` (conv nets), `[N, S, D]`
+//! (sequence models — lowered as `c = D`, `y = S`, `x = 1`) or `[N, D]`.
+//! The batch dimension is stripped: batching is a *serving* parameter
+//! ([`crate::coordinator::MapRequest::batch`]), not a graph property.
+//! Attributes are the simplified isotropic ints `stride`, `pad`,
+//! `group` (convs) and `kernel` (pools).
+//!
+//! # Lowering
+//!
+//! `Conv` / `Gemm` / `MatMul` lower to weighted [`Layer`]s (`Gemm`
+//! weights are `[N, K]` — the Linear/`transB` convention; `MatMul`
+//! weights are `[K, N]`). Elementwise ops, normalizations and pools
+//! fold into the activation geometry per the zoo's weighted-layers
+//! convention. `Add`/`Mul` with one activation input fold (a bias);
+//! with several they are *joins*. `Attention` joins its q/k/v inputs
+//! and folds (its O(S²) score tensor is a cost-model refinement the
+//! 6-loop notation doesn't carry — see DESIGN.md §16). Anything else
+//! is a typed [`GraphError::UnsupportedOp`].
+//!
+//! # Segmentation
+//!
+//! Node `a` links to node `b` (same segment) iff `b` has exactly one
+//! activation input, that input is `a`'s output, and `b` is that
+//! output's *only* activation consumer. Maximal link-paths are the
+//! segments: every node lands in exactly one, and segments cut exactly
+//! at branch points (an output consumed twice — e.g. a residual fork)
+//! and join points (a node reading two activations — e.g. the residual
+//! add). The relation gives each node at most one predecessor and one
+//! successor, so the partition is unique and import is deterministic —
+//! properties pinned by `tests/graph_import.rs`.
+//!
+//! Segments are named `{graph}.{head-node}` and registered through the
+//! registry, whose content-hash identity collapses structurally
+//! identical segments (BERT's 12 identical blocks register 61 names
+//! onto 3 distinct workloads). Segments with no weighted layer (e.g. a
+//! residual add followed by a normalization) stay in
+//! [`GraphImport::segments`] — the partition is total — but carry no
+//! workload and are not registered.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::fmt;
+
+use anyhow::{Context, Result};
+
+use super::{check_depth, Layer, Workload, WorkloadRegistry};
+use crate::util::json::Json;
+
+/// Typed import failure. Every malformed graph maps to one of these —
+/// the request path reports them per-request (no panic, no poisoning
+/// of other requests), mirroring the inline-workload validation
+/// contract.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphError {
+    /// The text is not valid JSON.
+    Json(String),
+    /// The JSON does not match the schema (missing/mistyped fields,
+    /// zero dimensions, bad attribute values).
+    Schema(String),
+    /// A node name or tensor name is defined twice.
+    Duplicate(String),
+    /// A node references a tensor nothing produces.
+    Dangling {
+        /// The referencing node.
+        node: String,
+        /// The undefined tensor name.
+        tensor: String,
+    },
+    /// The graph has a cycle through the named node.
+    Cycle(String),
+    /// An op this frontend cannot lower.
+    UnsupportedOp {
+        /// The offending node.
+        node: String,
+        /// The op (with qualifiers, e.g. `Conv(group=4)`).
+        op: String,
+    },
+    /// Shape inference failed at the named node.
+    ShapeMismatch {
+        /// The offending node.
+        node: String,
+        /// What disagreed.
+        detail: String,
+    },
+    /// A lowered chain failed workload validation (channel continuity,
+    /// activation growth, depth gate).
+    Chain {
+        /// The chain (segment) name.
+        chain: String,
+        /// The validation error.
+        detail: String,
+    },
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::Json(e) => write!(f, "graph JSON: {e}"),
+            GraphError::Schema(e) => write!(f, "graph schema: {e}"),
+            GraphError::Duplicate(e) => write!(f, "graph: duplicate {e}"),
+            GraphError::Dangling { node, tensor } => {
+                write!(f, "graph: node `{node}` reads undefined tensor `{tensor}`")
+            }
+            GraphError::Cycle(node) => {
+                write!(f, "graph: cycle through node `{node}`")
+            }
+            GraphError::UnsupportedOp { node, op } => {
+                write!(f, "graph: node `{node}`: unsupported op `{op}`")
+            }
+            GraphError::ShapeMismatch { node, detail } => {
+                write!(f, "graph: node `{node}`: {detail}")
+            }
+            GraphError::Chain { chain, detail } => {
+                write!(f, "graph: chain `{chain}`: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// One linear segment of the graph: a maximal branch-free node path.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Registry name: `{graph}.{head-node}`.
+    pub name: String,
+    /// Node names in topological order (weighted and folded alike).
+    pub nodes: Vec<String>,
+    /// The lowered chain — `None` when the segment has no weighted
+    /// layer (such segments are kept for the partition but not
+    /// registered).
+    pub workload: Option<Workload>,
+}
+
+/// A fully imported graph: the segment partition plus summary counts.
+#[derive(Debug, Clone)]
+pub struct GraphImport {
+    /// The graph's `name` field (prefixes every segment name).
+    pub name: String,
+    /// Total node count (every node is in exactly one segment).
+    pub n_nodes: usize,
+    /// The segment partition, in topological order of segment heads.
+    pub segments: Vec<Segment>,
+}
+
+/// Activation shape with the batch dimension stripped.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct TShape {
+    c: usize,
+    y: usize,
+    x: usize,
+}
+
+struct Node {
+    name: String,
+    op: String,
+    inputs: Vec<String>,
+    output: String,
+    attrs: Option<Json>,
+}
+
+impl Node {
+    fn attr_usize(&self, key: &str) -> Result<Option<usize>, GraphError> {
+        let Some(attrs) = &self.attrs else {
+            return Ok(None);
+        };
+        match attrs.get(key) {
+            None => Ok(None),
+            Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                GraphError::Schema(format!(
+                    "node `{}`: attr `{key}` must be a non-negative integer",
+                    self.name
+                ))
+            }),
+        }
+    }
+
+    fn attr_min1(&self, key: &str, default: usize) -> Result<usize, GraphError> {
+        let v = self.attr_usize(key)?.unwrap_or(default);
+        if v == 0 {
+            return Err(GraphError::Schema(format!(
+                "node `{}`: attr `{key}` must be ≥ 1",
+                self.name
+            )));
+        }
+        Ok(v)
+    }
+}
+
+fn schema(msg: impl Into<String>) -> GraphError {
+    GraphError::Schema(msg.into())
+}
+
+fn req<'a>(j: &'a Json, what: &str, key: &str) -> Result<&'a Json, GraphError> {
+    j.req(key)
+        .map_err(|e| schema(format!("{what}: {e}")))
+}
+
+fn req_str(j: &Json, what: &str, key: &str) -> Result<String, GraphError> {
+    let v = req(j, what, key)?;
+    let s = v
+        .as_str()
+        .ok_or_else(|| schema(format!("{what}: `{key}` must be a string")))?;
+    if s.is_empty() {
+        return Err(schema(format!("{what}: `{key}` must be non-empty")));
+    }
+    Ok(s.to_string())
+}
+
+/// Parse a `{"name", "shape"}` tensor declaration; dims must be ≥ 1.
+fn parse_tensor_decl(j: &Json, what: &str) -> Result<(String, Vec<usize>), GraphError> {
+    let name = req_str(j, what, "name")?;
+    let shape = req(j, what, "shape")?
+        .as_arr()
+        .ok_or_else(|| schema(format!("{what} `{name}`: `shape` must be an array")))?;
+    let mut dims = Vec::with_capacity(shape.len());
+    for d in shape {
+        let d = d
+            .as_usize()
+            .filter(|&d| d >= 1)
+            .ok_or_else(|| schema(format!("{what} `{name}`: dims must be integers ≥ 1")))?;
+        dims.push(d);
+    }
+    if dims.is_empty() {
+        return Err(schema(format!("{what} `{name}`: shape is empty")));
+    }
+    Ok((name, dims))
+}
+
+/// Strip the batch dim and map to `(c, y, x)` per the module docs.
+fn strip_batch(name: &str, dims: &[usize]) -> Result<TShape, GraphError> {
+    match dims.len() {
+        4 => Ok(TShape { c: dims[1], y: dims[2], x: dims[3] }),
+        3 => Ok(TShape { c: dims[2], y: dims[1], x: 1 }),
+        2 => Ok(TShape { c: dims[1], y: 1, x: 1 }),
+        r => Err(schema(format!(
+            "input `{name}`: rank {r} is not supported (expect [N,C,H,W], [N,S,D] or [N,D])"
+        ))),
+    }
+}
+
+impl GraphImport {
+    /// Import a graph from JSON text: parse, reference-check, topo-sort,
+    /// shape-infer, segment and lower. Any malformation is a typed
+    /// [`GraphError`]; nothing is registered here (see
+    /// [`GraphImport::register`]).
+    pub fn from_json(text: &str) -> Result<GraphImport, GraphError> {
+        let doc = Json::parse(text).map_err(|e| GraphError::Json(e.to_string()))?;
+        let graph_name = req_str(&doc, "graph", "name")?;
+
+        // --- tensor tables -------------------------------------------------
+        let mut initializers: HashMap<String, Vec<usize>> = HashMap::new();
+        for j in req(&doc, "graph", "initializers")?
+            .as_arr()
+            .ok_or_else(|| schema("graph: `initializers` must be an array"))?
+        {
+            let (name, dims) = parse_tensor_decl(j, "initializer")?;
+            if initializers.insert(name.clone(), dims).is_some() {
+                return Err(GraphError::Duplicate(format!("tensor `{name}`")));
+            }
+        }
+        let mut shapes: HashMap<String, TShape> = HashMap::new();
+        for j in req(&doc, "graph", "inputs")?
+            .as_arr()
+            .ok_or_else(|| schema("graph: `inputs` must be an array"))?
+        {
+            let (name, dims) = parse_tensor_decl(j, "input")?;
+            let shape = strip_batch(&name, &dims)?;
+            if initializers.contains_key(&name) || shapes.insert(name.clone(), shape).is_some() {
+                return Err(GraphError::Duplicate(format!("tensor `{name}`")));
+            }
+        }
+
+        // --- nodes ---------------------------------------------------------
+        let node_arr = req(&doc, "graph", "nodes")?
+            .as_arr()
+            .ok_or_else(|| schema("graph: `nodes` must be an array"))?;
+        if node_arr.is_empty() {
+            return Err(schema("graph: `nodes` is empty"));
+        }
+        let mut nodes: Vec<Node> = Vec::with_capacity(node_arr.len());
+        let mut node_idx: HashMap<String, usize> = HashMap::new();
+        let mut producer: HashMap<String, usize> = HashMap::new(); // tensor → node
+        for j in node_arr {
+            let name = req_str(j, "node", "name")?;
+            let op = req_str(j, &format!("node `{name}`"), "op")?;
+            let output = req_str(j, &format!("node `{name}`"), "output")?;
+            let inputs_j = req(j, &format!("node `{name}`"), "inputs")?
+                .as_arr()
+                .ok_or_else(|| schema(format!("node `{name}`: `inputs` must be an array")))?;
+            let mut inputs = Vec::with_capacity(inputs_j.len());
+            for t in inputs_j {
+                let t = t
+                    .as_str()
+                    .ok_or_else(|| schema(format!("node `{name}`: inputs must be tensor names")))?;
+                inputs.push(t.to_string());
+            }
+            if inputs.is_empty() {
+                return Err(schema(format!("node `{name}`: has no inputs")));
+            }
+            let idx = nodes.len();
+            if node_idx.insert(name.clone(), idx).is_some() {
+                return Err(GraphError::Duplicate(format!("node `{name}`")));
+            }
+            if initializers.contains_key(&output)
+                || shapes.contains_key(&output)
+                || producer.insert(output.clone(), idx).is_some()
+            {
+                return Err(GraphError::Duplicate(format!("tensor `{output}`")));
+            }
+            nodes.push(Node { name, op, inputs, output, attrs: j.get("attrs").cloned() });
+        }
+
+        // --- reference check ----------------------------------------------
+        for n in &nodes {
+            for t in &n.inputs {
+                if !initializers.contains_key(t)
+                    && !shapes.contains_key(t)
+                    && !producer.contains_key(t)
+                {
+                    return Err(GraphError::Dangling { node: n.name.clone(), tensor: t.clone() });
+                }
+            }
+        }
+
+        // --- deterministic Kahn topo sort ----------------------------------
+        // Ready nodes are processed in declaration-index order, so equal
+        // graphs import identically regardless of HashMap iteration order.
+        let mut indegree = vec![0usize; nodes.len()];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+        for (i, n) in nodes.iter().enumerate() {
+            for t in &n.inputs {
+                if let Some(&p) = producer.get(t) {
+                    indegree[i] += 1;
+                    adj[p].push(i);
+                }
+            }
+        }
+        let mut ready: BinaryHeap<Reverse<usize>> = indegree
+            .iter()
+            .enumerate()
+            .filter(|&(_, &d)| d == 0)
+            .map(|(i, _)| Reverse(i))
+            .collect();
+        let mut order = Vec::with_capacity(nodes.len());
+        while let Some(Reverse(i)) = ready.pop() {
+            order.push(i);
+            for &j in &adj[i] {
+                indegree[j] -= 1;
+                if indegree[j] == 0 {
+                    ready.push(Reverse(j));
+                }
+            }
+        }
+        if order.len() < nodes.len() {
+            let stuck = indegree
+                .iter()
+                .position(|&d| d > 0)
+                .expect("some node is unprocessed");
+            return Err(GraphError::Cycle(nodes[stuck].name.clone()));
+        }
+
+        // --- shape inference + lowering ------------------------------------
+        // Activation inputs (everything that is not an initializer) drive
+        // both inference and segmentation.
+        let mut consumers: HashMap<&str, usize> = HashMap::new();
+        for n in &nodes {
+            for t in &n.inputs {
+                if !initializers.contains_key(t) {
+                    *consumers.entry(t.as_str()).or_insert(0) += 1;
+                }
+            }
+        }
+        let mut lowered: Vec<Option<Layer>> = (0..nodes.len()).map(|_| None).collect();
+        for &i in &order {
+            let n = &nodes[i];
+            let (out, layer) = infer_node(n, &shapes, &initializers)?;
+            shapes.insert(n.output.clone(), out);
+            lowered[i] = layer;
+        }
+
+        // --- segmentation --------------------------------------------------
+        // In topo order a node's link-predecessor is always placed before
+        // it, and the link relation gives each node at most one successor,
+        // so the predecessor is provably its segment's tail when we get
+        // here — the partition is order-independent.
+        let mut segments: Vec<Vec<usize>> = Vec::new();
+        let mut segment_of: Vec<usize> = vec![usize::MAX; nodes.len()];
+        for &i in &order {
+            let n = &nodes[i];
+            let acts: Vec<&str> = n
+                .inputs
+                .iter()
+                .filter(|t| !initializers.contains_key(*t))
+                .map(|t| t.as_str())
+                .collect();
+            let pred = if acts.len() == 1 && consumers.get(acts[0]) == Some(&1) {
+                producer.get(acts[0]).copied()
+            } else {
+                None
+            };
+            let mut target = None;
+            if let Some(p) = pred {
+                let s = segment_of[p];
+                if *segments[s].last().expect("segments are non-empty") == p {
+                    target = Some(s);
+                }
+            }
+            if let Some(s) = target {
+                segment_of[i] = s;
+                segments[s].push(i);
+            } else {
+                segment_of[i] = segments.len();
+                segments.push(vec![i]);
+            }
+        }
+
+        // --- lower each segment to a workload chain ------------------------
+        let mut out = Vec::with_capacity(segments.len());
+        for seg in &segments {
+            let head = &nodes[seg[0]].name;
+            let name = format!("{graph_name}.{head}");
+            let layers: Vec<Layer> = seg.iter().filter_map(|&i| lowered[i].clone()).collect();
+            let workload = if layers.is_empty() {
+                None
+            } else {
+                let w = Workload { name: name.clone(), layers };
+                w.validate()
+                    .and_then(|()| check_depth(&w))
+                    .map_err(|detail| GraphError::Chain { chain: name.clone(), detail })?;
+                Some(w)
+            };
+            out.push(Segment {
+                name,
+                nodes: seg.iter().map(|&i| nodes[i].name.clone()).collect(),
+                workload,
+            });
+        }
+        Ok(GraphImport { name: graph_name, n_nodes: nodes.len(), segments: out })
+    }
+
+    /// Import a graph from a JSON file.
+    pub fn from_file(path: &str) -> Result<GraphImport> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading graph file {path}"))?;
+        GraphImport::from_json(&text).with_context(|| format!("importing graph file {path}"))
+    }
+
+    /// The lowered chains (registered segments only).
+    pub fn workloads(&self) -> impl Iterator<Item = &Workload> {
+        self.segments.iter().filter_map(|s| s.workload.as_ref())
+    }
+
+    /// Total weighted layers across all segments.
+    pub fn weighted_layers(&self) -> usize {
+        self.workloads().map(|w| w.n_layers()).sum()
+    }
+
+    /// Register every lowered chain with `reg` and return the registered
+    /// names. Name conflicts are pre-flighted across the whole graph
+    /// before anything is registered, so a conflicting import registers
+    /// *nothing* rather than half a model.
+    pub fn register(&self, reg: &WorkloadRegistry) -> Result<Vec<String>> {
+        for w in self.workloads() {
+            if let Some((existing, _)) = reg.get(&w.name) {
+                if !existing.same_structure(w) {
+                    anyhow::bail!(
+                        "graph `{}`: chain name `{}` is already registered with different layers",
+                        self.name,
+                        w.name
+                    );
+                }
+            }
+        }
+        let mut names = Vec::new();
+        for w in self.workloads() {
+            reg.register(w.clone())
+                .with_context(|| format!("registering graph chain `{}`", w.name))?;
+            names.push(w.name.clone());
+        }
+        Ok(names)
+    }
+}
+
+/// Ops folded into activation geometry when they have one activation
+/// input (extra inputs — scales, biases — must be initializers).
+const FOLDED_UNARY: [&str; 9] = [
+    "Relu",
+    "Gelu",
+    "Sigmoid",
+    "Tanh",
+    "Clip",
+    "Softmax",
+    "BatchNormalization",
+    "LayerNormalization",
+    "Identity",
+];
+
+/// Infer one node's output shape; weighted ops also return their
+/// lowered [`Layer`].
+fn infer_node(
+    n: &Node,
+    shapes: &HashMap<String, TShape>,
+    initializers: &HashMap<String, Vec<usize>>,
+) -> Result<(TShape, Option<Layer>), GraphError> {
+    let mismatch = |detail: String| GraphError::ShapeMismatch { node: n.name.clone(), detail };
+    // Resolve an input as an activation (it must have an inferred shape).
+    let act = |t: &str| -> Result<TShape, GraphError> {
+        if initializers.contains_key(t) {
+            return Err(schema(format!(
+                "node `{}`: input `{t}` is an initializer where an activation is required",
+                n.name
+            )));
+        }
+        shapes.get(t).copied().ok_or_else(|| {
+            schema(format!("node `{}`: input `{t}` has no inferred shape", n.name))
+        })
+    };
+    let weight = |t: &str, rank: usize| -> Result<&Vec<usize>, GraphError> {
+        let dims = initializers.get(t).ok_or_else(|| {
+            schema(format!(
+                "node `{}`: weight `{t}` must be an initializer",
+                n.name
+            ))
+        })?;
+        if dims.len() != rank {
+            return Err(mismatch(format!(
+                "weight `{t}` has rank {} (expected {rank})",
+                dims.len()
+            )));
+        }
+        Ok(dims)
+    };
+    let conv_out = |dim: usize, k: usize, stride: usize, pad: usize| -> Result<usize, GraphError> {
+        let padded = dim + 2 * pad;
+        if padded < k {
+            return Err(mismatch(format!(
+                "kernel {k} exceeds padded input {padded}"
+            )));
+        }
+        Ok((padded - k) / stride + 1)
+    };
+
+    match n.op.as_str() {
+        "Conv" => {
+            if n.inputs.len() < 2 || n.inputs.len() > 3 {
+                return Err(schema(format!(
+                    "node `{}`: Conv takes [activation, weight] (+ optional bias)",
+                    n.name
+                )));
+            }
+            let x = act(&n.inputs[0])?;
+            let w = weight(&n.inputs[1], 4)?;
+            if let Some(b) = n.inputs.get(2) {
+                if !initializers.contains_key(b) {
+                    return Err(schema(format!(
+                        "node `{}`: bias `{b}` must be an initializer",
+                        n.name
+                    )));
+                }
+            }
+            let (k, cpg, r, s) = (w[0], w[1], w[2], w[3]);
+            let stride = n.attr_min1("stride", 1)?;
+            let pad = n.attr_usize("pad")?.unwrap_or(0);
+            let group = n.attr_min1("group", 1)?;
+            let depthwise = if group == 1 {
+                if cpg != x.c {
+                    return Err(mismatch(format!(
+                        "weight expects {cpg} input channels, activation has {}",
+                        x.c
+                    )));
+                }
+                false
+            } else if group == x.c && k == x.c && cpg == 1 {
+                true
+            } else {
+                // Grouped convs other than full depthwise have no 6-loop
+                // lowering here; reject rather than mis-cost them.
+                return Err(GraphError::UnsupportedOp {
+                    node: n.name.clone(),
+                    op: format!("Conv(group={group}, c={}, k={k})", x.c),
+                });
+            };
+            let yo = conv_out(x.y, r, stride, pad)?;
+            let xo = conv_out(x.x, s, stride, pad)?;
+            let layer = Layer {
+                name: n.name.clone(),
+                k,
+                c: x.c,
+                y: yo,
+                x: xo,
+                r,
+                s,
+                stride,
+                depthwise,
+            };
+            Ok((TShape { c: k, y: yo, x: xo }, Some(layer)))
+        }
+        "Gemm" | "MatMul" => {
+            if n.inputs.len() != 2 {
+                return Err(schema(format!(
+                    "node `{}`: {} takes [activation, weight]",
+                    n.name, n.op
+                )));
+            }
+            let x = act(&n.inputs[0])?;
+            let w = weight(&n.inputs[1], 2)?;
+            // Gemm uses the Linear/transB [N, K] layout; MatMul the
+            // plain [K, N] layout.
+            let (n_out, k_in) = if n.op == "Gemm" { (w[0], w[1]) } else { (w[1], w[0]) };
+            if k_in != x.c {
+                return Err(mismatch(format!(
+                    "weight contracts {k_in} features, activation has {}",
+                    x.c
+                )));
+            }
+            let layer = Layer {
+                name: n.name.clone(),
+                k: n_out,
+                c: x.c,
+                y: x.y,
+                x: x.x,
+                r: 1,
+                s: 1,
+                stride: 1,
+                depthwise: false,
+            };
+            Ok((TShape { c: n_out, ..x }, Some(layer)))
+        }
+        "MaxPool" | "AveragePool" => {
+            let x = act(&n.inputs[0])?;
+            let k = self_req_attr(n, "kernel")?;
+            let stride = n.attr_min1("stride", k)?;
+            let pad = n.attr_usize("pad")?.unwrap_or(0);
+            let yo = conv_out(x.y, k, stride, pad)?;
+            let xo = conv_out(x.x, k, stride, pad)?;
+            Ok((TShape { c: x.c, y: yo, x: xo }, None))
+        }
+        "GlobalAveragePool" => {
+            let x = act(&n.inputs[0])?;
+            Ok((TShape { c: x.c, y: 1, x: 1 }, None))
+        }
+        "Flatten" => {
+            let x = act(&n.inputs[0])?;
+            Ok((TShape { c: x.c * x.y * x.x, y: 1, x: 1 }, None))
+        }
+        "Add" | "Mul" => {
+            if n.inputs.len() < 2 {
+                return Err(schema(format!(
+                    "node `{}`: {} takes at least two inputs",
+                    n.name, n.op
+                )));
+            }
+            let acts: Vec<&String> = n
+                .inputs
+                .iter()
+                .filter(|t| !initializers.contains_key(*t))
+                .collect();
+            if acts.is_empty() {
+                return Err(schema(format!(
+                    "node `{}`: {} needs at least one activation input",
+                    n.name, n.op
+                )));
+            }
+            // One activation + initializers = a folded bias/scale; two or
+            // more activations = a join, and all operands must agree.
+            let first = act(acts[0])?;
+            for t in &acts[1..] {
+                let s = act(t)?;
+                if s != first {
+                    return Err(mismatch(format!(
+                        "operand `{t}` is {}x{}x{}, expected {}x{}x{}",
+                        s.c, s.y, s.x, first.c, first.y, first.x
+                    )));
+                }
+            }
+            Ok((first, None))
+        }
+        "Attention" => {
+            if n.inputs.len() != 3 {
+                return Err(schema(format!(
+                    "node `{}`: Attention takes [q, k, v]",
+                    n.name
+                )));
+            }
+            let q = act(&n.inputs[0])?;
+            for t in &n.inputs[1..] {
+                let s = act(t)?;
+                if s != q {
+                    return Err(mismatch(format!(
+                        "attention operand `{t}` is {}x{}x{}, expected {}x{}x{}",
+                        s.c, s.y, s.x, q.c, q.y, q.x
+                    )));
+                }
+            }
+            Ok((q, None))
+        }
+        op if FOLDED_UNARY.contains(&op) => {
+            let x = act(&n.inputs[0])?;
+            for t in &n.inputs[1..] {
+                if !initializers.contains_key(t) {
+                    return Err(schema(format!(
+                        "node `{}`: extra input `{t}` must be an initializer",
+                        n.name
+                    )));
+                }
+            }
+            Ok((x, None))
+        }
+        op => Err(GraphError::UnsupportedOp { node: n.name.clone(), op: op.to_string() }),
+    }
+}
+
+/// A required ≥1 integer attribute (pool kernels).
+fn self_req_attr(n: &Node, key: &str) -> Result<usize, GraphError> {
+    match n.attr_usize(key)? {
+        Some(v) if v >= 1 => Ok(v),
+        Some(_) => Err(schema(format!("node `{}`: attr `{key}` must be ≥ 1", n.name))),
+        None => Err(schema(format!("node `{}`: missing attr `{key}`", n.name))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// data → conv → relu → conv: one segment, two weighted layers.
+    const LINEAR: &str = r#"{
+        "name": "toy",
+        "inputs": [{"name": "data", "shape": [1, 3, 8, 8]}],
+        "initializers": [
+            {"name": "w0", "shape": [16, 3, 3, 3]},
+            {"name": "w1", "shape": [16, 16, 3, 3]}
+        ],
+        "nodes": [
+            {"name": "c0", "op": "Conv", "inputs": ["data", "w0"], "output": "t0",
+             "attrs": {"pad": 1}},
+            {"name": "r0", "op": "Relu", "inputs": ["t0"], "output": "t1"},
+            {"name": "c1", "op": "Conv", "inputs": ["t1", "w1"], "output": "t2",
+             "attrs": {"pad": 1}}
+        ]
+    }"#;
+
+    #[test]
+    fn linear_graph_is_one_segment() {
+        let g = GraphImport::from_json(LINEAR).unwrap();
+        assert_eq!(g.n_nodes, 3);
+        assert_eq!(g.segments.len(), 1);
+        let s = &g.segments[0];
+        assert_eq!(s.name, "toy.c0");
+        assert_eq!(s.nodes, vec!["c0", "r0", "c1"]);
+        let w = s.workload.as_ref().unwrap();
+        assert_eq!(w.n_layers(), 2);
+        assert_eq!((w.layers[0].k, w.layers[0].c, w.layers[0].y), (16, 3, 8));
+        w.validate().unwrap();
+    }
+
+    /// A residual diamond must split at the fork and the join.
+    #[test]
+    fn residual_fork_and_join_split_segments() {
+        let g = GraphImport::from_json(
+            r#"{
+            "name": "res",
+            "inputs": [{"name": "data", "shape": [1, 8, 8, 8]}],
+            "initializers": [{"name": "w0", "shape": [8, 8, 3, 3]}],
+            "nodes": [
+                {"name": "pre", "op": "Relu", "inputs": ["data"], "output": "t0"},
+                {"name": "conv", "op": "Conv", "inputs": ["t0", "w0"], "output": "t1",
+                 "attrs": {"pad": 1}},
+                {"name": "join", "op": "Add", "inputs": ["t1", "t0"], "output": "t2"},
+                {"name": "post", "op": "Relu", "inputs": ["t2"], "output": "t3"}
+            ]
+        }"#,
+        )
+        .unwrap();
+        // t0 has two consumers (fork); join has two activation inputs.
+        let segs: Vec<Vec<&str>> = g
+            .segments
+            .iter()
+            .map(|s| s.nodes.iter().map(|n| n.as_str()).collect())
+            .collect();
+        assert_eq!(segs, vec![vec!["pre"], vec!["conv"], vec!["join", "post"]]);
+        assert!(g.segments[2].workload.is_none(), "join segment has no weights");
+    }
+
+    #[test]
+    fn bias_add_folds_instead_of_joining() {
+        let g = GraphImport::from_json(
+            r#"{
+            "name": "b",
+            "inputs": [{"name": "data", "shape": [1, 4, 4, 4]}],
+            "initializers": [
+                {"name": "w0", "shape": [4, 4, 1, 1]},
+                {"name": "bias", "shape": [4]}
+            ],
+            "nodes": [
+                {"name": "c0", "op": "Conv", "inputs": ["data", "w0"], "output": "t0"},
+                {"name": "badd", "op": "Add", "inputs": ["t0", "bias"], "output": "t1"}
+            ]
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(g.segments.len(), 1, "bias add must not cut the chain");
+        assert_eq!(g.segments[0].nodes, vec!["c0", "badd"]);
+    }
+
+    #[test]
+    fn depthwise_conv_lowers_with_group_attr() {
+        let g = GraphImport::from_json(
+            r#"{
+            "name": "dw",
+            "inputs": [{"name": "data", "shape": [1, 8, 8, 8]}],
+            "initializers": [{"name": "w0", "shape": [8, 1, 3, 3]}],
+            "nodes": [
+                {"name": "c0", "op": "Conv", "inputs": ["data", "w0"], "output": "t0",
+                 "attrs": {"pad": 1, "group": 8}}
+            ]
+        }"#,
+        )
+        .unwrap();
+        let w = g.segments[0].workload.as_ref().unwrap();
+        assert!(w.layers[0].depthwise);
+        assert_eq!((w.layers[0].k, w.layers[0].c), (8, 8));
+    }
+
+    #[test]
+    fn sequence_input_lowers_gemm_chain() {
+        let g = GraphImport::from_json(
+            r#"{
+            "name": "seq",
+            "inputs": [{"name": "data", "shape": [1, 16, 32]}],
+            "initializers": [{"name": "w0", "shape": [64, 32]}],
+            "nodes": [
+                {"name": "fc", "op": "Gemm", "inputs": ["data", "w0"], "output": "t0"}
+            ]
+        }"#,
+        )
+        .unwrap();
+        let l = &g.segments[0].workload.as_ref().unwrap().layers[0];
+        // [N, S, D] → c = D = 32, y = S = 16, x = 1.
+        assert_eq!((l.k, l.c, l.y, l.x), (64, 32, 16, 1));
+    }
+
+    #[test]
+    fn registration_dedups_identical_segments() {
+        let reg = WorkloadRegistry::new();
+        let g = GraphImport::from_json(LINEAR).unwrap();
+        let names = g.register(&reg).unwrap();
+        assert_eq!(names, vec!["toy.c0"]);
+        assert!(reg.get("toy.c0").is_some());
+        // Re-registering the same import is idempotent.
+        g.register(&reg).unwrap();
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn conflicting_chain_name_registers_nothing() {
+        let reg = WorkloadRegistry::new();
+        reg.register(Workload {
+            name: "toy.c0".into(),
+            layers: vec![crate::workload::conv("other", 4, 4, 4, 4, 1, 1, 1)],
+        })
+        .unwrap();
+        let g = GraphImport::from_json(LINEAR).unwrap();
+        let err = g.register(&reg).unwrap_err().to_string();
+        assert!(err.contains("different layers"), "{err}");
+        assert_eq!(reg.len(), 1, "conflicting import must register nothing");
+    }
+
+    #[test]
+    fn cycle_is_a_typed_error() {
+        let err = GraphImport::from_json(
+            r#"{
+            "name": "cyc",
+            "inputs": [{"name": "data", "shape": [1, 4, 4, 4]}],
+            "initializers": [],
+            "nodes": [
+                {"name": "a", "op": "Relu", "inputs": ["t1"], "output": "t0"},
+                {"name": "b", "op": "Relu", "inputs": ["t0"], "output": "t1"}
+            ]
+        }"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, GraphError::Cycle(_)), "{err}");
+    }
+}

@@ -15,6 +15,7 @@
 #![warn(missing_docs)]
 
 pub mod custom;
+pub mod graph;
 pub mod registry;
 pub mod zoo;
 

@@ -66,6 +66,7 @@ fn two_point_sweep_report_schema_is_stable() {
     let registry = WorkloadRegistry::with_zoo();
     let spec = GridSpec {
         workloads: vec!["vgg16".into()],
+        graphs: Vec::new(),
         batch: 64,
         train_mems: vec![16.0, 32.0],
         interpolate_per_gap: 1,

@@ -1,0 +1,710 @@
+//! Graph-frontend proof layer (DESIGN.md §16): golden-fixture pins for
+//! the four committed model graphs, a property test that segmentation
+//! is the unique branch/join partition, a malformed-graph rejection
+//! battery (typed errors, no panics, no partial registration), and the
+//! import → register → serve round trip on the real serving core.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use dnnfuser::coordinator::service::{BackendChoice, MapperService, ServiceConfig};
+use dnnfuser::coordinator::{MapRequest, Source};
+use dnnfuser::ensure_prop;
+use dnnfuser::eval::generalization::GridSpec;
+use dnnfuser::util::ptest::{check_with, Config, Gen};
+use dnnfuser::workload::graph::{GraphError, GraphImport};
+use dnnfuser::workload::WorkloadRegistry;
+
+const FIXTURES: [&str; 4] = ["resnet18", "resnet50", "bert_base", "mobilenet_v2"];
+
+fn fixture(name: &str) -> String {
+    format!("{}/../examples/graphs/{name}.json", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn import(name: &str) -> GraphImport {
+    GraphImport::from_file(&fixture(name)).expect("committed fixture must import")
+}
+
+/// Find a segment by its registry name.
+fn seg<'a>(g: &'a GraphImport, name: &str) -> &'a dnnfuser::workload::graph::Segment {
+    g.segments
+        .iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("no segment `{name}`"))
+}
+
+fn shape(g: &GraphImport, name: &str, i: usize) -> (usize, usize, usize, usize) {
+    let l = &seg(g, name).workload.as_ref().expect("weighted segment").layers[i];
+    (l.k, l.c, l.y, l.x)
+}
+
+// --- Golden fixtures ----------------------------------------------------
+//
+// The counts and shapes below are derived independently by
+// scripts/gen_graph_fixtures.py (which re-implements shape inference and
+// segmentation in Python); any divergence between the two frontends
+// fails here first.
+
+#[test]
+fn resnet18_fixture_golden() {
+    let g = import("resnet18");
+    assert_eq!(g.name, "resnet18");
+    assert_eq!(g.n_nodes, 48);
+    assert_eq!(g.segments.len(), 20);
+    assert_eq!(g.workloads().count(), 13);
+    assert_eq!(g.weighted_layers(), 21);
+
+    // Head: conv1 + relu + maxpool fold into one 7×7 stride-2 layer.
+    let head = &g.segments[0];
+    assert_eq!(head.name, "resnet18.conv1");
+    assert_eq!(head.nodes.len(), 3);
+    let w = head.workload.as_ref().unwrap();
+    assert_eq!(w.n_layers(), 1);
+    let l = &w.layers[0];
+    assert_eq!((l.k, l.c, l.y, l.x, l.r, l.s, l.stride), (64, 3, 112, 112, 7, 7, 2));
+
+    // A basic-block body: two 3×3 convs, fusable as one chain.
+    let b = seg(&g, "resnet18.l1_b0_conv1").workload.as_ref().unwrap();
+    assert_eq!(b.n_layers(), 2);
+    assert_eq!(shape(&g, "resnet18.l1_b0_conv1", 0), (64, 64, 56, 56));
+
+    // Tail: residual add + relu + gap + fc collapse to the classifier.
+    let t = seg(&g, "resnet18.l4_b1_add");
+    assert_eq!(t.nodes.len(), 4);
+    assert_eq!(t.workload.as_ref().unwrap().n_layers(), 1);
+    assert_eq!(shape(&g, "resnet18.l4_b1_add", 0), (1000, 512, 1, 1));
+
+    // 13 chain names register onto 12 distinct contents: the two
+    // stride-1 l1 blocks are structurally identical and dedup.
+    let reg = WorkloadRegistry::new();
+    let names = g.register(&reg).unwrap();
+    assert_eq!(names.len(), 13);
+    assert_eq!(reg.len(), 12);
+    let (_, h0) = reg.get("resnet18.l1_b0_conv1").unwrap();
+    let (_, h1) = reg.get("resnet18.l1_b1_conv1").unwrap();
+    assert_eq!(h0, h1, "identical blocks must share a content hash");
+}
+
+#[test]
+fn resnet50_fixture_golden() {
+    let g = import("resnet50");
+    assert_eq!(g.n_nodes, 121);
+    assert_eq!(g.segments.len(), 37);
+    assert_eq!(g.workloads().count(), 22);
+    assert_eq!(g.weighted_layers(), 54);
+    assert_eq!(g.segments[0].name, "resnet50.conv1");
+
+    // A bottleneck body is a 3-layer 1×1 → 3×3 → 1×1 chain.
+    let b = seg(&g, "resnet50.l3_b0_conv1").workload.as_ref().unwrap();
+    assert_eq!(b.n_layers(), 3);
+
+    // Every stage-first block carries a projection downsample segment.
+    for d in ["l1_b0_down", "l2_b0_down", "l3_b0_down", "l4_b0_down"] {
+        let s = seg(&g, &format!("resnet50.{d}"));
+        assert_eq!(s.workload.as_ref().unwrap().n_layers(), 1, "{d}");
+    }
+
+    let t = seg(&g, "resnet50.l4_b2_add");
+    assert_eq!(t.nodes.len(), 4);
+    assert_eq!(shape(&g, "resnet50.l4_b2_add", 0), (1000, 2048, 1, 1));
+
+    let reg = WorkloadRegistry::new();
+    assert_eq!(g.register(&reg).unwrap().len(), 22);
+    assert_eq!(reg.len(), 14, "repeated bottlenecks must dedup by content");
+}
+
+#[test]
+fn bert_base_fixture_golden() {
+    let g = import("bert_base");
+    assert_eq!(g.n_nodes, 146);
+    assert_eq!(g.segments.len(), 84);
+    assert_eq!(g.workloads().count(), 61);
+    assert_eq!(g.weighted_layers(), 73);
+
+    // Q/K/V projections are single-Gemm segments on the [N,S,D] input.
+    for p in ["h0_q", "h0_k", "h0_v"] {
+        let name = format!("bert_base.{p}");
+        assert_eq!(seg(&g, &name).nodes.len(), 1, "{p}");
+        assert_eq!(shape(&g, &name, 0), (768, 768, 128, 1), "{p}");
+    }
+    // Attention joins q/k/v and folds; its segment carries the output
+    // projection as the weighted layer.
+    let a = seg(&g, "bert_base.h0_attn");
+    assert_eq!(a.nodes.len(), 2);
+    assert_eq!(shape(&g, "bert_base.h0_attn", 0), (768, 768, 128, 1));
+    // The FFN pair is the fusion-worthy chain: 768 → 3072 → 768.
+    let f = seg(&g, "bert_base.h0_fc1");
+    assert_eq!(f.nodes.len(), 3);
+    assert_eq!(f.workload.as_ref().unwrap().n_layers(), 2);
+    assert_eq!(shape(&g, "bert_base.h0_fc1", 0), (3072, 768, 128, 1));
+    assert_eq!(shape(&g, "bert_base.h0_fc1", 1), (768, 3072, 128, 1));
+    // Tail: add + layernorm + gap + classifier head.
+    let t = seg(&g, "bert_base.h11_add2");
+    assert_eq!(t.nodes.len(), 4);
+    assert_eq!(shape(&g, "bert_base.h11_add2", 0), (2, 768, 1, 1));
+
+    // 12 identical encoder blocks: 61 names, only 3 distinct workloads
+    // (the 768×768 Gemm, the FFN pair, the classifier).
+    let reg = WorkloadRegistry::new();
+    assert_eq!(g.register(&reg).unwrap().len(), 61);
+    assert_eq!(reg.len(), 3);
+}
+
+#[test]
+fn mobilenet_v2_fixture_golden() {
+    let g = import("mobilenet_v2");
+    assert_eq!(g.n_nodes, 99);
+    assert_eq!(g.segments.len(), 21);
+    assert_eq!(g.workloads().count(), 16);
+    assert_eq!(g.weighted_layers(), 53);
+
+    // Head chain: stem conv + the two residual-free inverted bottleneck
+    // blocks run linearly — 10 nodes folding to 6 weighted layers.
+    let head = &g.segments[0];
+    assert_eq!(head.name, "mobilenet_v2.conv1");
+    assert_eq!(head.nodes.len(), 10);
+    let w = head.workload.as_ref().unwrap();
+    assert_eq!(w.n_layers(), 6);
+    assert_eq!(shape(&g, "mobilenet_v2.conv1", 0), (32, 3, 112, 112));
+    assert!(w.layers[1].depthwise, "b0 depthwise must lower with the flag");
+    assert_eq!(shape(&g, "mobilenet_v2.conv1", 5), (24, 96, 56, 56));
+
+    // Tail chain: last residual add through b16, the 1280 head, gap and
+    // classifier — 10 nodes, 5 weighted layers.
+    let t = seg(&g, "mobilenet_v2.b15_add");
+    assert_eq!(t.nodes.len(), 10);
+    let tw = t.workload.as_ref().unwrap();
+    assert_eq!(tw.n_layers(), 5);
+    assert_eq!(shape(&g, "mobilenet_v2.b15_add", 4), (1000, 1280, 1, 1));
+
+    let reg = WorkloadRegistry::new();
+    assert_eq!(g.register(&reg).unwrap().len(), 16);
+    assert_eq!(reg.len(), 11, "repeated inverted bottlenecks must dedup");
+}
+
+#[test]
+fn reimport_is_deterministic_and_fixtures_coexist() {
+    let shared = WorkloadRegistry::with_zoo();
+    let zoo_len = shared.len();
+    for m in FIXTURES {
+        let a = import(m);
+        let b = import(m);
+        let ha: Vec<(String, u64)> =
+            a.workloads().map(|w| (w.name.clone(), w.content_hash())).collect();
+        let hb: Vec<(String, u64)> =
+            b.workloads().map(|w| (w.name.clone(), w.content_hash())).collect();
+        assert_eq!(ha, hb, "{m}: re-import changed chain content hashes");
+
+        // Registering both imports is idempotent.
+        let reg = WorkloadRegistry::new();
+        a.register(&reg).unwrap();
+        let n = reg.len();
+        b.register(&reg).unwrap();
+        assert_eq!(reg.len(), n, "{m}: re-register must be a no-op");
+
+        a.register(&shared).unwrap();
+    }
+    // All four models share one registry alongside the zoo. Distinct
+    // contents: 12 + 14 + 3 + 11, minus one — the resnet18 and resnet50
+    // 7×7 stems are the same layer, so content addressing collapses
+    // them across models.
+    assert_eq!(shared.len() - zoo_len, 39);
+    // Every chain resolves by its qualified name.
+    for (m, chain) in [
+        ("resnet18", "resnet18.l4_b0_conv1"),
+        ("resnet50", "resnet50.l2_b0_down"),
+        ("bert_base", "bert_base.h7_fc1"),
+        ("mobilenet_v2", "mobilenet_v2.b9_exp"),
+    ] {
+        assert!(shared.get(chain).is_some(), "{m}: `{chain}` must resolve");
+    }
+}
+
+#[test]
+fn committed_grids_resolve_every_workload_after_graph_registration() {
+    // The CI and nightly sweep grids name graph chains as workloads;
+    // importing the grids' own `graphs` list must make every name
+    // resolvable — the sweep depends on exactly this.
+    for grid in ["ci_grid", "nightly_grid"] {
+        let path = format!("{}/../examples/{grid}.json", env!("CARGO_MANIFEST_DIR"));
+        let spec = GridSpec::from_file(&path).unwrap();
+        let reg = WorkloadRegistry::with_zoo();
+        let n = spec.register_graphs(&reg).unwrap();
+        assert!(n > 0, "{grid}: graphs registered no chains");
+        for w in &spec.workloads {
+            assert!(reg.get(w).is_some(), "{grid}: workload `{w}` does not resolve");
+        }
+    }
+}
+
+// --- Property: segmentation is the branch/join partition ----------------
+
+struct GNode {
+    name: String,
+    op: &'static str,
+    inputs: Vec<String>,
+    output: String,
+    attrs: Option<&'static str>,
+}
+
+/// Random residual-style graph: a chain of blocks, each a pointwise
+/// conv, a folded activation, a folded bias-add, or a residual diamond
+/// (fork → conv → join). Emitted in declaration = topological order.
+fn gen_graph(g: &mut Gen) -> (String, Vec<GNode>, HashSet<String>) {
+    const CH: [usize; 3] = [4, 8, 16];
+    let mut nodes: Vec<GNode> = Vec::new();
+    let mut inits: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut c = CH[g.rng.index(CH.len())];
+    let c0 = c;
+    let mut cur = "data".to_string();
+    let mut t = 0usize;
+    fn fresh(t: &mut usize) -> String {
+        let s = format!("t{t}");
+        *t += 1;
+        s
+    }
+    let blocks = 1 + g.rng.index(g.size.clamp(1, 20));
+    for bi in 0..blocks {
+        match g.rng.index(4) {
+            0 => {
+                // Pointwise conv, possibly changing channel count.
+                let k = CH[g.rng.index(CH.len())];
+                let w = format!("w{bi}");
+                inits.push((w.clone(), vec![k, c, 1, 1]));
+                let out = fresh(&mut t);
+                nodes.push(GNode {
+                    name: format!("n{bi}"),
+                    op: "Conv",
+                    inputs: vec![cur.clone(), w],
+                    output: out.clone(),
+                    attrs: None,
+                });
+                cur = out;
+                c = k;
+            }
+            1 => {
+                // Folded unary — must extend, never cut, a segment.
+                let out = fresh(&mut t);
+                nodes.push(GNode {
+                    name: format!("n{bi}"),
+                    op: "Relu",
+                    inputs: vec![cur.clone()],
+                    output: out.clone(),
+                    attrs: None,
+                });
+                cur = out;
+            }
+            2 => {
+                // Residual diamond: the fork tensor gets two consumers
+                // and the Add reads two activations — two forced cuts.
+                let w = format!("w{bi}");
+                inits.push((w.clone(), vec![c, c, 3, 3]));
+                let mid = fresh(&mut t);
+                nodes.push(GNode {
+                    name: format!("n{bi}a"),
+                    op: "Conv",
+                    inputs: vec![cur.clone(), w],
+                    output: mid.clone(),
+                    attrs: Some(r#"{"pad": 1}"#),
+                });
+                let out = fresh(&mut t);
+                nodes.push(GNode {
+                    name: format!("n{bi}b"),
+                    op: "Add",
+                    inputs: vec![mid, cur.clone()],
+                    output: out.clone(),
+                    attrs: None,
+                });
+                cur = out;
+            }
+            _ => {
+                // Bias add: one activation + one initializer folds.
+                let b = format!("w{bi}");
+                inits.push((b.clone(), vec![c]));
+                let out = fresh(&mut t);
+                nodes.push(GNode {
+                    name: format!("n{bi}"),
+                    op: "Add",
+                    inputs: vec![cur.clone(), b],
+                    output: out.clone(),
+                    attrs: None,
+                });
+                cur = out;
+            }
+        }
+    }
+    let init_names: HashSet<String> = inits.iter().map(|(n, _)| n.clone()).collect();
+    let init_parts: Vec<String> = inits
+        .iter()
+        .map(|(n, dims)| format!("{{\"name\": \"{n}\", \"shape\": {dims:?}}}"))
+        .collect();
+    let mut node_parts = Vec::new();
+    for n in &nodes {
+        let inputs: Vec<String> = n.inputs.iter().map(|t| format!("\"{t}\"")).collect();
+        let mut part = format!(
+            "{{\"name\": \"{}\", \"op\": \"{}\", \"inputs\": [{}], \"output\": \"{}\"",
+            n.name,
+            n.op,
+            inputs.join(", "),
+            n.output
+        );
+        if let Some(a) = n.attrs {
+            part.push_str(&format!(", \"attrs\": {a}"));
+        }
+        part.push('}');
+        node_parts.push(part);
+    }
+    let json = format!(
+        "{{\"name\": \"p\", \"inputs\": [{{\"name\": \"data\", \"shape\": [1, {c0}, 8, 8]}}], \
+         \"initializers\": [{}], \"nodes\": [{}]}}",
+        init_parts.join(", "),
+        node_parts.join(", ")
+    );
+    (json, nodes, init_names)
+}
+
+/// Independent reference segmentation: a node continues its producer's
+/// segment iff it has exactly one activation input and that tensor has
+/// exactly one consumer (the module-doc link rule, restated from
+/// scratch rather than shared with the implementation).
+fn reference_segments(nodes: &[GNode], inits: &HashSet<String>) -> Vec<Vec<String>> {
+    let produced: HashMap<&str, usize> =
+        nodes.iter().enumerate().map(|(i, n)| (n.output.as_str(), i)).collect();
+    let mut uses: HashMap<&str, usize> = HashMap::new();
+    for n in nodes {
+        for i in n.inputs.iter().filter(|i| !inits.contains(*i)) {
+            *uses.entry(i.as_str()).or_insert(0) += 1;
+        }
+    }
+    let mut segs: Vec<Vec<usize>> = Vec::new();
+    let mut seg_of: HashMap<usize, usize> = HashMap::new();
+    for (i, n) in nodes.iter().enumerate() {
+        let acts: Vec<&str> =
+            n.inputs.iter().filter(|i| !inits.contains(*i)).map(|s| s.as_str()).collect();
+        let pred = match acts.as_slice() {
+            [only] if uses[only] == 1 => produced.get(only).copied(),
+            _ => None,
+        };
+        match pred {
+            Some(p) => {
+                let s = seg_of[&p];
+                seg_of.insert(i, s);
+                segs[s].push(i);
+            }
+            None => {
+                seg_of.insert(i, segs.len());
+                segs.push(vec![i]);
+            }
+        }
+    }
+    segs.into_iter()
+        .map(|s| s.into_iter().map(|i| nodes[i].name.clone()).collect())
+        .collect()
+}
+
+#[test]
+fn random_graphs_segment_into_the_unique_partition() {
+    check_with(
+        &Config { cases: 96, max_size: 20, ..Default::default() },
+        "graph segmentation partition",
+        |g| {
+            let (json, nodes, inits) = gen_graph(g);
+            let imp = GraphImport::from_json(&json)
+                .map_err(|e| format!("import failed: {e}\n{json}"))?;
+            ensure_prop!(imp.n_nodes == nodes.len(), "node count drifted");
+
+            // Partition: every node in exactly one segment.
+            let mut seen = HashSet::new();
+            for s in &imp.segments {
+                for n in &s.nodes {
+                    ensure_prop!(seen.insert(n.clone()), "node `{n}` appears in two segments");
+                }
+            }
+            ensure_prop!(
+                seen.len() == nodes.len(),
+                "partition covers {} of {} nodes",
+                seen.len(),
+                nodes.len()
+            );
+
+            // Cuts exactly at forks and joins: the import must equal the
+            // independently computed reference partition.
+            let want = reference_segments(&nodes, &inits);
+            let got: Vec<Vec<String>> = imp.segments.iter().map(|s| s.nodes.clone()).collect();
+            ensure_prop!(got == want, "segmentation differs:\n got {got:?}\nwant {want:?}");
+
+            // Determinism: re-import gives identical chains and hashes.
+            let imp2 = GraphImport::from_json(&json).map_err(|e| e.to_string())?;
+            let h1: Vec<(String, u64)> =
+                imp.workloads().map(|w| (w.name.clone(), w.content_hash())).collect();
+            let h2: Vec<(String, u64)> =
+                imp2.workloads().map(|w| (w.name.clone(), w.content_hash())).collect();
+            ensure_prop!(h1 == h2, "re-import changed content hashes");
+
+            // Registration is idempotent over re-imports.
+            let reg = WorkloadRegistry::new();
+            imp.register(&reg).map_err(|e| format!("register: {e}"))?;
+            let len = reg.len();
+            imp2.register(&reg).map_err(|e| format!("re-register: {e}"))?;
+            ensure_prop!(reg.len() == len, "re-register changed the registry");
+            Ok(())
+        },
+    );
+}
+
+// --- Malformed-graph rejection battery ----------------------------------
+
+fn import_err(json: &str) -> GraphError {
+    GraphImport::from_json(json).expect_err("malformed graph must be rejected")
+}
+
+#[test]
+fn non_json_text_is_a_json_error() {
+    assert!(matches!(import_err("{nope"), GraphError::Json(_)));
+}
+
+#[test]
+fn missing_fields_and_zero_dims_are_schema_errors() {
+    // No `name`.
+    let e = import_err(r#"{"inputs": [], "initializers": [], "nodes": []}"#);
+    assert!(matches!(e, GraphError::Schema(_)), "{e}");
+    // Zero dimension in an input shape.
+    let e = import_err(
+        r#"{"name": "z", "inputs": [{"name": "d", "shape": [1, 0, 8, 8]}],
+            "initializers": [], "nodes": [
+            {"name": "r", "op": "Relu", "inputs": ["d"], "output": "t0"}]}"#,
+    );
+    assert!(matches!(e, GraphError::Schema(_)), "{e}");
+    // Empty node list.
+    let e = import_err(
+        r#"{"name": "z", "inputs": [{"name": "d", "shape": [1, 4, 8, 8]}],
+            "initializers": [], "nodes": []}"#,
+    );
+    assert!(matches!(e, GraphError::Schema(_)), "{e}");
+}
+
+#[test]
+fn duplicate_names_are_duplicate_errors() {
+    // Two nodes with one name.
+    let e = import_err(
+        r#"{"name": "d", "inputs": [{"name": "d0", "shape": [1, 4, 8, 8]}],
+            "initializers": [], "nodes": [
+            {"name": "a", "op": "Relu", "inputs": ["d0"], "output": "t0"},
+            {"name": "a", "op": "Relu", "inputs": ["t0"], "output": "t1"}]}"#,
+    );
+    assert!(matches!(e, GraphError::Duplicate(_)), "{e}");
+    // Two nodes producing one tensor.
+    let e = import_err(
+        r#"{"name": "d", "inputs": [{"name": "d0", "shape": [1, 4, 8, 8]}],
+            "initializers": [], "nodes": [
+            {"name": "a", "op": "Relu", "inputs": ["d0"], "output": "t0"},
+            {"name": "b", "op": "Relu", "inputs": ["t0"], "output": "t0"}]}"#,
+    );
+    assert!(matches!(e, GraphError::Duplicate(_)), "{e}");
+    // A node output shadowing a graph input.
+    let e = import_err(
+        r#"{"name": "d", "inputs": [{"name": "d0", "shape": [1, 4, 8, 8]}],
+            "initializers": [], "nodes": [
+            {"name": "a", "op": "Relu", "inputs": ["d0"], "output": "d0"}]}"#,
+    );
+    assert!(matches!(e, GraphError::Duplicate(_)), "{e}");
+}
+
+#[test]
+fn dangling_reference_names_the_node_and_tensor() {
+    let e = import_err(
+        r#"{"name": "d", "inputs": [{"name": "d0", "shape": [1, 4, 8, 8]}],
+            "initializers": [], "nodes": [
+            {"name": "a", "op": "Relu", "inputs": ["ghost"], "output": "t0"}]}"#,
+    );
+    match e {
+        GraphError::Dangling { node, tensor } => {
+            assert_eq!(node, "a");
+            assert_eq!(tensor, "ghost");
+        }
+        other => panic!("expected Dangling, got {other}"),
+    }
+}
+
+#[test]
+fn three_node_cycle_is_a_cycle_error() {
+    let e = import_err(
+        r#"{"name": "c", "inputs": [{"name": "d0", "shape": [1, 4, 8, 8]}],
+            "initializers": [], "nodes": [
+            {"name": "a", "op": "Relu", "inputs": ["t2"], "output": "t0"},
+            {"name": "b", "op": "Relu", "inputs": ["t0"], "output": "t1"},
+            {"name": "c", "op": "Relu", "inputs": ["t1"], "output": "t2"}]}"#,
+    );
+    assert!(matches!(e, GraphError::Cycle(_)), "{e}");
+}
+
+#[test]
+fn unsupported_ops_are_named_not_guessed() {
+    let e = import_err(
+        r#"{"name": "u", "inputs": [{"name": "d0", "shape": [1, 4, 8, 8]}],
+            "initializers": [], "nodes": [
+            {"name": "up", "op": "Resize", "inputs": ["d0"], "output": "t0"}]}"#,
+    );
+    match e {
+        GraphError::UnsupportedOp { node, op } => {
+            assert_eq!(node, "up");
+            assert_eq!(op, "Resize");
+        }
+        other => panic!("expected UnsupportedOp, got {other}"),
+    }
+    // Grouped convs that are not full depthwise have no 6-loop lowering.
+    let e = import_err(
+        r#"{"name": "u", "inputs": [{"name": "d0", "shape": [1, 8, 8, 8]}],
+            "initializers": [{"name": "w", "shape": [8, 4, 3, 3]}], "nodes": [
+            {"name": "gc", "op": "Conv", "inputs": ["d0", "w"], "output": "t0",
+             "attrs": {"pad": 1, "group": 2}}]}"#,
+    );
+    match e {
+        GraphError::UnsupportedOp { node, op } => {
+            assert_eq!(node, "gc");
+            assert!(op.starts_with("Conv(group=2"), "{op}");
+        }
+        other => panic!("expected UnsupportedOp, got {other}"),
+    }
+}
+
+#[test]
+fn shape_mismatches_are_typed_per_node() {
+    // Conv weight disagrees with activation channels.
+    let e = import_err(
+        r#"{"name": "s", "inputs": [{"name": "d0", "shape": [1, 8, 8, 8]}],
+            "initializers": [{"name": "w", "shape": [16, 4, 3, 3]}], "nodes": [
+            {"name": "c0", "op": "Conv", "inputs": ["d0", "w"], "output": "t0"}]}"#,
+    );
+    assert!(matches!(e, GraphError::ShapeMismatch { .. }), "{e}");
+    // Join operands disagree.
+    let e = import_err(
+        r#"{"name": "s", "inputs": [
+            {"name": "a", "shape": [1, 8, 8, 8]}, {"name": "b", "shape": [1, 4, 8, 8]}],
+            "initializers": [], "nodes": [
+            {"name": "j", "op": "Add", "inputs": ["a", "b"], "output": "t0"}]}"#,
+    );
+    assert!(matches!(e, GraphError::ShapeMismatch { .. }), "{e}");
+    // Gemm contracts the wrong feature width.
+    let e = import_err(
+        r#"{"name": "s", "inputs": [{"name": "d0", "shape": [1, 16, 32]}],
+            "initializers": [{"name": "w", "shape": [64, 48]}], "nodes": [
+            {"name": "fc", "op": "Gemm", "inputs": ["d0", "w"], "output": "t0"}]}"#,
+    );
+    assert!(matches!(e, GraphError::ShapeMismatch { .. }), "{e}");
+    // Kernel exceeds the padded input.
+    let e = import_err(
+        r#"{"name": "s", "inputs": [{"name": "d0", "shape": [1, 4, 8, 8]}],
+            "initializers": [{"name": "w", "shape": [4, 4, 9, 9]}], "nodes": [
+            {"name": "c0", "op": "Conv", "inputs": ["d0", "w"], "output": "t0"}]}"#,
+    );
+    assert!(matches!(e, GraphError::ShapeMismatch { .. }), "{e}");
+}
+
+#[test]
+fn non_initializer_weight_is_a_schema_error() {
+    // The conv weight is a graph *input* (an activation), not an
+    // initializer — the frontend requires static weights.
+    let e = import_err(
+        r#"{"name": "s", "inputs": [
+            {"name": "d0", "shape": [1, 4, 8, 8]}, {"name": "w", "shape": [4, 4, 1, 1]}],
+            "initializers": [], "nodes": [
+            {"name": "c0", "op": "Conv", "inputs": ["d0", "w"], "output": "t0"}]}"#,
+    );
+    assert!(matches!(e, GraphError::Schema(_)), "{e}");
+}
+
+#[test]
+fn over_deep_segment_is_a_chain_error() {
+    // 70 foldless convs in one segment exceed the decoder's T_MAX − 1
+    // layer slots; the importer must surface the depth gate as a typed
+    // chain error, not register an unservable workload.
+    let mut nodes = String::new();
+    let mut inits = String::new();
+    let mut prev = "d0".to_string();
+    for i in 0..70 {
+        if i > 0 {
+            nodes.push_str(", ");
+            inits.push_str(", ");
+        }
+        inits.push_str(&format!("{{\"name\": \"w{i}\", \"shape\": [4, 4, 1, 1]}}"));
+        nodes.push_str(&format!(
+            "{{\"name\": \"c{i}\", \"op\": \"Conv\", \
+             \"inputs\": [\"{prev}\", \"w{i}\"], \"output\": \"t{i}\"}}"
+        ));
+        prev = format!("t{i}");
+    }
+    let json = format!(
+        r#"{{"name": "deep", "inputs": [{{"name": "d0", "shape": [1, 4, 8, 8]}}],
+            "initializers": [{inits}], "nodes": [{nodes}]}}"#
+    );
+    let e = GraphImport::from_json(&json).expect_err("over-deep chain must be rejected");
+    match e {
+        GraphError::Chain { chain, detail } => {
+            assert_eq!(chain, "deep.c0");
+            assert!(detail.contains("at most"), "{detail}");
+        }
+        other => panic!("expected Chain, got {other}"),
+    }
+}
+
+// --- Round trip: import → register → serve ------------------------------
+
+#[test]
+fn fixture_chains_serve_end_to_end_and_bad_imports_do_not_poison() {
+    // All four model graphs feed one registry, which backs a live
+    // serving core (search backend — artifact-free, teacher-guaranteed
+    // feasibility).
+    let reg = Arc::new(WorkloadRegistry::with_zoo());
+    for m in FIXTURES {
+        import(m).register(&reg).unwrap();
+    }
+    let mut cfg = ServiceConfig::new("/nonexistent/artifacts");
+    cfg.backend = BackendChoice::Search;
+    cfg.fallback_budget = 300;
+    cfg.batch_window = Duration::from_millis(5);
+    cfg.registry = Arc::clone(&reg);
+    let svc = MapperService::spawn(cfg).expect("search spawn must succeed");
+    let client = svc.client.clone();
+
+    for (chain, n_layers) in [
+        ("resnet18.l1_b0_conv1", 2usize),
+        ("resnet50.l3_b0_conv1", 3),
+        ("bert_base.h0_fc1", 2),
+        ("mobilenet_v2.conv1", 6),
+    ] {
+        let r = client.map(MapRequest::new(chain, 8, 32.0)).unwrap();
+        assert_eq!(r.source, Source::Search, "{chain}");
+        assert_eq!(r.strategy.values.len(), n_layers + 1, "{chain}");
+        assert!(r.valid, "{chain}: mapping must satisfy the 32 MB condition");
+        assert!(r.speedup >= 1.0, "{chain}: speedup {}", r.speedup);
+        assert!(r.act_usage_mb <= 32.0 + 1e-9, "{chain}: act {}", r.act_usage_mb);
+    }
+
+    // A conflicting graph import — one fresh chain plus one whose name
+    // collides with a fixture chain under different layers — must
+    // register *nothing*: neither the conflict nor the fresh chain.
+    let n_before = reg.len();
+    let conflict = GraphImport::from_json(
+        r#"{"name": "resnet18",
+            "inputs": [{"name": "data", "shape": [1, 4, 8, 8]}],
+            "initializers": [
+                {"name": "wa", "shape": [4, 4, 1, 1]},
+                {"name": "wb", "shape": [4, 4, 1, 1]}],
+            "nodes": [
+                {"name": "c_new", "op": "Conv", "inputs": ["data", "wa"], "output": "t0"},
+                {"name": "l1_b0_conv1", "op": "Conv", "inputs": ["t0", "wb"], "output": "t1"},
+                {"name": "fork2", "op": "Relu", "inputs": ["t0"], "output": "t2"}]}"#,
+    )
+    .unwrap();
+    let err = conflict.register(&reg).unwrap_err().to_string();
+    assert!(err.contains("different layers"), "{err}");
+    assert_eq!(reg.len(), n_before, "conflicting import registered chains");
+    assert!(reg.get("resnet18.c_new").is_none(), "partial registration leaked");
+
+    // The service keeps serving; the repeat request hits the cache.
+    let again = client.map(MapRequest::new("resnet18.l1_b0_conv1", 8, 32.0)).unwrap();
+    assert_eq!(again.source, Source::Cache);
+    svc.shutdown();
+}

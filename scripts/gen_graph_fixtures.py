@@ -1,0 +1,347 @@
+#!/usr/bin/env python3
+"""Generate the committed graph-import fixtures (examples/graphs/*.json).
+
+Emits ONNX-style graph JSONs (the `workload::graph` schema: inputs /
+initializers / nodes with single outputs, isotropic `stride`/`pad`
+attributes) for four reference networks:
+
+  - resnet18      basic residual blocks, strided downsample branches
+  - resnet50      bottleneck blocks (1x1 / 3x3 / 1x1) + projection shortcuts
+  - bert_base     12 post-LN transformer blocks (Gemm/Attention/Add/LN)
+  - mobilenet_v2  inverted residual blocks with depthwise (grouped) convs
+
+The script also re-implements the importer's shape inference and
+segment-splitting rule (a node links to its producer iff it is the sole
+activation consumer and has a sole activation input) and prints, per
+fixture, the chain structure the Rust importer must reproduce — the
+golden constants pinned by rust/tests/graph_import.rs come from this
+summary. If the two implementations ever disagree, the golden tests
+fail, which is exactly the point.
+
+Usage: python3 scripts/gen_graph_fixtures.py [--out-dir examples/graphs]
+"""
+
+import argparse
+import json
+import os
+
+# ---------------------------------------------------------------- builders
+
+
+class G:
+    """Tiny graph builder: tracks tensors, emits schema JSON."""
+
+    def __init__(self, name, input_shape):
+        self.name = name
+        self.inputs = [{"name": "data", "shape": list(input_shape)}]
+        self.initializers = []
+        self.nodes = []
+        self._names = set()
+
+    def init(self, name, shape):
+        self.initializers.append({"name": name, "shape": list(shape)})
+        return name
+
+    def node(self, name, op, inputs, attrs=None):
+        assert name not in self._names, f"duplicate node {name}"
+        self._names.add(name)
+        n = {"name": name, "op": op, "inputs": list(inputs), "output": f"{name}.out"}
+        if attrs:
+            n["attrs"] = attrs
+        self.nodes.append(n)
+        return n["output"]
+
+    def conv(self, name, x, c_in, c_out, k, stride=1, pad=0, group=1):
+        if group == 1:
+            w = self.init(f"{name}.w", [c_out, c_in, k, k])
+        else:
+            assert group == c_in == c_out, "only depthwise groups supported"
+            w = self.init(f"{name}.w", [c_out, 1, k, k])
+        attrs = {}
+        if stride != 1:
+            attrs["stride"] = stride
+        if pad != 0:
+            attrs["pad"] = pad
+        if group != 1:
+            attrs["group"] = group
+        return self.node(name, "Conv", [x, w], attrs or None)
+
+    def gemm(self, name, x, f_in, f_out):
+        w = self.init(f"{name}.w", [f_out, f_in])
+        return self.node(name, "Gemm", [x, w])
+
+    def to_json(self):
+        return {
+            "name": self.name,
+            "inputs": self.inputs,
+            "initializers": self.initializers,
+            "nodes": self.nodes,
+        }
+
+
+# ---------------------------------------------------------------- networks
+
+
+def resnet_basic(g, tag, x, c_in, c_out, stride):
+    """BasicBlock: 3x3 / 3x3 + identity (or 1x1 projection) shortcut."""
+    identity = x
+    h = g.conv(f"{tag}_conv1", x, c_in, c_out, 3, stride=stride, pad=1)
+    h = g.node(f"{tag}_relu1", "Relu", [h])
+    h = g.conv(f"{tag}_conv2", h, c_out, c_out, 3, pad=1)
+    if stride != 1 or c_in != c_out:
+        identity = g.conv(f"{tag}_down", x, c_in, c_out, 1, stride=stride)
+    h = g.node(f"{tag}_add", "Add", [h, identity])
+    return g.node(f"{tag}_relu2", "Relu", [h])
+
+
+def resnet_bottleneck(g, tag, x, c_in, mid, c_out, stride):
+    """Bottleneck: 1x1 reduce / 3x3 / 1x1 expand + projection shortcut."""
+    identity = x
+    h = g.conv(f"{tag}_conv1", x, c_in, mid, 1)
+    h = g.node(f"{tag}_relu1", "Relu", [h])
+    h = g.conv(f"{tag}_conv2", h, mid, mid, 3, stride=stride, pad=1)
+    h = g.node(f"{tag}_relu2", "Relu", [h])
+    h = g.conv(f"{tag}_conv3", h, mid, c_out, 1)
+    if stride != 1 or c_in != c_out:
+        identity = g.conv(f"{tag}_down", x, c_in, c_out, 1, stride=stride)
+    h = g.node(f"{tag}_add", "Add", [h, identity])
+    return g.node(f"{tag}_relu3", "Relu", [h])
+
+
+def build_resnet18():
+    g = G("resnet18", [1, 3, 224, 224])
+    x = g.conv("conv1", "data", 3, 64, 7, stride=2, pad=3)
+    x = g.node("relu1", "Relu", [x])
+    x = g.node("pool1", "MaxPool", [x], {"kernel": 3, "stride": 2, "pad": 1})
+    c_in = 64
+    for si, (c_out, stride) in enumerate([(64, 1), (128, 2), (256, 2), (512, 2)], 1):
+        for bi in range(2):
+            x = resnet_basic(g, f"l{si}_b{bi}", x, c_in, c_out, stride if bi == 0 else 1)
+            c_in = c_out
+    x = g.node("gap", "GlobalAveragePool", [x])
+    g.gemm("fc", x, 512, 1000)
+    return g
+
+
+def build_resnet50():
+    g = G("resnet50", [1, 3, 224, 224])
+    x = g.conv("conv1", "data", 3, 64, 7, stride=2, pad=3)
+    x = g.node("relu1", "Relu", [x])
+    x = g.node("pool1", "MaxPool", [x], {"kernel": 3, "stride": 2, "pad": 1})
+    c_in = 64
+    stages = [(64, 256, 3, 1), (128, 512, 4, 2), (256, 1024, 6, 2), (512, 2048, 3, 2)]
+    for si, (mid, c_out, blocks, stride) in enumerate(stages, 1):
+        for bi in range(blocks):
+            x = resnet_bottleneck(
+                g, f"l{si}_b{bi}", x, c_in, mid, c_out, stride if bi == 0 else 1
+            )
+            c_in = c_out
+    x = g.node("gap", "GlobalAveragePool", [x])
+    g.gemm("fc", x, 2048, 1000)
+    return g
+
+
+def build_bert_base():
+    seq, hidden, inter, blocks = 128, 768, 3072, 12
+    g = G("bert_base", [1, seq, hidden])
+    x = "data"
+    for b in range(blocks):
+        t = f"h{b}"
+        q = g.gemm(f"{t}_q", x, hidden, hidden)
+        k = g.gemm(f"{t}_k", x, hidden, hidden)
+        v = g.gemm(f"{t}_v", x, hidden, hidden)
+        a = g.node(f"{t}_attn", "Attention", [q, k, v])
+        p = g.gemm(f"{t}_proj", a, hidden, hidden)
+        h = g.node(f"{t}_add1", "Add", [p, x])
+        scale1 = g.init(f"{t}_ln1.scale", [hidden])
+        bias1 = g.init(f"{t}_ln1.bias", [hidden])
+        h = g.node(f"{t}_ln1", "LayerNormalization", [h, scale1, bias1])
+        f1 = g.gemm(f"{t}_fc1", h, hidden, inter)
+        f1 = g.node(f"{t}_gelu", "Gelu", [f1])
+        f2 = g.gemm(f"{t}_fc2", f1, inter, hidden)
+        h2 = g.node(f"{t}_add2", "Add", [f2, h])
+        scale2 = g.init(f"{t}_ln2.scale", [hidden])
+        bias2 = g.init(f"{t}_ln2.bias", [hidden])
+        x = g.node(f"{t}_ln2", "LayerNormalization", [h2, scale2, bias2])
+    x = g.node("gap", "GlobalAveragePool", [x])
+    g.gemm("cls", x, hidden, 2)
+    return g
+
+
+def build_mobilenet_v2():
+    g = G("mobilenet_v2", [1, 3, 224, 224])
+    x = g.conv("conv1", "data", 3, 32, 3, stride=2, pad=1)
+    x = g.node("conv1_clip", "Clip", [x])
+    c_in = 32
+    # (expansion t, out channels, repeats, first stride) — the standard table.
+    settings = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ]
+    bi = 0
+    for t, c_out, n, s in settings:
+        for i in range(n):
+            stride = s if i == 0 else 1
+            tag = f"b{bi}"
+            bi += 1
+            identity = x
+            hidden = c_in * t
+            h = x
+            if t != 1:
+                h = g.conv(f"{tag}_exp", h, c_in, hidden, 1)
+                h = g.node(f"{tag}_exp_clip", "Clip", [h])
+            h = g.conv(f"{tag}_dw", h, hidden, hidden, 3, stride=stride, pad=1, group=hidden)
+            h = g.node(f"{tag}_dw_clip", "Clip", [h])
+            h = g.conv(f"{tag}_proj", h, hidden, c_out, 1)
+            if stride == 1 and c_in == c_out:
+                h = g.node(f"{tag}_add", "Add", [h, identity])
+            x = h
+            c_in = c_out
+    x = g.conv("head", x, 320, 1280, 1)
+    x = g.node("head_clip", "Clip", [x])
+    x = g.node("gap", "GlobalAveragePool", [x])
+    g.gemm("fc", x, 1280, 1000)
+    return g
+
+
+# ------------------------------------------------- reference import summary
+
+WEIGHTED = {"Conv", "Gemm", "MatMul"}
+
+
+def strip_batch(shape):
+    dims = shape[1:]
+    if len(dims) == 3:  # [C, H, W]
+        return (dims[0], dims[1], dims[2])
+    if len(dims) == 2:  # [S, D] → c = D, y = S
+        return (dims[1], dims[0], 1)
+    if len(dims) == 1:  # [D]
+        return (dims[0], 1, 1)
+    raise ValueError(f"unsupported rank {len(shape)}")
+
+
+def summarize(doc):
+    """Re-implement the importer (shape inference + segmentation)."""
+    inits = {i["name"]: i["shape"] for i in doc["initializers"]}
+    shapes = {i["name"]: strip_batch(i["shape"]) for i in doc["inputs"]}
+    nodes = doc["nodes"]
+    producer = {n["output"]: n["name"] for n in nodes}
+    act_inputs = {}
+    consumers = {}
+    for n in nodes:
+        acts = [t for t in n["inputs"] if t not in inits]
+        act_inputs[n["name"]] = acts
+        for t in acts:
+            consumers[t] = consumers.get(t, 0) + 1
+
+    layers = {}  # node name → lowered layer tuple
+    for n in nodes:  # fixtures are emitted in topo order
+        name, op, a = n["name"], n["op"], n.get("attrs", {})
+        acts = act_inputs[name]
+        c, y, x = shapes[acts[0]]
+        if op == "Conv":
+            w = inits[n["inputs"][1]]
+            kk, cpg, r, s = w
+            stride, pad, group = a.get("stride", 1), a.get("pad", 0), a.get("group", 1)
+            dw = group != 1
+            if dw:
+                assert group == c == kk and cpg == 1, name
+            else:
+                assert cpg == c, name
+            yo = (y + 2 * pad - r) // stride + 1
+            xo = (x + 2 * pad - s) // stride + 1
+            layers[name] = (kk, c, yo, xo, r, s, stride, dw)
+            out = (kk, yo, xo)
+        elif op in ("Gemm", "MatMul"):
+            w = inits[n["inputs"][1]]
+            n_out, k_in = (w[0], w[1]) if op == "Gemm" else (w[1], w[0])
+            assert k_in == c, name
+            layers[name] = (n_out, c, y, x, 1, 1, 1, False)
+            out = (n_out, y, x)
+        elif op in ("MaxPool", "AveragePool"):
+            k = a["kernel"]
+            stride, pad = a.get("stride", k), a.get("pad", 0)
+            out = (c, (y + 2 * pad - k) // stride + 1, (x + 2 * pad - k) // stride + 1)
+        elif op == "GlobalAveragePool":
+            out = (c, 1, 1)
+        elif op == "Flatten":
+            out = (c * y * x, 1, 1)
+        elif op in ("Add", "Mul", "Attention"):
+            for t in acts[1:]:
+                assert shapes[t] == (c, y, x), f"{name}: operand shape mismatch"
+            out = (c, y, x)
+        else:  # elementwise
+            out = (c, y, x)
+        shapes[n["output"]] = out
+
+    # Segmentation: link a→b iff b's sole activation input is a's output
+    # and b is that output's sole activation consumer.
+    chains, chain_of = [], {}
+    for n in nodes:
+        name = n["name"]
+        acts = act_inputs[name]
+        pred = None
+        if len(acts) == 1 and acts[0] in producer and consumers[acts[0]] == 1:
+            pred = producer[acts[0]]
+        if pred is not None and chains[chain_of[pred]][-1] == pred:
+            chains[chain_of[pred]].append(name)
+            chain_of[name] = chain_of[pred]
+        else:
+            chain_of[name] = len(chains)
+            chains.append([name])
+
+    registered, distinct = [], set()
+    for ch in chains:
+        wl = [layers[m] for m in ch if m in layers]
+        if wl:
+            registered.append((f"{doc['name']}.{ch[0]}", ch, wl))
+            distinct.add(tuple(wl))
+
+    # Chain validity + min-condition, mirroring Workload::validate().
+    for cname, _, wl in registered:
+        for (ak, _, ay, _, _, _, _, _), (_, bc, by, _, _, _, bs, _) in zip(wl, wl[1:]):
+            assert bc == ak, f"{cname}: channel mismatch"
+            assert by * bs <= ay, f"{cname}: activation growth"
+        assert len(wl) <= 64, f"{cname}: too deep"
+
+    def min_cond_mb(wl):
+        worst = 0
+        for k, c, y, x, r, s, st, dw in wl:
+            wb = 2 * (k if dw else k * c) * r * s
+            inb = 2 * c * y * st * x * st
+            outb = 2 * k * y * x
+            worst = max(worst, inb + outb + wb)
+        return worst / (1024.0 * 1024.0)
+
+    print(f"== {doc['name']}: nodes={len(nodes)} chains={len(chains)} "
+          f"registered={len(registered)} distinct={len(distinct)} "
+          f"weighted_layers={len(layers)}")
+    for cname, ch, wl in registered:
+        print(f"   {cname:34s} nodes={len(ch):2d} layers={len(wl)} "
+              f"min_cond={min_cond_mb(wl):7.2f}MB "
+              f"first={wl[0][:4]} last={wl[-1][:4]}")
+    return len(nodes), len(chains), len(registered), len(distinct), len(layers)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="examples/graphs")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for build in (build_resnet18, build_resnet50, build_bert_base, build_mobilenet_v2):
+        doc = build().to_json()
+        path = os.path.join(args.out_dir, f"{doc['name']}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        summarize(doc)
+        print(f"   wrote {path}")
+
+
+if __name__ == "__main__":
+    main()
